@@ -1,0 +1,68 @@
+//! Dynamic bandwidth allocation demo (§V.D): re-program the register
+//! file's package-number registers at runtime and watch the crossbar's
+//! effective bandwidth shift between two tenants.
+//!
+//! ```bash
+//! cargo run --release --example bandwidth_tuning
+//! ```
+//!
+//! Two apps contend for the same destination; the WRR arbiter's package
+//! budgets decide the share each gets.  We sweep three budget splits and
+//! measure per-app delivered words per 1k cycles — all through the
+//! Table-III register file, exactly as the paper's manager would.
+
+use elastic_fpga::config::{CrossbarConfig, SystemConfig};
+use elastic_fpga::crossbar::Crossbar;
+use elastic_fpga::sim::{Clock, Tick};
+use elastic_fpga::util::onehot::encode_onehot;
+use elastic_fpga::wishbone::Job;
+
+/// Run two greedy masters (0 and 1) into slave 3 for `cycles`, with the
+/// given WRR package budgets; returns words delivered per master.
+fn contend(budget0: u32, budget1: u32, cycles: u64) -> (u64, u64) {
+    let mut cfg = CrossbarConfig::default();
+    cfg.grant_timeout = 1_000_000;
+    let mut xb = Crossbar::new(4, cfg);
+    for m in 0..4 {
+        xb.set_allowed_slaves(m, 0b1111);
+    }
+    xb.set_allowed_packages(3, 0, budget0);
+    xb.set_allowed_packages(3, 1, budget1);
+    // Greedy: both masters always have a large job queued.
+    xb.push_job(0, Job::new(encode_onehot(3), vec![0xAA; 100_000], 0));
+    xb.push_job(1, Job::new(encode_onehot(3), vec![0xBB; 100_000], 1));
+    let mut clk = Clock::new();
+    for _ in 0..cycles {
+        let c = clk.advance();
+        xb.tick(c);
+        xb.drain_rx(3, usize::MAX);
+    }
+    (xb.stats().port_words[0], xb.stats().port_words[1])
+}
+
+fn main() {
+    let _cfg = SystemConfig::paper_defaults();
+    println!("§V.D — WRR package budgets as a bandwidth dial (2 masters -> 1 slave)");
+    println!("| budget A | budget B | words A | words B | share A |");
+    println!("|----------|----------|---------|---------|---------|");
+    let mut shares = Vec::new();
+    for (a, b) in [(8u32, 8u32), (16, 8), (64, 8), (128, 16)] {
+        let (wa, wb) = contend(a, b, 20_000);
+        let share = wa as f64 / (wa + wb) as f64 * 100.0;
+        shares.push(share);
+        println!(
+            "| {:>8} | {:>8} | {:>7} | {:>7} | {:>6.1}% |",
+            a, b, wa, wb, share
+        );
+    }
+    // Equal budgets -> ~50% share; growing A's budget must grow its share.
+    assert!((shares[0] - 50.0).abs() < 2.0, "equal budgets must split evenly");
+    assert!(
+        shares[1] > shares[0] && shares[2] > shares[1],
+        "share must track the budget: {shares:?}"
+    );
+    println!(
+        "\nbandwidth share follows the register-file budgets — the paper's \
+         dynamic bandwidth allocation mechanism.\nbandwidth_tuning OK"
+    );
+}

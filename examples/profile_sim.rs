@@ -1,0 +1,121 @@
+//! Profiling driver for the L3 hot path (used by the §Perf pass and
+//! handy for flamegraphs): runs the saturated-crossbar and full-fabric
+//! loops for a fixed cycle budget and prints Mcycles/s.
+//!
+//! ```bash
+//! cargo run --release --example profile_sim [xbar|fabric] [mcycles]
+//! ```
+
+use elastic_fpga::config::{CrossbarConfig, SystemConfig};
+use elastic_fpga::crossbar::Crossbar;
+use elastic_fpga::fabric::Fabric;
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::sim::{Clock, Tick};
+use elastic_fpga::util::onehot::encode_onehot;
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::wishbone::Job;
+use elastic_fpga::xdma::H2cBurst;
+
+fn xbar_loop(cycles: u64) -> f64 {
+    let mut cfg = CrossbarConfig::default();
+    cfg.grant_timeout = u64::MAX / 2;
+    let mut xb = Crossbar::new(4, cfg);
+    for m in 0..4 {
+        xb.set_allowed_slaves(m, 0b1111);
+    }
+    for m in 0..4usize {
+        xb.push_job(
+            m,
+            Job::new(encode_onehot(((m + 1) % 4) as u32), vec![0xA5; 1 << 22], 0),
+        );
+    }
+    let mut clk = Clock::new();
+    let mut sink = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..cycles {
+        let c = clk.advance();
+        xb.tick(c);
+        for s in 0..4 {
+            xb.drain_rx_into(s, usize::MAX, &mut sink);
+            sink.clear();
+        }
+    }
+    cycles as f64 / t0.elapsed().as_secs_f64() / 1e6
+}
+
+fn fabric_loop(rounds: u64) -> f64 {
+    let cfg = SystemConfig::paper_defaults();
+    let mut f = Fabric::new(cfg);
+    let ports = [1usize, 2, 3];
+    f.regfile.set_app_destination(0, 0b0010);
+    f.regfile.set_allowed_slaves(0, 0b0010);
+    for (i, &p) in ports.iter().enumerate() {
+        let next = ports.get(i + 1).copied().unwrap_or(0);
+        f.regfile.set_pr_destination(p, 1 << next);
+        f.regfile.set_allowed_slaves(p, 1 << next);
+    }
+    for (&p, &k) in ports.iter().zip(ModuleKind::pipeline().iter()) {
+        f.install_static_module(p, k, 0);
+    }
+    let mut rng = SplitMix64::new(1);
+    let mut data = vec![0u32; 4096];
+    rng.fill_u32(&mut data);
+    let mut total_cycles = 0u64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        for chunk in data.chunks(8) {
+            f.h2c_push(0, H2cBurst { app_id: 0, words: chunk.to_vec() });
+        }
+        total_cycles += f.run_until_idle(10_000_000).unwrap();
+        let _ = f.take_app_output(0);
+    }
+    total_cycles as f64 / t0.elapsed().as_secs_f64() / 1e6
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mode = args.first().map(String::as_str).unwrap_or("xbar");
+    match mode {
+        "xbar" => {
+            let mc: u64 = args
+                .get(1)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(5_000_000);
+            println!("xbar: {:.1} Mcycles/s", xbar_loop(mc));
+        }
+        "fabric" => {
+            let rounds: u64 =
+                args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+            println!("fabric: {:.1} Mcycles/s", fabric_loop(rounds));
+        }
+        "pjrt" => {
+            // §Perf L2: wall time per artifact execution on the CPU PJRT
+            // client (pipeline = the fused 3-stage graph).
+            let rt = elastic_fpga::runtime::Runtime::open(
+                elastic_fpga::DEFAULT_ARTIFACT_DIR,
+            )
+            .expect("run `make artifacts`");
+            for name in ["multiplier", "hamming_enc", "hamming_dec", "pipeline"] {
+                let exe = rt.load(name).unwrap();
+                let mut rng = SplitMix64::new(9);
+                let mut x = vec![0u32; exe.input_words()];
+                rng.fill_u32(&mut x);
+                // warmup
+                for _ in 0..3 {
+                    exe.run_u32(&x).unwrap();
+                }
+                let reps = 100;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    std::hint::black_box(exe.run_u32(&x).unwrap());
+                }
+                let us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+                println!("{name}: {us:.1} us/exec (4096 words)");
+            }
+        }
+        other => {
+            eprintln!("unknown mode '{other}' (use xbar|fabric|pjrt)");
+            std::process::exit(1);
+        }
+    }
+}

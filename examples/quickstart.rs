@@ -1,0 +1,63 @@
+//! Quickstart: one 16 KB acceleration request end to end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Boots the PJRT runtime on the AOT artifacts, starts the serving loop,
+//! submits the paper's Fig-5 use case (16 KB through constant multiplier
+//! -> Hamming(31,26) encoder -> decoder), and prints the verified result
+//! plus the modelled execution time.  Falls back to the golden-model CPU
+//! path if `artifacts/` is missing (run `make artifacts`).
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::manager::AppRequest;
+use elastic_fpga::runtime::RuntimeThread;
+use elastic_fpga::server::{call, Server};
+use elastic_fpga::util::SplitMix64;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = SystemConfig::paper_defaults();
+
+    // PJRT runtime over the AOT-lowered JAX/Pallas artifacts.
+    let runtime = match RuntimeThread::spawn(elastic_fpga::DEFAULT_ARTIFACT_DIR) {
+        Ok(rt) => {
+            rt.handle().preload_all()?;
+            println!("pjrt runtime up (artifacts preloaded)");
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("warning: no PJRT runtime ({e}); using the golden model");
+            None
+        }
+    };
+
+    let server = Server::start(cfg, runtime.as_ref().map(|t| t.handle()));
+
+    // The paper's workload: 16 KB of 32-bit words.
+    let mut rng = SplitMix64::new(42);
+    let mut data = vec![0u32; 4096];
+    rng.fill_u32(&mut data);
+
+    let report = call(&server, AppRequest::pipeline(0, data))?;
+
+    println!(
+        "processed {} words through {} FPGA stage(s); verified = {}",
+        report.output.len(),
+        report.fpga_stages,
+        report.verified
+    );
+    println!(
+        "modelled execution time: {:.2} ms  (pcie {:.2} + fabric {:.3} + cpu {:.2})",
+        report.cost.total_ms(),
+        report.cost.pcie_ms,
+        report.cost.fabric_ms,
+        report.cost.cpu_ms
+    );
+    println!("first 4 output words: {:08x?}", &report.output[..4]);
+
+    server.shutdown();
+    assert!(report.verified);
+    println!("quickstart OK");
+    Ok(())
+}

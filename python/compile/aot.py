@@ -1,0 +1,72 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Run once per build: ``cd python && python -m compile.aot --out-dir
+../artifacts``.  Python is never on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_export(name: str) -> tuple[str, int]:
+    fn, n_words = EXPORTS[name]
+    spec = jax.ShapeDtypeStruct((n_words,), jnp.uint32)
+    lowered = jax.jit(fn, donate_argnums=(0,)).lower(spec)
+    return to_hlo_text(lowered), n_words
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of export names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    names = args.only or list(EXPORTS)
+    for name in names:
+        text, n_words = lower_export(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "input_words": n_words,
+            "dtype": "u32",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {path} ({len(text)} chars, {n_words} words)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

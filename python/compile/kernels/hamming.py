@@ -1,0 +1,112 @@
+"""L1 Pallas kernels: Hamming(31,26) encoder and decoder modules.
+
+FPGA incarnation: per-bit parity trees (XOR reductions over tapped
+codeword bits) in LUT logic, one word per WB cycle.  TPU mapping
+(DESIGN.md §Hardware-Adaptation): the parity tree over bits of one word
+becomes ``popcount(word & mask) & 1`` vectorized across the whole VMEM
+block — 5 masked popcounts per word replace the 5 XOR trees, and the
+26-tap bit gather/scatter unrolls into static shift/or chains (the Mosaic
+compiler fuses these into a handful of VPU ops per word).
+
+Both kernels run ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned to `ref.py` by pytest/hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hamming_spec import (
+    CODE_MASK,
+    DATA_MASK,
+    DATA_POSITIONS,
+    NUM_PARITY,
+    PARITY_MASKS,
+)
+
+BLOCK = 1024
+
+
+def _u32(x: int) -> jnp.ndarray:
+    return jnp.uint32(x)
+
+
+def _encode_block(d):
+    """Encode one block of payload words (low 26 bits each)."""
+    d = d & _u32(DATA_MASK)
+    cw = jnp.zeros_like(d)
+    # Static unroll: data bit k -> codeword bit DATA_POSITIONS[k]-1.
+    for kbit, p in enumerate(DATA_POSITIONS):
+        cw = cw | (((d >> _u32(kbit)) & _u32(1)) << _u32(p - 1))
+    # Parity bit i covers PARITY_MASKS[i]; even parity.
+    for i in range(NUM_PARITY):
+        par = jax.lax.population_count(cw & _u32(PARITY_MASKS[i])) & _u32(1)
+        cw = cw | (par << _u32((1 << i) - 1))
+    return cw
+
+
+def _decode_block(cw):
+    """Decode one block of codewords -> (payload, syndrome)."""
+    cw = cw & _u32(CODE_MASK)
+    syn = jnp.zeros_like(cw)
+    for i in range(NUM_PARITY):
+        par = jax.lax.population_count(cw & _u32(PARITY_MASKS[i])) & _u32(1)
+        syn = syn | (par << _u32(i))
+    flip = jnp.where(syn > _u32(0), _u32(1) << (syn - _u32(1)), _u32(0))
+    cw = cw ^ flip
+    d = jnp.zeros_like(cw)
+    for kbit, p in enumerate(DATA_POSITIONS):
+        d = d | (((cw >> _u32(p - 1)) & _u32(1)) << _u32(kbit))
+    return d, syn
+
+
+def _encode_kernel(x_ref, o_ref):
+    o_ref[...] = _encode_block(x_ref[...])
+
+
+def _decode_kernel(x_ref, d_ref, s_ref):
+    d, s = _decode_block(x_ref[...])
+    d_ref[...] = d
+    s_ref[...] = s
+
+
+def _grid_spec(n: int):
+    block = min(BLOCK, n)
+    assert n % block == 0, f"buffer length {n} not a multiple of {block}"
+    return block, n // block
+
+
+def hamming_encode(x: jnp.ndarray) -> jnp.ndarray:
+    """Hamming(31,26)-encode each word's low 26 bits, as a Pallas call."""
+    assert x.dtype == jnp.uint32 and x.ndim == 1
+    n = x.shape[0]
+    block, grid = _grid_spec(n)
+    return pl.pallas_call(
+        _encode_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)
+
+
+def hamming_decode(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode + single-error-correct each codeword -> (payload, syndrome)."""
+    assert x.dtype == jnp.uint32 and x.ndim == 1
+    n = x.shape[0]
+    block, grid = _grid_spec(n)
+    return pl.pallas_call(
+        _decode_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(x)

@@ -1,0 +1,75 @@
+"""Bit-level specification of the Hamming(31,26) code used by the paper's
+encoder/decoder computation modules (Section V.B: "the hamming encoder, and
+the hamming decoder").
+
+This module is the single source of truth for bit positions and parity
+masks.  The same constants are mirrored in the Rust golden model
+(`rust/src/hamming/mod.rs`); `python/tests/test_hamming_spec.py` asserts the
+derivation, and the Rust unit tests assert the mirrored values, so the two
+implementations cannot drift silently.
+
+Convention
+----------
+Codeword positions are 1-indexed 1..31 (classic Hamming numbering).
+Position ``p`` is stored in bit ``p - 1`` of a ``uint32`` word, so a
+codeword occupies bits [0, 30] and bit 31 is always zero.
+
+* Parity positions: powers of two {1, 2, 4, 8, 16} -> bits {0, 1, 3, 7, 15}.
+* Data positions: the remaining 26 positions, in increasing order; data bit
+  ``k`` (LSB-first) of the 26-bit payload lives at codeword position
+  ``DATA_POSITIONS[k]``.
+* ``PARITY_MASKS[i]`` covers every position ``p`` with ``p & (1 << i)``;
+  the syndrome is the 5-bit vector of parities of ``codeword & mask``.
+"""
+
+NUM_PARITY = 5
+CODE_BITS = 31  # codeword length (bits 0..30 of a u32)
+DATA_BITS = 26  # payload width
+DATA_MASK = (1 << DATA_BITS) - 1  # 0x03FF_FFFF
+CODE_MASK = (1 << CODE_BITS) - 1  # 0x7FFF_FFFF
+
+PARITY_POSITIONS = tuple(1 << i for i in range(NUM_PARITY))  # (1, 2, 4, 8, 16)
+
+DATA_POSITIONS = tuple(
+    p for p in range(1, CODE_BITS + 1) if p not in PARITY_POSITIONS
+)
+assert len(DATA_POSITIONS) == DATA_BITS
+
+# PARITY_MASKS[i]: u32 mask of codeword *bits* checked by parity i.
+PARITY_MASKS = tuple(
+    sum(1 << (p - 1) for p in range(1, CODE_BITS + 1) if p & (1 << i))
+    for i in range(NUM_PARITY)
+)
+
+# Spot-check against the textbook values for Hamming(31,26).
+assert PARITY_MASKS[0] == 0x55555555 & CODE_MASK
+assert PARITY_MASKS[1] == 0x66666666 & CODE_MASK
+assert PARITY_MASKS[2] == 0x78787878 & CODE_MASK
+assert PARITY_MASKS[3] == 0x7F807F80 & CODE_MASK
+assert PARITY_MASKS[4] == 0x7FFF8000 & CODE_MASK
+
+
+def encode_int(d: int) -> int:
+    """Reference encoder over plain Python ints (used only in tests)."""
+    d &= DATA_MASK
+    cw = 0
+    for k, p in enumerate(DATA_POSITIONS):
+        cw |= ((d >> k) & 1) << (p - 1)
+    for i in range(NUM_PARITY):
+        par = bin(cw & PARITY_MASKS[i]).count("1") & 1
+        cw |= par << ((1 << i) - 1)
+    return cw
+
+
+def decode_int(cw: int) -> tuple[int, int]:
+    """Reference decoder over plain Python ints -> (data, syndrome)."""
+    cw &= CODE_MASK
+    syn = 0
+    for i in range(NUM_PARITY):
+        syn |= (bin(cw & PARITY_MASKS[i]).count("1") & 1) << i
+    if syn:
+        cw ^= 1 << (syn - 1)
+    d = 0
+    for k, p in enumerate(DATA_POSITIONS):
+        d |= ((cw >> (p - 1)) & 1) << k
+    return d, syn

@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: the paper's *constant multiplier* computation module.
+
+On the KCU1500 the module is combinational DSP logic behind a WB slave
+interface consuming one 32-bit word per cycle.  The TPU-idiomatic mapping
+(DESIGN.md §Hardware-Adaptation) is a word-parallel VPU kernel: one VMEM
+block of uint32 words per grid step, elementwise wrapping multiply.
+
+``interpret=True`` is mandatory — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Words per VMEM block.  1024 u32 = 4 KiB/block, a multiple of the VPU lane
+# count (128); the 16 KB use-case buffer (4096 words) runs as a 4-step grid.
+BLOCK = 1024
+
+
+def _multiplier_kernel(x_ref, o_ref, *, k: int):
+    o_ref[...] = x_ref[...] * jnp.uint32(k)
+
+
+def multiplier(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Elementwise wrapping ``x * k`` over uint32, as a Pallas call."""
+    assert x.dtype == jnp.uint32 and x.ndim == 1
+    n = x.shape[0]
+    block = min(BLOCK, n)
+    assert n % block == 0, f"buffer length {n} not a multiple of {block}"
+    return pl.pallas_call(
+        functools.partial(_multiplier_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)

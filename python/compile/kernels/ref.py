@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the three computation-module kernels.
+
+These are the correctness references the Pallas kernels are tested against
+(exact integer equality — no tolerance).  They are written with the most
+obvious jnp formulation, no pallas, no custom control flow, so they are
+easy to audit against `hamming_spec`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .hamming_spec import (
+    CODE_MASK,
+    DATA_MASK,
+    DATA_POSITIONS,
+    NUM_PARITY,
+    PARITY_MASKS,
+)
+
+
+def _u32(x: int) -> jnp.ndarray:
+    return jnp.uint32(x)
+
+
+def multiplier_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Constant multiplier module: elementwise wrapping u32 multiply."""
+    assert x.dtype == jnp.uint32
+    return x * _u32(k)
+
+
+def hamming_encode_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Hamming(31,26) encoder over the low 26 bits of each word."""
+    assert x.dtype == jnp.uint32
+    d = x & _u32(DATA_MASK)
+    cw = jnp.zeros_like(d)
+    for kbit, p in enumerate(DATA_POSITIONS):
+        cw = cw | (((d >> _u32(kbit)) & _u32(1)) << _u32(p - 1))
+    for i in range(NUM_PARITY):
+        par = jax.lax.population_count(cw & _u32(PARITY_MASKS[i])) & _u32(1)
+        cw = cw | (par << _u32((1 << i) - 1))
+    return cw
+
+
+def hamming_decode_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Hamming(31,26) decoder: corrects single-bit errors.
+
+    Returns ``(data, syndrome)``; syndrome 0 means no error detected.
+    """
+    assert x.dtype == jnp.uint32
+    cw = x & _u32(CODE_MASK)
+    syn = jnp.zeros_like(cw)
+    for i in range(NUM_PARITY):
+        par = jax.lax.population_count(cw & _u32(PARITY_MASKS[i])) & _u32(1)
+        syn = syn | (par << _u32(i))
+    # Flip the bit named by the (1-indexed) syndrome; syndrome 0 -> no flip.
+    flip = jnp.where(syn > 0, _u32(1) << (syn - _u32(1)), _u32(0))
+    cw = cw ^ flip
+    d = jnp.zeros_like(cw)
+    for kbit, p in enumerate(DATA_POSITIONS):
+        d = d | (((cw >> _u32(p - 1)) & _u32(1)) << _u32(kbit))
+    return d, syn
+
+
+def pipeline_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """The Fig-5 use case: multiply -> encode -> decode."""
+    y = multiplier_ref(x, k)
+    cw = hamming_encode_ref(y)
+    d, _syn = hamming_decode_ref(cw)
+    return d

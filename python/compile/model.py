@@ -1,0 +1,66 @@
+"""L2: the application compute graph, composed from the L1 Pallas kernels.
+
+The paper's Fig-5 use case processes a 16 KB buffer through three
+computation modules in sequence: constant multiplier -> Hamming(31,26)
+encoder -> Hamming(31,26) decoder.  Each stage is exported standalone
+(the elastic manager schedules stages onto PR regions independently, and
+on-server stages run exactly one stage's artifact), plus the fused
+whole-pipeline graph used when all stages are co-resident.
+
+Everything here is build-time only: `aot.py` lowers these functions to
+HLO text once; the Rust coordinator executes the artifacts via PJRT and
+never imports Python.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.hamming import hamming_decode, hamming_encode
+from .kernels.multiplier import multiplier
+
+# The paper's constant multiplier is not given a constant; we fix one and
+# mirror it in the Rust golden model (rust/src/hamming/mod.rs).
+MULT_CONSTANT = 0x9E3779B1  # 2654435761, Knuth's multiplicative-hash odd const
+
+# 16 KB of 32-bit words — the exact Fig-5 buffer size.
+PIPELINE_WORDS = 4096
+# Small variant for fast tests / quickstart.
+PIPELINE_WORDS_SMALL = 256
+
+
+def multiplier_stage(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Stage 1: elementwise wrapping multiply by MULT_CONSTANT."""
+    return (multiplier(x, MULT_CONSTANT),)
+
+
+def encoder_stage(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Stage 2: Hamming(31,26) encode of each word's low 26 bits."""
+    return (hamming_encode(x),)
+
+
+def decoder_stage(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Stage 3: Hamming(31,26) decode + single-error correction.
+
+    Only the corrected payload is exported; the syndrome feeds the module's
+    error-status register in the hardware, which the Rust golden model
+    recomputes (the artifact interface stays single-output like [16]'s
+    32-bit data interface).
+    """
+    data, _syndrome = hamming_decode(x)
+    return (data,)
+
+
+def pipeline(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """All three stages fused: dec(enc(mult(x)))."""
+    (y,) = multiplier_stage(x)
+    (cw,) = encoder_stage(y)
+    return decoder_stage(cw)
+
+
+# AOT export table: artifact name -> (function, input length in words).
+EXPORTS = {
+    "multiplier": (multiplier_stage, PIPELINE_WORDS),
+    "hamming_enc": (encoder_stage, PIPELINE_WORDS),
+    "hamming_dec": (decoder_stage, PIPELINE_WORDS),
+    "pipeline": (pipeline, PIPELINE_WORDS),
+    "pipeline_small": (pipeline, PIPELINE_WORDS_SMALL),
+}

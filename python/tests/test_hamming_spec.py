@@ -1,0 +1,70 @@
+"""Derivation checks on the Hamming(31,26) bit-level spec.
+
+These constants are mirrored byte-for-byte in rust/src/hamming/mod.rs;
+keep both sides in sync.
+"""
+
+from compile.kernels.hamming_spec import (
+    CODE_BITS,
+    CODE_MASK,
+    DATA_BITS,
+    DATA_MASK,
+    DATA_POSITIONS,
+    NUM_PARITY,
+    PARITY_MASKS,
+    PARITY_POSITIONS,
+    decode_int,
+    encode_int,
+)
+
+
+def test_position_partition():
+    assert set(PARITY_POSITIONS) | set(DATA_POSITIONS) == set(
+        range(1, CODE_BITS + 1)
+    )
+    assert not set(PARITY_POSITIONS) & set(DATA_POSITIONS)
+    assert len(DATA_POSITIONS) == DATA_BITS == 26
+    assert NUM_PARITY == 5 and CODE_BITS == 31
+
+
+def test_masks_cover_each_position_by_its_binary_index():
+    for p in range(1, CODE_BITS + 1):
+        covered = [i for i in range(NUM_PARITY) if PARITY_MASKS[i] >> (p - 1) & 1]
+        want = [i for i in range(NUM_PARITY) if p >> i & 1]
+        assert covered == want, f"position {p}"
+
+
+def test_parity_position_isolated_in_own_mask():
+    """Parity position 2^i appears in mask i only — required for the
+    set-parity-last encoding order to be valid."""
+    for i, p in enumerate(PARITY_POSITIONS):
+        for j in range(NUM_PARITY):
+            in_mask = PARITY_MASKS[j] >> (p - 1) & 1
+            assert in_mask == (1 if i == j else 0)
+
+
+def test_known_vectors():
+    # All-zeros and all-ones payloads.
+    assert encode_int(0) == 0
+    cw = encode_int(DATA_MASK)
+    assert cw & ~CODE_MASK == 0
+    d, syn = decode_int(cw)
+    assert d == DATA_MASK and syn == 0
+
+
+def test_distinct_codewords_for_distinct_payloads():
+    seen = {encode_int(d) for d in range(2048)}
+    assert len(seen) == 2048
+
+
+def test_mirrored_rust_constants():
+    """The exact literals embedded in rust/src/hamming/mod.rs."""
+    assert PARITY_MASKS == (
+        0x55555555,
+        0x66666666,
+        0x78787878,
+        0x7F807F80,
+        0x7FFF8000,
+    )
+    assert DATA_MASK == 0x03FFFFFF
+    assert CODE_MASK == 0x7FFFFFFF

@@ -1,0 +1,149 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Decentralized vs centralized arbitration** (§IV.E.1's choice):
+//!    under disjoint parallel traffic, per-slave arbiters grant
+//!    concurrently while a shared decision unit staggers grants.
+//! 2. **Bridge request policy** (§IV.G): half-full vs full end to end on
+//!    a 16 KB stream (not just the 15 vs 19 cc single-burst numbers).
+//! 3. **WRR budget sweep**: the §V.D dial at more points, showing
+//!    diminishing returns (the reason the paper picks packet counts
+//!    rather than unlimited bursts).
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::{CrossbarConfig, SystemConfig};
+use elastic_fpga::crossbar::central::CentralizedCrossbar;
+use elastic_fpga::crossbar::Crossbar;
+use elastic_fpga::experiments;
+use elastic_fpga::fabric::Fabric;
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::sim::{Clock, Tick};
+use elastic_fpga::util::onehot::encode_onehot;
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::wishbone::Job;
+use elastic_fpga::xdma::{H2cBurst, RequestPolicy};
+
+/// All disjoint pairs (i -> i+n/2) request simultaneously; returns the
+/// max time-to-grant for each arbitration scheme.
+fn arbitration_ablation(n: usize) -> (u64, u64) {
+    // Decentralized.
+    let mut xb = Crossbar::new(n, CrossbarConfig::default());
+    let all = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+    for m in 0..n {
+        xb.set_allowed_slaves(m, all);
+    }
+    for m in 0..n / 2 {
+        xb.push_job(m, Job::new(encode_onehot((m + n / 2) as u32), vec![0; 8], 0));
+    }
+    let mut clk = Clock::new();
+    let mut decentralized = 0;
+    for _ in 0..10_000 {
+        let c = clk.advance();
+        xb.tick(c);
+        for s in 0..n {
+            xb.drain_rx(s, usize::MAX);
+        }
+        for e in xb.take_events() {
+            decentralized = decentralized.max(e.time_to_grant());
+        }
+        if xb.quiescent() {
+            break;
+        }
+    }
+    // Centralized.
+    let mut cx = CentralizedCrossbar::new(n, CrossbarConfig::default());
+    for m in 0..n / 2 {
+        cx.push_job(m, Job::new(encode_onehot((m + n / 2) as u32), vec![0; 8], 0));
+    }
+    let mut clk = Clock::new();
+    let mut centralized = 0;
+    for _ in 0..10_000 {
+        let c = clk.advance();
+        cx.tick(c);
+        for e in cx.take_events() {
+            centralized = centralized.max(e.time_to_grant());
+        }
+        if cx.quiescent() {
+            break;
+        }
+    }
+    (decentralized, centralized)
+}
+
+/// Stream 16 KB through the 3-stage pipeline with a bridge policy;
+/// returns fabric cycles.
+fn bridge_policy_cycles(policy: RequestPolicy) -> u64 {
+    let cfg = SystemConfig::paper_defaults();
+    let mut f = Fabric::new(cfg);
+    f.axi2wb.policy = policy;
+    let ports = [1usize, 2, 3];
+    f.regfile.set_app_destination(0, 0b0010);
+    f.regfile.set_allowed_slaves(0, 0b0010);
+    for (i, &p) in ports.iter().enumerate() {
+        let next = ports.get(i + 1).copied().unwrap_or(0);
+        f.regfile.set_pr_destination(p, 1 << next);
+        f.regfile.set_allowed_slaves(p, 1 << next);
+    }
+    for (&p, &k) in ports.iter().zip(ModuleKind::pipeline().iter()) {
+        f.install_static_module(p, k, 0);
+    }
+    let mut rng = SplitMix64::new(1);
+    let mut data = vec![0u32; 4096];
+    rng.fill_u32(&mut data);
+    for chunk in data.chunks(8) {
+        f.h2c_push(0, H2cBurst { app_id: 0, words: chunk.to_vec() });
+    }
+    f.run_until_idle(10_000_000).unwrap()
+}
+
+fn main() {
+    let mut claims = harness::Claims::new();
+
+    harness::section("ablation 1 — decentralized vs centralized arbitration");
+    println!("| ports | disjoint pairs | decentralized max ttg | centralized max ttg |");
+    for n in [4usize, 8, 16] {
+        let (dec, cen) = arbitration_ablation(n);
+        println!("| {:>5} | {:>14} | {:>21} | {:>19} |", n, n / 2, dec, cen);
+        claims.check(
+            dec == 4,
+            &format!("{n}-port decentralized grants all disjoint pairs at 4 cc"),
+        );
+        claims.check(
+            cen > dec,
+            &format!("{n}-port centralized staggers grants ({cen} > {dec} cc)"),
+        );
+    }
+
+    harness::section("ablation 2 — bridge request policy, 16 KB end to end");
+    let half = bridge_policy_cycles(RequestPolicy::HalfFull);
+    let full = bridge_policy_cycles(RequestPolicy::Full);
+    println!("  half-full: {half} cycles   full: {full} cycles");
+    claims.check(
+        half <= full,
+        "half-full policy never loses end to end (overlapped grant latency)",
+    );
+
+    harness::section("ablation 3 — WRR budget sweep (1 accelerator, 16 KB)");
+    println!("| packages/grant | fabric cycles |");
+    let mut prev: Option<u64> = None;
+    let mut improvements = Vec::new();
+    for budget in [8u32, 16, 32, 64, 128, 255] {
+        let row = experiments::bandwidth_case(1, budget, 4096).unwrap();
+        println!("| {:>14} | {:>13} |", budget, row.fabric_cycles);
+        if let Some(p) = prev {
+            improvements.push((p as f64 - row.fabric_cycles as f64) / p as f64);
+        }
+        prev = Some(row.fabric_cycles);
+    }
+    claims.check(
+        improvements.iter().all(|&i| i >= -0.001),
+        "bigger budgets never slow the stream down",
+    );
+    claims.check(
+        improvements.first().copied().unwrap_or(0.0)
+            > improvements.last().copied().unwrap_or(0.0),
+        "diminishing returns: early doublings help most",
+    );
+    claims.finish();
+}

@@ -1,0 +1,38 @@
+//! Bench: reproduce **§V.D** — dynamic bandwidth allocation.  The 16 KB
+//! stream runs through 1..=3 accelerators at 16 vs 128 packages per
+//! grant (programmed through the Table-III register file); larger
+//! budgets amortize arbitration and must improve completion, more so
+//! with more accelerators chained.
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::experiments;
+
+fn main() {
+    harness::section("§V.D — dynamic bandwidth allocation (16 vs 128 packages)");
+    let t0 = std::time::Instant::now();
+    let rows = experiments::bandwidth_sweep(4096).expect("sweep failed");
+    println!("{}", experiments::bandwidth_render(&rows));
+    println!("  (bench wall time: {:.2?})", t0.elapsed());
+
+    let imps = experiments::bandwidth_improvements(&rows);
+    let mut claims = harness::Claims::new();
+    for (accs, imp) in &imps {
+        claims.check(
+            *imp > 0.0,
+            &format!("{accs} accelerator(s): 128-package budget is faster ({imp:.2}%)"),
+        );
+    }
+    claims.check(
+        imps[2].1 > imps[0].1,
+        "improvement grows with the number of chained accelerators \
+         (paper: 5.24% at 1 acc -> 6% at 3 accs)",
+    );
+    claims.check(
+        imps.iter().all(|(_, imp)| *imp < 35.0),
+        "improvement stays single/low-double digit (arbitration amortization, \
+         not a different algorithm)",
+    );
+    claims.finish();
+}

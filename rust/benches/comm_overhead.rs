@@ -1,0 +1,30 @@
+//! Bench: reproduce **§V.E** — communication overhead.  Measures
+//! time-to-grant and request-completion latency on the 4x4 crossbar,
+//! best case (idle slave) and worst case (3 masters on one slave),
+//! 8 packages each — the numbers must equal the paper's *exactly*.
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::experiments;
+
+fn main() {
+    let cfg = SystemConfig::paper_defaults();
+    harness::section("§V.E — communication overhead (cycle-exact)");
+    let r = experiments::comm_overhead(&cfg);
+    println!("{}", experiments::overhead_render(&r));
+
+    let mut claims = harness::Claims::new();
+    claims.check(r.best_time_to_grant == 4, "best-case time-to-grant = 4 cc");
+    claims.check(r.best_completion_8 == 13, "best-case completion = 13 cc");
+    claims.check(r.worst_time_to_grant == 28, "worst-case time-to-grant = 28 cc");
+    claims.check(r.worst_completion_8 == 37, "worst-case completion = 37 cc");
+    claims.finish();
+
+    harness::section("measurement-harness micro-bench");
+    let mut s = harness::bench("comm_overhead scenario pair", 10, 500, || {
+        experiments::comm_overhead(&cfg)
+    });
+    harness::report(&mut s);
+}

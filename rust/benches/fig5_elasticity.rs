@@ -1,0 +1,59 @@
+//! Bench: reproduce **Fig 5** — execution time of the 16 KB
+//! multiplier->encoder->decoder use case as PR regions become available
+//! (3 cases, 10 repetitions each, like the paper).
+//!
+//! Prints the same series the paper plots and checks the claims:
+//! case1 > case2 > case3, with the calibrated endpoints within 10% of
+//! 16.9 ms / 10.87 ms.
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::experiments;
+
+fn main() {
+    let cfg = SystemConfig::paper_defaults();
+    harness::section("Fig 5 — resource elasticity execution time (16 KB, 10 reps)");
+
+    // PJRT runtime if artifacts exist (on-server stages then run for real).
+    let runtime = elastic_fpga::runtime::RuntimeThread::spawn(
+        elastic_fpga::DEFAULT_ARTIFACT_DIR,
+    )
+    .ok();
+    if runtime.is_some() {
+        println!("  (on-server stages execute through PJRT)");
+    } else {
+        println!("  (artifacts missing; on-server stages use the golden model)");
+    }
+
+    let t0 = std::time::Instant::now();
+    let rows = experiments::fig5(
+        &cfg,
+        runtime.as_ref().map(|t| t.handle()),
+        4096,
+        10,
+    )
+    .expect("fig5 run failed");
+    println!("{}", experiments::fig5_render(&rows));
+    println!("  (bench wall time: {:.2?})", t0.elapsed());
+
+    let mut claims = harness::Claims::new();
+    claims.check(
+        rows[0].mean_ms > rows[1].mean_ms && rows[1].mean_ms > rows[2].mean_ms,
+        "execution time decreases as PR regions become available",
+    );
+    claims.check(
+        (rows[0].mean_ms - 16.9).abs() / 16.9 < 0.10,
+        "case 1 within 10% of the paper's 16.9 ms",
+    );
+    claims.check(
+        (rows[2].mean_ms - 10.87).abs() / 10.87 < 0.10,
+        "case 3 within 10% of the paper's 10.87 ms",
+    );
+    claims.check(
+        rows.iter().all(|r| r.fabric_ms < 1.0),
+        "fabric streaming is not the bottleneck (sub-ms at 250 MHz)",
+    );
+    claims.finish();
+}

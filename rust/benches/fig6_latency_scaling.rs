@@ -1,0 +1,45 @@
+//! Bench: reproduce **Fig 6** — worst-case latency vs the number of PR
+//! regions (all N-1 masters target one slave, 8 data words each).
+//!
+//! The paper's claim: "the worst case latency increase would be linear".
+//! We sweep the crossbar generically from 3 to 16 ports, compare the
+//! simulated worst case against the analytic 12(N-2)+4, and check
+//! linearity (constant 12 cc/port slope).
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::experiments;
+
+fn main() {
+    let cfg = SystemConfig::paper_defaults();
+    harness::section("Fig 6 — number of PRs vs worst-case latency");
+
+    let ports: Vec<usize> = vec![3, 4, 5, 6, 8, 10, 12, 14, 16];
+    let t0 = std::time::Instant::now();
+    let rows = experiments::fig6(&cfg, &ports);
+    println!("{}", experiments::fig6_render(&rows));
+    println!("  (bench wall time: {:.2?})", t0.elapsed());
+
+    let mut claims = harness::Claims::new();
+    claims.check(
+        rows.iter().all(|r| r.worst_time_to_grant == r.analytic_ttg),
+        "simulated worst case equals the analytic 12(N-2)+4 at every point",
+    );
+    // Linearity: successive differences per added port are exactly 12.
+    let mut linear = true;
+    for w in rows.windows(2) {
+        let dp = (w[1].ports - w[0].ports) as u64;
+        if w[1].worst_time_to_grant - w[0].worst_time_to_grant != 12 * dp {
+            linear = false;
+        }
+    }
+    claims.check(linear, "latency grows linearly at 12 cc per extra PR region");
+    claims.check(
+        rows.iter().find(|r| r.ports == 4).map(|r| r.worst_time_to_grant)
+            == Some(28),
+        "the 4-port point is the paper's 28 cc worst case",
+    );
+    claims.finish();
+}

@@ -1,0 +1,87 @@
+//! Shared bench harness (criterion is unavailable offline — DESIGN.md
+//! §7): warmup + timed repetitions with mean/p50/p99, plus table
+//! printing helpers.  Each bench binary (`harness = false`) drives this.
+
+use std::time::{Duration, Instant};
+
+/// One measurement series.
+pub struct Series {
+    pub name: String,
+    samples_ns: Vec<u128>,
+}
+
+impl Series {
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<u128>() as f64 / self.samples_ns.len() as f64
+    }
+
+    pub fn percentile_ns(&mut self, q: f64) -> u128 {
+        if self.samples_ns.is_empty() {
+            return 0;
+        }
+        self.samples_ns.sort_unstable();
+        let rank = ((q * self.samples_ns.len() as f64).ceil() as usize)
+            .clamp(1, self.samples_ns.len());
+        self.samples_ns[rank - 1]
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `reps` measured repetitions.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Series {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos());
+    }
+    Series { name: name.to_string(), samples_ns: samples }
+}
+
+/// Render a series line.
+pub fn report(series: &mut Series) {
+    let mean = Duration::from_nanos(series.mean_ns() as u64);
+    let p50 = Duration::from_nanos(series.percentile_ns(0.50) as u64);
+    let p99 = Duration::from_nanos(series.percentile_ns(0.99) as u64);
+    println!(
+        "  {:<44} mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}",
+        series.name, mean, p50, p99
+    );
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Assert helper that prints rather than panicking mid-bench, then
+/// panics at the end if any claim failed.
+pub struct Claims {
+    failed: Vec<String>,
+}
+
+impl Claims {
+    pub fn new() -> Self {
+        Self { failed: Vec::new() }
+    }
+
+    pub fn check(&mut self, ok: bool, what: &str) {
+        if ok {
+            println!("  claim OK: {what}");
+        } else {
+            println!("  claim FAILED: {what}");
+            self.failed.push(what.to_string());
+        }
+    }
+
+    pub fn finish(self) {
+        if !self.failed.is_empty() {
+            panic!("failed claims: {:?}", self.failed);
+        }
+    }
+}

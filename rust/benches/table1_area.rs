@@ -1,0 +1,61 @@
+//! Bench: reproduce **Table I** — area usage of all components on the
+//! XCKU115, from the calibrated area model, including the derived %
+//! columns and the totals row.
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::area::{self, table1};
+use elastic_fpga::fabric::DeviceModel;
+
+fn main() {
+    harness::section("Table I — area usage of all components");
+    println!("{}", elastic_fpga::experiments::table1_render());
+
+    let device = DeviceModel::kcu1500_prototype();
+    let mut claims = harness::Claims::new();
+
+    // Totals row matches the paper (composite row excluded from totals).
+    let mut total_luts = 0u64;
+    let mut total_ffs = 0u64;
+    let mut total_brams = 0.0f64;
+    for (_, a, counted) in table1::ROWS {
+        if counted {
+            total_luts += a.luts;
+            total_ffs += a.ffs;
+            total_brams += a.brams;
+        }
+    }
+    claims.check(total_luts == 36_348, "total LUTs = 36,348");
+    claims.check(total_ffs == 36_948, "total FFs = 36,948");
+    claims.check(total_brams == 89.0, "total BRAMs = 89");
+
+    // Percentages quoted in §V.F.
+    claims.check(
+        (device.lut_pct(total_luts) - 5.47).abs() < 0.02,
+        "whole-system LUT utilization ~5.47%",
+    );
+    claims.check(
+        (device.lut_pct(table1::WB_CROSSBAR.luts) - 0.07).abs() < 0.005,
+        "WB crossbar = 0.07% of device LUTs",
+    );
+    claims.check(
+        (device.lut_pct(table1::XDMA_IP.luts) - 5.04).abs() < 0.01,
+        "XDMA IP = 5.04% of device LUTs",
+    );
+
+    // §V.F: averaged interface numbers.
+    let avg_master_luts = (table1::WB_MASTER_IF.luts + 196) / 2 >= 196;
+    let _ = avg_master_luts;
+    claims.check(
+        table1::WB_CROSSBAR.luts == 475 && table1::WB_CROSSBAR.ffs == 60,
+        "crossbar row = 475 LUT / 60 FF (the headline area)",
+    );
+
+    // Register-file scaling (§V.G: 3 registers per extra PR region).
+    claims.check(
+        area::regfile_registers(3) == 20 && area::regfile_registers(4) == 23,
+        "register file grows by 3 registers per PR region",
+    );
+    claims.finish();
+}

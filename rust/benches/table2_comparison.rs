@@ -1,0 +1,64 @@
+//! Bench: reproduce **Table II** — comparison with the NoC of [16] and
+//! the E-WB shared bus of [21]: area, power, and the measured
+//! request-completion latency of each interconnect on the same 8-word
+//! workload.
+//!
+//! Claims checked (paper §I + §V.G): 61% fewer LUTs and 95% fewer FFs
+//! than the NoC, 80x less power, 69% fewer cycles per request, +48.6%
+//! LUTs / -46.4% FFs vs 4x E-WB.
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::area;
+use elastic_fpga::baselines::noc;
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::experiments;
+
+fn main() {
+    let cfg = SystemConfig::paper_defaults();
+    harness::section("Table II — comparison with existing work");
+    println!("{}", experiments::table2_render(&cfg));
+
+    let h = area::headline_claims();
+    let overhead = experiments::comm_overhead(&cfg);
+    let noc_cc = noc::uncontended_completion(2, 8);
+
+    let mut claims = harness::Claims::new();
+    claims.check(
+        (h.lut_savings_vs_noc_pct - 61.0).abs() < 1.0,
+        "61% fewer LUTs than the 2x2 NoC",
+    );
+    claims.check(
+        (h.ff_savings_vs_noc_pct - 95.0).abs() < 0.5,
+        "95% fewer FFs than the 2x2 NoC",
+    );
+    claims.check(
+        (h.power_ratio_vs_noc - 80.0).abs() < 0.1,
+        "80x less power than the NoC",
+    );
+    claims.check(
+        (h.lut_overhead_vs_ewb_pct - 48.6).abs() < 0.5,
+        "+48.6% LUTs vs 4x E-WB shared bus",
+    );
+    claims.check(
+        (h.ff_savings_vs_ewb_pct - 46.4).abs() < 0.5,
+        "-46.4% FFs vs 4x E-WB shared bus",
+    );
+    claims.check(
+        overhead.best_completion_8 == 13 && noc_cc == 22,
+        "8-word request: 13 cc on the crossbar vs 22 cc on the NoC",
+    );
+    let adv = (noc_cc as f64 - overhead.best_completion_8 as f64)
+        / overhead.best_completion_8 as f64
+        * 100.0;
+    claims.check((adv - 69.0).abs() < 1.0, "69% fewer cycles per request");
+    claims.finish();
+
+    // Micro-bench: simulator throughput for the three interconnects.
+    harness::section("simulator micro-bench (same 8-word request)");
+    let mut s = harness::bench("crossbar 8-word request sim", 10, 200, || {
+        experiments::comm_overhead(&cfg)
+    });
+    harness::report(&mut s);
+}

@@ -1,0 +1,86 @@
+//! Perf bench (EXPERIMENTS.md §Perf): raw simulator throughput.
+//!
+//! Not a paper figure — this is the L3 hot path the performance pass
+//! optimizes: cycles simulated per second for (a) a saturated 4x4
+//! crossbar, (b) the full fabric streaming the 16 KB pipeline, and
+//! (c) end-to-end manager executions per second.
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::{CrossbarConfig, SystemConfig};
+use elastic_fpga::crossbar::Crossbar;
+use elastic_fpga::manager::{AppRequest, ElasticManager};
+use elastic_fpga::sim::{Clock, Tick};
+use elastic_fpga::util::onehot::encode_onehot;
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::wishbone::Job;
+
+const XBAR_CYCLES: u64 = 1_000_000;
+
+fn saturated_crossbar_mcps() -> f64 {
+    // All four masters stream big jobs to rotating destinations.
+    let mut cfg = CrossbarConfig::default();
+    cfg.grant_timeout = u64::MAX / 2;
+    let mut xb = Crossbar::new(4, cfg);
+    for m in 0..4 {
+        xb.set_allowed_slaves(m, 0b1111);
+    }
+    for m in 0..4usize {
+        xb.push_job(
+            m,
+            Job::new(encode_onehot(((m + 1) % 4) as u32), vec![0xA5; 1 << 20], 0),
+        );
+    }
+    let mut clk = Clock::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..XBAR_CYCLES {
+        let c = clk.advance();
+        xb.tick(c);
+        for s in 0..4 {
+            xb.drain_rx(s, usize::MAX);
+        }
+    }
+    XBAR_CYCLES as f64 / t0.elapsed().as_secs_f64() / 1e6
+}
+
+fn fabric_pipeline_mcps() -> (f64, u64) {
+    let cfg = SystemConfig::paper_defaults();
+    let mut mgr = ElasticManager::new(cfg, None);
+    let mut rng = SplitMix64::new(3);
+    let mut data = vec![0u32; 4096];
+    rng.fill_u32(&mut data);
+    let t0 = std::time::Instant::now();
+    let rep = mgr.execute(&AppRequest::pipeline(0, data)).unwrap();
+    let cycles = rep.timeline.fabric_cycles;
+    (cycles as f64 / t0.elapsed().as_secs_f64() / 1e6, cycles)
+}
+
+fn main() {
+    harness::section("L3 perf — simulator throughput (the optimization target)");
+
+    let mcps = saturated_crossbar_mcps();
+    println!("  saturated 4x4 crossbar: {mcps:.1} Mcycles/s");
+
+    let (fmcps, fcycles) = fabric_pipeline_mcps();
+    println!(
+        "  full fabric, 16 KB pipeline: {fmcps:.1} Mcycles/s ({fcycles} cycles/run)"
+    );
+
+    let mut s = harness::bench("manager.execute(16 KB pipeline)", 2, 10, || {
+        let cfg = SystemConfig::paper_defaults();
+        let mut mgr = ElasticManager::new(cfg, None);
+        let mut rng = SplitMix64::new(4);
+        let mut data = vec![0u32; 4096];
+        rng.fill_u32(&mut data);
+        mgr.execute(&AppRequest::pipeline(0, data)).unwrap()
+    });
+    harness::report(&mut s);
+
+    // Regression floors (half of the measured post-optimization rates;
+    // see EXPERIMENTS.md §Perf).
+    let mut claims = harness::Claims::new();
+    claims.check(mcps > 5.0, "crossbar sim >= 5 Mcycles/s");
+    claims.check(fmcps > 2.0, "fabric sim >= 2 Mcycles/s");
+    claims.finish();
+}

@@ -1,0 +1,376 @@
+//! Area & power model (§V.F, Tables I and II; Fig 6's companion).
+//!
+//! Vivado post-synthesis utilization cannot be re-run here (no FPGA
+//! toolchain), so the model is **anchored on the paper's measured
+//! values** (Table I) and extended with the *scaling laws* the paper
+//! cites: the LZC-based arbiter's area grows quadratically with port
+//! count but with a lower rate than priority-encoder designs [32]; the
+//! register file grows by three registers per extra PR region (§V.G);
+//! and the comparison baselines come from [16] (NoC routers) and [21]
+//! (E-WB shared bus) exactly as Table II quotes them.
+
+use crate::fabric::DeviceModel;
+
+/// LUT/FF/BRAM/power usage of one component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComponentArea {
+    pub luts: u64,
+    pub ffs: u64,
+    /// BRAM tiles (36Kb); halves appear as .5.
+    pub brams: f64,
+    /// Dynamic power estimate in mW (None where the paper gives none).
+    pub power_mw: Option<f64>,
+}
+
+impl ComponentArea {
+    const fn new(luts: u64, ffs: u64, brams: f64, power_mw: Option<f64>) -> Self {
+        Self { luts, ffs, brams, power_mw }
+    }
+
+    /// Component-wise sum.
+    pub fn plus(self, o: ComponentArea) -> ComponentArea {
+        ComponentArea {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            brams: self.brams + o.brams,
+            power_mw: match (self.power_mw, o.power_mw) {
+                (Some(a), Some(b)) => Some(a + b),
+                (a, b) => a.or(b),
+            },
+        }
+    }
+
+    /// Scale all resources by an integer factor.
+    pub fn times(self, k: u64) -> ComponentArea {
+        ComponentArea {
+            luts: self.luts * k,
+            ffs: self.ffs * k,
+            brams: self.brams * k as f64,
+            power_mw: self.power_mw.map(|p| p * k as f64),
+        }
+    }
+}
+
+/// Table I rows: the paper's measured per-component utilization.
+pub mod table1 {
+    use super::ComponentArea;
+
+    pub const XDMA_IP: ComponentArea = ComponentArea::new(33_441, 30_843, 62.0, None);
+    pub const WB_CROSSBAR: ComponentArea = ComponentArea::new(475, 60, 0.0, Some(1.0));
+    pub const WB_HAMMING_DECODER: ComponentArea = ComponentArea::new(432, 646, 0.0, None);
+    pub const WB_MASTER_IF: ComponentArea = ComponentArea::new(213, 27, 0.0, Some(1.0));
+    pub const WB_SLAVE_IF: ComponentArea = ComponentArea::new(115, 220, 0.0, Some(0.9));
+    pub const HAMMING_DECODER: ComponentArea = ComponentArea::new(104, 399, 0.0, None);
+    pub const WB_HAMMING_ENCODER: ComponentArea = ComponentArea::new(233, 99, 0.0, None);
+    pub const WB_MULTIPLIER: ComponentArea = ComponentArea::new(138, 624, 0.0, None);
+    pub const AXI_WB_FIFO: ComponentArea = ComponentArea::new(975, 1_842, 13.5, None);
+    pub const WB_AXI_FIFO: ComponentArea = ComponentArea::new(389, 2_274, 13.5, None);
+    pub const REGISTER_FILE: ComponentArea = ComponentArea::new(265, 560, 0.0, None);
+
+    /// Table I's reported totals row.
+    pub const TOTAL: ComponentArea = ComponentArea::new(36_348, 36_948, 89.0, None);
+
+    /// All rows in table order: (name, area, counted-in-total).  The
+    /// "WB Hamming Decoder" row is a *composite* (= WB Master Interface
+    /// + WB Slave Interface + Hamming Decoder: 213+115+104 = 432 LUTs,
+    /// 27+220+399 = 646 FFs) and the paper's Total excludes it to avoid
+    /// double counting.
+    pub const ROWS: [(&str, ComponentArea, bool); 11] = [
+        ("XDMA IP Core", XDMA_IP, true),
+        ("WB Crossbar", WB_CROSSBAR, true),
+        ("WB Hamming Decoder", WB_HAMMING_DECODER, false),
+        ("WB Master Interface", WB_MASTER_IF, true),
+        ("WB Slave Interface", WB_SLAVE_IF, true),
+        ("Hamming Decoder", HAMMING_DECODER, true),
+        ("WB Hamming Encoder", WB_HAMMING_ENCODER, true),
+        ("WB Multiplier", WB_MULTIPLIER, true),
+        ("AXI-WB-FIFO System", AXI_WB_FIFO, true),
+        ("WB-AXI-FIFO System", WB_AXI_FIFO, true),
+        ("Register File", REGISTER_FILE, true),
+    ];
+}
+
+/// Table II rows: prior-art comparison points as quoted by the paper.
+pub mod table2 {
+    use super::ComponentArea;
+
+    /// 4x4 WB crossbar (this work).
+    pub const WB_CROSSBAR_4X4: ComponentArea = ComponentArea::new(475, 60, 0.0, Some(1.0));
+    /// 2x2 NoC with four 3-port routers [16] serving 4 modules.
+    pub const NOC_2X2_3PORT: ComponentArea =
+        ComponentArea::new(1_220, 1_240, 0.0, Some(80.0));
+    /// 4x4 WB crossbar interconnection *system* (crossbar + 4 master +
+    /// 4 slave interfaces).
+    pub const WB_SYSTEM_4X4: ComponentArea = ComponentArea::new(1_599, 796, 0.0, None);
+    /// Four single master-slave E-WB communication infrastructures [21].
+    pub const EWB_X4: ComponentArea = ComponentArea::new(1_076, 1_484, 0.0, None);
+}
+
+/// Analytic scaling of the crossbar with port count `n`, anchored at the
+/// measured 4x4 point.
+///
+/// * LUTs: dominated by the per-slave-port arbitration + mux tree, each
+///   of which sees all `n` masters — O(n^2) total, so
+///   `lut(n) = lut(4) * (n/4)^2` (the paper: "the area overhead of the
+///   LZC based arbiter increases quadratically with the number of
+///   ports").
+/// * FFs: per-port grant/state registers plus per-pair package counters'
+///   control bits — the 4x4 point (60 FF = 3.75/port-pair) scales with
+///   n^2 pairs as well, but the dominant term at small n is the per-port
+///   state, so we scale linearly per port: `ff(n) = ff(4) * n / 4`.
+pub fn crossbar_area(n: usize) -> ComponentArea {
+    let n = n as f64;
+    let luts = (table2::WB_CROSSBAR_4X4.luts as f64 * (n / 4.0).powi(2)).round() as u64;
+    let ffs = (table2::WB_CROSSBAR_4X4.ffs as f64 * (n / 4.0)).round() as u64;
+    ComponentArea {
+        luts,
+        ffs,
+        brams: 0.0,
+        power_mw: Some(1.0 * (n / 4.0).powi(2)),
+    }
+}
+
+/// The crossbar interconnection *system* for `n` ports: crossbar plus a
+/// WB master+slave interface pair per port.
+pub fn crossbar_system_area(n: usize) -> ComponentArea {
+    let per_port = table1::WB_MASTER_IF.plus(table1::WB_SLAVE_IF);
+    crossbar_area(n).plus(per_port.times(n as u64))
+}
+
+/// §V.G: register-file growth — "for each new coming PR region, three
+/// more registers has to be added: allowed addresses register, allowed
+/// package numbers register, and destination address register."
+pub fn regfile_registers(pr_regions: usize) -> usize {
+    // The Table III file serves 3 PR regions with 20 registers.
+    20 + 3 * pr_regions.saturating_sub(3)
+}
+
+/// Register-file area scaled from the measured 20-register point.
+pub fn regfile_area(pr_regions: usize) -> ComponentArea {
+    let regs = regfile_registers(pr_regions) as f64;
+    let scale = regs / 20.0;
+    ComponentArea {
+        luts: (table1::REGISTER_FILE.luts as f64 * scale).round() as u64,
+        ffs: (table1::REGISTER_FILE.ffs as f64 * scale).round() as u64,
+        brams: 0.0,
+        power_mw: None,
+    }
+}
+
+/// Vivado-style utilization report for the whole shell (Table I format).
+pub fn table1_report(device: &DeviceModel) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| Component            |   LUT |    % |    FF |      % | BRAM |    % |\n",
+    );
+    out.push_str(
+        "|----------------------|-------|------|-------|--------|------|------|\n",
+    );
+    let mut total = ComponentArea::new(0, 0, 0.0, None);
+    for (name, a, counted) in table1::ROWS {
+        if counted {
+            total = total.plus(a);
+        }
+        out.push_str(&format!(
+            "| {:<20} | {:>5} | {:>4.2} | {:>5} | {:>6.3} | {:>4} | {:>4.2} |\n",
+            name,
+            a.luts,
+            device.lut_pct(a.luts),
+            a.ffs,
+            device.ff_pct(a.ffs),
+            a.brams,
+            device.bram_pct(a.brams),
+        ));
+    }
+    out.push_str(&format!(
+        "| {:<20} | {:>5} | {:>4.2} | {:>5} | {:>6.3} | {:>4} | {:>4.2} |\n",
+        "Total",
+        total.luts,
+        device.lut_pct(total.luts),
+        total.ffs,
+        device.ff_pct(total.ffs),
+        total.brams,
+        device.bram_pct(total.brams),
+    ));
+    out
+}
+
+/// NoC area scaled to serve `n` modules, anchored at [16]'s 2x2 mesh of
+/// four 3-port routers (1220 LUTs / 1240 FFs for 4 modules).  A mesh
+/// needs one router per module; router area is per-unit constant (ports
+/// per router stay 3-5 regardless of mesh size), so NoC area scales
+/// *linearly* — the asymptotic advantage the paper concedes to NoCs.
+pub fn noc_area(n: usize) -> ComponentArea {
+    let per_module_luts = table2::NOC_2X2_3PORT.luts as f64 / 4.0;
+    let per_module_ffs = table2::NOC_2X2_3PORT.ffs as f64 / 4.0;
+    ComponentArea {
+        luts: (per_module_luts * n as f64).round() as u64,
+        ffs: (per_module_ffs * n as f64).round() as u64,
+        brams: 0.0,
+        power_mw: Some(80.0 / 4.0 * n as f64),
+    }
+}
+
+/// §VI future work ("assessing the overhead in detail when scaling our
+/// crossbar architecture"): the crossbar's quadratic LUT growth
+/// eventually crosses the NoC's linear growth.  Returns the smallest
+/// port count at which the crossbar stops being the smaller design.
+pub fn crossbar_noc_crossover() -> usize {
+    for n in 4..=64 {
+        if crossbar_area(n).luts >= noc_area(n).luts {
+            return n;
+        }
+    }
+    usize::MAX
+}
+
+/// The paper's headline area claims (§I, §V.G), derived from the model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeadlineClaims {
+    /// LUT savings vs the 2x2 NoC of [16] (paper: 61%).
+    pub lut_savings_vs_noc_pct: f64,
+    /// FF savings vs the NoC (paper: 95%).
+    pub ff_savings_vs_noc_pct: f64,
+    /// Power ratio NoC / crossbar (paper: 80x).
+    pub power_ratio_vs_noc: f64,
+    /// Extra LUTs vs 4x scaled E-WB shared bus (paper: +48.6%).
+    pub lut_overhead_vs_ewb_pct: f64,
+    /// FF savings vs E-WB (paper: 46.4%).
+    pub ff_savings_vs_ewb_pct: f64,
+}
+
+/// Compute the headline claims from the component numbers.
+pub fn headline_claims() -> HeadlineClaims {
+    let xbar = table2::WB_CROSSBAR_4X4;
+    let noc = table2::NOC_2X2_3PORT;
+    let system = table2::WB_SYSTEM_4X4;
+    let ewb = table2::EWB_X4;
+    HeadlineClaims {
+        lut_savings_vs_noc_pct: 100.0 * (1.0 - xbar.luts as f64 / noc.luts as f64),
+        ff_savings_vs_noc_pct: 100.0 * (1.0 - xbar.ffs as f64 / noc.ffs as f64),
+        power_ratio_vs_noc: noc.power_mw.unwrap() / xbar.power_mw.unwrap(),
+        lut_overhead_vs_ewb_pct: 100.0 * (system.luts as f64 / ewb.luts as f64 - 1.0),
+        ff_savings_vs_ewb_pct: 100.0 * (1.0 - system.ffs as f64 / ewb.ffs as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::DeviceModel;
+
+    #[test]
+    fn table1_total_matches_paper_row() {
+        let mut total = ComponentArea::new(0, 0, 0.0, None);
+        for (_, a, counted) in table1::ROWS {
+            if counted {
+                total = total.plus(a);
+            }
+        }
+        assert_eq!(total.luts, table1::TOTAL.luts);
+        assert_eq!(total.ffs, table1::TOTAL.ffs);
+        assert_eq!(total.brams, 89.0);
+    }
+
+    #[test]
+    fn composite_row_is_sum_of_its_parts() {
+        // "WB Hamming Decoder" = WB master IF + WB slave IF + decoder.
+        let parts = table1::WB_MASTER_IF
+            .plus(table1::WB_SLAVE_IF)
+            .plus(table1::HAMMING_DECODER);
+        assert_eq!(parts.luts, table1::WB_HAMMING_DECODER.luts);
+        assert_eq!(parts.ffs, table1::WB_HAMMING_DECODER.ffs);
+    }
+
+    #[test]
+    fn crossbar_anchor_matches_measured_4x4() {
+        let a = crossbar_area(4);
+        assert_eq!(a.luts, 475);
+        assert_eq!(a.ffs, 60);
+        assert_eq!(a.power_mw, Some(1.0));
+    }
+
+    #[test]
+    fn crossbar_scaling_is_quadratic_luts_linear_ffs() {
+        let a8 = crossbar_area(8);
+        assert_eq!(a8.luts, 475 * 4);
+        assert_eq!(a8.ffs, 120);
+        let a16 = crossbar_area(16);
+        assert_eq!(a16.luts, 475 * 16);
+    }
+
+    #[test]
+    fn system_area_matches_table2() {
+        // 475 + 4*(213+115) = 1787... the paper reports 1599: its system
+        // row uses the *averaged* interfaces (§V.F: "on average master
+        // and slave interfaces have 196 and 85 LUTs"), i.e. 475 +
+        // 4*(196+85) = 1599.  Reproduce that accounting.
+        let avg_master = ComponentArea::new(196, 117, 0.0, None);
+        let avg_slave = ComponentArea::new(85, 628, 0.0, None);
+        let system = crossbar_area(4)
+            .plus(avg_master.times(4))
+            .plus(avg_slave.times(4));
+        assert_eq!(system.luts, table2::WB_SYSTEM_4X4.luts);
+        // FF accounting: 60 + 4*(117+628) = 3040 vs the paper's 796.
+        // The paper's system row evidently counts only the *prototype's*
+        // three module interface pairs' control FFs, not the averaged
+        // data registers; we keep the quoted value as the comparison
+        // anchor and note the discrepancy here.
+        assert_eq!(table2::WB_SYSTEM_4X4.ffs, 796);
+    }
+
+    #[test]
+    fn headline_claims_match_paper() {
+        let h = headline_claims();
+        assert!((h.lut_savings_vs_noc_pct - 61.0).abs() < 1.0, "{h:?}");
+        assert!((h.ff_savings_vs_noc_pct - 95.0).abs() < 0.5, "{h:?}");
+        assert!((h.power_ratio_vs_noc - 80.0).abs() < 0.1, "{h:?}");
+        assert!((h.lut_overhead_vs_ewb_pct - 48.6).abs() < 0.5, "{h:?}");
+        assert!((h.ff_savings_vs_ewb_pct - 46.4).abs() < 0.5, "{h:?}");
+    }
+
+    #[test]
+    fn noc_scales_linearly_from_its_anchor() {
+        assert_eq!(noc_area(4).luts, 1220);
+        assert_eq!(noc_area(4).ffs, 1240);
+        assert_eq!(noc_area(8).luts, 2440);
+        assert_eq!(noc_area(8).power_mw, Some(160.0));
+    }
+
+    #[test]
+    fn crossover_analysis_matches_the_papers_tradeoff() {
+        // At the prototype scale the crossbar wins by far; quadratic LUT
+        // growth crosses the NoC's linear growth at ~10 ports — i.e. the
+        // paper's "small number of small PR regions" regime is exactly
+        // where the crossbar is the right choice (§II.A's area-vs-
+        // scalability trade-off, quantified).
+        let n = crossbar_noc_crossover();
+        assert!(
+            (8..=12).contains(&n),
+            "crossover at {n} ports (expected ~10)"
+        );
+        assert!(crossbar_area(4).luts < noc_area(4).luts / 2);
+        assert!(crossbar_area(16).luts > noc_area(16).luts);
+    }
+
+    #[test]
+    fn regfile_growth_three_regs_per_region() {
+        assert_eq!(regfile_registers(3), 20);
+        assert_eq!(regfile_registers(4), 23);
+        assert_eq!(regfile_registers(10), 41);
+        let a3 = regfile_area(3);
+        let a4 = regfile_area(4);
+        assert_eq!(a3.luts, 265);
+        assert!(a4.luts > a3.luts);
+    }
+
+    #[test]
+    fn report_renders_all_rows() {
+        let d = DeviceModel::kcu1500_prototype();
+        let r = table1_report(&d);
+        for (name, _, _) in table1::ROWS {
+            assert!(r.contains(name), "missing {name}");
+        }
+        assert!(r.contains("Total"));
+    }
+}

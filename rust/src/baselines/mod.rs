@@ -1,0 +1,13 @@
+//! Comparison baselines the paper evaluates against (Table II, §V.G):
+//!
+//! * [`noc`] — the 2x2 mesh NoC of Mbongue et al. [16]: bufferless
+//!   3-port routers, no virtual channels, flit-level wormhole pipeline.
+//! * [`sharedbus`] — the pipelined single-master E-WB shared bus of
+//!   Hagemeyer et al. [21].
+//!
+//! Both are implemented to the level of detail the paper's claims rest
+//! on: request-completion cycle counts for an 8-word payload, and area
+//! numbers quoted from the respective publications.
+
+pub mod noc;
+pub mod sharedbus;

@@ -1,0 +1,229 @@
+//! The shared-bus baseline of [21] (Hagemeyer et al., FPL 2007): a
+//! pipelined shared bus with encapsulated-WISHBONE (E-WB) interfaces for
+//! PR regions.
+//!
+//! One bus, one transfer at a time: a single arbiter serializes *all*
+//! masters regardless of destination — the flexibility/scalability
+//! deficit the paper contrasts the crossbar against (§II.A, §III).  The
+//! per-transaction protocol mirrors the WB crossbar's master path
+//! (latch, issue, 2-cycle arbitration, 1 word/cc, status) so latency
+//! differences isolate the *topology*, not the interface.
+//!
+//! Table II quotes four single master-slave E-WB communication
+//! infrastructures at 1076 LUTs / 1484 FFs; [`crate::area::table2`]
+//! carries those numbers.
+
+use std::collections::VecDeque;
+
+use crate::sim::Tick;
+
+/// One queued bus transfer.
+#[derive(Debug, Clone)]
+pub struct BusJob {
+    pub src: usize,
+    pub dst: usize,
+    pub words: usize,
+    /// Cycle the master initiated the request.
+    pub request_cycle: u64,
+}
+
+/// A completed transfer.
+#[derive(Debug, Clone)]
+pub struct BusDelivery {
+    pub job: BusJob,
+    pub granted_cycle: u64,
+    pub done_cycle: u64,
+}
+
+impl BusDelivery {
+    /// Cycles from initiation to first data (crossbar's time-to-grant
+    /// analogue).
+    pub fn time_to_grant(&self) -> u64 {
+        self.granted_cycle + 1 - self.job.request_cycle
+    }
+
+    /// Cycles from initiation to status registration.
+    pub fn completion_latency(&self) -> u64 {
+        self.done_cycle + 1 - self.job.request_cycle
+    }
+}
+
+#[derive(Debug)]
+enum BusState {
+    Free,
+    /// Latch + issue + 2-cycle arbitration = 4 cc before first data, as
+    /// on the crossbar's master path.
+    Granting { job: BusJob, countdown: u64 },
+    Transfer { job: BusJob, granted_cycle: u64, sent: usize },
+    Status { job: BusJob, granted_cycle: u64 },
+}
+
+/// The shared bus.
+#[derive(Debug)]
+pub struct SharedBus {
+    state: BusState,
+    queue: VecDeque<BusJob>,
+    delivered: Vec<BusDelivery>,
+    cycle: u64,
+    /// Cycles the bus spent occupied (utilization stats).
+    pub busy_cycles: u64,
+}
+
+/// Pre-data protocol cycles: latch(1) + issue(1) + arbitrate(2).
+pub const GRANT_CYCLES: u64 = 4;
+
+impl SharedBus {
+    /// New idle bus.
+    pub fn new() -> Self {
+        Self {
+            state: BusState::Free,
+            queue: VecDeque::new(),
+            delivered: Vec::new(),
+            cycle: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    /// A master requests a transfer of `words` to `dst`.
+    pub fn request(&mut self, src: usize, dst: usize, words: usize) {
+        self.queue.push_back(BusJob {
+            src,
+            dst,
+            words,
+            request_cycle: self.cycle + 1,
+        });
+    }
+
+    /// Completed transfers so far.
+    pub fn take_delivered(&mut self) -> Vec<BusDelivery> {
+        std::mem::take(&mut self.delivered)
+    }
+
+    /// Anything queued or in flight?
+    pub fn busy(&self) -> bool {
+        !matches!(self.state, BusState::Free) || !self.queue.is_empty()
+    }
+
+    /// Closed form: completion latency of the n-th of n simultaneous
+    /// `words`-word requests — every predecessor holds the bus for its
+    /// full grant+data+status window (no overlap: one bus; the next
+    /// grant pipeline starts the cycle after the status cycle).
+    pub fn nth_completion(n: u64, words: u64) -> u64 {
+        n * (GRANT_CYCLES + words + 1)
+    }
+}
+
+impl Default for SharedBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tick for SharedBus {
+    fn tick(&mut self, cycle: u64) {
+        self.cycle = cycle;
+        if !matches!(self.state, BusState::Free) {
+            self.busy_cycles += 1;
+        }
+        self.state = match std::mem::replace(&mut self.state, BusState::Free) {
+            BusState::Free => {
+                if let Some(mut job) = self.queue.pop_front() {
+                    if job.request_cycle > cycle {
+                        job.request_cycle = cycle;
+                    }
+                    self.busy_cycles += 1;
+                    BusState::Granting { job, countdown: GRANT_CYCLES - 1 }
+                } else {
+                    BusState::Free
+                }
+            }
+            BusState::Granting { job, countdown } => {
+                if countdown > 1 {
+                    BusState::Granting { job, countdown: countdown - 1 }
+                } else {
+                    BusState::Transfer { job, granted_cycle: cycle, sent: 0 }
+                }
+            }
+            BusState::Transfer { job, granted_cycle, mut sent } => {
+                sent += 1;
+                if sent >= job.words {
+                    BusState::Status { job, granted_cycle }
+                } else {
+                    BusState::Transfer { job, granted_cycle, sent }
+                }
+            }
+            BusState::Status { job, granted_cycle } => {
+                self.delivered.push(BusDelivery {
+                    job,
+                    granted_cycle,
+                    done_cycle: cycle,
+                });
+                // Bus free next cycle; the next queued master re-arbitrates.
+                BusState::Free
+            }
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Clock;
+
+    #[test]
+    fn single_transfer_matches_crossbar_best_case() {
+        // Same interface protocol => same uncontended numbers (4 cc grant,
+        // 13 cc completion for 8 words).
+        let mut bus = SharedBus::new();
+        bus.request(0, 1, 8);
+        let mut clk = Clock::new();
+        clk.run_until(&mut bus, 100, |b| !b.busy()).unwrap();
+        let d = bus.take_delivered();
+        assert_eq!(d[0].time_to_grant(), 4);
+        assert_eq!(d[0].completion_latency(), 13);
+    }
+
+    #[test]
+    fn disjoint_transfers_still_serialize() {
+        // The crossbar's parallel-transmission advantage: on the bus,
+        // 0->1 and 2->3 serialize even though they share no endpoints.
+        let mut bus = SharedBus::new();
+        bus.request(0, 1, 8);
+        bus.request(2, 3, 8);
+        let mut clk = Clock::new();
+        clk.run_until(&mut bus, 200, |b| !b.busy()).unwrap();
+        let d = bus.take_delivered();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].completion_latency(), 13);
+        assert!(
+            d[1].completion_latency() > 13,
+            "second transfer must wait: {}",
+            d[1].completion_latency()
+        );
+    }
+
+    #[test]
+    fn nth_completion_closed_form() {
+        // 3 simultaneous 8-word transfers serialize into back-to-back
+        // 13-cc windows: completions at 13, 26, 39.
+        let mut bus = SharedBus::new();
+        for m in 0..3 {
+            bus.request(m, 3, 8);
+        }
+        let mut clk = Clock::new();
+        clk.run_until(&mut bus, 200, |b| !b.busy()).unwrap();
+        let d = bus.take_delivered();
+        let lats: Vec<u64> = d.iter().map(|x| x.completion_latency()).collect();
+        assert_eq!(lats, vec![13, 26, 39]);
+        assert_eq!(*lats.last().unwrap(), SharedBus::nth_completion(3, 8));
+    }
+
+    #[test]
+    fn utilization_counts_busy_cycles() {
+        let mut bus = SharedBus::new();
+        bus.request(0, 1, 8);
+        let mut clk = Clock::new();
+        clk.run_until(&mut bus, 100, |b| !b.busy()).unwrap();
+        assert_eq!(bus.busy_cycles, 13);
+    }
+}

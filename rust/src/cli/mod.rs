@@ -1,0 +1,148 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §7).
+//!
+//! ```text
+//! elastic-fpga <subcommand> [--flag value ...]
+//!
+//! Subcommands:
+//!   quickstart           run one 16 KB pipeline request end to end
+//!   serve                start the serving loop on a synthetic workload
+//!   fig5                 reproduce Fig 5 (elasticity execution times)
+//!   fig6                 reproduce Fig 6 (worst-case latency scaling)
+//!   table1               reproduce Table I (area usage)
+//!   table2               reproduce Table II (prior-art comparison)
+//!   bandwidth            reproduce §V.D (dynamic bandwidth allocation)
+//!   overhead             reproduce §V.E (communication overhead)
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::{ElasticError, Result};
+
+/// A parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cli {
+    /// The subcommand.
+    pub command: String,
+    /// `--key value` pairs (flags without a value get `"true"`).
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `argv[1..]`.
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut it = args.iter().peekable();
+        let command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| ElasticError::Config(USAGE.trim().into()))?;
+        if command.starts_with('-') {
+            return Err(ElasticError::Config(format!(
+                "expected a subcommand, got '{command}'\n{USAGE}"
+            )));
+        }
+        let mut flags = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let key = arg.strip_prefix("--").ok_or_else(|| {
+                ElasticError::Config(format!("expected --flag, got '{arg}'"))
+            })?;
+            if key.is_empty() {
+                return Err(ElasticError::Config("empty flag name".into()));
+            }
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    it.next().cloned().unwrap()
+                }
+                _ => "true".to_string(),
+            };
+            flags.insert(key.to_string(), value);
+        }
+        Ok(Cli { command, flags })
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// usize flag with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ElasticError::Config(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    /// bool flag (present or `--key true/false`).
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => Err(ElasticError::Config(format!(
+                "--{key} expects true/false, got '{v}'"
+            ))),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+usage: elastic-fpga <subcommand> [--flag value ...]
+
+subcommands:
+  quickstart   run one 16 KB pipeline request end to end (uses artifacts/)
+  serve        run the serving loop on a synthetic workload
+  fig5         reproduce Fig 5 (elasticity execution times)
+  fig6         reproduce Fig 6 (worst-case latency vs #PR regions)
+  table1       reproduce Table I (area usage of all components)
+  table2       reproduce Table II (comparison with prior art)
+  bandwidth    reproduce §V.D (dynamic bandwidth allocation)
+  overhead     reproduce §V.E (communication overhead cycle counts)
+
+common flags:
+  --artifacts DIR    artifact directory (default: artifacts)
+  --config FILE      TOML config overlay
+  --requests N       request count for `serve` (default: 64)
+  --no-pjrt          skip PJRT; use the golden model for CPU stages
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = Cli::parse(&argv(&["fig5", "--requests", "10", "--no-pjrt"])).unwrap();
+        assert_eq!(c.command, "fig5");
+        assert_eq!(c.usize_or("requests", 0).unwrap(), 10);
+        assert!(c.bool_or("no-pjrt", false).unwrap());
+        assert_eq!(c.str_or("artifacts", "artifacts"), "artifacts");
+    }
+
+    #[test]
+    fn rejects_missing_subcommand() {
+        assert!(Cli::parse(&argv(&[])).is_err());
+        assert!(Cli::parse(&argv(&["--flag"])).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let c = Cli::parse(&argv(&["serve", "--requests", "abc"])).unwrap();
+        assert!(c.usize_or("requests", 1).is_err());
+        let c = Cli::parse(&argv(&["serve", "--no-pjrt", "maybe"])).unwrap();
+        assert!(c.bool_or("no-pjrt", false).is_err());
+    }
+
+    #[test]
+    fn flag_without_value_is_true() {
+        let c = Cli::parse(&argv(&["serve", "--verbose", "--requests", "3"])).unwrap();
+        assert_eq!(c.str_or("verbose", ""), "true");
+        assert_eq!(c.usize_or("requests", 0).unwrap(), 3);
+    }
+}

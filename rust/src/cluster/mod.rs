@@ -1,0 +1,258 @@
+//! Multi-board elastic cluster — the paper's future-work vision
+//! ("integrating the current implementation with ... the Kubernetes
+//! engine to exploit the true potential of elasticity of FPGAs in the
+//! Cloud", §VI), realized as a launcher/scheduler over multiple fabric
+//! nodes.
+//!
+//! Each node is one KCU1500-class board (an [`ElasticManager`]); the
+//! cluster scheduler places each incoming request on a node according to
+//! a pluggable policy, preferring nodes that can host more of the app's
+//! stage chain on fabric (the elasticity-aware bin-packing a k8s device
+//! plugin would do).
+
+use crate::config::SystemConfig;
+use crate::manager::{AppReport, AppRequest, ElasticManager, StagePlacement};
+use crate::runtime::RuntimeHandle;
+use crate::Result;
+
+/// Placement policies for choosing a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Rotate over nodes regardless of load.
+    RoundRobin,
+    /// Choose the node with the most available PR regions (ties: lowest
+    /// index) — maximizes the FPGA share of each request.
+    MostAvailable,
+    /// First node that can host the *entire* stage chain on fabric;
+    /// otherwise fall back to MostAvailable.
+    FirstFullFit,
+}
+
+/// One board.
+pub struct BoardNode {
+    /// Node name (k8s-style).
+    pub name: String,
+    manager: ElasticManager,
+    /// Requests executed on this node (stats).
+    pub served: u64,
+    /// Total FPGA stages hosted (stats).
+    pub fpga_stages_hosted: u64,
+}
+
+impl BoardNode {
+    /// PR regions currently available on this node.
+    pub fn available_regions(&self) -> usize {
+        self.manager.available_regions()
+    }
+
+    /// Direct manager access (tests / churn injection).
+    pub fn manager_mut(&mut self) -> &mut ElasticManager {
+        &mut self.manager
+    }
+}
+
+/// The cluster scheduler.
+pub struct Cluster {
+    nodes: Vec<BoardNode>,
+    policy: PlacementPolicy,
+    rr_next: usize,
+}
+
+impl Cluster {
+    /// Launch `n` nodes, all on the same config; the PJRT runtime handle
+    /// (if any) is shared — on-server stages of all nodes execute through
+    /// the same artifact cache.
+    pub fn launch(
+        n: usize,
+        cfg: &SystemConfig,
+        runtime: Option<RuntimeHandle>,
+        policy: PlacementPolicy,
+    ) -> Self {
+        assert!(n >= 1);
+        let nodes = (0..n)
+            .map(|i| BoardNode {
+                name: format!("fpga-node-{i}"),
+                manager: ElasticManager::new(cfg.clone(), runtime.clone()),
+                served: 0,
+                fpga_stages_hosted: 0,
+            })
+            .collect();
+        Self { nodes, policy, rr_next: 0 }
+    }
+
+    /// The nodes (read-only).
+    pub fn nodes(&self) -> &[BoardNode] {
+        &self.nodes
+    }
+
+    /// Mutable node access (churn injection).
+    pub fn node_mut(&mut self, i: usize) -> &mut BoardNode {
+        &mut self.nodes[i]
+    }
+
+    /// Pick a node for a request under the current policy; returns its
+    /// index.  Pure function of cluster state (no side effects).
+    pub fn select_node(&self, req: &AppRequest) -> usize {
+        match self.policy {
+            PlacementPolicy::RoundRobin => self.rr_next % self.nodes.len(),
+            PlacementPolicy::MostAvailable => self.most_available(),
+            PlacementPolicy::FirstFullFit => {
+                let need = req.stages.len();
+                self.nodes
+                    .iter()
+                    .position(|n| n.available_regions() >= need)
+                    .unwrap_or_else(|| self.most_available())
+            }
+        }
+    }
+
+    fn most_available(&self) -> usize {
+        let mut best = 0;
+        let mut best_avail = self.nodes[0].available_regions();
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            let a = n.available_regions();
+            if a > best_avail {
+                best = i;
+                best_avail = a;
+            }
+        }
+        best
+    }
+
+    /// Schedule and execute one request; returns the node index and its
+    /// report.
+    pub fn execute(&mut self, req: &AppRequest) -> Result<(usize, AppReport)> {
+        let i = self.select_node(req);
+        self.rr_next = self.rr_next.wrapping_add(1);
+        let node = &mut self.nodes[i];
+        let report = node.manager.execute(req)?;
+        node.served += 1;
+        node.fpga_stages_hosted += report.fpga_stages as u64;
+        Ok((i, report))
+    }
+
+    /// Cluster-wide available regions.
+    pub fn total_available_regions(&self) -> usize {
+        self.nodes.iter().map(BoardNode::available_regions).sum()
+    }
+
+    /// How the placement of `req` would look per node (dry run — the
+    /// scheduler's "explain" output).
+    pub fn explain(&self, req: &AppRequest) -> Vec<(String, Vec<StagePlacement>)> {
+        self.nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.manager.plan(&req.stages)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manager::golden_chain;
+    use crate::modules::ModuleKind;
+    use crate::util::SplitMix64;
+
+    fn req(seed: u64, words: usize) -> AppRequest {
+        let mut rng = SplitMix64::new(seed);
+        let mut data = vec![0u32; words];
+        rng.fill_u32(&mut data);
+        AppRequest::pipeline(0, data)
+    }
+
+    fn cluster(n: usize, policy: PlacementPolicy) -> Cluster {
+        Cluster::launch(n, &SystemConfig::paper_defaults(), None, policy)
+    }
+
+    #[test]
+    fn round_robin_distributes_evenly() {
+        let mut c = cluster(3, PlacementPolicy::RoundRobin);
+        for i in 0..9 {
+            let (node, rep) = c.execute(&req(i, 64)).unwrap();
+            assert_eq!(node, (i % 3) as usize);
+            assert!(rep.verified);
+        }
+        for n in c.nodes() {
+            assert_eq!(n.served, 3);
+        }
+    }
+
+    #[test]
+    fn most_available_prefers_empty_nodes() {
+        let mut c = cluster(2, PlacementPolicy::MostAvailable);
+        // Fence node 0 down to 1 region.
+        c.node_mut(0).manager_mut().fence_regions(2);
+        let (node, rep) = c.execute(&req(1, 64)).unwrap();
+        assert_eq!(node, 1, "node 1 has more free regions");
+        assert_eq!(rep.fpga_stages, 3);
+    }
+
+    #[test]
+    fn first_full_fit_skips_constrained_nodes() {
+        let mut c = cluster(3, PlacementPolicy::FirstFullFit);
+        c.node_mut(0).manager_mut().fence_regions(2); // 1 region
+        c.node_mut(1).manager_mut().fence_regions(1); // 2 regions
+        let (node, rep) = c.execute(&req(2, 64)).unwrap();
+        assert_eq!(node, 2, "only node 2 fits the whole 3-stage chain");
+        assert_eq!(rep.fpga_stages, 3);
+    }
+
+    #[test]
+    fn full_fit_falls_back_when_nothing_fits() {
+        let mut c = cluster(2, PlacementPolicy::FirstFullFit);
+        c.node_mut(0).manager_mut().fence_regions(3); // 0 regions
+        c.node_mut(1).manager_mut().fence_regions(2); // 1 region
+        let (node, rep) = c.execute(&req(3, 64)).unwrap();
+        assert_eq!(node, 1, "falls back to the most-available node");
+        assert_eq!(rep.fpga_stages, 1);
+        assert!(rep.verified);
+    }
+
+    #[test]
+    fn results_correct_across_nodes_and_policies() {
+        for policy in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::MostAvailable,
+            PlacementPolicy::FirstFullFit,
+        ] {
+            let mut c = cluster(3, policy);
+            for i in 0..6u64 {
+                let r = req(100 + i, 128);
+                let want = golden_chain(&r.stages, &r.data);
+                let (_, rep) = c.execute(&r).unwrap();
+                assert_eq!(rep.output, want, "policy {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn explain_reports_per_node_plans() {
+        let mut c = cluster(2, PlacementPolicy::MostAvailable);
+        c.node_mut(0).manager_mut().fence_regions(3);
+        let plans = c.explain(&req(4, 64));
+        assert_eq!(plans.len(), 2);
+        assert!(plans[0].1.iter().all(|p| !p.is_fpga()), "node 0 all-server");
+        assert!(plans[1].1.iter().all(|p| p.is_fpga()), "node 1 all-fabric");
+    }
+
+    #[test]
+    fn mixed_chains_respect_region_budgets() {
+        let mut c = cluster(1, PlacementPolicy::MostAvailable);
+        let r = AppRequest {
+            app_id: 2,
+            data: req(5, 64).data,
+            stages: vec![ModuleKind::HammingEncoder, ModuleKind::HammingDecoder],
+        };
+        let (_, rep) = c.execute(&r).unwrap();
+        assert_eq!(rep.fpga_stages, 2);
+        assert!(rep.verified);
+    }
+
+    #[test]
+    fn cluster_wide_region_accounting() {
+        let mut c = cluster(3, PlacementPolicy::RoundRobin);
+        assert_eq!(c.total_available_regions(), 9);
+        c.node_mut(1).manager_mut().fence_regions(2);
+        assert_eq!(c.total_available_regions(), 7);
+    }
+}

@@ -1,0 +1,303 @@
+//! Minimal TOML-subset parser for system configuration files.
+//!
+//! Supported grammar (everything the shipped configs use):
+//! `[section]` / `[section.sub]` headers, `key = value` pairs with
+//! integer, float, boolean, string, and flat-array values, `#` comments.
+//! Not supported (rejected, not silently ignored): inline tables, arrays
+//! of tables, multi-line strings, datetimes.
+//!
+//! serde/toml crates are unavailable offline — see DESIGN.md §7.
+
+use std::collections::BTreeMap;
+
+use crate::{ElasticError, Result};
+
+/// A TOML scalar or flat array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(v) if *v >= 0 => Some(*v as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path key -> value (e.g. `"timing.cpu_stage_ms"`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    err(lineno, "unterminated section header")
+                })?;
+                if name.starts_with('[') {
+                    return Err(err(lineno, "arrays of tables not supported"));
+                }
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let parsed = parse_value(val.trim(), lineno)?;
+            if values.insert(full.clone(), parsed).is_some() {
+                return Err(err(lineno, &format!("duplicate key '{full}'")));
+            }
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up a dotted-path key.
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    /// All keys under a section prefix.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let dotted = format!("{prefix}.");
+        self.values
+            .keys()
+            .filter(|k| k.starts_with(&dotted))
+            .map(|k| k.as_str())
+            .collect()
+    }
+
+    /// Typed getters with defaulting.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(TomlValue::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(TomlValue::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> ElasticError {
+    ElasticError::Config(format!("toml line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue> {
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Some(hex) = clean.strip_prefix("0x") {
+        return i64::from_str_radix(hex, 16)
+            .map(TomlValue::Int)
+            .map_err(|_| err(lineno, "invalid hex integer"));
+    }
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(v) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| err(lineno, &format!("cannot parse value '{text}'")))
+}
+
+/// Split an array body on commas (no nested arrays in our subset, but
+/// respect quoted strings).
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < text.len() {
+        parts.push(&text[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            # header comment
+            top = 1
+            [fabric]
+            num_ports = 4          # inline comment
+            clock_mhz = 250.0
+            name = "kcu1500"
+            enabled = true
+            sizes = [1, 2, 3]
+            [timing.pcie]
+            bandwidth_gbps = 7.9
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.usize_or("fabric.num_ports", 0), 4);
+        assert_eq!(doc.f64_or("fabric.clock_mhz", 0.0), 250.0);
+        assert_eq!(doc.str_or("fabric.name", ""), "kcu1500");
+        assert!(doc.bool_or("fabric.enabled", false));
+        assert_eq!(doc.f64_or("timing.pcie.bandwidth_gbps", 0.0), 7.9);
+        assert_eq!(
+            doc.get("fabric.sizes").unwrap(),
+            &TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+    }
+
+    #[test]
+    fn hex_and_underscores() {
+        let doc = TomlDoc::parse("k = 0x9E37_79B1\nbig = 1_000_000").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_i64(), Some(0x9E37_79B1));
+        assert_eq!(doc.get("big").unwrap().as_i64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("[[tables]]\n").is_err());
+    }
+
+    #[test]
+    fn defaulting_getters() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("missing", 7), 7);
+        assert_eq!(doc.str_or("missing", "d"), "d");
+    }
+}

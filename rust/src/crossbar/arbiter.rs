@@ -1,0 +1,243 @@
+//! Decentralized per-slave-port Weighted-Round-Robin arbiter (§IV.E.1).
+//!
+//! "To support bandwidth requirements of different accelerators, we
+//! propose a Weighted Round Robin (WRR) arbiter based on leading zero
+//! counters (LZC) [...].  It tracks the number of packages rather than
+//! the time period via package counter, which looks up the registers
+//! holding the maximum number of packages each master is allowed to
+//! send.  When the maximum number of packages is reached, it switches
+//! the grant to the next master."
+//!
+//! Each slave port owns one arbiter, making the scheme decentralized —
+//! there is no global arbitration state, which is what keeps the
+//! crossbar's area low (§II.A notes arbitration logic dominates crossbar
+//! area) and simplifies multicast management.
+//!
+//! Timing: a request raised in cycle `t` is first *seen* in cycle `t+1`
+//! and granted at the end of cycle `t+2` — the paper's "an arbiter spends
+//! 2 ccs to grant the request and enable the slave interface".
+
+use crate::util::lzc::lzc_select;
+
+/// Arbiter FSM state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbiterState {
+    /// Bus free, no decision in progress.
+    Free,
+    /// Decision cycle 1 of 2 completed for `candidate`.
+    Deciding { candidate: usize },
+    /// `master` holds the bus.
+    Granted { master: usize },
+}
+
+/// Weighted-Round-Robin arbiter for one slave port.
+#[derive(Debug)]
+pub struct Arbiter {
+    n: usize,
+    state: ArbiterState,
+    /// Pending request bits, indexed by master port.
+    requests: u32,
+    /// WRR pointer: last master granted.
+    last_grant: Option<u32>,
+    /// Per-master package budget per grant (Table III regs 9-12).
+    budgets: Vec<u32>,
+    /// Port held in reset (no grant decisions — §IV.C).
+    pub in_reset: bool,
+}
+
+impl Arbiter {
+    /// New free arbiter with a uniform default package budget.
+    pub fn new(n: usize, default_budget: u32) -> Self {
+        assert!(default_budget > 0, "package budget must be positive");
+        Self {
+            n,
+            state: ArbiterState::Free,
+            requests: 0,
+            last_grant: None,
+            budgets: vec![default_budget; n],
+            in_reset: false,
+        }
+    }
+
+    /// Current FSM state.
+    pub fn state(&self) -> ArbiterState {
+        self.state
+    }
+
+    /// The master currently holding the bus, if any.
+    pub fn granted_master(&self) -> Option<usize> {
+        match self.state {
+            ArbiterState::Granted { master } => Some(master),
+            _ => None,
+        }
+    }
+
+    /// Is the bus free (no grant, no decision in progress)?
+    pub fn is_free(&self) -> bool {
+        self.state == ArbiterState::Free
+    }
+
+    /// Raise master `m`'s request line.
+    pub fn raise_request(&mut self, m: usize) {
+        debug_assert!(m < self.n);
+        self.requests |= 1 << m;
+    }
+
+    /// Drop master `m`'s request line (withdrawal or completion).
+    pub fn drop_request(&mut self, m: usize) {
+        self.requests &= !(1 << m);
+    }
+
+    /// Is master `m` currently requesting?
+    pub fn is_requesting(&self, m: usize) -> bool {
+        self.requests >> m & 1 == 1
+    }
+
+    /// Per-grant package budget for master `m`.
+    pub fn budget(&self, m: usize) -> u32 {
+        self.budgets[m]
+    }
+
+    /// Program master `m`'s package budget (register-file write).
+    pub fn set_budget(&mut self, m: usize, packages: u32) {
+        assert!(packages > 0, "package budget must be positive");
+        self.budgets[m] = packages;
+    }
+
+    /// Release the bus (registered: called by the crossbar at the start of
+    /// the cycle *after* the last word).
+    pub fn release(&mut self) {
+        if let ArbiterState::Granted { master } = self.state {
+            self.last_grant = Some(master as u32);
+        }
+        self.state = ArbiterState::Free;
+    }
+
+    /// Full reset (§IV.C): drop requests and any grant; keep budgets (they
+    /// live in the register file and survive module reconfiguration).
+    pub fn reset(&mut self) {
+        self.state = ArbiterState::Free;
+        self.requests = 0;
+        self.last_grant = None;
+    }
+
+    /// One clock: advance the 2-cycle decision pipeline.
+    pub fn tick(&mut self) {
+        if self.in_reset {
+            return;
+        }
+        match self.state {
+            ArbiterState::Free => {
+                // Decision cycle 1: LZC-select the next requester in WRR
+                // order.
+                if let Some(winner) =
+                    lzc_select(self.requests, self.n as u32, self.last_grant)
+                {
+                    self.state = ArbiterState::Deciding { candidate: winner as usize };
+                }
+            }
+            ArbiterState::Deciding { candidate } => {
+                // Decision cycle 2: commit the grant — unless the candidate
+                // withdrew in between (e.g. its watchdog fired), in which
+                // case re-decide.
+                if self.is_requesting(candidate) {
+                    self.state = ArbiterState::Granted { master: candidate };
+                } else if let Some(winner) =
+                    lzc_select(self.requests, self.n as u32, self.last_grant)
+                {
+                    self.state = ArbiterState::Deciding { candidate: winner as usize };
+                } else {
+                    self.state = ArbiterState::Free;
+                }
+            }
+            ArbiterState::Granted { .. } => {
+                // Held until the crossbar calls release().
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grant_takes_exactly_two_ticks() {
+        let mut a = Arbiter::new(4, 8);
+        a.raise_request(2);
+        assert!(a.is_free());
+        a.tick(); // decision cycle 1
+        assert_eq!(a.granted_master(), None);
+        a.tick(); // decision cycle 2
+        assert_eq!(a.granted_master(), Some(2));
+    }
+
+    #[test]
+    fn wrr_order_rotates_from_last_grant() {
+        let mut a = Arbiter::new(4, 8);
+        a.raise_request(0);
+        a.raise_request(2);
+        a.tick();
+        a.tick();
+        assert_eq!(a.granted_master(), Some(0));
+        a.drop_request(0);
+        a.release();
+        a.raise_request(0); // 0 asks again, but 2 is next in WRR order
+        a.tick();
+        a.tick();
+        assert_eq!(a.granted_master(), Some(2));
+    }
+
+    #[test]
+    fn withdrawal_during_decision_reevaluates() {
+        let mut a = Arbiter::new(4, 8);
+        a.raise_request(1);
+        a.tick(); // deciding on 1
+        a.drop_request(1);
+        a.raise_request(3);
+        a.tick(); // 1 gone; re-decide on 3
+        assert_eq!(a.granted_master(), None);
+        a.tick();
+        assert_eq!(a.granted_master(), Some(3));
+    }
+
+    #[test]
+    fn withdrawal_with_no_others_returns_to_free() {
+        let mut a = Arbiter::new(4, 8);
+        a.raise_request(1);
+        a.tick();
+        a.drop_request(1);
+        a.tick();
+        assert!(a.is_free());
+    }
+
+    #[test]
+    fn reset_holds_off_grants() {
+        let mut a = Arbiter::new(4, 8);
+        a.in_reset = true;
+        a.raise_request(0);
+        a.tick();
+        a.tick();
+        assert_eq!(a.granted_master(), None, "no grant decisions in reset");
+        a.in_reset = false;
+        a.tick();
+        a.tick();
+        assert_eq!(a.granted_master(), Some(0));
+    }
+
+    #[test]
+    fn budgets_are_programmable_per_master() {
+        let mut a = Arbiter::new(4, 8);
+        assert_eq!(a.budget(3), 8);
+        a.set_budget(3, 128);
+        assert_eq!(a.budget(3), 128);
+        assert_eq!(a.budget(2), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_budget_rejected() {
+        let mut a = Arbiter::new(4, 8);
+        a.set_budget(0, 0);
+    }
+}

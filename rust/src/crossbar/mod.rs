@@ -1,0 +1,471 @@
+//! The paper's core contribution: a configurable NxN WISHBONE crossbar
+//! switch with decentralized Weighted-Round-Robin arbitration (§IV.E).
+//!
+//! Each port pairs a master side ([`MasterIf`]) and a slave side
+//! ([`SlaveIf`] + [`Arbiter`]).  The master port validates one-hot
+//! destination addresses against its isolation mask; the slave port's
+//! arbiter grants requests in WRR order with per-master package budgets
+//! read from the register file.
+//!
+//! # Cycle walkthrough (§V.E, reproduced exactly)
+//!
+//! Best case, 8 packages, idle slave:
+//!
+//! ```text
+//! cc1   module request latched by the master interface
+//! cc2   master interface validates the address and issues the request
+//! cc3-4 arbiter decides and enables the slave interface (grant at cc4)
+//! cc5-12  eight data words, one per cycle
+//! cc13  error/success status registered          -> completion = 13 cc
+//! ```
+//!
+//! Worst case (3 masters target the same slave): the k-th master in WRR
+//! order sees time-to-grant `12(k-1) + 4`, i.e. 4 / 16 / 28 cc, and the
+//! last completion is 37 cc.  Contenders *withdraw* when they observe the
+//! bus granted to another master and re-issue after release (1 cc
+//! re-latch + 1 cc issue + 2 cc arbitration), which is where the paper's
+//! "12 ccs for each previous master" comes from.
+//!
+//! The simulator commits state in a fixed order per cycle — slave ports
+//! (arbiters) first, then master ports in index order — with releases
+//! registered at cycle end, so the counts above are deterministic and
+//! independent of port numbering.
+
+mod arbiter;
+pub mod central;
+mod stats;
+
+pub use arbiter::{Arbiter, ArbiterState};
+pub use stats::XbarStats;
+
+use crate::config::CrossbarConfig;
+use crate::sim::Tick;
+use crate::util::onehot::{decode_onehot, isolation_permits};
+use crate::wishbone::{Job, MasterIf, MasterState, SlaveIf, WbError};
+
+/// A completion or error notification for one master-port job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct XbarEvent {
+    /// Master port the job belonged to.
+    pub port: usize,
+    /// Destination slave port (decoded; usize::MAX if address malformed).
+    pub dest: usize,
+    /// Application ID tag.
+    pub app_id: u32,
+    /// Cycle the module initiated the request.
+    pub request_cycle: u64,
+    /// Cycle of the first grant (0 when never granted).
+    pub grant_cycle: u64,
+    /// Cycle the status was registered (completion).
+    pub done_cycle: u64,
+    /// Words delivered.
+    pub words: usize,
+    /// Outcome.
+    pub result: Result<(), WbError>,
+}
+
+impl XbarEvent {
+    /// §V.E metric: cycles from request initiation to the master starting
+    /// to send the first data word.  The module initiates during the cycle
+    /// *before* the latch (`request_cycle - 1`), so best case this is
+    /// exactly 4: latch (1) + validate/issue (1) + arbitrate (2).
+    pub fn time_to_grant(&self) -> u64 {
+        (self.grant_cycle + 1).saturating_sub(self.request_cycle)
+    }
+
+    /// §V.E metric: cycles from request initiation to status registration
+    /// (13 for a best-case 8-package request).
+    pub fn completion_latency(&self) -> u64 {
+        (self.done_cycle + 1).saturating_sub(self.request_cycle)
+    }
+}
+
+/// The NxN crossbar switch.
+pub struct Crossbar {
+    n: usize,
+    cfg: CrossbarConfig,
+    masters: Vec<MasterIf>,
+    slaves: Vec<SlaveIf>,
+    arbiters: Vec<Arbiter>,
+    /// Per-slave released-this-cycle flag; committed to Free on the
+    /// *next* slave tick so contenders re-latch one cycle after release.
+    release_pending: Vec<bool>,
+    events: Vec<XbarEvent>,
+    stats: XbarStats,
+    cycle: u64,
+}
+
+impl Crossbar {
+    /// Build an NxN crossbar.  All masters start fully isolated
+    /// (allowed_slaves = 0) until the register file programs them, mirroring
+    /// the paper's configuration flow — use [`Crossbar::set_allowed_slaves`].
+    pub fn new(n: usize, cfg: CrossbarConfig) -> Self {
+        assert!(n >= 2 && n <= 32, "port count must be in 2..=32");
+        Self {
+            n,
+            masters: (0..n).map(|_| MasterIf::new(0)).collect(),
+            slaves: (0..n)
+                .map(|_| SlaveIf::new(cfg.slave_buffer_words))
+                .collect(),
+            arbiters: (0..n)
+                .map(|_| Arbiter::new(n, cfg.default_packages))
+                .collect(),
+            release_pending: vec![false; n],
+            events: Vec::new(),
+            stats: XbarStats::new(n),
+            cfg,
+            cycle: 0,
+        }
+    }
+
+    /// Port count.
+    pub fn ports(&self) -> usize {
+        self.n
+    }
+
+    /// Current cycle (last executed).
+    pub fn now(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Program a master port's isolation mask (Table III regs 5-8).
+    pub fn set_allowed_slaves(&mut self, master: usize, mask: u32) {
+        self.masters[master].allowed_slaves = mask;
+    }
+
+    /// Program per-master package budgets at a slave port (Table III regs
+    /// 9-12: "package numbers allowed in port N for ports [3:0]").
+    pub fn set_allowed_packages(&mut self, slave: usize, master: usize, packages: u32) {
+        self.arbiters[slave].set_budget(master, packages);
+    }
+
+    /// Assert/deassert reset on a port pair (Table III reg 4).  While in
+    /// reset the master aborts its queue and the slave won't arbitrate.
+    pub fn set_port_reset(&mut self, port: usize, in_reset: bool) {
+        if in_reset {
+            self.masters[port].reset();
+            self.slaves[port].reset();
+            self.arbiters[port].reset();
+            self.release_pending[port] = false;
+            // Scrub the port's footprint from every *other* slave port:
+            // pending request lines drop, and any grant it holds is
+            // released — otherwise a reset master would pin a remote
+            // arbiter in Granted forever (§IV.C isolation).
+            for s in 0..self.n {
+                self.arbiters[s].drop_request(port);
+                if self.arbiters[s].granted_master() == Some(port) {
+                    self.arbiters[s].release();
+                }
+            }
+        }
+        self.masters[port].in_reset = in_reset;
+        self.slaves[port].in_reset = in_reset;
+        self.arbiters[port].in_reset = in_reset;
+    }
+
+    /// Enqueue a transfer job on a master port.  The request is latched on
+    /// the *next* cycle (that latch is §V.E's first cc).
+    pub fn push_job(&mut self, master: usize, job: Job) {
+        self.masters[master].push_job(job);
+    }
+
+    /// Is a master port completely idle (no job queued or in flight)?
+    pub fn master_idle(&self, master: usize) -> bool {
+        self.masters[master].state == MasterState::Idle
+            && self.masters[master].queue.is_empty()
+    }
+
+    /// All master ports idle (no jobs queued or in flight)?  Received
+    /// words may still sit in slave rx buffers awaiting their consumer.
+    pub fn quiescent(&self) -> bool {
+        (0..self.n).all(|p| self.master_idle(p))
+    }
+
+    /// The module/bridge side reads words received at its slave port.
+    pub fn drain_rx(&mut self, slave: usize, max: usize) -> Vec<(u32, usize)> {
+        self.slaves[slave].drain(max)
+    }
+
+    /// Allocation-free variant for hot loops: append up to `max` received
+    /// words into `out`, returning how many were moved.  (§Perf: the
+    /// per-cycle `drain_rx` allocation was the fabric simulator's top
+    /// bottleneck.)
+    pub fn drain_rx_into(
+        &mut self,
+        slave: usize,
+        max: usize,
+        out: &mut Vec<(u32, usize)>,
+    ) -> usize {
+        let rx = &mut self.slaves[slave].rx;
+        let take = max.min(rx.len());
+        out.extend(rx.drain(..take));
+        take
+    }
+
+    /// Words currently buffered at a slave port.
+    pub fn rx_len(&self, slave: usize) -> usize {
+        self.slaves[slave].rx.len()
+    }
+
+    /// Take all pending completion/error events.
+    pub fn take_events(&mut self) -> Vec<XbarEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Aggregate statistics.
+    pub fn stats(&self) -> &XbarStats {
+        &self.stats
+    }
+
+    // ------------------------------------------------------------------
+    // per-cycle evaluation
+    // ------------------------------------------------------------------
+
+    fn tick_slaves(&mut self) {
+        for s in 0..self.n {
+            // Commit releases registered at the end of the previous cycle.
+            if self.release_pending[s] {
+                self.arbiters[s].release();
+                self.release_pending[s] = false;
+            }
+            self.arbiters[s].tick();
+        }
+    }
+
+    fn finish_job(&mut self, m: usize, result: Result<(), WbError>) {
+        // Enter the Status state; the status cycle itself is consumed on
+        // the *next* tick (completion = that cycle).
+        self.masters[m].pending_status = Some(result);
+        self.masters[m].state = MasterState::Status;
+    }
+
+    fn tick_master(&mut self, m: usize) {
+        let cycle = self.cycle;
+        if self.masters[m].in_reset {
+            return;
+        }
+        match self.masters[m].state {
+            MasterState::Idle => {
+                if let Some(job) = self.masters[m].job() {
+                    let pre_latched = job.pre_latched;
+                    // cc1: request reaches the master interface.
+                    self.masters[m].state = MasterState::Latched;
+                    self.masters[m].request_cycle = cycle;
+                    self.masters[m].first_grant_cycle = 0;
+                    self.masters[m].sent = 0;
+                    self.masters[m].waited = 0;
+                    if pre_latched {
+                        // §IV.G: the request originates inside the master
+                        // interface (AXI-WB bridge) — validate in this same
+                        // cycle, saving the latch cc.
+                        self.tick_master(m);
+                    }
+                }
+            }
+            MasterState::Latched => {
+                // cc2: validate the one-hot address against the isolation
+                // mask and issue the request to the slave port.
+                let job = self.masters[m].job().expect("latched without job");
+                let dest_onehot = job.dest_onehot;
+                let allowed = self.masters[m].allowed_slaves;
+                match decode_onehot(dest_onehot) {
+                    Some(d)
+                        if (d as usize) < self.n
+                            && isolation_permits(dest_onehot, allowed) =>
+                    {
+                        let d = d as usize;
+                        if self.arbiters[d].in_reset {
+                            // §IV.C: a port in reset must not receive
+                            // requests; error back to the module.
+                            self.stats.isolation_rejects += 1;
+                            self.finish_job(m, Err(WbError::PortInReset));
+                        } else {
+                            self.arbiters[d].raise_request(m);
+                            self.masters[m].state = MasterState::WaitGrant;
+                            self.masters[m].waited = 0;
+                        }
+                    }
+                    _ => {
+                        // Invalid or disallowed destination: "the input
+                        // port sends an error signal to a master and does
+                        // not issue any request to a slave" (§IV.E.2).
+                        self.stats.isolation_rejects += 1;
+                        self.finish_job(m, Err(WbError::InvalidDestination));
+                    }
+                }
+            }
+            MasterState::WaitGrant => {
+                let d = self.dest_of(m);
+                if self.arbiters[d].in_reset {
+                    // The slave was put into reset while we waited (§IV.C).
+                    self.arbiters[d].drop_request(m);
+                    self.finish_job(m, Err(WbError::PortInReset));
+                    return;
+                }
+                match self.arbiters[d].granted_master() {
+                    Some(g) if g == m => {
+                        // Grant observed this cycle (arbiters tick first):
+                        // first data word goes out next cycle.
+                        if self.masters[m].first_grant_cycle == 0 {
+                            self.masters[m].first_grant_cycle = cycle;
+                        }
+                        self.masters[m].sent_in_grant = 0;
+                        self.masters[m].state = MasterState::Sending;
+                        self.stats.grants += 1;
+                    }
+                    Some(_) => {
+                        // Busy with someone else: withdraw and wait for a
+                        // free bus (the §V.E re-issue path).
+                        self.arbiters[d].drop_request(m);
+                        self.masters[m].state = MasterState::WaitFree;
+                        self.stats.conflicts += 1;
+                    }
+                    None => {
+                        // Still arbitrating.
+                        self.masters[m].waited += 1;
+                        if self.masters[m].waited > self.cfg.grant_timeout {
+                            self.arbiters[d].drop_request(m);
+                            self.finish_job(m, Err(WbError::GrantTimeout));
+                        }
+                    }
+                }
+            }
+            MasterState::WaitFree => {
+                let d = self.dest_of(m);
+                if self.arbiters[d].in_reset {
+                    self.finish_job(m, Err(WbError::PortInReset));
+                    return;
+                }
+                if self.arbiters[d].is_free() {
+                    // Re-latch (1 cc), then Validate re-issues next cycle.
+                    self.masters[m].state = MasterState::Latched;
+                } else {
+                    self.masters[m].waited += 1;
+                    if self.masters[m].waited > self.cfg.grant_timeout {
+                        self.finish_job(m, Err(WbError::GrantTimeout));
+                    }
+                }
+            }
+            MasterState::Sending => {
+                let d = self.dest_of(m);
+                if self.arbiters[d].granted_master() != Some(m) {
+                    // Grant vanished mid-burst: the slave port was reset
+                    // during the transfer (§IV.C).  Abort with an error
+                    // status; already-delivered words stay delivered.
+                    self.finish_job(m, Err(WbError::PortInReset));
+                    return;
+                }
+                if self.slaves[d].can_accept() {
+                    let job = self.masters[m].job().expect("sending without job");
+                    let word = job.words[self.masters[m].sent];
+                    self.slaves[d].accept(word, m);
+                    self.masters[m].sent += 1;
+                    self.masters[m].sent_in_grant += 1;
+                    self.masters[m].waited = 0;
+                    self.stats.words += 1;
+                    self.stats.port_words[m] += 1;
+                    if self.masters[m].sent_in_grant > self.stats.port_max_burst[m] {
+                        self.stats.port_max_burst[m] = self.masters[m].sent_in_grant;
+                    }
+
+                    let job_done =
+                        self.masters[m].sent == self.masters[m].job().unwrap().words.len();
+                    let budget = self.arbiters[d].budget(m);
+                    let burst_done = self.masters[m].sent_in_grant >= budget;
+                    if job_done {
+                        // Bus released with the last word; the status cc
+                        // only registers the outcome on the master side
+                        // ("a master interface releases the bus as soon as
+                        // it completes sending its packages").
+                        self.release_pending[d] = true;
+                        self.arbiters[d].drop_request(m);
+                        self.finish_job(m, Ok(()));
+                    } else if burst_done {
+                        // WRR budget exhausted: rotate the grant (§IV.E.1
+                        // "when the maximum number of packages is reached,
+                        // it switches the grant to the next master").
+                        self.release_pending[d] = true;
+                        self.arbiters[d].drop_request(m);
+                        self.masters[m].state = MasterState::WaitFree;
+                        self.stats.wrr_rotations += 1;
+                    }
+                } else {
+                    // Slave stalled: pause transmission (§IV.F.1).
+                    self.masters[m].state = MasterState::Stalled;
+                    self.masters[m].waited = 0;
+                    self.slaves[d].stall_cycles += 1;
+                    self.stats.stall_cycles += 1;
+                }
+            }
+            MasterState::Stalled => {
+                let d = self.dest_of(m);
+                if self.arbiters[d].granted_master() != Some(m) {
+                    self.finish_job(m, Err(WbError::PortInReset));
+                    return;
+                }
+                if self.slaves[d].can_accept() {
+                    // Resume; the resumed word itself is sent this cycle.
+                    self.masters[m].state = MasterState::Sending;
+                    self.tick_master(m);
+                } else {
+                    self.slaves[d].stall_cycles += 1;
+                    self.stats.stall_cycles += 1;
+                    self.masters[m].waited += 1;
+                    if self.masters[m].waited > self.cfg.ack_timeout {
+                        // "if the destination slave does not respond in a
+                        // defined period, a timeout error happens."
+                        self.release_pending[d] = true;
+                        self.arbiters[d].drop_request(m);
+                        self.finish_job(m, Err(WbError::AckTimeout));
+                    }
+                }
+            }
+            MasterState::Status => {
+                // Final cc: register the outcome, emit the event, pop the
+                // job, return to Idle.
+                let job = self.masters[m].queue.pop_front().expect("status without job");
+                let result = self.masters[m]
+                    .pending_status
+                    .take()
+                    .expect("status without outcome");
+                let dest = decode_onehot(job.dest_onehot)
+                    .map(|d| d as usize)
+                    .unwrap_or(usize::MAX);
+                if result.is_err() {
+                    self.stats.errors += 1;
+                }
+                self.events.push(XbarEvent {
+                    port: m,
+                    dest,
+                    app_id: job.app_id,
+                    request_cycle: self.masters[m].request_cycle,
+                    grant_cycle: self.masters[m].first_grant_cycle,
+                    done_cycle: cycle,
+                    words: self.masters[m].sent,
+                    result,
+                });
+                self.masters[m].state = MasterState::Idle;
+                self.masters[m].sent = 0;
+            }
+        }
+    }
+
+    fn dest_of(&self, m: usize) -> usize {
+        decode_onehot(self.masters[m].job().expect("no job").dest_onehot)
+            .expect("validated address") as usize
+    }
+}
+
+impl Tick for Crossbar {
+    fn tick(&mut self, cycle: u64) {
+        self.cycle = cycle;
+        self.tick_slaves();
+        for m in 0..self.n {
+            self.tick_master(m);
+        }
+        self.stats.cycles += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,68 @@
+//! Aggregate crossbar statistics (observability for benches and the
+//! §V.D bandwidth experiments).
+
+/// Counters accumulated across the crossbar's lifetime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct XbarStats {
+    /// Total fabric cycles executed.
+    pub cycles: u64,
+    /// Total grants issued across all slave ports.
+    pub grants: u64,
+    /// Data words delivered.
+    pub words: u64,
+    /// Words delivered per master port.
+    pub port_words: Vec<u64>,
+    /// Longest single-grant burst observed per master port (for checking
+    /// WRR package budgets).
+    pub port_max_burst: Vec<u32>,
+    /// Times a master observed the bus granted to someone else.
+    pub conflicts: u64,
+    /// Grant rotations forced by WRR package budgets.
+    pub wrr_rotations: u64,
+    /// Cycles lost to slave-side stalls.
+    pub stall_cycles: u64,
+    /// Requests rejected by the isolation check (plus reset rejections).
+    pub isolation_rejects: u64,
+    /// Jobs that completed with an error.
+    pub errors: u64,
+}
+
+impl XbarStats {
+    /// Zeroed counters for an `n`-port crossbar.
+    pub fn new(n: usize) -> Self {
+        Self {
+            cycles: 0,
+            grants: 0,
+            words: 0,
+            port_words: vec![0; n],
+            port_max_burst: vec![0; n],
+            conflicts: 0,
+            wrr_rotations: 0,
+            stall_cycles: 0,
+            isolation_rejects: 0,
+            errors: 0,
+        }
+    }
+
+    /// Fabric utilization: fraction of cycles that moved at least one word
+    /// (upper-bounded by 1 per port; aggregate across ports may exceed 1,
+    /// which is the crossbar's parallel-transmission advantage).
+    pub fn words_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.words as f64 / self.cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_per_cycle_handles_zero() {
+        let s = XbarStats::new(4);
+        assert_eq!(s.words_per_cycle(), 0.0);
+    }
+}

@@ -1,0 +1,431 @@
+//! Crossbar unit tests — §V.E's clock-cycle claims are pinned here
+//! *exactly*; if these numbers drift, the reproduction is wrong.
+
+use super::*;
+use crate::config::CrossbarConfig;
+use crate::sim::Clock;
+use crate::util::onehot::encode_onehot;
+
+fn xbar4() -> Crossbar {
+    let mut xb = Crossbar::new(4, CrossbarConfig::default());
+    // Open isolation: every master may address every slave.
+    for m in 0..4 {
+        xb.set_allowed_slaves(m, 0b1111);
+    }
+    xb
+}
+
+fn run_to_quiescent(xb: &mut Crossbar, max: u64) -> Vec<XbarEvent> {
+    let mut clk = Clock::new();
+    clk.run_until(xb, max, |x| x.quiescent())
+        .expect("crossbar did not quiesce");
+    xb.take_events()
+}
+
+/// Run with an always-ready consumer at every slave (the §V.E walkthrough
+/// assumes the modules read data as it arrives).  Returns the events and
+/// the number of words drained per slave port.
+fn run_draining(xb: &mut Crossbar, max: u64) -> (Vec<XbarEvent>, Vec<usize>) {
+    let n = xb.ports();
+    let mut clk = Clock::new();
+    let mut events = Vec::new();
+    let mut drained = vec![0usize; n];
+    for _ in 0..max {
+        let c = clk.advance();
+        xb.tick(c);
+        for s in 0..n {
+            drained[s] += xb.drain_rx(s, usize::MAX).len();
+        }
+        events.extend(xb.take_events());
+        if xb.quiescent() {
+            break;
+        }
+    }
+    assert!(xb.quiescent(), "crossbar did not quiesce");
+    (events, drained)
+}
+
+#[test]
+fn best_case_time_to_grant_is_4_cc() {
+    // §V.E: "It is 4 ccs in the best case, where the slave does not serve
+    // any request concurrently."
+    let mut xb = xbar4();
+    xb.push_job(1, Job::new(encode_onehot(2), vec![0xA; 8], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev.len(), 1);
+    assert_eq!(ev[0].result, Ok(()));
+    assert_eq!(ev[0].time_to_grant(), 4);
+}
+
+#[test]
+fn best_case_8_package_completion_is_13_cc() {
+    // §V.E: "If a computation module has 8 packages to deliver, the
+    // request completion latency is therefore 13 ccs."
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(3), vec![7; 8], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].completion_latency(), 13);
+    assert_eq!(ev[0].words, 8);
+}
+
+#[test]
+fn worst_case_three_masters_same_slave() {
+    // §V.E: all 3 computation modules target the fourth simultaneously;
+    // time-to-grant is 4 / 16 / 28 cc and the last request completes at
+    // 37 cc.
+    let mut xb = xbar4();
+    for m in 0..3 {
+        xb.push_job(m, Job::new(encode_onehot(3), vec![m as u32; 8], 0));
+    }
+    let (mut ev, drained) = run_draining(&mut xb, 200);
+    ev.sort_by_key(|e| e.grant_cycle);
+    let ttg: Vec<u64> = ev.iter().map(|e| e.time_to_grant()).collect();
+    let done: Vec<u64> = ev.iter().map(|e| e.completion_latency()).collect();
+    assert_eq!(ttg, vec![4, 16, 28]);
+    assert_eq!(done, vec![13, 25, 37]);
+    // WRR order: port 0 first (reset pointer), then 1, then 2.
+    let order: Vec<usize> = ev.iter().map(|e| e.port).collect();
+    assert_eq!(order, vec![0, 1, 2]);
+    // All 24 words must have landed at slave 3.
+    assert_eq!(drained[3], 24);
+}
+
+#[test]
+fn two_masters_contention_grants_at_4_and_16() {
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(2), vec![1; 8], 0));
+    xb.push_job(1, Job::new(encode_onehot(2), vec![2; 8], 0));
+    let (mut ev, _) = run_draining(&mut xb, 100);
+    ev.sort_by_key(|e| e.grant_cycle);
+    assert_eq!(ev[0].time_to_grant(), 4);
+    assert_eq!(ev[1].time_to_grant(), 16);
+}
+
+#[test]
+fn parallel_disjoint_transfers_do_not_interfere() {
+    // Crossbar advantage over a shared bus: 0->1 and 2->3 in parallel,
+    // both at best-case latency.
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(1), vec![1; 8], 0));
+    xb.push_job(2, Job::new(encode_onehot(3), vec![2; 8], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev.len(), 2);
+    for e in &ev {
+        assert_eq!(e.time_to_grant(), 4, "port {} suffered interference", e.port);
+        assert_eq!(e.completion_latency(), 13);
+    }
+}
+
+#[test]
+fn invalid_destination_rejected_without_bus_activity() {
+    // §IV.E.2: isolation mask excludes slave 2 for master 0.
+    let mut xb = xbar4();
+    xb.set_allowed_slaves(0, 0b1010); // slaves 1 and 3 only
+    xb.push_job(0, Job::new(encode_onehot(2), vec![9; 8], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].result, Err(WbError::InvalidDestination));
+    assert_eq!(ev[0].words, 0);
+    assert_eq!(ev[0].grant_cycle, 0, "no grant must have been issued");
+    assert_eq!(xb.stats().isolation_rejects, 1);
+    assert_eq!(xb.rx_len(2), 0);
+}
+
+#[test]
+fn non_onehot_address_rejected() {
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(0b0110, vec![1], 0)); // two bits set
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].result, Err(WbError::InvalidDestination));
+}
+
+#[test]
+fn zero_address_rejected() {
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(0, vec![1], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].result, Err(WbError::InvalidDestination));
+}
+
+#[test]
+fn out_of_range_address_rejected() {
+    // One-hot bit beyond the port count.
+    let mut xb = xbar4();
+    xb.set_allowed_slaves(0, u32::MAX);
+    xb.push_job(0, Job::new(1 << 7, vec![1], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].result, Err(WbError::InvalidDestination));
+}
+
+#[test]
+fn isolation_error_costs_3_cycles() {
+    // Validating on the master side avoids the arbiter round-trip the
+    // paper calls out: latch (1) + validate (1) + status (1).
+    let mut xb = xbar4();
+    xb.set_allowed_slaves(0, 0);
+    xb.push_job(0, Job::new(encode_onehot(1), vec![1], 7));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].completion_latency(), 3);
+    assert_eq!(ev[0].app_id, 7);
+}
+
+#[test]
+fn wrr_budget_chops_long_jobs() {
+    // 32-word job with an 8-package budget: 4 grants, re-arbitrated after
+    // each burst.
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(1), (0..32).collect(), 0));
+    // Slave 1's consumer must drain or the 8-word buffer stalls the bus.
+    let mut clk = Clock::new();
+    let mut delivered = Vec::new();
+    for _ in 0..400 {
+        let c = clk.advance();
+        xb.tick(c);
+        for (w, _src) in xb.drain_rx(1, usize::MAX) {
+            delivered.push(w);
+        }
+        if xb.quiescent() && !xb.take_events().is_empty() {
+            break;
+        }
+    }
+    assert_eq!(delivered, (0..32).collect::<Vec<u32>>());
+    assert_eq!(xb.stats().wrr_rotations, 3, "3 rotations for 4 bursts");
+    assert_eq!(xb.stats().grants, 4);
+}
+
+#[test]
+fn wrr_budget_interleaves_two_masters_fairly() {
+    // Two masters, 64 words each, budget 8: deliveries must alternate in
+    // 8-word runs (bandwidth sharing, §V.D's mechanism).
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(2), vec![0xAA; 64], 0));
+    xb.push_job(1, Job::new(encode_onehot(2), vec![0xBB; 64], 0));
+    let mut clk = Clock::new();
+    let mut sources = Vec::new();
+    for _ in 0..2000 {
+        let c = clk.advance();
+        xb.tick(c);
+        for (_w, src) in xb.drain_rx(2, usize::MAX) {
+            sources.push(src);
+        }
+        if xb.quiescent() {
+            break;
+        }
+    }
+    assert_eq!(sources.len(), 128);
+    // Runs of identical source must be exactly 8 long (the budget).
+    let mut runs = Vec::new();
+    let mut cur = (sources[0], 0usize);
+    for &s in &sources {
+        if s == cur.0 {
+            cur.1 += 1;
+        } else {
+            runs.push(cur);
+            cur = (s, 1);
+        }
+    }
+    runs.push(cur);
+    assert!(runs.iter().all(|&(_, len)| len == 8), "runs: {runs:?}");
+    assert_eq!(runs.len(), 16);
+    // And they alternate.
+    for w in runs.windows(2) {
+        assert_ne!(w[0].0, w[1].0);
+    }
+}
+
+#[test]
+fn larger_budget_reduces_total_cycles() {
+    // The §V.D effect at crossbar level: 16 -> 128 packages per grant
+    // lowers arbitration overhead for a long stream.
+    let total_words = 4096usize;
+    let mut cycles = Vec::new();
+    for budget in [16u32, 128] {
+        let mut xb = xbar4();
+        xb.set_allowed_packages(1, 0, budget);
+        xb.push_job(0, Job::new(encode_onehot(1), vec![5; total_words], 0));
+        let mut clk = Clock::new();
+        let mut got = 0usize;
+        for _ in 0..200_000 {
+            let c = clk.advance();
+            xb.tick(c);
+            got += xb.drain_rx(1, usize::MAX).len();
+            if xb.quiescent() {
+                break;
+            }
+        }
+        assert_eq!(got, total_words);
+        cycles.push(clk.now());
+    }
+    assert!(
+        cycles[1] < cycles[0],
+        "budget 128 ({}) must beat budget 16 ({})",
+        cycles[1],
+        cycles[0]
+    );
+}
+
+#[test]
+fn slave_stall_pauses_and_resumes() {
+    // Consumer never drains: the 8-word buffer fills, the 9th word stalls.
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(1), vec![3; 12], 0));
+    let mut clk = Clock::new();
+    clk.run(&mut xb, 40);
+    assert_eq!(xb.rx_len(1), 8, "exactly the buffer capacity delivered");
+    assert!(xb.stats().stall_cycles > 0);
+    assert!(xb.take_events().is_empty(), "job must not have completed");
+    // Drain and let it finish.
+    let got = xb.drain_rx(1, usize::MAX);
+    assert_eq!(got.len(), 8);
+    clk.run_until(&mut xb, 100, |x| x.quiescent()).unwrap();
+    let ev = xb.take_events();
+    assert_eq!(ev[0].result, Ok(()));
+    assert_eq!(ev[0].words, 12);
+}
+
+#[test]
+fn ack_timeout_fires_on_permanently_full_slave() {
+    let mut cfg = CrossbarConfig::default();
+    cfg.ack_timeout = 20;
+    let mut xb = Crossbar::new(4, cfg);
+    for m in 0..4 {
+        xb.set_allowed_slaves(m, 0b1111);
+    }
+    xb.push_job(0, Job::new(encode_onehot(1), vec![3; 16], 0));
+    let mut clk = Clock::new();
+    clk.run_until(&mut xb, 200, |x| x.quiescent()).unwrap();
+    let ev = xb.take_events();
+    assert_eq!(ev[0].result, Err(WbError::AckTimeout));
+    assert_eq!(ev[0].words, 8, "buffer capacity went through before stall");
+}
+
+#[test]
+fn request_to_port_in_reset_errors() {
+    // §IV.C: "during the partial reconfiguration process [...] the
+    // crossbar port would be prevented from making any grant decisions."
+    let mut xb = xbar4();
+    xb.set_port_reset(2, true);
+    xb.push_job(0, Job::new(encode_onehot(2), vec![1; 8], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].result, Err(WbError::PortInReset));
+    xb.set_port_reset(2, false);
+    xb.push_job(0, Job::new(encode_onehot(2), vec![1; 8], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].result, Ok(()));
+}
+
+#[test]
+fn reset_aborts_in_flight_master() {
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(1), vec![1; 8], 0));
+    let mut clk = Clock::new();
+    clk.run(&mut xb, 6); // mid-burst
+    xb.set_port_reset(0, true);
+    clk.run(&mut xb, 10);
+    assert!(xb.master_idle(0));
+    // The slave keeps whatever words already landed; no completion event.
+    assert!(xb.take_events().is_empty());
+}
+
+#[test]
+fn back_to_back_jobs_on_one_master() {
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(1), vec![1; 8], 0));
+    xb.push_job(0, Job::new(encode_onehot(2), vec![2; 8], 1));
+    let ev = run_to_quiescent(&mut xb, 200);
+    assert_eq!(ev.len(), 2);
+    assert_eq!(ev[0].dest, 1);
+    assert_eq!(ev[1].dest, 2);
+    assert!(ev[1].request_cycle > ev[0].done_cycle, "strictly sequential");
+    assert_eq!(xb.rx_len(1), 8);
+    assert_eq!(xb.rx_len(2), 8);
+}
+
+#[test]
+fn grant_timeout_when_slave_monopolized() {
+    // Master 0 holds the bus forever: a huge WRR budget plus a consumer
+    // that never drains leaves it stalled mid-grant.  Master 1's grant
+    // watchdog must fire.
+    let mut cfg = CrossbarConfig::default();
+    cfg.grant_timeout = 30;
+    cfg.ack_timeout = 10_000;
+    let mut xb = Crossbar::new(4, cfg);
+    for m in 0..4 {
+        xb.set_allowed_slaves(m, 0b1111);
+    }
+    xb.set_allowed_packages(2, 0, 255);
+    xb.push_job(0, Job::new(encode_onehot(2), vec![1; 64], 0));
+    xb.push_job(1, Job::new(encode_onehot(2), vec![2; 8], 0));
+    let mut clk = Clock::new();
+    clk.run(&mut xb, 100);
+    let ev = xb.take_events();
+    assert!(
+        ev.iter()
+            .any(|e| e.port == 1 && e.result == Err(WbError::GrantTimeout)),
+        "events: {ev:?}"
+    );
+}
+
+#[test]
+fn words_arrive_in_order_with_source_tags() {
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(3), (100..108).collect(), 0));
+    run_to_quiescent(&mut xb, 100);
+    let got = xb.drain_rx(3, usize::MAX);
+    let words: Vec<u32> = got.iter().map(|&(w, _)| w).collect();
+    let srcs: Vec<usize> = got.iter().map(|&(_, s)| s).collect();
+    assert_eq!(words, (100..108).collect::<Vec<u32>>());
+    assert!(srcs.iter().all(|&s| s == 0));
+}
+
+#[test]
+fn stats_account_words_and_grants() {
+    let mut xb = xbar4();
+    xb.push_job(0, Job::new(encode_onehot(1), vec![1; 8], 0));
+    xb.push_job(2, Job::new(encode_onehot(3), vec![2; 8], 0));
+    run_to_quiescent(&mut xb, 100);
+    let s = xb.stats();
+    assert_eq!(s.words, 16);
+    assert_eq!(s.grants, 2);
+    assert_eq!(s.port_words[0], 8);
+    assert_eq!(s.port_words[2], 8);
+    assert_eq!(s.errors, 0);
+}
+
+#[test]
+fn self_send_is_permitted() {
+    // A port may address its own slave side (loopback) — nothing in the
+    // paper forbids it and the arbiter treats it like any master.
+    let mut xb = xbar4();
+    xb.push_job(1, Job::new(encode_onehot(1), vec![42; 4], 0));
+    let ev = run_to_quiescent(&mut xb, 100);
+    assert_eq!(ev[0].result, Ok(()));
+    assert_eq!(xb.rx_len(1), 4);
+}
+
+#[test]
+fn scaling_worst_case_is_linear_in_ports() {
+    // Fig 6: all N-1 masters target the last port, 8 words each; the
+    // last grant time grows by 12 cc per extra contender.
+    for n in [4usize, 6, 8, 12, 16] {
+        let mut xb = Crossbar::new(n, CrossbarConfig::default());
+        for m in 0..n {
+            xb.set_allowed_slaves(m, u32::MAX >> (32 - n as u32));
+        }
+        for m in 0..n - 1 {
+            xb.push_job(m, Job::new(encode_onehot(n as u32 - 1), vec![0; 8], 0));
+        }
+        let mut clk = Clock::new();
+        let mut events = Vec::new();
+        for _ in 0..20_000 {
+            let c = clk.advance();
+            xb.tick(c);
+            xb.drain_rx(n - 1, usize::MAX);
+            events.extend(xb.take_events());
+            if events.len() == n - 1 {
+                break;
+            }
+        }
+        let worst = events.iter().map(|e| e.time_to_grant()).max().unwrap();
+        assert_eq!(worst as usize, 12 * (n - 2) + 4, "n={n}");
+    }
+}

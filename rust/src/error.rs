@@ -1,0 +1,57 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the elastic-fpga coordinator.
+#[derive(Debug, Error)]
+pub enum ElasticError {
+    /// PJRT / XLA runtime failures (artifact load, compile, execute).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Artifact missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Resource manager could not satisfy an allocation.
+    #[error("allocation error: {0}")]
+    Allocation(String),
+
+    /// A WISHBONE transaction failed (invalid destination, timeout, ...).
+    #[error("wishbone error: {0:?}")]
+    Wishbone(crate::wishbone::WbError),
+
+    /// Simulation invariant violated (a bug in the model, not the workload).
+    #[error("simulation invariant violated: {0}")]
+    Sim(String),
+
+    /// Server/request-path failures.
+    #[error("server error: {0}")]
+    Server(String),
+
+    /// Payload verification against the golden model failed.
+    #[error("verification error: {0}")]
+    Verify(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for ElasticError {
+    fn from(e: xla::Error) -> Self {
+        ElasticError::Xla(e.to_string())
+    }
+}
+
+impl From<crate::wishbone::WbError> for ElasticError {
+    fn from(e: crate::wishbone::WbError) -> Self {
+        ElasticError::Wishbone(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, ElasticError>;

@@ -1,0 +1,132 @@
+//! FPGA device model: the Kintex UltraScale XCKU115 on the KCU1500
+//! board (§V.A), and the PR-region partitioning the manager allocates
+//! from.
+//!
+//! Resource totals are the public device table values the paper's
+//! utilization percentages are computed against (e.g. Table I reports
+//! the WB crossbar's 475 LUTs as 0.07% — 475 / 663,360 ≈ 0.0716%).
+
+/// Resource inventory of one device or region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resources {
+    pub luts: u64,
+    pub ffs: u64,
+    pub brams: u64,
+}
+
+impl Resources {
+    /// Component-wise subtraction, saturating at zero.
+    pub fn saturating_sub(self, other: Resources) -> Resources {
+        Resources {
+            luts: self.luts.saturating_sub(other.luts),
+            ffs: self.ffs.saturating_sub(other.ffs),
+            brams: self.brams.saturating_sub(other.brams),
+        }
+    }
+
+    /// Does `self` fit within `capacity`?
+    pub fn fits_in(self, capacity: Resources) -> bool {
+        self.luts <= capacity.luts && self.ffs <= capacity.ffs && self.brams <= capacity.brams
+    }
+}
+
+/// XCKU115 device totals (Kintex UltraScale, KCU1500 board).
+pub const XCKU115: Resources = Resources {
+    luts: 663_360,
+    ffs: 1_326_720,
+    brams: 2_160,
+};
+
+/// One partially reconfigurable region's static footprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrRegionSpec {
+    /// 1-indexed region number = crossbar port.
+    pub region: usize,
+    /// Resources fenced into this region.
+    pub capacity: Resources,
+}
+
+/// The device model: totals plus the PR floorplan.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    /// Device totals.
+    pub total: Resources,
+    /// PR regions (the paper argues for many *small* regions).
+    pub regions: Vec<PrRegionSpec>,
+}
+
+impl DeviceModel {
+    /// The paper's prototype floorplan: three small regions on an
+    /// XCKU115, each comfortably larger than the biggest prototype
+    /// module (WB Hamming decoder: 432 LUTs / 646 FFs, Table I).
+    pub fn kcu1500_prototype() -> Self {
+        let region_cap = Resources { luts: 2_000, ffs: 4_000, brams: 4 };
+        DeviceModel {
+            total: XCKU115,
+            regions: (1..=3)
+                .map(|region| PrRegionSpec { region, capacity: region_cap })
+                .collect(),
+        }
+    }
+
+    /// A floorplan with `n` uniform regions (scaling studies / Fig 6).
+    pub fn uniform(n: usize, capacity: Resources) -> Self {
+        DeviceModel {
+            total: XCKU115,
+            regions: (1..=n).map(|region| PrRegionSpec { region, capacity }).collect(),
+        }
+    }
+
+    /// Percentage of device LUTs a count represents (Table I's % column).
+    pub fn lut_pct(&self, luts: u64) -> f64 {
+        100.0 * luts as f64 / self.total.luts as f64
+    }
+
+    /// Percentage of device FFs.
+    pub fn ff_pct(&self, ffs: u64) -> f64 {
+        100.0 * ffs as f64 / self.total.ffs as f64
+    }
+
+    /// Percentage of device BRAMs.
+    pub fn bram_pct(&self, brams: f64) -> f64 {
+        100.0 * brams / self.total.brams as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xcku115_percentages_match_table1() {
+        let d = DeviceModel::kcu1500_prototype();
+        // Table I: WB crossbar 475 LUTs = 0.07%, 60 FFs = 0.004%.
+        assert!((d.lut_pct(475) - 0.07).abs() < 0.005, "{}", d.lut_pct(475));
+        assert!((d.ff_pct(60) - 0.004).abs() < 0.001, "{}", d.ff_pct(60));
+        // XDMA: 33441 LUTs = 5.04%.
+        assert!((d.lut_pct(33_441) - 5.04).abs() < 0.01);
+        // 62 BRAMs = 2.87%.
+        assert!((d.bram_pct(62.0) - 2.87).abs() < 0.01);
+    }
+
+    #[test]
+    fn prototype_regions_fit_the_modules() {
+        let d = DeviceModel::kcu1500_prototype();
+        assert_eq!(d.regions.len(), 3);
+        // Largest prototype module: WB Hamming decoder (432 LUT, 646 FF).
+        let decoder = Resources { luts: 432, ffs: 646, brams: 0 };
+        for r in &d.regions {
+            assert!(decoder.fits_in(r.capacity), "region {}", r.region);
+        }
+    }
+
+    #[test]
+    fn resource_arithmetic() {
+        let a = Resources { luts: 100, ffs: 50, brams: 2 };
+        let b = Resources { luts: 30, ffs: 60, brams: 1 };
+        let c = a.saturating_sub(b);
+        assert_eq!(c, Resources { luts: 70, ffs: 0, brams: 1 });
+        assert!(!a.fits_in(b));
+        assert!(b.fits_in(Resources { luts: 30, ffs: 60, brams: 1 }));
+    }
+}

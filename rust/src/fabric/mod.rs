@@ -1,0 +1,401 @@
+//! The FPGA shell: everything Figure 3 wires together, composed and
+//! clocked as one synchronous design.
+//!
+//! * Crossbar port 0: AXI-to-WB bridge (master) + WB-to-AXI bridge
+//!   (slave), fed by the XDMA H2C/C2H channels.
+//! * Crossbar ports 1..N-1: PR regions, each hosting at most one
+//!   computation module (instantiated by ICAP completion).
+//! * Register file: programmed by the manager over the AXI-Lite bypass;
+//!   re-synced into the crossbar/modules whenever its write generation
+//!   advances.
+//! * ICAP: serializes partial reconfigurations; the fabric asserts the
+//!   target port's reset for the duration (§IV.C).
+//!
+//! The device model also carries the XCKU115 resource inventory used by
+//! the area model and the manager's feasibility checks.
+
+mod device;
+
+pub use device::{DeviceModel, PrRegionSpec, XCKU115};
+
+use std::collections::HashMap;
+
+use crate::config::SystemConfig;
+use crate::crossbar::Crossbar;
+use crate::icap::{Icap, ReconfigDone, ReconfigRequest};
+use crate::modules::{ComputationModule, ModuleKind};
+use crate::regfile::RegisterFile;
+use crate::sim::Tick;
+use crate::wishbone::WbError;
+use crate::xdma::{AxiToWb, H2cBurst, WbToAxi, Xdma, BRIDGE_BUFFER_WORDS};
+use crate::{ElasticError, Result};
+
+/// The composed shell.
+pub struct Fabric {
+    cfg: SystemConfig,
+    /// The crossbar switch (paper's core contribution).
+    pub xbar: Crossbar,
+    /// Table III register file.
+    pub regfile: RegisterFile,
+    /// PR-region module slots, indexed by crossbar port (slot 0 unused —
+    /// port 0 is the bridge).
+    pub modules: Vec<Option<ComputationModule>>,
+    /// AXI-to-WB bridge (port 0 master half).
+    pub axi2wb: AxiToWb,
+    /// WB-to-AXI bridge (port 0 slave half).
+    pub wb2axi: WbToAxi,
+    /// XDMA channel fabric.
+    pub xdma: Xdma,
+    /// ICAP + CDC FIFO.
+    pub icap: Icap,
+    /// Per-app ordered output words (host-driver reassembly view; the
+    /// same words also land in the C2H channel FIFOs).
+    output_log: HashMap<u32, Vec<u32>>,
+    /// Reassembly buffers: completed bursts at port 0's slave, per source
+    /// port, grouped to `BRIDGE_BUFFER_WORDS` before C2H forwarding.
+    rx_accum: Vec<Vec<u32>>,
+    /// Reusable drain scratch (§Perf: avoids a Vec allocation per port
+    /// per cycle in the hot tick loop).
+    rx_scratch: Vec<(u32, usize)>,
+    /// ICAP completions observed this run (manager reads these).
+    reconfig_log: Vec<ReconfigDone>,
+    /// Last regfile generation synced into the crossbar.
+    synced_gen: u64,
+    /// Last ICAP status mirrored into the regfile.
+    mirrored_icap: crate::regfile::IcapStatus,
+    cycle: u64,
+}
+
+impl Fabric {
+    /// Build the shell from a configuration.
+    pub fn new(cfg: SystemConfig) -> Self {
+        let n = cfg.fabric.num_ports;
+        assert!(
+            cfg.fabric.num_pr_regions == n - 1,
+            "prototype wiring: one PR region per non-bridge port"
+        );
+        let mut xbar = Crossbar::new(n, cfg.crossbar.clone());
+        let regfile = RegisterFile::new();
+        // Power-on: crossbar mirrors the (zeroed) regfile — fully isolated.
+        for p in 0..n {
+            xbar.set_allowed_slaves(p, 0);
+        }
+        Self {
+            xbar,
+            regfile,
+            modules: (0..n).map(|_| None).collect(),
+            axi2wb: AxiToWb::new(),
+            wb2axi: WbToAxi::new(),
+            xdma: Xdma::new(),
+            icap: Icap::new(64),
+            output_log: HashMap::new(),
+            rx_accum: vec![Vec::new(); n],
+            rx_scratch: Vec::with_capacity(64),
+            reconfig_log: Vec::new(),
+            synced_gen: 0,
+            mirrored_icap: crate::regfile::IcapStatus::Idle,
+            cfg,
+            cycle: 0,
+        }
+    }
+
+    /// System configuration.
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Current fabric cycle.
+    pub fn now(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Begin partial reconfiguration of `region` (1-indexed port number)
+    /// with `kind` for `app_id`.  Asserts the port reset for the duration
+    /// (§IV.C).  Fails if the ICAP is busy.
+    pub fn reconfigure(
+        &mut self,
+        region: usize,
+        kind: ModuleKind,
+        app_id: u32,
+    ) -> Result<()> {
+        if region == 0 || region >= self.xbar.ports() {
+            return Err(ElasticError::Allocation(format!(
+                "region {region} out of range"
+            )));
+        }
+        let words = (self.cfg.manager.bitstream_bytes / 4) as u64;
+        self.reconfigure_with(ReconfigRequest {
+            region,
+            kind,
+            app_id,
+            bitstream_words: words.max(1),
+            fail_after: None,
+        })
+    }
+
+    /// Reconfigure with an explicit descriptor (failure injection etc.).
+    pub fn reconfigure_with(&mut self, req: ReconfigRequest) -> Result<()> {
+        let region = req.region;
+        if !self.icap.start(req) {
+            return Err(ElasticError::Allocation(
+                "ICAP busy: reconfigurations are serialized".into(),
+            ));
+        }
+        // Old module (if any) is torn out; port isolated during PR.
+        self.modules[region] = None;
+        self.regfile.set_port_reset(region, true);
+        Ok(())
+    }
+
+    /// Remove a module and free its region immediately (no ICAP traffic;
+    /// clearing a region does not require programming a bitstream).
+    pub fn clear_region(&mut self, region: usize) {
+        self.modules[region] = None;
+        self.regfile.set_port_reset(region, true);
+    }
+
+    /// Install a module *statically*, without ICAP programming.  This is
+    /// the paper's own prototype path (§V.B: the ICAP module "has not
+    /// been implemented in the current prototype [...] the features of
+    /// the proposed 32-bit WB Crossbar interconnect are tested using
+    /// statically allocated modules").
+    pub fn install_static_module(
+        &mut self,
+        region: usize,
+        kind: ModuleKind,
+        app_id: u32,
+    ) {
+        assert!(region > 0 && region < self.xbar.ports(), "bad region {region}");
+        let mut m = ComputationModule::new(kind, region, app_id);
+        m.batch_words = BRIDGE_BUFFER_WORDS;
+        m.dest_onehot = self.regfile.pr_destination(region);
+        self.modules[region] = Some(m);
+        self.regfile.set_port_reset(region, false);
+    }
+
+    /// Which module currently occupies `region`?
+    pub fn module_at(&self, region: usize) -> Option<&ComputationModule> {
+        self.modules.get(region).and_then(Option::as_ref)
+    }
+
+    /// Host driver: queue an app-tagged burst on an H2C channel.
+    pub fn h2c_push(&mut self, channel: usize, burst: H2cBurst) {
+        self.xdma.h2c_push(channel, burst);
+    }
+
+    /// Ordered output words collected for `app_id` so far.
+    pub fn app_output(&self, app_id: u32) -> &[u32] {
+        self.output_log.get(&app_id).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Take (and clear) an app's collected output.
+    pub fn take_app_output(&mut self, app_id: u32) -> Vec<u32> {
+        self.output_log.remove(&app_id).unwrap_or_default()
+    }
+
+    /// Reconfiguration completions observed so far.
+    pub fn reconfig_log(&self) -> &[ReconfigDone] {
+        &self.reconfig_log
+    }
+
+    /// Nothing in flight anywhere?
+    pub fn idle(&self) -> bool {
+        self.xbar.quiescent()
+            && !self.axi2wb.busy()
+            && !self.icap.busy()
+            && self.xdma.h2c_pending() == 0
+            && self
+                .modules
+                .iter()
+                .flatten()
+                .all(|m| m.state == crate::modules::ModuleState::Ready && m.input_fill() == 0)
+            && self.rx_accum.iter().all(Vec::is_empty)
+    }
+
+    /// Run until [`Fabric::idle`] or `max` cycles; returns cycles executed.
+    pub fn run_until_idle(&mut self, max: u64) -> Result<u64> {
+        let start = self.cycle;
+        for _ in 0..max {
+            let c = self.cycle + 1;
+            self.tick(c);
+            if self.idle() {
+                return Ok(self.cycle - start);
+            }
+        }
+        Err(ElasticError::Sim(format!(
+            "fabric did not quiesce within {max} cycles"
+        )))
+    }
+
+    // ------------------------------------------------------------------
+
+    /// Mirror register-file configuration into the crossbar and modules.
+    fn sync_regfile(&mut self) {
+        if self.regfile.generation() == self.synced_gen {
+            return;
+        }
+        let n = self.xbar.ports();
+        for p in 0..n.min(4) {
+            self.xbar.set_allowed_slaves(p, self.regfile.allowed_slaves(p));
+            let was_reset = self.regfile.port_reset(p);
+            self.xbar.set_port_reset(p, was_reset);
+            for m in 0..n.min(4) {
+                let budget = self.regfile.allowed_packages(p, m);
+                let effective = if budget == 0 {
+                    self.cfg.crossbar.default_packages
+                } else {
+                    budget
+                };
+                self.xbar.set_allowed_packages(p, m, effective);
+            }
+        }
+        // Destination addresses (Table III regs 1-3) into the modules.
+        for region in 1..n.min(4) {
+            if let Some(m) = self.modules[region].as_mut() {
+                m.dest_onehot = self.regfile.pr_destination(region);
+            }
+        }
+        self.synced_gen = self.regfile.generation();
+    }
+
+    fn mirror_icap_status(&mut self) {
+        if self.icap.status != self.mirrored_icap {
+            self.regfile.set_icap_status(self.icap.status);
+            self.mirrored_icap = self.icap.status;
+        }
+    }
+
+    fn handle_reconfig_done(&mut self, done: ReconfigDone) {
+        if done.ok {
+            let mut m = ComputationModule::new(done.kind, done.region, done.app_id);
+            m.batch_words = BRIDGE_BUFFER_WORDS;
+            m.dest_onehot = self.regfile.pr_destination(done.region);
+            self.modules[done.region] = Some(m);
+            // Release the reset: the region rejoins the crossbar (§IV.C).
+            self.regfile.set_port_reset(done.region, false);
+        }
+        self.reconfig_log.push(done);
+    }
+
+    fn route_events(&mut self) {
+        for ev in self.xbar.take_events() {
+            if ev.port == 0 {
+                self.axi2wb.on_send_complete(ev.result);
+                if (ev.app_id as usize) < 4 {
+                    self.regfile.set_app_error(ev.app_id as usize, ev.result.err());
+                }
+            } else if let Some(m) = self.modules[ev.port].as_mut() {
+                m.on_send_complete(ev.result);
+                if (1..=3).contains(&ev.port) {
+                    self.regfile.set_pr_error(ev.port, ev.result.err());
+                }
+                if (ev.app_id as usize) < 4 && ev.result.is_err() {
+                    self.regfile.set_app_error(ev.app_id as usize, ev.result.err());
+                }
+            }
+        }
+    }
+
+    fn tick_modules(&mut self) {
+        // Field-disjoint borrows: `self.modules`, `self.xbar`, and
+        // `self.rx_scratch` never alias (§Perf: avoids moving the module
+        // struct in and out of its slot every cycle).
+        let modules = &mut self.modules;
+        let xbar = &mut self.xbar;
+        let scratch = &mut self.rx_scratch;
+        for p in 1..xbar.ports() {
+            let Some(m) = modules[p].as_mut() else { continue };
+            let cap = m.absorb_capacity();
+            if cap > 0 && xbar.rx_len(p) > 0 {
+                scratch.clear();
+                xbar.drain_rx_into(p, cap, scratch);
+                let absorbed = m.absorb_pairs(scratch);
+                debug_assert_eq!(absorbed, scratch.len());
+            }
+            if let Some(job) = m.tick() {
+                xbar.push_job(p, job);
+            }
+        }
+    }
+
+    fn tick_port0_slave(&mut self) {
+        // Words arriving at port 0's slave side are results headed for
+        // the host: group per source into bridge-sized bursts, then
+        // forward to a C2H channel and the app output log.
+        if self.xbar.rx_len(0) == 0 {
+            return;
+        }
+        self.rx_scratch.clear();
+        self.xbar.drain_rx_into(0, usize::MAX, &mut self.rx_scratch);
+        for i in 0..self.rx_scratch.len() {
+            let (w, src) = self.rx_scratch[i];
+            self.rx_accum[src].push(w);
+            if self.rx_accum[src].len() == BRIDGE_BUFFER_WORDS {
+                let app = self.app_of_port(src);
+                let burst = std::mem::take(&mut self.rx_accum[src]);
+                self.wb2axi.forward(&mut self.xdma, app, &burst);
+                self.output_log.entry(app).or_default().extend_from_slice(&burst);
+            }
+        }
+    }
+
+    /// Flush partially filled C2H reassembly buffers (stream tails).
+    pub fn flush_c2h(&mut self) {
+        for src in 0..self.rx_accum.len() {
+            if !self.rx_accum[src].is_empty() {
+                let app = self.app_of_port(src);
+                let burst = std::mem::take(&mut self.rx_accum[src]);
+                self.wb2axi.forward(&mut self.xdma, app, &burst);
+                self.output_log.entry(app).or_default().extend_from_slice(&burst);
+            }
+        }
+    }
+
+    fn app_of_port(&self, port: usize) -> u32 {
+        self.modules
+            .get(port)
+            .and_then(Option::as_ref)
+            .map(|m| m.app_id)
+            .unwrap_or(0)
+    }
+
+    fn tick_bridge(&mut self) {
+        let regfile = &self.regfile;
+        if let Some(job) = self
+            .axi2wb
+            .tick(&mut self.xdma, |app| regfile.app_destination((app as usize).min(3)))
+        {
+            self.xbar.push_job(0, job);
+        }
+    }
+}
+
+impl Tick for Fabric {
+    fn tick(&mut self, cycle: u64) {
+        self.cycle = cycle;
+        self.sync_regfile();
+        self.icap.tick(cycle);
+        for done in self.icap.take_done() {
+            self.handle_reconfig_done(done);
+        }
+        self.mirror_icap_status();
+        self.sync_regfile(); // reconfig completion may have touched resets
+        self.xbar.tick(cycle);
+        self.route_events();
+        self.tick_modules();
+        self.tick_port0_slave();
+        self.tick_bridge();
+    }
+}
+
+/// Errors the fabric surfaces per app after a run (regfile view).
+pub fn app_error(fabric: &Fabric, app_id: u32) -> Option<WbError> {
+    if (app_id as usize) < 4 {
+        fabric.regfile.app_error(app_id as usize)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests;

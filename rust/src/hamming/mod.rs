@@ -1,0 +1,198 @@
+//! Pure-Rust golden model of the three computation modules: constant
+//! multiplier, Hamming(31,26) encoder, Hamming(31,26) decoder.
+//!
+//! This is the bit-exact mirror of `python/compile/kernels/hamming_spec.py`
+//! (same positions, same masks — `test_mirrored_rust_constants` on the
+//! Python side pins the literals).  The coordinator uses it to
+//! cross-verify every PJRT result on the request path, and the
+//! cycle-level module FSMs ([`crate::modules`]) use it as their
+//! combinational payload function.
+//!
+//! Convention: codeword positions are 1-indexed 1..31; position `p` lives
+//! in bit `p-1` of a `u32`, so codewords occupy bits [0,30].
+
+/// Number of parity bits.
+pub const NUM_PARITY: usize = 5;
+/// Codeword length in bits.
+pub const CODE_BITS: u32 = 31;
+/// Payload width in bits.
+pub const DATA_BITS: u32 = 26;
+/// Mask of the 26 payload bits.
+pub const DATA_MASK: u32 = 0x03FF_FFFF;
+/// Mask of the 31 codeword bits.
+pub const CODE_MASK: u32 = 0x7FFF_FFFF;
+
+/// The multiplier module's constant (mirrors `model.MULT_CONSTANT`).
+pub const MULT_CONSTANT: u32 = 0x9E37_79B1;
+
+/// Parity masks: `PARITY_MASKS[i]` covers every codeword bit whose
+/// 1-indexed position has bit `i` set.  Textbook Hamming(31,26) values.
+pub const PARITY_MASKS: [u32; NUM_PARITY] =
+    [0x5555_5555, 0x6666_6666, 0x7878_7878, 0x7F80_7F80, 0x7FFF_8000];
+
+/// Data positions (1-indexed): every position in 1..=31 that is not a
+/// power of two, in increasing order.  Payload bit `k` maps to position
+/// `DATA_POSITIONS[k]`.
+pub const DATA_POSITIONS: [u32; DATA_BITS as usize] = [
+    3, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 17, 18, 19, 20, 21, 22, 23, 24,
+    25, 26, 27, 28, 29, 30, 31,
+];
+
+/// Constant-multiplier module: wrapping elementwise multiply.
+#[inline(always)]
+pub fn multiply_word(x: u32, k: u32) -> u32 {
+    x.wrapping_mul(k)
+}
+
+/// Encode the low 26 bits of `d` into a 31-bit Hamming codeword.
+pub fn encode_word(d: u32) -> u32 {
+    let d = d & DATA_MASK;
+    let mut cw = 0u32;
+    for (k, &p) in DATA_POSITIONS.iter().enumerate() {
+        cw |= ((d >> k) & 1) << (p - 1);
+    }
+    for (i, &mask) in PARITY_MASKS.iter().enumerate() {
+        let par = (cw & mask).count_ones() & 1;
+        cw |= par << ((1u32 << i) - 1);
+    }
+    cw
+}
+
+/// Decode a 31-bit codeword, correcting up to one flipped bit.
+///
+/// Returns `(payload, syndrome)`; syndrome 0 means no error detected,
+/// otherwise it names the corrected (1-indexed) position.
+pub fn decode_word(cw: u32) -> (u32, u32) {
+    let mut cw = cw & CODE_MASK;
+    let mut syn = 0u32;
+    for (i, &mask) in PARITY_MASKS.iter().enumerate() {
+        syn |= ((cw & mask).count_ones() & 1) << i;
+    }
+    if syn != 0 {
+        cw ^= 1 << (syn - 1);
+    }
+    let mut d = 0u32;
+    for (k, &p) in DATA_POSITIONS.iter().enumerate() {
+        d |= ((cw >> (p - 1)) & 1) << k;
+    }
+    (d, syn)
+}
+
+/// Buffer-level multiplier (golden form of `artifacts/multiplier.hlo.txt`).
+pub fn multiply_buf(x: &[u32], k: u32) -> Vec<u32> {
+    x.iter().map(|&w| multiply_word(w, k)).collect()
+}
+
+/// Buffer-level encoder (golden form of `artifacts/hamming_enc.hlo.txt`).
+pub fn encode_buf(x: &[u32]) -> Vec<u32> {
+    x.iter().map(|&w| encode_word(w)).collect()
+}
+
+/// Buffer-level decoder (golden form of `artifacts/hamming_dec.hlo.txt`,
+/// payload only).
+pub fn decode_buf(x: &[u32]) -> Vec<u32> {
+    x.iter().map(|&w| decode_word(w).0).collect()
+}
+
+/// Buffer-level decoder returning syndromes too (module error status).
+pub fn decode_buf_syndromes(x: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let mut d = Vec::with_capacity(x.len());
+    let mut s = Vec::with_capacity(x.len());
+    for &w in x {
+        let (dw, sw) = decode_word(w);
+        d.push(dw);
+        s.push(sw);
+    }
+    (d, s)
+}
+
+/// The full Fig-5 pipeline: `dec(enc(mult(x)))`.
+///
+/// Algebraically equal to `(x * K) & DATA_MASK` — the end-to-end contract
+/// shared with `python/tests/test_model.py::test_pipeline_algebraic_identity`.
+pub fn pipeline_buf(x: &[u32], k: u32) -> Vec<u32> {
+    x.iter()
+        .map(|&w| decode_word(encode_word(multiply_word(w, k))).0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_positions_are_the_non_powers_of_two() {
+        let expect: Vec<u32> =
+            (1u32..=31).filter(|p| !p.is_power_of_two()).collect();
+        assert_eq!(DATA_POSITIONS.to_vec(), expect);
+    }
+
+    #[test]
+    fn parity_masks_match_position_rule() {
+        for i in 0..NUM_PARITY {
+            let mut mask = 0u32;
+            for p in 1..=CODE_BITS {
+                if p & (1 << i) != 0 {
+                    mask |= 1 << (p - 1);
+                }
+            }
+            assert_eq!(PARITY_MASKS[i], mask, "mask {i}");
+        }
+    }
+
+    #[test]
+    fn zero_encodes_to_zero() {
+        assert_eq!(encode_word(0), 0);
+        assert_eq!(decode_word(0), (0, 0));
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_low_payloads() {
+        for d in 0..4096u32 {
+            let cw = encode_word(d);
+            assert_eq!(cw & !CODE_MASK, 0, "fits 31 bits");
+            assert_eq!(decode_word(cw), (d, 0));
+        }
+    }
+
+    #[test]
+    fn single_bit_error_always_corrected() {
+        for d in [0u32, 1, DATA_MASK, 0x0155_5555, 0x02AA_AAAA, 1234567] {
+            let cw = encode_word(d);
+            for bit in 0..CODE_BITS {
+                let (got, syn) = decode_word(cw ^ (1 << bit));
+                assert_eq!(got, d, "d={d:#x} bit={bit}");
+                assert_eq!(syn, bit + 1, "syndrome names the position");
+            }
+        }
+    }
+
+    #[test]
+    fn high_data_bits_ignored_by_encoder() {
+        assert_eq!(encode_word(0xFC00_0000), encode_word(0));
+        assert_eq!(encode_word(0xFFFF_FFFF), encode_word(DATA_MASK));
+    }
+
+    #[test]
+    fn bit31_ignored_by_decoder() {
+        let cw = encode_word(0x00AB_CDEF);
+        assert_eq!(decode_word(cw | 0x8000_0000), decode_word(cw));
+    }
+
+    #[test]
+    fn pipeline_algebraic_identity() {
+        let xs: Vec<u32> =
+            (0u32..1000).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+        let got = pipeline_buf(&xs, MULT_CONSTANT);
+        for (x, g) in xs.iter().zip(&got) {
+            assert_eq!(*g, x.wrapping_mul(MULT_CONSTANT) & DATA_MASK);
+        }
+    }
+
+    #[test]
+    fn distinct_payloads_distinct_codewords() {
+        use std::collections::HashSet;
+        let set: HashSet<u32> = (0..8192).map(encode_word).collect();
+        assert_eq!(set.len(), 8192);
+    }
+}

@@ -1,0 +1,63 @@
+//! # elastic-fpga
+//!
+//! Production-quality reproduction of **"Towards Hardware Support for FPGA
+//! Resource Elasticity"** (Awan & Aliyeva, Ericsson Research / KTH, 2021).
+//!
+//! The paper proposes decomposing an application's acceleration requirement
+//! into small computation modules that are partially reconfigured into
+//! small PR regions of a shared FPGA, connected by a configurable 4x4
+//! WISHBONE crossbar switch with a decentralized Weighted-Round-Robin
+//! arbiter, one-hot communication isolation, and per-master package-count
+//! bandwidth allocation.  An *FPGA Elastic Resource Manager* grows and
+//! shrinks the set of PR regions assigned to each application, running
+//! overflow modules on the server until fabric frees up.
+//!
+//! This crate is the L3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack (see DESIGN.md):
+//!
+//! * the FPGA fabric (crossbar, WISHBONE interfaces, register file, ICAP,
+//!   XDMA shell) is simulated **cycle-accurately** — the paper's §V.E
+//!   clock-cycle numbers are reproduced exactly;
+//! * the computation modules (constant multiplier, Hamming(31,26)
+//!   encoder/decoder) **compute for real**: their payload function is the
+//!   AOT-lowered JAX/Pallas artifact executed through PJRT
+//!   ([`runtime`]), cross-checked against the pure-Rust golden model
+//!   ([`hamming`]);
+//! * the NoC [16] and shared-bus [21] baselines of Table II are
+//!   implemented in [`baselines`].
+//!
+//! Python exists only on the build path (`make artifacts`); the request
+//! path is pure Rust.
+
+pub mod area;
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod crossbar;
+pub mod experiments;
+pub mod fabric;
+pub mod hamming;
+pub mod icap;
+pub mod manager;
+pub mod metrics;
+pub mod modules;
+pub mod prop;
+pub mod regfile;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod timing;
+pub mod util;
+pub mod wishbone;
+pub mod workload;
+pub mod xdma;
+
+mod error;
+pub use error::{ElasticError, Result};
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,149 @@
+//! `elastic-fpga` — leader binary: CLI over the experiment drivers and
+//! the serving loop.  See `elastic-fpga --help` / [`elastic_fpga::cli`].
+
+use elastic_fpga::cli::{Cli, USAGE};
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::experiments;
+use elastic_fpga::manager::AppRequest;
+use elastic_fpga::metrics::{LatencyRecorder, Throughput};
+use elastic_fpga::runtime::RuntimeThread;
+use elastic_fpga::server::{call, Server};
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h" || a == "help") {
+        println!("{USAGE}");
+        return;
+    }
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn load_config(cli: &Cli) -> Result<SystemConfig> {
+    match cli.flags.get("config") {
+        Some(path) => SystemConfig::load(std::path::Path::new(path)),
+        None => Ok(SystemConfig::paper_defaults()),
+    }
+}
+
+fn load_runtime(cli: &Cli) -> Result<Option<RuntimeThread>> {
+    if cli.bool_or("no-pjrt", false)? {
+        return Ok(None);
+    }
+    let dir = cli.str_or("artifacts", elastic_fpga::DEFAULT_ARTIFACT_DIR);
+    let rt = RuntimeThread::spawn(dir)?;
+    rt.handle().preload_all()?;
+    Ok(Some(rt))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    let cfg = load_config(&cli)?;
+    match cli.command.as_str() {
+        "quickstart" => quickstart(&cli, &cfg),
+        "serve" => serve(&cli, &cfg),
+        "fig5" => {
+            let runtime = load_runtime(&cli)?;
+            let reps = cli.usize_or("reps", 10)?;
+            let rows = experiments::fig5(&cfg, runtime.as_ref().map(|t| t.handle()), 4096, reps)?;
+            print!("{}", experiments::fig5_render(&rows));
+            Ok(())
+        }
+        "fig6" => {
+            let rows = experiments::fig6(&cfg, &[3, 4, 6, 8, 10, 12, 14, 16]);
+            print!("{}", experiments::fig6_render(&rows));
+            Ok(())
+        }
+        "table1" => {
+            print!("{}", experiments::table1_render());
+            Ok(())
+        }
+        "table2" => {
+            print!("{}", experiments::table2_render(&cfg));
+            Ok(())
+        }
+        "bandwidth" => {
+            let words = cli.usize_or("words", 4096)?;
+            let rows = experiments::bandwidth_sweep(words)?;
+            print!("{}", experiments::bandwidth_render(&rows));
+            Ok(())
+        }
+        "overhead" => {
+            let r = experiments::comm_overhead(&cfg);
+            print!("{}", experiments::overhead_render(&r));
+            Ok(())
+        }
+        other => Err(elastic_fpga::ElasticError::Config(format!(
+            "unknown subcommand '{other}'\n{USAGE}"
+        ))),
+    }
+}
+
+fn quickstart(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
+    let runtime = load_runtime(cli)?;
+    println!("elastic-fpga quickstart — 16 KB through mult->enc->dec");
+    let server = Server::start(cfg.clone(), runtime.as_ref().map(|t| t.handle()));
+    let mut rng = SplitMix64::new(1);
+    let mut data = vec![0u32; 4096];
+    rng.fill_u32(&mut data);
+    let report = call(&server, AppRequest::pipeline(0, data))?;
+    println!(
+        "done: {} words, {} FPGA stages, verified={}, modelled time {:.2} ms \
+         (pcie {:.2} + fabric {:.3} + cpu {:.2})",
+        report.output.len(),
+        report.fpga_stages,
+        report.verified,
+        report.cost.total_ms(),
+        report.cost.pcie_ms,
+        report.cost.fabric_ms,
+        report.cost.cpu_ms
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn serve(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
+    let runtime = load_runtime(cli)?;
+    let requests = cli.usize_or("requests", 64)?;
+    let words = cli.usize_or("words", 4096)?;
+    println!("serving {requests} requests of {words} words each...");
+    let server = Server::start(cfg.clone(), runtime.as_ref().map(|t| t.handle()));
+    let mut lat = LatencyRecorder::new();
+    let mut thr = Throughput::start();
+    let mut rng = SplitMix64::new(7);
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let mut data = vec![0u32; words];
+        rng.fill_u32(&mut data);
+        pending.push(server.submit(AppRequest::pipeline((i % 4) as u32, data))?);
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| {
+            elastic_fpga::ElasticError::Server("response lost".into())
+        })?;
+        lat.record(resp.wall);
+        if resp.report.is_ok() {
+            ok += 1;
+            thr.record((words * 4) as u64);
+        }
+    }
+    println!(
+        "{ok}/{requests} ok | wall latency mean {:.1} us p50 {} us p99 {} us | \
+         {:.1} req/s, {:.1} MB/s",
+        lat.mean_us(),
+        lat.percentile_us(0.50),
+        lat.percentile_us(0.99),
+        thr.items_per_sec(),
+        thr.mbytes_per_sec()
+    );
+    server.shutdown();
+    Ok(())
+}

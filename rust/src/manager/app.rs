@@ -1,0 +1,87 @@
+//! Application request/report types.
+
+use crate::modules::ModuleKind;
+use crate::timing::{CostBreakdown, ExecutionTimeline};
+
+/// Where one stage of an application runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StagePlacement {
+    /// On the fabric, in PR region `region` (= crossbar port).
+    Fpga { kind: ModuleKind, region: usize },
+    /// On the server (PJRT execution of the same artifact).
+    OnServer { kind: ModuleKind },
+}
+
+impl StagePlacement {
+    /// The stage's module kind regardless of placement.
+    pub fn kind(&self) -> ModuleKind {
+        match *self {
+            StagePlacement::Fpga { kind, .. } => kind,
+            StagePlacement::OnServer { kind } => kind,
+        }
+    }
+
+    /// Is this stage on the FPGA?
+    pub fn is_fpga(&self) -> bool {
+        matches!(self, StagePlacement::Fpga { .. })
+    }
+}
+
+/// One acceleration request: a payload and its stage chain.
+#[derive(Debug, Clone)]
+pub struct AppRequest {
+    /// Application ID (0..=3 in the 4-port prototype).
+    pub app_id: u32,
+    /// Payload words (length must be a multiple of the 8-word burst).
+    pub data: Vec<u32>,
+    /// Stage chain; defaults to the Fig-5 pipeline.
+    pub stages: Vec<ModuleKind>,
+}
+
+impl AppRequest {
+    /// The paper's use case: `data` through multiplier -> encoder ->
+    /// decoder.
+    pub fn pipeline(app_id: u32, data: Vec<u32>) -> Self {
+        Self { app_id, data, stages: ModuleKind::pipeline().to_vec() }
+    }
+}
+
+/// The result of executing one request.
+#[derive(Debug, Clone)]
+pub struct AppReport {
+    pub app_id: u32,
+    /// Final output words.
+    pub output: Vec<u32>,
+    /// Where each stage ran.
+    pub placement: Vec<StagePlacement>,
+    /// Number of stages that ran on the fabric.
+    pub fpga_stages: usize,
+    /// Timing-model cost breakdown.
+    pub cost: CostBreakdown,
+    /// Raw timed events.
+    pub timeline: ExecutionTimeline,
+    /// Output matched the golden model?
+    pub verified: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_request_has_three_stages() {
+        let r = AppRequest::pipeline(0, vec![0; 8]);
+        assert_eq!(r.stages.len(), 3);
+        assert_eq!(r.stages[0], ModuleKind::Multiplier);
+        assert_eq!(r.stages[2], ModuleKind::HammingDecoder);
+    }
+
+    #[test]
+    fn placement_accessors() {
+        let f = StagePlacement::Fpga { kind: ModuleKind::Multiplier, region: 1 };
+        let s = StagePlacement::OnServer { kind: ModuleKind::HammingEncoder };
+        assert!(f.is_fpga() && !s.is_fpga());
+        assert_eq!(f.kind(), ModuleKind::Multiplier);
+        assert_eq!(s.kind(), ModuleKind::HammingEncoder);
+    }
+}

@@ -1,0 +1,403 @@
+//! FPGA Elastic Resource Manager (§IV.A) — the paper's coordination
+//! contribution.
+//!
+//! The manager keeps track of which PR regions are available and which
+//! are allocated to which application.  For each acceleration request it
+//! expresses the application as a chain of computation modules, assigns
+//! as many as fit onto free PR regions, and runs the remainder **on the
+//! server** (here: the *same* AOT-compiled JAX/Pallas artifacts executed
+//! through PJRT).  When a region frees up, the next on-server module
+//! migrates onto the FPGA and the upstream module's destination register
+//! is updated so traffic flows to the newly configured region — that is
+//! the elasticity mechanism.
+//!
+//! Reconfiguration can run through the ICAP model (timed, serialized) or
+//! the paper's own prototype path of statically installed modules
+//! (§V.B); Fig 5's execution times exclude reconfiguration either way.
+
+mod app;
+
+pub use app::{AppReport, AppRequest, StagePlacement};
+
+use crate::config::SystemConfig;
+use crate::fabric::Fabric;
+use crate::hamming;
+use crate::modules::ModuleKind;
+use crate::runtime::RuntimeHandle;
+use crate::timing::{evaluate, CostBreakdown, ExecutionTimeline};
+use crate::xdma::H2cBurst;
+use crate::{ElasticError, Result};
+
+/// Ownership state of one PR region.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegionState {
+    /// Free for allocation.
+    Available,
+    /// Allocated to an app, hosting one module stage.
+    Allocated { app_id: u32, kind: ModuleKind },
+    /// Administratively offline (fenced by the operator / churn model).
+    Offline,
+}
+
+/// The manager: fabric + (optional) PJRT runtime + region bookkeeping.
+pub struct ElasticManager {
+    fabric: Fabric,
+    runtime: Option<RuntimeHandle>,
+    regions: Vec<RegionState>, // index 0 unused; 1..=N are PR regions
+    cfg: SystemConfig,
+    /// Use the ICAP timing model when installing modules (otherwise the
+    /// §V.B static path).
+    pub use_icap: bool,
+}
+
+impl ElasticManager {
+    /// Build a manager over a fresh fabric.  `runtime` enables real PJRT
+    /// execution of on-server stages and result verification.
+    pub fn new(cfg: SystemConfig, runtime: Option<RuntimeHandle>) -> Self {
+        let fabric = Fabric::new(cfg.clone());
+        let n = cfg.fabric.num_pr_regions;
+        Self {
+            fabric,
+            runtime,
+            regions: (0..=n).map(|_| RegionState::Available).collect(),
+            cfg,
+            use_icap: false,
+        }
+    }
+
+    /// Region states (1-indexed; entry 0 is a placeholder).
+    pub fn regions(&self) -> &[RegionState] {
+        &self.regions
+    }
+
+    /// Number of regions currently available.
+    pub fn available_regions(&self) -> usize {
+        self.regions[1..]
+            .iter()
+            .filter(|r| **r == RegionState::Available)
+            .count()
+    }
+
+    /// Fence `count` regions offline (churn injection for elasticity
+    /// experiments); returns how many were actually fenced.
+    pub fn fence_regions(&mut self, count: usize) -> usize {
+        let mut fenced = 0;
+        for r in (1..self.regions.len()).rev() {
+            if fenced == count {
+                break;
+            }
+            if self.regions[r] == RegionState::Available {
+                self.regions[r] = RegionState::Offline;
+                fenced += 1;
+            }
+        }
+        fenced
+    }
+
+    /// Bring all offline regions back.
+    pub fn unfence_all(&mut self) {
+        for r in self.regions.iter_mut() {
+            if *r == RegionState::Offline {
+                *r = RegionState::Available;
+            }
+        }
+    }
+
+    /// Direct fabric access (benches, tests).
+    pub fn fabric_mut(&mut self) -> &mut Fabric {
+        &mut self.fabric
+    }
+
+    // ------------------------------------------------------------------
+    // allocation + programming
+    // ------------------------------------------------------------------
+
+    /// Plan the placement of `stages` given current availability: a
+    /// maximal FPGA prefix, the rest on-server ("if there are not enough
+    /// PR regions to host all modules, the remaining ones run on the
+    /// server").
+    pub fn plan(&self, stages: &[ModuleKind]) -> Vec<StagePlacement> {
+        let mut free: Vec<usize> = (1..self.regions.len())
+            .filter(|&r| self.regions[r] == RegionState::Available)
+            .collect();
+        free.sort_unstable();
+        stages
+            .iter()
+            .enumerate()
+            .map(|(i, &kind)| {
+                if let Some(&region) = free.get(i) {
+                    StagePlacement::Fpga { kind, region }
+                } else {
+                    StagePlacement::OnServer { kind }
+                }
+            })
+            .collect()
+    }
+
+    /// Program the register file for an app whose FPGA chain occupies
+    /// `ports` in order: port0 -> ports[0] -> ... -> port0.
+    fn program_chain(&mut self, app_id: u32, ports: &[usize]) {
+        let rf = &mut self.fabric.regfile;
+        let first = ports.first().copied().unwrap_or(0);
+        rf.set_app_destination(app_id as usize, 1 << first);
+        rf.set_allowed_slaves(0, 1 << first);
+        for (i, &p) in ports.iter().enumerate() {
+            let next = ports.get(i + 1).copied().unwrap_or(0);
+            rf.set_pr_destination(p, 1 << next);
+            rf.set_allowed_slaves(p, 1 << next);
+        }
+    }
+
+    /// Install the FPGA stages of a placement; returns the chain ports
+    /// and the ICAP cycles spent (0 on the static path).
+    fn install(
+        &mut self,
+        app_id: u32,
+        placement: &[StagePlacement],
+    ) -> Result<(Vec<usize>, u64)> {
+        let mut ports = Vec::new();
+        let mut icap_cycles = 0u64;
+        for p in placement {
+            if let StagePlacement::Fpga { kind, region } = *p {
+                if self.regions[region] != RegionState::Available {
+                    return Err(ElasticError::Allocation(format!(
+                        "region {region} not available"
+                    )));
+                }
+                self.regions[region] = RegionState::Allocated { app_id, kind };
+                ports.push(region);
+            }
+        }
+        // Destinations first, so module install sees the right regfile.
+        self.program_chain(app_id, &ports);
+        for p in placement {
+            if let StagePlacement::Fpga { kind, region } = *p {
+                if self.use_icap {
+                    self.fabric.reconfigure(region, kind, app_id)?;
+                    let words = (self.cfg.manager.bitstream_bytes / 4) as u64;
+                    let budget = crate::icap::Icap::expected_cycles(words) + 16;
+                    let before = self.fabric.now();
+                    for _ in 0..budget {
+                        let c = self.fabric.now() + 1;
+                        crate::sim::Tick::tick(&mut self.fabric, c);
+                        if self.fabric.module_at(region).is_some() {
+                            break;
+                        }
+                    }
+                    icap_cycles += self.fabric.now() - before;
+                    if self.fabric.module_at(region).is_none() {
+                        return Err(ElasticError::Allocation(format!(
+                            "reconfiguration of region {region} failed"
+                        )));
+                    }
+                } else {
+                    self.fabric.install_static_module(region, kind, app_id);
+                }
+            }
+        }
+        Ok((ports, icap_cycles))
+    }
+
+    /// Release an app's regions.
+    pub fn release_app(&mut self, app_id: u32) {
+        for r in 1..self.regions.len() {
+            if matches!(self.regions[r], RegionState::Allocated { app_id: a, .. } if a == app_id)
+            {
+                self.fabric.clear_region(r);
+                self.regions[r] = RegionState::Available;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // execution
+    // ------------------------------------------------------------------
+
+    /// Execute an application request end to end under the *current*
+    /// availability.  This is the Fig-5 primitive: the FPGA prefix runs
+    /// on the fabric simulator (cycle-accurately), the on-server suffix
+    /// runs through PJRT, and the returned report carries the timing
+    /// model's cost breakdown plus verification against the golden model.
+    pub fn execute(&mut self, req: &AppRequest) -> Result<AppReport> {
+        let placement = self.plan(&req.stages);
+        self.execute_placed(req, &placement)
+    }
+
+    /// Execute with an explicit placement (benches pin cases this way).
+    pub fn execute_placed(
+        &mut self,
+        req: &AppRequest,
+        placement: &[StagePlacement],
+    ) -> Result<AppReport> {
+        if req.data.len() % crate::xdma::BRIDGE_BUFFER_WORDS != 0 {
+            return Err(ElasticError::Server(format!(
+                "payload length {} not a multiple of the {}-word burst",
+                req.data.len(),
+                crate::xdma::BRIDGE_BUFFER_WORDS
+            )));
+        }
+        let mut tl = ExecutionTimeline::new();
+        let (ports, icap_cycles) = match self.install(req.app_id, placement) {
+            Ok(x) => x,
+            Err(e) => {
+                // Roll back any regions taken before the failure.
+                self.release_app(req.app_id);
+                return Err(e);
+            }
+        };
+        tl.reconfig(icap_cycles);
+        let fpga_stages = ports.len();
+        let bytes = req.data.len() * 4;
+
+        // ---- FPGA prefix ----
+        let mut intermediate: Vec<u32>;
+        if fpga_stages > 0 {
+            tl.h2c(bytes);
+            // Host-driver policy: all of an app's bursts go to one H2C
+            // channel (app_id % channels).  Cross-channel service order at
+            // the bridge is round-robin and would permute bursts of a
+            // single app spread over channels; per-app affinity preserves
+            // intra-app order exactly as a real XDMA driver would by
+            // pinning a stream to a descriptor ring.
+            let channel = req.app_id as usize % crate::xdma::H2C_CHANNELS;
+            for chunk in req.data.chunks(crate::xdma::BRIDGE_BUFFER_WORDS) {
+                self.fabric.h2c_push(
+                    channel,
+                    H2cBurst { app_id: req.app_id, words: chunk.to_vec() },
+                );
+            }
+            let before = self.fabric.now();
+            self.fabric.run_until_idle(100_000_000)?;
+            tl.fabric(self.fabric.now() - before);
+            self.fabric.flush_c2h();
+            intermediate = self.fabric.take_app_output(req.app_id);
+            tl.c2h(bytes);
+            if let Some(err) = crate::fabric::app_error(&self.fabric, req.app_id) {
+                self.release_app(req.app_id);
+                return Err(ElasticError::Wishbone(err));
+            }
+            if intermediate.len() != req.data.len() {
+                self.release_app(req.app_id);
+                return Err(ElasticError::Verify(format!(
+                    "fabric returned {} of {} words",
+                    intermediate.len(),
+                    req.data.len()
+                )));
+            }
+        } else {
+            intermediate = req.data.clone();
+        }
+
+        // ---- on-server suffix (real compute via PJRT) ----
+        for p in placement {
+            if let StagePlacement::OnServer { kind } = *p {
+                let t0 = std::time::Instant::now();
+                intermediate = self.run_stage_on_server(kind, &intermediate)?;
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                tl.cpu_stage(kind.name(), Some(wall_ms));
+            }
+        }
+
+        // ---- verify against the golden model ----
+        let expected = golden_chain(&req.stages, &req.data);
+        let verified = intermediate == expected;
+        if self.cfg.manager.verify_results && !verified {
+            self.release_app(req.app_id);
+            return Err(ElasticError::Verify(format!(
+                "app {} output mismatch vs golden model",
+                req.app_id
+            )));
+        }
+
+        let cost: CostBreakdown = evaluate(&self.cfg, &tl);
+        self.release_app(req.app_id);
+        Ok(AppReport {
+            app_id: req.app_id,
+            output: intermediate,
+            placement: placement.to_vec(),
+            fpga_stages,
+            cost,
+            timeline: tl,
+            verified,
+        })
+    }
+
+    /// Elastic execution: begin with the current availability; after each
+    /// entry of `release_after_segments` more data has flowed, one more
+    /// region becomes available and the next on-server stage migrates
+    /// onto the FPGA (§IV.A's "checks again if there are any PR regions
+    /// released [...] and updates the other module's destination
+    /// addresses").  Returns one report per segment.
+    pub fn execute_elastic(
+        &mut self,
+        req: &AppRequest,
+        segments: usize,
+    ) -> Result<Vec<AppReport>> {
+        assert!(segments >= 1);
+        let seg_words = req.data.len() / segments;
+        assert!(
+            seg_words % crate::xdma::BRIDGE_BUFFER_WORDS == 0,
+            "segment length must stay burst-aligned"
+        );
+        let mut reports = Vec::new();
+        for (i, seg) in req.data.chunks(seg_words).enumerate() {
+            let sub = AppRequest {
+                app_id: req.app_id,
+                data: seg.to_vec(),
+                stages: req.stages.clone(),
+            };
+            reports.push(self.execute(&sub)?);
+            // A region frees between segments (elasticity event).
+            if i + 1 < segments {
+                self.unfence_n(1);
+            }
+        }
+        Ok(reports)
+    }
+
+    fn unfence_n(&mut self, n: usize) {
+        let mut left = n;
+        for r in 1..self.regions.len() {
+            if left == 0 {
+                break;
+            }
+            if self.regions[r] == RegionState::Offline {
+                self.regions[r] = RegionState::Available;
+                left -= 1;
+            }
+        }
+    }
+
+    /// Run one stage on the server.  Uses the PJRT artifact when its
+    /// geometry matches (the real compute path); falls back to the golden
+    /// model otherwise (and for runtime-less unit tests).
+    fn run_stage_on_server(
+        &self,
+        kind: ModuleKind,
+        data: &[u32],
+    ) -> Result<Vec<u32>> {
+        if let Some(rt) = &self.runtime {
+            if let Some(out) = rt.run(kind.artifact(), data.to_vec())? {
+                return Ok(out);
+            }
+        }
+        Ok(kind.apply_buf(data))
+    }
+}
+
+/// Golden reference for a stage chain.
+pub fn golden_chain(stages: &[ModuleKind], data: &[u32]) -> Vec<u32> {
+    let mut cur = data.to_vec();
+    for &s in stages {
+        cur = s.apply_buf(&cur);
+    }
+    cur
+}
+
+/// Convenience: the Fig-5 pipeline golden result.
+pub fn golden_pipeline(data: &[u32]) -> Vec<u32> {
+    hamming::pipeline_buf(data, hamming::MULT_CONSTANT)
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,186 @@
+//! Manager tests: allocation planning, the three Fig-5 cases, elastic
+//! migration, and failure handling.  These run without PJRT (runtime =
+//! None -> golden-model on-server path); the PJRT-coupled versions live
+//! in `rust/tests/integration.rs`.
+
+use super::*;
+use crate::config::SystemConfig;
+use crate::util::SplitMix64;
+
+fn mgr() -> ElasticManager {
+    ElasticManager::new(SystemConfig::paper_defaults(), None)
+}
+
+fn data(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut v = vec![0u32; n];
+    rng.fill_u32(&mut v);
+    v
+}
+
+#[test]
+fn plan_prefers_fpga_prefix() {
+    let m = mgr();
+    let plan = m.plan(&crate::modules::ModuleKind::pipeline());
+    assert_eq!(plan.len(), 3);
+    assert!(plan.iter().all(StagePlacement::is_fpga));
+}
+
+#[test]
+fn plan_overflows_to_server_when_fenced() {
+    let mut m = mgr();
+    assert_eq!(m.fence_regions(2), 2);
+    assert_eq!(m.available_regions(), 1);
+    let plan = m.plan(&crate::modules::ModuleKind::pipeline());
+    assert!(plan[0].is_fpga());
+    assert!(!plan[1].is_fpga());
+    assert!(!plan[2].is_fpga());
+}
+
+#[test]
+fn fig5_case1_multiplier_only_on_fpga() {
+    let mut m = mgr();
+    m.fence_regions(2);
+    let req = AppRequest::pipeline(0, data(256, 1));
+    let rep = m.execute(&req).unwrap();
+    assert_eq!(rep.fpga_stages, 1);
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_pipeline(&req.data));
+    assert_eq!(rep.timeline.cpu_stages.len(), 2);
+}
+
+#[test]
+fn fig5_case2_two_stages_on_fpga() {
+    let mut m = mgr();
+    m.fence_regions(1);
+    let req = AppRequest::pipeline(0, data(256, 2));
+    let rep = m.execute(&req).unwrap();
+    assert_eq!(rep.fpga_stages, 2);
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_pipeline(&req.data));
+    assert_eq!(rep.timeline.cpu_stages.len(), 1);
+}
+
+#[test]
+fn fig5_case3_all_on_fpga() {
+    let mut m = mgr();
+    let req = AppRequest::pipeline(0, data(256, 3));
+    let rep = m.execute(&req).unwrap();
+    assert_eq!(rep.fpga_stages, 3);
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_pipeline(&req.data));
+    assert!(rep.timeline.cpu_stages.is_empty());
+}
+
+#[test]
+fn fig5_ordering_case1_slowest_case3_fastest() {
+    // The paper's Fig 5 claim, from the model: more FPGA stages = less
+    // total time (16 KB payload).
+    let mut totals = Vec::new();
+    for fenced in [2usize, 1, 0] {
+        let mut m = mgr();
+        m.fence_regions(fenced);
+        let req = AppRequest::pipeline(0, data(4096, 4));
+        let rep = m.execute(&req).unwrap();
+        totals.push(rep.cost.total_ms());
+    }
+    assert!(
+        totals[0] > totals[1] && totals[1] > totals[2],
+        "fig5 ordering violated: {totals:?}"
+    );
+    // Calibration endpoints (±10%).
+    assert!((totals[0] - 16.9).abs() / 16.9 < 0.10, "case1 = {}", totals[0]);
+    assert!((totals[2] - 10.87).abs() / 10.87 < 0.10, "case3 = {}", totals[2]);
+}
+
+#[test]
+fn regions_released_after_execution() {
+    let mut m = mgr();
+    let req = AppRequest::pipeline(0, data(64, 5));
+    m.execute(&req).unwrap();
+    assert_eq!(m.available_regions(), 3, "regions must be reusable");
+    // And reusable: run again.
+    let rep = m.execute(&req).unwrap();
+    assert!(rep.verified);
+}
+
+#[test]
+fn elastic_migration_grows_fpga_share_per_segment() {
+    let mut m = mgr();
+    m.fence_regions(2); // start with 1 region
+    let req = AppRequest::pipeline(0, data(768, 6));
+    let reports = m.execute_elastic(&req, 3).unwrap();
+    let fpga: Vec<usize> = reports.iter().map(|r| r.fpga_stages).collect();
+    assert_eq!(fpga, vec![1, 2, 3], "one more FPGA stage per segment");
+    // Stitched output must equal the golden pipeline of the whole buffer.
+    let stitched: Vec<u32> =
+        reports.iter().flat_map(|r| r.output.iter().copied()).collect();
+    assert_eq!(stitched, golden_pipeline(&req.data));
+    // Costs must be non-increasing as stages migrate on.
+    let costs: Vec<f64> = reports.iter().map(|r| r.cost.total_ms()).collect();
+    assert!(costs[0] > costs[1] && costs[1] > costs[2], "{costs:?}");
+}
+
+#[test]
+fn unaligned_payload_rejected() {
+    let mut m = mgr();
+    let req = AppRequest::pipeline(0, vec![0; 13]);
+    assert!(m.execute(&req).is_err());
+}
+
+#[test]
+fn explicit_placement_rejects_taken_region() {
+    let mut m = mgr();
+    let req = AppRequest::pipeline(0, data(64, 7));
+    let placement = vec![
+        StagePlacement::Fpga { kind: crate::modules::ModuleKind::Multiplier, region: 1 },
+        StagePlacement::Fpga { kind: crate::modules::ModuleKind::HammingEncoder, region: 1 },
+        StagePlacement::OnServer { kind: crate::modules::ModuleKind::HammingDecoder },
+    ];
+    assert!(m.execute_placed(&req, &placement).is_err(), "region 1 reused");
+}
+
+#[test]
+fn icap_path_reports_reconfig_cost_separately() {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.manager.bitstream_bytes = 4096; // keep the test fast (1024 words)
+    let mut m = ElasticManager::new(cfg, None);
+    m.use_icap = true;
+    let req = AppRequest::pipeline(0, data(64, 8));
+    let rep = m.execute(&req).unwrap();
+    assert!(rep.verified);
+    assert!(rep.cost.reconfig_ms > 0.0, "ICAP time must be accounted");
+    assert_eq!(rep.output, golden_pipeline(&req.data));
+    // Three regions programmed serially through one ICAP: at least
+    // 3 * words * 2 cycles.
+    assert!(rep.timeline.reconfig_cycles >= 3 * 1024 * 2);
+}
+
+#[test]
+fn zero_regions_runs_everything_on_server() {
+    let mut m = mgr();
+    m.fence_regions(3);
+    let req = AppRequest::pipeline(1, data(64, 9));
+    let rep = m.execute(&req).unwrap();
+    assert_eq!(rep.fpga_stages, 0);
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_pipeline(&req.data));
+    // No PCIe crossings on the pure-server path.
+    assert!(rep.timeline.h2c_transfers.is_empty());
+    assert!(rep.timeline.c2h_transfers.is_empty());
+}
+
+#[test]
+fn two_sequential_apps_isolated() {
+    let mut m = mgr();
+    let a = AppRequest::pipeline(0, data(64, 10));
+    let b = AppRequest {
+        app_id: 1,
+        data: data(64, 11),
+        stages: vec![crate::modules::ModuleKind::HammingEncoder],
+    };
+    let ra = m.execute(&a).unwrap();
+    let rb = m.execute(&b).unwrap();
+    assert_eq!(ra.output, golden_pipeline(&a.data));
+    assert_eq!(rb.output, crate::hamming::encode_buf(&b.data));
+}

@@ -1,0 +1,160 @@
+//! Lightweight metrics: counters and latency recorders for the server
+//! and benches (no external deps — see DESIGN.md §7).
+
+use std::time::Duration;
+
+/// A latency recorder with percentile queries.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<u64>,
+    sorted: bool,
+}
+
+impl LatencyRecorder {
+    /// Empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+        self.sorted = false;
+    }
+
+    /// Record a raw microsecond sample.
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Mean in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    /// Percentile (0.0..=1.0) in microseconds, nearest-rank.
+    pub fn percentile_us(&mut self, q: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        if !self.sorted {
+            self.samples_us.sort_unstable();
+            self.sorted = true;
+        }
+        let rank = ((q * self.samples_us.len() as f64).ceil() as usize)
+            .clamp(1, self.samples_us.len());
+        self.samples_us[rank - 1]
+    }
+
+    /// Max sample.
+    pub fn max_us(&self) -> u64 {
+        self.samples_us.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Merge another recorder's samples.
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.sorted = false;
+    }
+}
+
+/// Throughput helper: items over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: std::time::Instant,
+    items: u64,
+    bytes: u64,
+}
+
+impl Throughput {
+    /// Start the window now.
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now(), items: 0, bytes: 0 }
+    }
+
+    /// Count one item of `bytes` size.
+    pub fn record(&mut self, bytes: u64) {
+        self.items += 1;
+        self.bytes += bytes;
+    }
+
+    /// Items per second so far.
+    pub fn items_per_sec(&self) -> f64 {
+        let s = self.start.elapsed().as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.items as f64 / s
+        }
+    }
+
+    /// Megabytes per second so far.
+    pub fn mbytes_per_sec(&self) -> f64 {
+        let s = self.start.elapsed().as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.bytes as f64 / 1e6 / s
+        }
+    }
+
+    /// Items counted.
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut r = LatencyRecorder::new();
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            r.record_us(us);
+        }
+        assert_eq!(r.percentile_us(0.5), 50);
+        assert_eq!(r.percentile_us(0.99), 100);
+        assert_eq!(r.percentile_us(0.1), 10);
+        assert_eq!(r.max_us(), 100);
+        assert_eq!(r.count(), 10);
+        assert!((r.mean_us() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let mut r = LatencyRecorder::new();
+        assert_eq!(r.percentile_us(0.5), 0);
+        assert_eq!(r.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        a.record_us(1);
+        b.record_us(3);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.percentile_us(1.0), 3);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::start();
+        t.record(1000);
+        t.record(1000);
+        assert_eq!(t.items(), 2);
+        assert!(t.items_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,300 @@
+//! Computation-module template (§IV.H) and the three prototype modules
+//! (§V.B): constant multiplier, Hamming(31,26) encoder, Hamming(31,26)
+//! decoder.
+//!
+//! The template comprises input and output registers, an error-status
+//! register, computation units, and control logic: the module batches
+//! incoming words from its WB slave interface into the input registers,
+//! runs the computation units in parallel on the batch, then asks its WB
+//! master interface to forward the results to its destination address
+//! (programmed by the elastic manager through the register file).
+//!
+//! The per-word combinational function is the Rust golden model
+//! ([`crate::hamming`]); the *same math* ships as the AOT-lowered
+//! JAX/Pallas artifact, which the manager executes via PJRT for
+//! on-server stages and for cross-verification.
+
+use crate::hamming;
+use crate::wishbone::{Job, WbError};
+
+/// Which accelerator a PR region hosts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModuleKind {
+    /// Constant multiplier (wrapping u32 multiply).
+    Multiplier,
+    /// Hamming(31,26) encoder.
+    HammingEncoder,
+    /// Hamming(31,26) decoder (single-error correction).
+    HammingDecoder,
+}
+
+impl ModuleKind {
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModuleKind::Multiplier => "multiplier",
+            ModuleKind::HammingEncoder => "hamming_enc",
+            ModuleKind::HammingDecoder => "hamming_dec",
+        }
+    }
+
+    /// The AOT artifact implementing this module's stage at buffer
+    /// granularity (manifest key).
+    pub fn artifact(self) -> &'static str {
+        // Names match `python/compile/model.py::EXPORTS`.
+        self.name()
+    }
+
+    /// The per-word combinational function (golden model).
+    pub fn apply_word(self, w: u32) -> u32 {
+        match self {
+            ModuleKind::Multiplier => hamming::multiply_word(w, hamming::MULT_CONSTANT),
+            ModuleKind::HammingEncoder => hamming::encode_word(w),
+            ModuleKind::HammingDecoder => hamming::decode_word(w).0,
+        }
+    }
+
+    /// Buffer-level golden transform.
+    pub fn apply_buf(self, buf: &[u32]) -> Vec<u32> {
+        buf.iter().map(|&w| self.apply_word(w)).collect()
+    }
+
+    /// The Fig-5 pipeline order.
+    pub fn pipeline() -> [ModuleKind; 3] {
+        [ModuleKind::Multiplier, ModuleKind::HammingEncoder, ModuleKind::HammingDecoder]
+    }
+}
+
+/// Module FSM state (template control logic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleState {
+    /// Input registers free; waiting to read a batch from the slave
+    /// interface.
+    Ready,
+    /// Computation units running (`remaining` cycles left).
+    Computing { remaining: u32 },
+    /// Output handed to the master interface; waiting for the send to
+    /// complete (status lands in the error register).
+    SendWait,
+}
+
+/// One instantiated computation module, attached to a crossbar port.
+#[derive(Debug)]
+pub struct ComputationModule {
+    /// Which accelerator this is.
+    pub kind: ModuleKind,
+    /// Crossbar port the module's interfaces sit on.
+    pub port: usize,
+    /// Application that owns the hosting PR region.
+    pub app_id: u32,
+    /// One-hot destination address (Table III regs 1-3, programmed by the
+    /// manager; re-programmed on migration).
+    pub dest_onehot: u32,
+    /// Batch size in words (input-register depth; prototype: 8).
+    pub batch_words: usize,
+    /// Computation-unit latency in cycles (parallel units -> 1 cc).
+    pub compute_latency: u32,
+    /// FSM state.
+    pub state: ModuleState,
+    /// Input registers.
+    input: Vec<u32>,
+    /// Words handed to the master interface for the in-flight send
+    /// (output registers are moved into the Job — §Perf: no clone).
+    pending_words: usize,
+    /// Error-status register (§IV.H: "the status of the request is stored
+    /// in the error register").
+    pub error_status: Option<WbError>,
+    /// Batches processed (stats).
+    pub batches_done: u64,
+    /// Words processed (stats).
+    pub words_done: u64,
+}
+
+impl ComputationModule {
+    /// Instantiate a module at `port` for `app_id`.
+    pub fn new(kind: ModuleKind, port: usize, app_id: u32) -> Self {
+        Self {
+            kind,
+            port,
+            app_id,
+            dest_onehot: 0,
+            batch_words: 8,
+            compute_latency: 1,
+            state: ModuleState::Ready,
+            input: Vec::with_capacity(8),
+            pending_words: 0,
+            error_status: None,
+            batches_done: 0,
+            words_done: 0,
+        }
+    }
+
+    /// Words currently latched in the input registers.
+    pub fn input_fill(&self) -> usize {
+        self.input.len()
+    }
+
+    /// Accept words drained from the slave interface.  Returns how many
+    /// were absorbed (input registers hold one batch).
+    pub fn absorb(&mut self, words: &[u32]) -> usize {
+        if self.state != ModuleState::Ready {
+            return 0;
+        }
+        let space = self.batch_words - self.input.len();
+        let take = space.min(words.len());
+        self.input.extend_from_slice(&words[..take]);
+        take
+    }
+
+    /// Allocation-free variant over `(word, src)` pairs as drained from
+    /// the crossbar (§Perf hot path).
+    pub fn absorb_pairs(&mut self, pairs: &[(u32, usize)]) -> usize {
+        if self.state != ModuleState::Ready {
+            return 0;
+        }
+        let space = self.batch_words - self.input.len();
+        let take = space.min(pairs.len());
+        self.input.extend(pairs[..take].iter().map(|&(w, _)| w));
+        take
+    }
+
+    /// Capacity left in the input registers this cycle.
+    pub fn absorb_capacity(&self) -> usize {
+        if self.state != ModuleState::Ready {
+            0
+        } else {
+            self.batch_words - self.input.len()
+        }
+    }
+
+    /// One clock of the control logic.  Returns a [`Job`] when the module
+    /// requests its master interface (must be pushed to the crossbar by
+    /// the fabric this cycle so the latch lands next cycle).
+    pub fn tick(&mut self) -> Option<Job> {
+        match self.state {
+            ModuleState::Ready => {
+                if self.input.len() == self.batch_words {
+                    self.state = ModuleState::Computing {
+                        remaining: self.compute_latency,
+                    };
+                }
+                None
+            }
+            ModuleState::Computing { remaining } => {
+                if remaining > 1 {
+                    self.state = ModuleState::Computing { remaining: remaining - 1 };
+                    return None;
+                }
+                // Computation units finish; output registers load and the
+                // master interface is requested with the destination.
+                let out = self.kind.apply_buf(&self.input);
+                self.input.clear();
+                self.pending_words = out.len();
+                self.state = ModuleState::SendWait;
+                Some(Job::new(self.dest_onehot, out, self.app_id))
+            }
+            ModuleState::SendWait => None,
+        }
+    }
+
+    /// The fabric reports the outcome of the requested send.
+    pub fn on_send_complete(&mut self, result: Result<(), WbError>) {
+        debug_assert_eq!(self.state, ModuleState::SendWait);
+        self.error_status = result.err();
+        if result.is_ok() {
+            self.batches_done += 1;
+            self.words_done += self.pending_words as u64;
+        }
+        // §IV.H: "If the request is successful, the output registers are
+        // reset.  If a slave interface has new data, it registers new
+        // data; otherwise, it becomes idle."  On error we also return to
+        // Ready — the manager observes the error register and decides.
+        self.pending_words = 0;
+        self.state = ModuleState::Ready;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hamming::{DATA_MASK, MULT_CONSTANT};
+
+    #[test]
+    fn kinds_map_to_artifacts_and_golden() {
+        assert_eq!(ModuleKind::Multiplier.artifact(), "multiplier");
+        assert_eq!(ModuleKind::HammingEncoder.artifact(), "hamming_enc");
+        assert_eq!(ModuleKind::HammingDecoder.artifact(), "hamming_dec");
+        let x = 0xDEAD_BEEF;
+        assert_eq!(
+            ModuleKind::Multiplier.apply_word(x),
+            x.wrapping_mul(MULT_CONSTANT)
+        );
+        let enc = ModuleKind::HammingEncoder.apply_word(x);
+        assert_eq!(ModuleKind::HammingDecoder.apply_word(enc), x & DATA_MASK);
+    }
+
+    #[test]
+    fn pipeline_order_matches_fig5() {
+        assert_eq!(
+            ModuleKind::pipeline(),
+            [
+                ModuleKind::Multiplier,
+                ModuleKind::HammingEncoder,
+                ModuleKind::HammingDecoder
+            ]
+        );
+    }
+
+    #[test]
+    fn module_fsm_full_batch_cycle() {
+        let mut m = ComputationModule::new(ModuleKind::Multiplier, 1, 0);
+        m.dest_onehot = 0b0100;
+        assert_eq!(m.absorb(&[1, 2, 3, 4, 5]), 5);
+        assert!(m.tick().is_none(), "batch not full yet");
+        assert_eq!(m.absorb(&[6, 7, 8, 9]), 3, "only batch space absorbed");
+        // Batch full: Ready -> Computing this tick.
+        assert!(m.tick().is_none());
+        assert_eq!(m.state, ModuleState::Computing { remaining: 1 });
+        // Compute done: job requested.
+        let job = m.tick().expect("job after compute");
+        assert_eq!(job.dest_onehot, 0b0100);
+        assert_eq!(
+            job.words,
+            (1..=8u32).map(|w| w.wrapping_mul(MULT_CONSTANT)).collect::<Vec<_>>()
+        );
+        assert_eq!(m.state, ModuleState::SendWait);
+        // No absorption while sending.
+        assert_eq!(m.absorb(&[1]), 0);
+        assert!(m.tick().is_none());
+        m.on_send_complete(Ok(()));
+        assert_eq!(m.state, ModuleState::Ready);
+        assert_eq!(m.batches_done, 1);
+        assert_eq!(m.words_done, 8);
+        assert_eq!(m.error_status, None);
+    }
+
+    #[test]
+    fn module_records_send_error() {
+        let mut m = ComputationModule::new(ModuleKind::HammingEncoder, 2, 1);
+        m.dest_onehot = 0b1000;
+        m.absorb(&[0; 8]);
+        m.tick();
+        let _ = m.tick().unwrap();
+        m.on_send_complete(Err(WbError::GrantTimeout));
+        assert_eq!(m.error_status, Some(WbError::GrantTimeout));
+        assert_eq!(m.batches_done, 0);
+        assert_eq!(m.state, ModuleState::Ready, "module recovers");
+    }
+
+    #[test]
+    fn multi_cycle_compute_latency() {
+        let mut m = ComputationModule::new(ModuleKind::HammingDecoder, 3, 0);
+        m.compute_latency = 3;
+        m.dest_onehot = 0b0001;
+        m.absorb(&[0; 8]);
+        m.tick(); // Ready -> Computing{3}
+        assert!(m.tick().is_none()); // 3 -> 2
+        assert!(m.tick().is_none()); // 2 -> 1
+        assert!(m.tick().is_some()); // fires
+    }
+}

@@ -1,0 +1,378 @@
+//! The register file (§IV.D, Table III — reproduced exactly).
+//!
+//! Twenty 32-bit registers provide configuration to the crossbar and PR
+//! regions and collect status from ICAP, the computation modules and the
+//! AXI-WB bridge:
+//!
+//! | N  | Address | Contents                                          |
+//! |----|---------|---------------------------------------------------|
+//! | 0  | 0x00    | FPGA device ID                                    |
+//! | 1  | 0x04    | PR region 1 destination address                   |
+//! | 2  | 0x08    | PR region 2 destination address                   |
+//! | 3  | 0x0C    | PR region 3 destination address                   |
+//! | 4  | 0x10    | Reset PR regions and ports [3:0]                  |
+//! | 5  | 0x14    | Allowed addresses of port 0 master                |
+//! | 6  | 0x18    | Allowed addresses of port 1 master                |
+//! | 7  | 0x1C    | Allowed addresses of port 2 master                |
+//! | 8  | 0x20    | Allowed addresses of port 3 master                |
+//! | 9  | 0x24    | Package numbers allowed in port 0 for ports [3:0] |
+//! | 10 | 0x28    | Package numbers allowed in port 1 for ports [3:0] |
+//! | 11 | 0x2C    | Package numbers allowed in port 2 for ports [3:0] |
+//! | 12 | 0x30    | Package numbers allowed in port 3 for ports [3:0] |
+//! | 13 | 0x34    | Application ID 0 destination address              |
+//! | 14 | 0x38    | Application ID 1 destination address              |
+//! | 15 | 0x3C    | Application ID 2 destination address              |
+//! | 16 | 0x40    | Application ID 3 destination address              |
+//! | 17 | 0x44    | PR region [3:1] last transaction error status     |
+//! | 18 | 0x48    | App. ID [3:0] last transaction error status       |
+//! | 19 | 0x4C    | ICAP status                                       |
+//!
+//! Package-number registers hold four 8-bit fields (master 0 in bits
+//! [7:0] ... master 3 in bits [31:24]); a field value of 0 means "use the
+//! default budget" so an unprogrammed register file stays functional.
+//! Error-status registers hold 8-bit error codes per region / app ID.
+
+use crate::wishbone::WbError;
+
+/// Number of registers (Table III).
+pub const NUM_REGS: usize = 20;
+
+/// Symbolic register indices.
+pub mod regs {
+    pub const DEVICE_ID: usize = 0;
+    pub const PR1_DEST: usize = 1;
+    pub const PR2_DEST: usize = 2;
+    pub const PR3_DEST: usize = 3;
+    pub const RESET: usize = 4;
+    pub const ALLOWED_PORT0: usize = 5;
+    pub const ALLOWED_PORT1: usize = 6;
+    pub const ALLOWED_PORT2: usize = 7;
+    pub const ALLOWED_PORT3: usize = 8;
+    pub const PACKAGES_PORT0: usize = 9;
+    pub const PACKAGES_PORT1: usize = 10;
+    pub const PACKAGES_PORT2: usize = 11;
+    pub const PACKAGES_PORT3: usize = 12;
+    pub const APP0_DEST: usize = 13;
+    pub const APP1_DEST: usize = 14;
+    pub const APP2_DEST: usize = 15;
+    pub const APP3_DEST: usize = 16;
+    pub const PR_ERROR_STATUS: usize = 17;
+    pub const APP_ERROR_STATUS: usize = 18;
+    pub const ICAP_STATUS: usize = 19;
+}
+
+/// The KCU1500 prototype's device-ID register value (arbitrary constant
+/// the host reads to confirm the shell is alive).
+pub const DEVICE_ID_VALUE: u32 = 0x4B43_5531; // "KCU1"
+
+/// ICAP status codes stored in register 19.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IcapStatus {
+    Idle,
+    Busy,
+    Done,
+    Error,
+}
+
+impl IcapStatus {
+    /// Register encoding.
+    pub fn code(self) -> u32 {
+        match self {
+            IcapStatus::Idle => 0,
+            IcapStatus::Busy => 1,
+            IcapStatus::Done => 2,
+            IcapStatus::Error => 3,
+        }
+    }
+
+    /// Decode.
+    pub fn from_code(code: u32) -> Option<Self> {
+        match code {
+            0 => Some(IcapStatus::Idle),
+            1 => Some(IcapStatus::Busy),
+            2 => Some(IcapStatus::Done),
+            3 => Some(IcapStatus::Error),
+            _ => None,
+        }
+    }
+}
+
+/// The register file.  Addressed by byte address over the AXI-Lite bypass
+/// (§IV.B) or by index from the fabric side.
+#[derive(Debug, Clone)]
+pub struct RegisterFile {
+    regs: [u32; NUM_REGS],
+    /// Write-generation counter so the fabric can cheaply detect
+    /// configuration changes and re-derive crossbar state.
+    generation: u64,
+}
+
+impl Default for RegisterFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegisterFile {
+    /// Power-on state: device ID set, everything else zero.
+    pub fn new() -> Self {
+        let mut regs = [0u32; NUM_REGS];
+        regs[regs::DEVICE_ID] = DEVICE_ID_VALUE;
+        Self { regs, generation: 0 }
+    }
+
+    /// Read by register index.
+    pub fn read(&self, index: usize) -> u32 {
+        assert!(index < NUM_REGS, "register index {index} out of range");
+        self.regs[index]
+    }
+
+    /// Write by register index.
+    pub fn write(&mut self, index: usize, value: u32) {
+        assert!(index < NUM_REGS, "register index {index} out of range");
+        self.regs[index] = value;
+        self.generation += 1;
+    }
+
+    /// Read by byte address (AXI-Lite view, Table III addressing).
+    pub fn read_addr(&self, addr: u32) -> Option<u32> {
+        let idx = (addr / 4) as usize;
+        if addr % 4 == 0 && idx < NUM_REGS {
+            Some(self.regs[idx])
+        } else {
+            None
+        }
+    }
+
+    /// Write by byte address (AXI-Lite view).
+    pub fn write_addr(&mut self, addr: u32, value: u32) -> bool {
+        let idx = (addr / 4) as usize;
+        if addr % 4 == 0 && idx < NUM_REGS {
+            self.write(idx, value);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Configuration-write generation counter.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    // ------------------------------------------------------------------
+    // typed views (the fabric side)
+    // ------------------------------------------------------------------
+
+    /// PR region `r` (1-indexed, 1..=3) destination address (one-hot).
+    pub fn pr_destination(&self, region: usize) -> u32 {
+        assert!((1..=3).contains(&region), "PR region {region} out of range");
+        self.regs[regs::PR1_DEST + region - 1]
+    }
+
+    /// Program PR region `r`'s destination (one-hot slave address).
+    pub fn set_pr_destination(&mut self, region: usize, dest_onehot: u32) {
+        assert!((1..=3).contains(&region));
+        self.write(regs::PR1_DEST + region - 1, dest_onehot);
+    }
+
+    /// Reset bit for port `p` (register 4, bits [3:0]).
+    pub fn port_reset(&self, port: usize) -> bool {
+        assert!(port < 4);
+        self.regs[regs::RESET] >> port & 1 == 1
+    }
+
+    /// Set/clear port `p`'s reset bit.
+    pub fn set_port_reset(&mut self, port: usize, on: bool) {
+        assert!(port < 4);
+        let mut v = self.regs[regs::RESET];
+        if on {
+            v |= 1 << port;
+        } else {
+            v &= !(1 << port);
+        }
+        self.write(regs::RESET, v);
+    }
+
+    /// Allowed-slaves isolation mask for port `p`'s master (regs 5-8).
+    pub fn allowed_slaves(&self, port: usize) -> u32 {
+        assert!(port < 4);
+        self.regs[regs::ALLOWED_PORT0 + port]
+    }
+
+    /// Program port `p`'s isolation mask.
+    pub fn set_allowed_slaves(&mut self, port: usize, mask: u32) {
+        assert!(port < 4);
+        self.write(regs::ALLOWED_PORT0 + port, mask);
+    }
+
+    /// Package budget for `master` at `slave` (regs 9-12, 8-bit fields;
+    /// 0 = unprogrammed, caller substitutes the default).
+    pub fn allowed_packages(&self, slave: usize, master: usize) -> u32 {
+        assert!(slave < 4 && master < 4);
+        self.regs[regs::PACKAGES_PORT0 + slave] >> (8 * master) & 0xFF
+    }
+
+    /// Program the package budget for `master` at `slave` (1..=255).
+    pub fn set_allowed_packages(&mut self, slave: usize, master: usize, packages: u32) {
+        assert!(slave < 4 && master < 4);
+        assert!(packages <= 0xFF, "package field is 8 bits");
+        let idx = regs::PACKAGES_PORT0 + slave;
+        let mut v = self.regs[idx];
+        v &= !(0xFF << (8 * master));
+        v |= packages << (8 * master);
+        self.write(idx, v);
+    }
+
+    /// Application `id`'s destination address (regs 13-16).
+    pub fn app_destination(&self, app_id: usize) -> u32 {
+        assert!(app_id < 4);
+        self.regs[regs::APP0_DEST + app_id]
+    }
+
+    /// Program application `id`'s destination.
+    pub fn set_app_destination(&mut self, app_id: usize, dest_onehot: u32) {
+        assert!(app_id < 4);
+        self.write(regs::APP0_DEST + app_id, dest_onehot);
+    }
+
+    /// Last transaction error for PR region `r` (register 17; 8-bit code
+    /// fields for regions [3:1], 0 = OK).
+    pub fn pr_error(&self, region: usize) -> Option<WbError> {
+        assert!((1..=3).contains(&region));
+        WbError::from_code(self.regs[regs::PR_ERROR_STATUS] >> (8 * (region - 1)) & 0xFF)
+    }
+
+    /// Record PR region `r`'s last transaction status.
+    pub fn set_pr_error(&mut self, region: usize, err: Option<WbError>) {
+        assert!((1..=3).contains(&region));
+        let idx = regs::PR_ERROR_STATUS;
+        let mut v = self.regs[idx];
+        v &= !(0xFF << (8 * (region - 1)));
+        v |= err.map(WbError::code).unwrap_or(0) << (8 * (region - 1));
+        self.write(idx, v);
+    }
+
+    /// Last transaction error for application `id` (register 18).
+    pub fn app_error(&self, app_id: usize) -> Option<WbError> {
+        assert!(app_id < 4);
+        WbError::from_code(self.regs[regs::APP_ERROR_STATUS] >> (8 * app_id) & 0xFF)
+    }
+
+    /// Record application `id`'s last transaction status.
+    pub fn set_app_error(&mut self, app_id: usize, err: Option<WbError>) {
+        assert!(app_id < 4);
+        let idx = regs::APP_ERROR_STATUS;
+        let mut v = self.regs[idx];
+        v &= !(0xFF << (8 * app_id));
+        v |= err.map(WbError::code).unwrap_or(0) << (8 * app_id);
+        self.write(idx, v);
+    }
+
+    /// ICAP status (register 19).
+    pub fn icap_status(&self) -> IcapStatus {
+        IcapStatus::from_code(self.regs[regs::ICAP_STATUS]).unwrap_or(IcapStatus::Error)
+    }
+
+    /// Record ICAP status.
+    pub fn set_icap_status(&mut self, st: IcapStatus) {
+        self.write(regs::ICAP_STATUS, st.code());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_on_state() {
+        let rf = RegisterFile::new();
+        assert_eq!(rf.read(regs::DEVICE_ID), DEVICE_ID_VALUE);
+        for i in 1..NUM_REGS {
+            assert_eq!(rf.read(i), 0, "reg {i} must reset to 0");
+        }
+        assert_eq!(rf.icap_status(), IcapStatus::Idle);
+    }
+
+    #[test]
+    fn table3_byte_addressing() {
+        let mut rf = RegisterFile::new();
+        assert_eq!(rf.read_addr(0x0), Some(DEVICE_ID_VALUE));
+        assert!(rf.write_addr(0x14, 0b1110));
+        assert_eq!(rf.allowed_slaves(0), 0b1110);
+        assert!(rf.write_addr(0x4C, 2));
+        assert_eq!(rf.icap_status(), IcapStatus::Done);
+        // Address 0x50 is out of range; 0x2 is unaligned.
+        assert_eq!(rf.read_addr(0x50), None);
+        assert_eq!(rf.read_addr(0x2), None);
+        assert!(!rf.write_addr(0x50, 1));
+    }
+
+    #[test]
+    fn reset_bits_are_independent() {
+        let mut rf = RegisterFile::new();
+        rf.set_port_reset(2, true);
+        assert!(rf.port_reset(2));
+        assert!(!rf.port_reset(0));
+        rf.set_port_reset(0, true);
+        rf.set_port_reset(2, false);
+        assert!(rf.port_reset(0));
+        assert!(!rf.port_reset(2));
+        assert_eq!(rf.read(regs::RESET), 0b0001);
+    }
+
+    #[test]
+    fn package_fields_pack_four_masters() {
+        let mut rf = RegisterFile::new();
+        rf.set_allowed_packages(1, 0, 16);
+        rf.set_allowed_packages(1, 3, 128);
+        assert_eq!(rf.allowed_packages(1, 0), 16);
+        assert_eq!(rf.allowed_packages(1, 3), 128);
+        assert_eq!(rf.allowed_packages(1, 1), 0, "unprogrammed field");
+        assert_eq!(rf.read(regs::PACKAGES_PORT1), 128 << 24 | 16);
+    }
+
+    #[test]
+    fn pr_destinations() {
+        let mut rf = RegisterFile::new();
+        rf.set_pr_destination(1, 0b0100);
+        rf.set_pr_destination(3, 0b0001);
+        assert_eq!(rf.pr_destination(1), 0b0100);
+        assert_eq!(rf.pr_destination(3), 0b0001);
+        assert_eq!(rf.read_addr(0x4), Some(0b0100));
+        assert_eq!(rf.read_addr(0xC), Some(0b0001));
+    }
+
+    #[test]
+    fn error_status_fields() {
+        let mut rf = RegisterFile::new();
+        assert_eq!(rf.pr_error(1), None);
+        rf.set_pr_error(2, Some(WbError::GrantTimeout));
+        assert_eq!(rf.pr_error(2), Some(WbError::GrantTimeout));
+        assert_eq!(rf.pr_error(1), None);
+        rf.set_pr_error(2, None);
+        assert_eq!(rf.pr_error(2), None);
+
+        rf.set_app_error(3, Some(WbError::InvalidDestination));
+        assert_eq!(rf.app_error(3), Some(WbError::InvalidDestination));
+        rf.set_app_error(3, None);
+        assert_eq!(rf.app_error(3), None);
+    }
+
+    #[test]
+    fn generation_tracks_writes() {
+        let mut rf = RegisterFile::new();
+        let g0 = rf.generation();
+        rf.set_allowed_slaves(0, 0b1111);
+        assert!(rf.generation() > g0);
+        let g1 = rf.generation();
+        let _ = rf.read(regs::ALLOWED_PORT0);
+        assert_eq!(rf.generation(), g1, "reads don't bump generation");
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_index_panics() {
+        RegisterFile::new().read(NUM_REGS);
+    }
+}

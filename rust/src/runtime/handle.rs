@@ -1,0 +1,186 @@
+//! Thread-confined PJRT execution.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based and must stay on one
+//! thread.  [`RuntimeHandle`] is a cloneable, `Send` handle to a
+//! dedicated executor thread owning the [`Runtime`]; the server's worker
+//! pool submits stage executions through it.  Executions serialize at
+//! the handle (XLA's CPU backend parallelizes internally across its own
+//! thread pool, so this does not idle cores).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use super::Runtime;
+use crate::{ElasticError, Result};
+
+enum Msg {
+    /// Execute `artifact` on `input`.  Replies `Ok(None)` when the
+    /// artifact's input geometry does not match (caller falls back).
+    Run {
+        artifact: String,
+        input: Vec<u32>,
+        reply: Sender<Result<Option<Vec<u32>>>>,
+    },
+    /// Eagerly compile everything.
+    Preload { reply: Sender<Result<()>> },
+    Stop,
+}
+
+/// Cloneable handle to the PJRT executor thread.
+pub struct RuntimeHandle {
+    tx: Mutex<Sender<Msg>>,
+}
+
+impl RuntimeHandle {
+    fn send(&self, msg: Msg) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(msg)
+            .map_err(|_| ElasticError::Server("runtime thread gone".into()))
+    }
+
+    /// Execute an artifact; `Ok(None)` when the input length does not
+    /// match the artifact's compiled geometry.
+    pub fn run(&self, artifact: &str, input: Vec<u32>) -> Result<Option<Vec<u32>>> {
+        let (reply, rx) = channel();
+        self.send(Msg::Run { artifact: artifact.to_string(), input, reply })?;
+        rx.recv()
+            .map_err(|_| ElasticError::Server("runtime thread died".into()))?
+    }
+
+    /// Compile every artifact up front (server warm-up).
+    pub fn preload_all(&self) -> Result<()> {
+        let (reply, rx) = channel();
+        self.send(Msg::Preload { reply })?;
+        rx.recv()
+            .map_err(|_| ElasticError::Server("runtime thread died".into()))?
+    }
+}
+
+impl Clone for RuntimeHandle {
+    fn clone(&self) -> Self {
+        Self { tx: Mutex::new(self.tx.lock().unwrap().clone()) }
+    }
+}
+
+/// The executor thread plus its handle; dropping joins the thread.
+pub struct RuntimeThread {
+    handle: RuntimeHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RuntimeThread {
+    /// Spawn the executor over the artifact directory.  Fails fast if the
+    /// directory/manifest is unreadable (checked on the caller's thread).
+    pub fn spawn(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("efpga-pjrt".into())
+            .spawn(move || {
+                let rt = match Runtime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Stop => break,
+                        Msg::Preload { reply } => {
+                            let _ = reply.send(rt.preload_all());
+                        }
+                        Msg::Run { artifact, input, reply } => {
+                            let result = rt.load(&artifact).and_then(|exe| {
+                                if exe.input_words() == input.len() {
+                                    exe.run_u32(&input).map(Some)
+                                } else {
+                                    Ok(None)
+                                }
+                            });
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt thread");
+        ready_rx
+            .recv()
+            .map_err(|_| ElasticError::Server("runtime thread died at boot".into()))??;
+        Ok(Self { handle: RuntimeHandle { tx: Mutex::new(tx) }, join: Some(join) })
+    }
+
+    /// The cloneable handle.
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeThread {
+    fn drop(&mut self) {
+        let _ = self.handle.send(Msg::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hamming;
+    use crate::util::SplitMix64;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn handle_runs_from_other_threads() {
+        let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+        let h1 = rt.handle();
+        let h2 = rt.handle();
+        let t1 = std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(1);
+            let mut x = vec![0u32; 4096];
+            rng.fill_u32(&mut x);
+            let got = h1.run("multiplier", x.clone()).unwrap().unwrap();
+            assert_eq!(got, hamming::multiply_buf(&x, hamming::MULT_CONSTANT));
+        });
+        let t2 = std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(2);
+            let mut x = vec![0u32; 4096];
+            rng.fill_u32(&mut x);
+            let got = h2.run("hamming_enc", x.clone()).unwrap().unwrap();
+            assert_eq!(got, hamming::encode_buf(&x));
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+    }
+
+    #[test]
+    fn geometry_mismatch_returns_none() {
+        let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+        let got = rt.handle().run("multiplier", vec![1, 2, 3]).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+        assert!(rt.handle().run("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn bad_directory_fails_at_spawn() {
+        assert!(RuntimeThread::spawn("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Artifact manifest (`artifacts/manifest.json`, written by
+//! `python -m compile.aot`): maps artifact names to HLO files and their
+//! expected input geometry.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::{ElasticError, Result};
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    /// File name relative to the artifact directory.
+    pub file: String,
+    /// Input buffer length in 32-bit words.
+    pub input_words: usize,
+    /// Element dtype (currently always `"u32"`).
+    pub dtype: String,
+    /// SHA-256 of the HLO text (build provenance).
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            ElasticError::Artifact(format!(
+                "cannot read {path:?}: {e} — run `make artifacts` first"
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let obj = root.as_obj().ok_or_else(|| {
+            ElasticError::Artifact("manifest root must be an object".into())
+        })?;
+        let mut entries = BTreeMap::new();
+        for (name, v) in obj {
+            let field = |k: &str| {
+                v.get(k).ok_or_else(|| {
+                    ElasticError::Artifact(format!(
+                        "manifest entry '{name}' missing field '{k}'"
+                    ))
+                })
+            };
+            let entry = ManifestEntry {
+                file: field("file")?
+                    .as_str()
+                    .ok_or_else(|| {
+                        ElasticError::Artifact(format!(
+                            "'{name}'.file must be a string"
+                        ))
+                    })?
+                    .to_string(),
+                input_words: field("input_words")?.as_usize().ok_or_else(
+                    || {
+                        ElasticError::Artifact(format!(
+                            "'{name}'.input_words must be a non-negative int"
+                        ))
+                    },
+                )?,
+                dtype: field("dtype")?
+                    .as_str()
+                    .unwrap_or("u32")
+                    .to_string(),
+                sha256: field("sha256")?.as_str().unwrap_or("").to_string(),
+            };
+            if entry.dtype != "u32" {
+                return Err(ElasticError::Artifact(format!(
+                    "'{name}': unsupported dtype '{}'",
+                    entry.dtype
+                )));
+            }
+            entries.insert(name.clone(), entry);
+        }
+        Ok(Self { entries })
+    }
+
+    /// Look up one artifact.
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// All artifact names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "multiplier": {"file": "multiplier.hlo.txt", "input_words": 4096,
+                     "dtype": "u32", "sha256": "aa"},
+      "pipeline_small": {"file": "pipeline_small.hlo.txt", "input_words": 256,
+                         "dtype": "u32", "sha256": "bb"}
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = ArtifactManifest::parse(DOC).unwrap();
+        assert_eq!(m.names(), vec!["multiplier", "pipeline_small"]);
+        assert_eq!(m.get("multiplier").unwrap().input_words, 4096);
+        assert_eq!(m.get("pipeline_small").unwrap().input_words, 256);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(ArtifactManifest::parse(r#"{"x": {"file": "x"}}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let doc = r#"{"x": {"file": "x", "input_words": 1,
+                      "dtype": "f32", "sha256": ""}}"#;
+        assert!(ArtifactManifest::parse(doc).is_err());
+    }
+}

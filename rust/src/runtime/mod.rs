@@ -1,0 +1,244 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! on the request path.
+//!
+//! Python is build-time only; this module is the *only* bridge between
+//! the Rust coordinator and the JAX/Pallas compute graphs.  Pattern
+//! follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`,
+//! with HLO **text** as the interchange format (serialized protos from
+//! jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+
+mod handle;
+mod manifest;
+
+pub use handle::{RuntimeHandle, RuntimeThread};
+pub use manifest::{ArtifactManifest, ManifestEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::{ElasticError, Result};
+
+/// A compiled, ready-to-run artifact.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    input_words: usize,
+}
+
+impl Executable {
+    /// Artifact name (e.g. `"hamming_enc"`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Expected input buffer length in 32-bit words.
+    pub fn input_words(&self) -> usize {
+        self.input_words
+    }
+
+    /// Execute on a u32 buffer, returning the u32 result buffer.
+    ///
+    /// All exported graphs take one `u32[n]` parameter and return a
+    /// 1-tuple of `u32[n]` (lowered with `return_tuple=True`).
+    pub fn run_u32(&self, input: &[u32]) -> Result<Vec<u32>> {
+        if input.len() != self.input_words {
+            return Err(ElasticError::Artifact(format!(
+                "{}: input length {} != expected {}",
+                self.name,
+                input.len(),
+                self.input_words
+            )));
+        }
+        let lit = xla::Literal::vec1(input);
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<u32>()?)
+    }
+}
+
+/// Artifact registry + executable cache over one PJRT client.
+///
+/// Compilation happens once per artifact (at load or first use); the
+/// request path only calls [`Executable::run_u32`].  `Runtime` is
+/// `Send + Sync`-shareable via `Arc`; the executable cache is mutexed,
+/// execution itself does not take the lock.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json` produced
+    /// by `python -m compile.aot`) on a fresh PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "pjrt client up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.names().len()
+        );
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// PJRT platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.names()
+    }
+
+    /// Load (compile-once, cached) an artifact by name.
+    // `Executable` wraps a thread-confined PJRT pointer; the Arc is only
+    // ever shared within the runtime's own thread (RuntimeHandle is the
+    // cross-thread interface), so the non-Send Arc is intentional.
+    #[allow(clippy::arc_with_non_send_sync)]
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.get(name).ok_or_else(|| {
+            ElasticError::Artifact(format!("unknown artifact '{name}'"))
+        })?;
+        let path = self.dir.join(&entry.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                ElasticError::Artifact(format!("non-utf8 path {path:?}"))
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!("compiled '{name}' in {:?}", t0.elapsed());
+        let exe = Arc::new(Executable {
+            name: name.to_string(),
+            exe,
+            input_words: entry.input_words,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact in the manifest (server warm-up, so
+    /// compilation never lands on the request path).
+    pub fn preload_all(&self) -> Result<()> {
+        for name in self.artifact_names() {
+            self.load(&name)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hamming;
+    use crate::util::SplitMix64;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn rand_buf(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = SplitMix64::new(seed);
+        let mut buf = vec![0u32; n];
+        rng.fill_u32(&mut buf);
+        buf
+    }
+
+    #[test]
+    fn manifest_lists_all_exports() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let mut names = rt.artifact_names();
+        names.sort();
+        assert_eq!(
+            names,
+            vec![
+                "hamming_dec",
+                "hamming_enc",
+                "multiplier",
+                "pipeline",
+                "pipeline_small"
+            ]
+        );
+    }
+
+    #[test]
+    fn multiplier_artifact_matches_golden() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let exe = rt.load("multiplier").unwrap();
+        let x = rand_buf(exe.input_words(), 11);
+        let got = exe.run_u32(&x).unwrap();
+        assert_eq!(got, hamming::multiply_buf(&x, hamming::MULT_CONSTANT));
+    }
+
+    #[test]
+    fn encoder_artifact_matches_golden() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let exe = rt.load("hamming_enc").unwrap();
+        let x = rand_buf(exe.input_words(), 12);
+        let got = exe.run_u32(&x).unwrap();
+        assert_eq!(got, hamming::encode_buf(&x));
+    }
+
+    #[test]
+    fn decoder_artifact_matches_golden() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let exe = rt.load("hamming_dec").unwrap();
+        // Feed it corrupted codewords: decode must correct them.
+        let payload = rand_buf(exe.input_words(), 13);
+        let mut rng = SplitMix64::new(14);
+        let corrupted: Vec<u32> = payload
+            .iter()
+            .map(|&w| hamming::encode_word(w) ^ (1 << rng.below(31)))
+            .collect();
+        let got = exe.run_u32(&corrupted).unwrap();
+        let want: Vec<u32> =
+            payload.iter().map(|&w| w & hamming::DATA_MASK).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pipeline_artifact_matches_identity() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let exe = rt.load("pipeline_small").unwrap();
+        let x = rand_buf(exe.input_words(), 15);
+        let got = exe.run_u32(&x).unwrap();
+        assert_eq!(got, hamming::pipeline_buf(&x, hamming::MULT_CONSTANT));
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let exe = rt.load("pipeline_small").unwrap();
+        assert!(exe.run_u32(&[0u32; 3]).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        assert!(rt.load("nonexistent").is_err());
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let a = rt.load("multiplier").unwrap();
+        let b = rt.load("multiplier").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,458 @@
+//! Multi-tenant serving loop: the deployment shape the paper's cloud
+//! story implies (apps submit acceleration requests; the manager
+//! allocates PR regions elastically; overflow compute runs on the
+//! server).
+//!
+//! Architecture (std::thread + mpsc — tokio is unavailable offline, see
+//! DESIGN.md §7):
+//!
+//! ```text
+//!   clients --submit--> [bounded queue] --> scheduler thread
+//!                                            | fabric prefix (cycle sim)
+//!                                            v
+//!                                      [worker pool] -- on-server PJRT
+//!                                            |             stages
+//!                                            v
+//!                                       response channels
+//! ```
+//!
+//! The scheduler owns the fabric (single synchronous design, as in
+//! hardware); CPU-suffix work is fanned out to workers so the fabric can
+//! start the next request while earlier requests finish on the host —
+//! pipeline parallelism across requests.  The bounded queue provides
+//! backpressure: `submit` blocks when `queue_depth` requests are in
+//! flight.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::manager::{golden_chain, AppReport, AppRequest, ElasticManager, StagePlacement};
+use crate::modules::ModuleKind;
+use crate::runtime::RuntimeHandle;
+use crate::timing::{evaluate, ExecutionTimeline};
+use crate::{ElasticError, Result};
+
+/// A finished request as the client sees it.
+#[derive(Debug)]
+pub struct Response {
+    pub report: Result<AppReport>,
+    /// Wall-clock service time (queue + fabric sim + PJRT).
+    pub wall: std::time::Duration,
+}
+
+enum WorkerMsg {
+    CpuSuffix {
+        req: AppRequest,
+        partial: Vec<u32>,
+        remaining: Vec<ModuleKind>,
+        tl: ExecutionTimeline,
+        fpga_stages: usize,
+        placement: Vec<StagePlacement>,
+        submitted: Instant,
+        respond: Sender<Response>,
+    },
+    Stop,
+}
+
+struct Submission {
+    req: AppRequest,
+    respond: Sender<Response>,
+    submitted: Instant,
+}
+
+/// Simple counting semaphore (no external deps).
+struct Semaphore {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Self {
+        Self { count: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c == 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c -= 1;
+    }
+
+    fn release(&self) {
+        *self.count.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// The serving engine.
+pub struct Server {
+    submit_tx: Option<Sender<Submission>>,
+    scheduler: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    slots: Arc<Semaphore>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Start the scheduler + worker threads.  `runtime` is shared by all
+    /// workers (PJRT executables are compiled once).
+    pub fn start(cfg: SystemConfig, runtime: Option<RuntimeHandle>) -> Self {
+        let (submit_tx, submit_rx) = channel::<Submission>();
+        let (work_tx, work_rx) = channel::<WorkerMsg>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let slots = Arc::new(Semaphore::new(cfg.server.queue_depth));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+
+        let mut workers = Vec::new();
+        for w in 0..cfg.server.workers.max(1) {
+            let rx = Arc::clone(&work_rx);
+            let rt = runtime.clone();
+            let cfg_w = cfg.clone();
+            let slots_w = Arc::clone(&slots);
+            let in_flight_w = Arc::clone(&in_flight);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("efpga-worker-{w}"))
+                    .spawn(move || {
+                        worker_loop(rx, rt, cfg_w, slots_w, in_flight_w)
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        let sched_cfg = cfg.clone();
+        let sched_rt = runtime;
+        let slots_s = Arc::clone(&slots);
+        let in_flight_s = Arc::clone(&in_flight);
+        let scheduler = std::thread::Builder::new()
+            .name("efpga-scheduler".into())
+            .spawn(move || {
+                scheduler_loop(
+                    submit_rx,
+                    work_tx,
+                    sched_cfg,
+                    sched_rt,
+                    slots_s,
+                    in_flight_s,
+                )
+            })
+            .expect("spawn scheduler");
+
+        Self {
+            submit_tx: Some(submit_tx),
+            scheduler: Some(scheduler),
+            workers,
+            slots,
+            in_flight,
+        }
+    }
+
+    /// Submit a request; blocks while the queue is full (backpressure).
+    /// Returns the channel the response will arrive on.
+    pub fn submit(&self, req: AppRequest) -> Result<Receiver<Response>> {
+        self.slots.acquire();
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        self.submit_tx
+            .as_ref()
+            .expect("server running")
+            .send(Submission { req, respond: tx, submitted: Instant::now() })
+            .map_err(|_| ElasticError::Server("scheduler gone".into()))?;
+        Ok(rx)
+    }
+
+    /// Requests currently queued or executing.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting requests, drain, and join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        drop(self.submit_tx.take()); // scheduler's recv errors -> drains
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn scheduler_loop(
+    submit_rx: Receiver<Submission>,
+    work_tx: Sender<WorkerMsg>,
+    cfg: SystemConfig,
+    runtime: Option<RuntimeHandle>,
+    slots: Arc<Semaphore>,
+    in_flight: Arc<AtomicUsize>,
+) {
+    let mut manager = ElasticManager::new(cfg.clone(), runtime);
+    while let Ok(sub) = submit_rx.recv() {
+        let placement = manager.plan(&sub.req.stages);
+        // Run the FPGA prefix synchronously on the fabric; hand the CPU
+        // suffix to the worker pool.
+        match run_fpga_prefix(&mut manager, &sub.req, &placement) {
+            Ok((partial, tl, fpga_stages)) => {
+                let remaining: Vec<ModuleKind> = placement
+                    .iter()
+                    .filter(|p| !p.is_fpga())
+                    .map(StagePlacement::kind)
+                    .collect();
+                let msg = WorkerMsg::CpuSuffix {
+                    req: sub.req,
+                    partial,
+                    remaining,
+                    tl,
+                    fpga_stages,
+                    placement,
+                    submitted: sub.submitted,
+                    respond: sub.respond,
+                };
+                if work_tx.send(msg).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                let _ = sub.respond.send(Response {
+                    report: Err(e),
+                    wall: sub.submitted.elapsed(),
+                });
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                slots.release();
+            }
+        }
+    }
+    // Drain: tell workers to stop once the queue is empty.
+    for _ in 0..64 {
+        let _ = work_tx.send(WorkerMsg::Stop);
+    }
+}
+
+/// Execute the FPGA part of a request on the scheduler's fabric.
+fn run_fpga_prefix(
+    manager: &mut ElasticManager,
+    req: &AppRequest,
+    placement: &[StagePlacement],
+) -> Result<(Vec<u32>, ExecutionTimeline, usize)> {
+    use crate::xdma::BRIDGE_BUFFER_WORDS;
+    if req.data.len() % BRIDGE_BUFFER_WORDS != 0 {
+        return Err(ElasticError::Server(format!(
+            "payload length {} not burst-aligned",
+            req.data.len()
+        )));
+    }
+    let mut tl = ExecutionTimeline::new();
+    let fpga_kinds: Vec<(ModuleKind, usize)> = placement
+        .iter()
+        .filter_map(|p| match *p {
+            StagePlacement::Fpga { kind, region } => Some((kind, region)),
+            _ => None,
+        })
+        .collect();
+    if fpga_kinds.is_empty() {
+        return Ok((req.data.clone(), tl, 0));
+    }
+    // Install + program through the manager's placement path, but only
+    // the prefix; then stream.
+    let sub_placement: Vec<StagePlacement> = placement.to_vec();
+    // Reuse manager's full path: execute_placed would also run CPU
+    // stages; we want the split, so drive the fabric directly.
+    let report = manager.execute_placed(
+        &AppRequest {
+            app_id: req.app_id,
+            data: req.data.clone(),
+            stages: fpga_kinds.iter().map(|&(k, _)| k).collect(),
+        },
+        &sub_placement[..fpga_kinds.len()],
+    )?;
+    tl.h2c_transfers = report.timeline.h2c_transfers.clone();
+    tl.c2h_transfers = report.timeline.c2h_transfers.clone();
+    tl.fabric_cycles = report.timeline.fabric_cycles;
+    tl.reconfig_cycles = report.timeline.reconfig_cycles;
+    Ok((report.output, tl, fpga_kinds.len()))
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<WorkerMsg>>>,
+    runtime: Option<RuntimeHandle>,
+    cfg: SystemConfig,
+    slots: Arc<Semaphore>,
+    in_flight: Arc<AtomicUsize>,
+) {
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(msg) = msg else { return };
+        match msg {
+            WorkerMsg::Stop => return,
+            WorkerMsg::CpuSuffix {
+                req,
+                mut partial,
+                remaining,
+                mut tl,
+                fpga_stages,
+                placement,
+                submitted,
+                respond,
+            } => {
+                let mut failed: Option<ElasticError> = None;
+                for kind in &remaining {
+                    let t0 = Instant::now();
+                    let out = run_stage(&runtime, *kind, &partial);
+                    match out {
+                        Ok(o) => {
+                            partial = o;
+                            tl.cpu_stage(
+                                kind.name(),
+                                Some(t0.elapsed().as_secs_f64() * 1e3),
+                            );
+                        }
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                }
+                let report = match failed {
+                    Some(e) => Err(e),
+                    None => {
+                        let expected = golden_chain(&req.stages, &req.data);
+                        let verified = partial == expected;
+                        if cfg.manager.verify_results && !verified {
+                            Err(ElasticError::Verify(format!(
+                                "app {}: output mismatch",
+                                req.app_id
+                            )))
+                        } else {
+                            Ok(AppReport {
+                                app_id: req.app_id,
+                                output: partial,
+                                placement,
+                                fpga_stages,
+                                cost: evaluate(&cfg, &tl),
+                                timeline: tl,
+                                verified,
+                            })
+                        }
+                    }
+                };
+                let _ = respond.send(Response { report, wall: submitted.elapsed() });
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                slots.release();
+            }
+        }
+    }
+}
+
+fn run_stage(
+    runtime: &Option<RuntimeHandle>,
+    kind: ModuleKind,
+    data: &[u32],
+) -> Result<Vec<u32>> {
+    if let Some(rt) = runtime {
+        if let Some(out) = rt.run(kind.artifact(), data.to_vec())? {
+            return Ok(out);
+        }
+    }
+    Ok(kind.apply_buf(data))
+}
+
+/// Blocking convenience: submit and wait.
+pub fn call(server: &Server, req: AppRequest) -> Result<AppReport> {
+    let rx = server.submit(req)?;
+    let resp = rx
+        .recv()
+        .map_err(|_| ElasticError::Server("response channel closed".into()))?;
+    resp.report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manager::golden_pipeline;
+    use crate::util::SplitMix64;
+
+    fn data(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = SplitMix64::new(seed);
+        let mut v = vec![0u32; n];
+        rng.fill_u32(&mut v);
+        v
+    }
+
+    #[test]
+    fn serves_one_request() {
+        let server = Server::start(SystemConfig::paper_defaults(), None);
+        let d = data(64, 1);
+        let rep = call(&server, AppRequest::pipeline(0, d.clone())).unwrap();
+        assert!(rep.verified);
+        assert_eq!(rep.output, golden_pipeline(&d));
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_many_requests_in_order_of_submission() {
+        let server = Server::start(SystemConfig::paper_defaults(), None);
+        let mut rxs = Vec::new();
+        let mut inputs = Vec::new();
+        for i in 0..16u64 {
+            let d = data(64, 100 + i);
+            inputs.push(d.clone());
+            rxs.push(server.submit(AppRequest::pipeline((i % 4) as u32, d)).unwrap());
+        }
+        for (rx, d) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().unwrap();
+            let rep = resp.report.unwrap();
+            assert!(rep.verified);
+            assert_eq!(&rep.output, &golden_pipeline(d));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_unaligned_payload_via_response() {
+        let server = Server::start(SystemConfig::paper_defaults(), None);
+        let rx = server.submit(AppRequest::pipeline(0, vec![1; 7])).unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.report.is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn backpressure_bounds_in_flight() {
+        let mut cfg = SystemConfig::paper_defaults();
+        cfg.server.queue_depth = 4;
+        let server = Server::start(cfg, None);
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            rxs.push(server.submit(AppRequest::pipeline(0, data(64, i))).unwrap());
+            assert!(server.in_flight() <= 4, "queue depth exceeded");
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().report.is_ok());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_via_drop() {
+        let server = Server::start(SystemConfig::paper_defaults(), None);
+        drop(server); // must not hang or panic
+    }
+}

@@ -1,0 +1,109 @@
+//! Discrete, cycle-accurate simulation core.
+//!
+//! The fabric is a synchronous digital design at one clock (250 MHz);
+//! every component implements [`Tick`] and advances exactly one clock
+//! per call.  §V.E of the paper is specified in clock cycles, so the
+//! simulator's unit of time *is* the fabric clock cycle; wall-clock
+//! quantities are derived via `SystemConfig::cycles_to_ms`.
+
+mod trace;
+
+pub use trace::{TraceEvent, TraceRing};
+
+/// A synchronous component clocked by the fabric clock.
+pub trait Tick {
+    /// Advance one clock cycle.  `cycle` is the 1-indexed cycle number
+    /// being executed (the paper counts "cc 1, cc 2, ..." the same way).
+    fn tick(&mut self, cycle: u64);
+}
+
+/// The fabric clock: a monotonically increasing cycle counter with
+/// helpers for running components in lock-step.
+#[derive(Debug, Default, Clone)]
+pub struct Clock {
+    cycle: u64,
+}
+
+impl Clock {
+    /// A clock at cycle 0 (nothing executed yet).
+    pub fn new() -> Self {
+        Self { cycle: 0 }
+    }
+
+    /// The last executed cycle (0 = none yet).
+    pub fn now(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Advance to the next cycle and return its number.
+    pub fn advance(&mut self) -> u64 {
+        self.cycle += 1;
+        self.cycle
+    }
+
+    /// Run `component` for `n` cycles.
+    pub fn run<T: Tick + ?Sized>(&mut self, component: &mut T, n: u64) {
+        for _ in 0..n {
+            let c = self.advance();
+            component.tick(c);
+        }
+    }
+
+    /// Run until `done` returns true or `max` cycles elapse; returns the
+    /// cycle at which `done` first held, or `None` on budget exhaustion.
+    pub fn run_until<T: Tick + ?Sized>(
+        &mut self,
+        component: &mut T,
+        max: u64,
+        mut done: impl FnMut(&T) -> bool,
+    ) -> Option<u64> {
+        for _ in 0..max {
+            let c = self.advance();
+            component.tick(c);
+            if done(component) {
+                return Some(c);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter {
+        seen: Vec<u64>,
+    }
+
+    impl Tick for Counter {
+        fn tick(&mut self, cycle: u64) {
+            self.seen.push(cycle);
+        }
+    }
+
+    #[test]
+    fn cycles_are_one_indexed_and_consecutive() {
+        let mut clk = Clock::new();
+        let mut c = Counter { seen: vec![] };
+        clk.run(&mut c, 5);
+        assert_eq!(c.seen, vec![1, 2, 3, 4, 5]);
+        assert_eq!(clk.now(), 5);
+    }
+
+    #[test]
+    fn run_until_stops_at_predicate() {
+        let mut clk = Clock::new();
+        let mut c = Counter { seen: vec![] };
+        let hit = clk.run_until(&mut c, 100, |c| c.seen.len() == 7);
+        assert_eq!(hit, Some(7));
+        assert_eq!(clk.now(), 7);
+    }
+
+    #[test]
+    fn run_until_exhausts_budget() {
+        let mut clk = Clock::new();
+        let mut c = Counter { seen: vec![] };
+        assert_eq!(clk.run_until(&mut c, 3, |_| false), None);
+    }
+}

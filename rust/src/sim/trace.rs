@@ -1,0 +1,87 @@
+//! Bounded cycle-stamped trace ring, used for debugging waveform-level
+//! behaviour without unbounded memory growth (the hardware analogue is an
+//! on-chip ILA capture buffer).
+
+use std::collections::VecDeque;
+
+/// One trace record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Fabric cycle at which the event occurred.
+    pub cycle: u64,
+    /// Component identifier (e.g. `"xbar.m1"`).
+    pub who: &'static str,
+    /// Human-readable description.
+    pub what: String,
+}
+
+/// Fixed-capacity ring of trace events (oldest evicted first).
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: VecDeque<TraceEvent>,
+    cap: usize,
+    enabled: bool,
+}
+
+impl TraceRing {
+    /// Create a ring holding at most `cap` events.
+    pub fn new(cap: usize) -> Self {
+        Self { buf: VecDeque::with_capacity(cap.min(4096)), cap, enabled: false }
+    }
+
+    /// Enable/disable capture (disabled capture is free).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Whether capture is on.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record an event (no-op when disabled).
+    pub fn push(&mut self, cycle: u64, who: &'static str, what: impl Into<String>) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(TraceEvent { cycle, who, what: what.into() });
+    }
+
+    /// Snapshot of the captured events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.buf.iter().cloned().collect()
+    }
+
+    /// Drop all captured events.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let mut r = TraceRing::new(4);
+        r.push(1, "x", "e");
+        assert!(r.events().is_empty());
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut r = TraceRing::new(3);
+        r.set_enabled(true);
+        for i in 1..=5 {
+            r.push(i, "x", format!("e{i}"));
+        }
+        let ev = r.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].cycle, 3);
+        assert_eq!(ev[2].cycle, 5);
+    }
+}

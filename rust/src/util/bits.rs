@@ -1,0 +1,81 @@
+//! Bit-level helpers mirroring the combinational primitives the VHDL
+//! implementation uses (parity trees, popcounts).
+
+/// Population count of a 32-bit word.
+///
+/// The FPGA implements this as a LUT tree; we delegate to the CPU popcnt
+/// but keep the named wrapper so call sites read like the RTL.
+#[inline(always)]
+pub fn popcount_u32(x: u32) -> u32 {
+    x.count_ones()
+}
+
+/// Even parity of a 32-bit word (1 = odd number of set bits).
+///
+/// This is the parity-tree primitive of the Hamming encoder/decoder.
+#[inline(always)]
+pub fn parity_u32(x: u32) -> u32 {
+    x.count_ones() & 1
+}
+
+/// Extract bit `i` (0-indexed) of `x`.
+#[inline(always)]
+pub fn bit(x: u32, i: u32) -> u32 {
+    (x >> i) & 1
+}
+
+/// Set bit `i` of `x` to `v` (v must be 0 or 1).
+#[inline(always)]
+pub fn with_bit(x: u32, i: u32, v: u32) -> u32 {
+    debug_assert!(v <= 1);
+    (x & !(1 << i)) | (v << i)
+}
+
+/// Rotate a one-bit-set mask left by one within `width` bits, wrapping.
+/// Used by the WB-to-AXI channel-select shift register (§IV.G).
+#[inline(always)]
+pub fn rotate_onehot_left(x: u32, width: u32) -> u32 {
+    debug_assert!(width > 0 && width <= 32);
+    let top = 1u32 << (width - 1);
+    if x & top != 0 {
+        1
+    } else {
+        x << 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parity_matches_naive() {
+        for x in [0u32, 1, 3, 7, 0xFFFF_FFFF, 0x8000_0001, 12345] {
+            let naive = (0..32).map(|i| (x >> i) & 1).sum::<u32>() & 1;
+            assert_eq!(parity_u32(x), naive, "x={x:#x}");
+        }
+    }
+
+    #[test]
+    fn bit_ops_roundtrip() {
+        let x = 0b1010_1100u32;
+        assert_eq!(bit(x, 2), 1);
+        assert_eq!(bit(x, 0), 0);
+        assert_eq!(with_bit(x, 0, 1) & 1, 1);
+        assert_eq!(with_bit(x, 2, 0), x & !(1 << 2));
+    }
+
+    #[test]
+    fn onehot_rotation_wraps() {
+        // 3-bit shift register as in the WB-to-AXI module.
+        let mut s = 0b001u32;
+        let seq: Vec<u32> = (0..6)
+            .map(|_| {
+                let cur = s;
+                s = rotate_onehot_left(s, 3);
+                cur
+            })
+            .collect();
+        assert_eq!(seq, vec![0b001, 0b010, 0b100, 0b001, 0b010, 0b100]);
+    }
+}

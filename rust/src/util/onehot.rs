@@ -1,0 +1,72 @@
+//! One-hot address codecs.
+//!
+//! §IV.E.2: "Slave addresses are sent in one-hot encoding form by a
+//! master; for instance, to access slave 1, '0010' is sent.  This eases
+//! the communication isolation as sent slave addresses and allowed
+//! addresses are compared with AND".
+
+/// Encode a port index as a one-hot vector.
+#[inline(always)]
+pub fn encode_onehot(index: u32) -> u32 {
+    debug_assert!(index < 32);
+    1u32 << index
+}
+
+/// True iff exactly one bit is set.
+#[inline(always)]
+pub fn is_onehot(x: u32) -> bool {
+    x != 0 && (x & (x - 1)) == 0
+}
+
+/// Decode a one-hot vector to its port index; `None` if not one-hot.
+#[inline(always)]
+pub fn decode_onehot(x: u32) -> Option<u32> {
+    if is_onehot(x) {
+        Some(x.trailing_zeros())
+    } else {
+        None
+    }
+}
+
+/// The paper's isolation check: `sent & allowed == 0` means the master
+/// asked for a slave outside its allowed set (invalid request).
+#[inline(always)]
+pub fn isolation_permits(sent_onehot: u32, allowed_mask: u32) -> bool {
+    sent_onehot & allowed_mask != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for i in 0..32 {
+            assert_eq!(decode_onehot(encode_onehot(i)), Some(i));
+        }
+    }
+
+    #[test]
+    fn rejects_non_onehot() {
+        assert_eq!(decode_onehot(0), None);
+        assert_eq!(decode_onehot(0b11), None);
+        assert_eq!(decode_onehot(0b1010), None);
+        assert!(!is_onehot(0));
+        assert!(!is_onehot(5));
+    }
+
+    #[test]
+    fn paper_example_slave1_is_0b0010() {
+        assert_eq!(encode_onehot(1), 0b0010);
+    }
+
+    #[test]
+    fn isolation_and_compare() {
+        // Master allowed slaves {1,3} = 0b1010.
+        let allowed = 0b1010;
+        assert!(isolation_permits(encode_onehot(1), allowed));
+        assert!(isolation_permits(encode_onehot(3), allowed));
+        assert!(!isolation_permits(encode_onehot(0), allowed));
+        assert!(!isolation_permits(encode_onehot(2), allowed));
+    }
+}

@@ -1,0 +1,290 @@
+//! WISHBONE bus interfaces (§II.B, §IV.F).
+//!
+//! The paper's modules talk WISHBONE B4: master initiates read/write
+//! requests, slave acks or stalls; a built-in handshake removes the need
+//! for extra transmission-safety logic.  This module holds the two
+//! interface FSMs exactly as §IV.F describes them:
+//!
+//! * [`MasterIf`] — latches the module's request, provides the one-hot
+//!   destination to the crossbar, runs watchdog timers for grant and ack,
+//!   streams one data word per cycle once granted, stalls when the slave
+//!   de-asserts ack, and registers the final error/success status.
+//! * [`SlaveIf`] — enables its registers for incoming data while they hold
+//!   no unread data, acks each word, stalls when full, and resumes when the
+//!   computation module signals it has read the buffer.
+//!
+//! Cycle semantics are pinned by the §V.E walkthrough; the crossbar
+//! ([`crate::crossbar`]) sequences these FSMs so that best-case
+//! time-to-grant is exactly 4 cc and an 8-package request completes in
+//! exactly 13 cc (tests in `crossbar`).
+
+use std::collections::VecDeque;
+
+/// WISHBONE transaction error codes, as stored in the register file
+/// (§IV.D: "error codes marking communication failure due to either wrong
+/// destination address or timeout due to unresponsive destination").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WbError {
+    /// The master sent a destination address outside its allowed set, or
+    /// a malformed (non-one-hot) address (§IV.E.2).
+    InvalidDestination,
+    /// Watchdog expiry while waiting for a grant (§IV.F.1).
+    GrantTimeout,
+    /// Watchdog expiry while waiting for a stalled slave's ack (§IV.F.1).
+    AckTimeout,
+    /// The targeted port is held in reset (§IV.C: during partial
+    /// reconfiguration the port must not participate).
+    PortInReset,
+}
+
+impl WbError {
+    /// Register-file encoding (Table III error-status registers).
+    pub fn code(self) -> u32 {
+        match self {
+            WbError::InvalidDestination => 0x1,
+            WbError::GrantTimeout => 0x2,
+            WbError::AckTimeout => 0x3,
+            WbError::PortInReset => 0x4,
+        }
+    }
+
+    /// Decode a register-file error code.
+    pub fn from_code(code: u32) -> Option<Self> {
+        match code {
+            0x1 => Some(WbError::InvalidDestination),
+            0x2 => Some(WbError::GrantTimeout),
+            0x3 => Some(WbError::AckTimeout),
+            0x4 => Some(WbError::PortInReset),
+            _ => None,
+        }
+    }
+}
+
+/// A transfer job handed to a master interface by its computation module
+/// (or bridge): send `words` to the slave named by `dest_onehot`.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// One-hot destination slave address (§IV.E.2).
+    pub dest_onehot: u32,
+    /// Payload words, streamed one per cycle once granted.
+    pub words: Vec<u32>,
+    /// Application ID tag (the paper tags user data with an app ID; we
+    /// carry it as sideband metadata — DESIGN.md notes the deviation).
+    pub app_id: u32,
+    /// Request originates *inside* the master interface (the AXI-WB
+    /// bridge case, §IV.G): skips the module→interface latch cycle, so
+    /// the best-case grant arrives "after 3 clock cycles" instead of 4.
+    pub pre_latched: bool,
+}
+
+impl Job {
+    /// Convenience constructor for module-originated jobs.
+    pub fn new(dest_onehot: u32, words: Vec<u32>, app_id: u32) -> Self {
+        Self { dest_onehot, words, app_id, pre_latched: false }
+    }
+
+    /// Constructor for bridge-originated jobs (no latch cycle).
+    pub fn pre_latched(dest_onehot: u32, words: Vec<u32>, app_id: u32) -> Self {
+        Self { dest_onehot, words, app_id, pre_latched: true }
+    }
+}
+
+/// Master-interface FSM state.  State names describe what has *completed*
+/// as of the end of the last tick (see crossbar cycle walkthrough).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MasterState {
+    /// No job in flight.
+    Idle,
+    /// cc consumed: module request latched by the master interface
+    /// ("2 ccs for the module's request to reach the master interface and
+    /// for it to initiate a request" — this is the first of the two).
+    Latched,
+    /// Waiting for the slave port's arbiter to grant (request issued,
+    /// isolation check passed).
+    WaitGrant,
+    /// The target slave is busy serving another master; the interface has
+    /// withdrawn its request and waits for the bus to free.
+    WaitFree,
+    /// Granted: streaming one word per cycle.
+    Sending,
+    /// Slave stalled (buffer full); transmission paused.
+    Stalled,
+    /// Final cycle: error/success status being registered.
+    Status,
+}
+
+/// Per-master bookkeeping the crossbar sequences.
+#[derive(Debug)]
+pub struct MasterIf {
+    /// Current FSM state.
+    pub state: MasterState,
+    /// Job queue from the module (front = in flight).
+    pub queue: VecDeque<Job>,
+    /// Words of the in-flight job already delivered.
+    pub sent: usize,
+    /// Words delivered in the current grant (for WRR package chopping).
+    pub sent_in_grant: u32,
+    /// Cycle at which the in-flight job was latched (for time-to-grant).
+    pub request_cycle: u64,
+    /// Cycle of the first grant for the in-flight job (0 = not yet).
+    pub first_grant_cycle: u64,
+    /// Watchdog counter (grant or ack wait).
+    pub waited: u64,
+    /// Isolation mask: one-hot OR of slaves this master may address
+    /// (Table III "Allowed Addresses of Port N Master").
+    pub allowed_slaves: u32,
+    /// Held in reset by the register file (§IV.C).
+    pub in_reset: bool,
+    /// Outcome to register during the Status cycle.
+    pub pending_status: Option<Result<(), WbError>>,
+}
+
+impl MasterIf {
+    /// New idle interface with the given isolation mask.
+    pub fn new(allowed_slaves: u32) -> Self {
+        Self {
+            state: MasterState::Idle,
+            queue: VecDeque::new(),
+            sent: 0,
+            sent_in_grant: 0,
+            request_cycle: 0,
+            first_grant_cycle: 0,
+            waited: 0,
+            allowed_slaves,
+            in_reset: false,
+            pending_status: None,
+        }
+    }
+
+    /// The in-flight job, if any.
+    pub fn job(&self) -> Option<&Job> {
+        self.queue.front()
+    }
+
+    /// Words remaining in the in-flight job.
+    pub fn remaining(&self) -> usize {
+        self.job().map(|j| j.words.len() - self.sent).unwrap_or(0)
+    }
+
+    /// Enqueue a new transfer job.
+    pub fn push_job(&mut self, job: Job) {
+        self.queue.push_back(job);
+    }
+
+    /// Apply a reset pulse: abort everything (§IV.C isolation during PR).
+    pub fn reset(&mut self) {
+        self.state = MasterState::Idle;
+        self.queue.clear();
+        self.sent = 0;
+        self.sent_in_grant = 0;
+        self.waited = 0;
+        self.pending_status = None;
+    }
+}
+
+/// Slave-interface FSM: an N-word receive buffer with stall semantics.
+#[derive(Debug)]
+pub struct SlaveIf {
+    /// Received words awaiting the module's read, with source port tags.
+    pub rx: VecDeque<(u32, usize)>,
+    /// Register capacity in words (paper prototype: 8).
+    pub capacity: usize,
+    /// Held in reset by the register file.
+    pub in_reset: bool,
+    /// Total words accepted (stats).
+    pub words_accepted: u64,
+    /// Cycles in which a master was stalled on this slave (stats).
+    pub stall_cycles: u64,
+}
+
+impl SlaveIf {
+    /// New empty interface with `capacity`-word registers.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            rx: VecDeque::with_capacity(capacity),
+            capacity,
+            in_reset: false,
+            words_accepted: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Can a new word be registered this cycle?  (§IV.F.2: registers are
+    /// enabled "provided those registers currently do not contain any
+    /// unread data" — modelled at word granularity by the buffer.)
+    pub fn can_accept(&self) -> bool {
+        !self.in_reset && self.rx.len() < self.capacity
+    }
+
+    /// Register one incoming word from `src`.  Caller must have checked
+    /// [`SlaveIf::can_accept`].
+    pub fn accept(&mut self, word: u32, src: usize) {
+        debug_assert!(self.can_accept());
+        self.rx.push_back((word, src));
+        self.words_accepted += 1;
+    }
+
+    /// The module reads up to `max` words ("the module triggers the slave
+    /// interface once it has read the data").
+    pub fn drain(&mut self, max: usize) -> Vec<(u32, usize)> {
+        let take = max.min(self.rx.len());
+        self.rx.drain(..take).collect()
+    }
+
+    /// Apply a reset pulse.
+    pub fn reset(&mut self) {
+        self.rx.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for e in [
+            WbError::InvalidDestination,
+            WbError::GrantTimeout,
+            WbError::AckTimeout,
+            WbError::PortInReset,
+        ] {
+            assert_eq!(WbError::from_code(e.code()), Some(e));
+        }
+        assert_eq!(WbError::from_code(0), None);
+        assert_eq!(WbError::from_code(99), None);
+    }
+
+    #[test]
+    fn slave_if_stalls_at_capacity() {
+        let mut s = SlaveIf::new(2);
+        assert!(s.can_accept());
+        s.accept(1, 0);
+        s.accept(2, 0);
+        assert!(!s.can_accept());
+        let read = s.drain(1);
+        assert_eq!(read, vec![(1, 0)]);
+        assert!(s.can_accept());
+    }
+
+    #[test]
+    fn slave_if_reset_clears_buffer() {
+        let mut s = SlaveIf::new(4);
+        s.accept(7, 1);
+        s.reset();
+        assert!(s.rx.is_empty());
+        assert_eq!(s.words_accepted, 1, "stats survive reset");
+    }
+
+    #[test]
+    fn master_if_reset_aborts_queue() {
+        let mut m = MasterIf::new(0b1111);
+        m.push_job(Job::new(0b0010, vec![1, 2, 3], 0));
+        m.state = MasterState::Sending;
+        m.sent = 1;
+        m.reset();
+        assert_eq!(m.state, MasterState::Idle);
+        assert!(m.queue.is_empty());
+        assert_eq!(m.remaining(), 0);
+    }
+}

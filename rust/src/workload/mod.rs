@@ -1,0 +1,204 @@
+//! Synthetic multi-tenant workload generation: arrival traces for the
+//! serving experiments (the paper's cloud setting has tenants submitting
+//! acceleration requests of varying shapes over time).
+//!
+//! Deterministic (SplitMix64-seeded) so every experiment is replayable;
+//! arrivals are Bernoulli-per-slot (a discrete Poisson approximation),
+//! payload sizes and stage chains are drawn from configurable mixes.
+
+use crate::manager::AppRequest;
+use crate::modules::ModuleKind;
+use crate::util::SplitMix64;
+
+/// One trace entry: a request and its arrival time.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Arrival offset from trace start, in milliseconds.
+    pub arrival_ms: f64,
+    /// The request itself.
+    pub request: AppRequest,
+}
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Mean arrival rate (requests per second).
+    pub rate_per_s: f64,
+    /// Trace duration (seconds of simulated arrival time).
+    pub duration_s: f64,
+    /// Payload sizes in words and their weights (sizes must be multiples
+    /// of the 8-word burst).
+    pub size_mix: Vec<(usize, f64)>,
+    /// Stage-chain mixes and their weights.
+    pub stage_mix: Vec<(Vec<ModuleKind>, f64)>,
+    /// Number of tenant app IDs to cycle through (1..=4).
+    pub tenants: u32,
+}
+
+impl WorkloadSpec {
+    /// The paper's Fig-5 shape: 16 KB pipelines from up to 4 tenants.
+    pub fn fig5_mix() -> Self {
+        Self {
+            rate_per_s: 50.0,
+            duration_s: 2.0,
+            size_mix: vec![(4096, 1.0)],
+            stage_mix: vec![(ModuleKind::pipeline().to_vec(), 1.0)],
+            tenants: 4,
+        }
+    }
+
+    /// A heterogeneous mix: different sizes and partial chains, the
+    /// "diverse applications" of the paper's intro.
+    pub fn mixed() -> Self {
+        Self {
+            rate_per_s: 80.0,
+            duration_s: 2.0,
+            size_mix: vec![(256, 0.3), (1024, 0.3), (4096, 0.4)],
+            stage_mix: vec![
+                (ModuleKind::pipeline().to_vec(), 0.5),
+                (vec![ModuleKind::Multiplier], 0.2),
+                (vec![ModuleKind::HammingEncoder], 0.15),
+                (
+                    vec![ModuleKind::HammingEncoder, ModuleKind::HammingDecoder],
+                    0.15,
+                ),
+            ],
+            tenants: 4,
+        }
+    }
+}
+
+/// Draw an index from a weighted list.
+fn weighted_pick<T>(rng: &mut SplitMix64, items: &[(T, f64)]) -> usize {
+    let total: f64 = items.iter().map(|(_, w)| *w).sum();
+    let mut x = rng.unit_f64() * total;
+    for (i, (_, w)) in items.iter().enumerate() {
+        if x < *w {
+            return i;
+        }
+        x -= w;
+    }
+    items.len() - 1
+}
+
+/// Generate a deterministic trace.
+pub fn generate(spec: &WorkloadSpec, seed: u64) -> Vec<TraceEvent> {
+    assert!(spec.tenants >= 1 && spec.tenants <= 4, "4 app IDs in the prototype");
+    assert!(
+        spec.size_mix.iter().all(|(s, _)| s % 8 == 0 && *s > 0),
+        "sizes must be positive multiples of the 8-word burst"
+    );
+    let mut rng = SplitMix64::new(seed);
+    let mut events = Vec::new();
+    // 1 ms slots; Bernoulli(rate * 1ms) arrivals per slot.
+    let slots = (spec.duration_s * 1000.0).ceil() as u64;
+    let p = (spec.rate_per_s / 1000.0).min(1.0);
+    let mut next_tenant = 0u32;
+    for slot in 0..slots {
+        if !rng.chance(p) {
+            continue;
+        }
+        let jitter = rng.unit_f64();
+        let size = spec.size_mix[weighted_pick(&mut rng, &spec.size_mix)].0;
+        let stages =
+            spec.stage_mix[weighted_pick(&mut rng, &spec.stage_mix)].0.clone();
+        let mut data = vec![0u32; size];
+        rng.fill_u32(&mut data);
+        events.push(TraceEvent {
+            arrival_ms: slot as f64 + jitter,
+            request: AppRequest {
+                app_id: next_tenant % spec.tenants,
+                data,
+                stages,
+            },
+        });
+        next_tenant = next_tenant.wrapping_add(1);
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let spec = WorkloadSpec::mixed();
+        let a = generate(&spec, 9);
+        let b = generate(&spec, 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.request.data, y.request.data);
+            assert_eq!(x.request.stages, y.request.stages);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = WorkloadSpec::mixed();
+        let a = generate(&spec, 1);
+        let b = generate(&spec, 2);
+        assert_ne!(
+            a.iter().map(|e| e.request.data.len()).collect::<Vec<_>>(),
+            b.iter().map(|e| e.request.data.len()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn rate_is_approximately_honored() {
+        let mut spec = WorkloadSpec::fig5_mix();
+        spec.rate_per_s = 100.0;
+        spec.duration_s = 10.0;
+        let trace = generate(&spec, 3);
+        let expected = 1000.0;
+        let got = trace.len() as f64;
+        assert!(
+            (got - expected).abs() / expected < 0.2,
+            "expected ~{expected}, got {got}"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_monotonic_and_bounded() {
+        let spec = WorkloadSpec::mixed();
+        let trace = generate(&spec, 4);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+        assert!(trace
+            .iter()
+            .all(|e| e.arrival_ms <= spec.duration_s * 1000.0));
+    }
+
+    #[test]
+    fn sizes_and_stages_come_from_the_mix() {
+        let spec = WorkloadSpec::mixed();
+        let trace = generate(&spec, 5);
+        let sizes: Vec<usize> = spec.size_mix.iter().map(|(s, _)| *s).collect();
+        for e in &trace {
+            assert!(sizes.contains(&e.request.data.len()));
+            assert!(!e.request.stages.is_empty());
+            assert!(e.request.app_id < spec.tenants);
+        }
+    }
+
+    #[test]
+    fn tenants_rotate() {
+        let mut spec = WorkloadSpec::fig5_mix();
+        spec.rate_per_s = 500.0;
+        let trace = generate(&spec, 6);
+        let mut seen: Vec<u32> = trace.iter().map(|e| e.request.app_id).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unaligned_sizes() {
+        let mut spec = WorkloadSpec::fig5_mix();
+        spec.size_mix = vec![(13, 1.0)];
+        generate(&spec, 0);
+    }
+}

@@ -1,0 +1,99 @@
+//! End-to-end tests for the shipped configs and the CLI binary.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use elastic_fpga::config::SystemConfig;
+
+fn repo(p: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(p)
+}
+
+#[test]
+fn shipped_kcu1500_config_parses_to_paper_defaults() {
+    let cfg = SystemConfig::load(&repo("configs/kcu1500.toml")).unwrap();
+    assert_eq!(cfg, SystemConfig::paper_defaults(), "file must mirror defaults");
+}
+
+#[test]
+fn shipped_scale16_config_parses() {
+    let cfg = SystemConfig::load(&repo("configs/scale16.toml")).unwrap();
+    assert_eq!(cfg.fabric.num_ports, 16);
+    assert_eq!(cfg.fabric.num_pr_regions, 15);
+    assert_eq!(cfg.server.workers, 4);
+    // And it can actually build a fabric.
+    let f = elastic_fpga::fabric::Fabric::new(cfg);
+    assert_eq!(f.xbar.ports(), 16);
+}
+
+fn bin() -> PathBuf {
+    // Integration tests live next to the binary's target dir.
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("target");
+    p.push(if cfg!(debug_assertions) { "debug" } else { "release" });
+    p.push("elastic-fpga");
+    p
+}
+
+fn run_cli(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary missing — run `cargo build` first");
+    let text = String::from_utf8_lossy(&out.stdout).to_string()
+        + &String::from_utf8_lossy(&out.stderr);
+    (out.status.success(), text)
+}
+
+#[test]
+fn cli_overhead_prints_paper_numbers() {
+    let (ok, text) = run_cli(&["overhead"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("4 cc"), "{text}");
+    assert!(text.contains("28 cc"), "{text}");
+    assert!(text.contains("37 cc"), "{text}");
+}
+
+#[test]
+fn cli_table2_prints_comparison() {
+    let (ok, text) = run_cli(&["table2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("475") && text.contains("1220"), "{text}");
+}
+
+#[test]
+fn cli_fig6_prints_linear_series() {
+    let (ok, text) = run_cli(&["fig6"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("172"), "16-port point missing: {text}");
+}
+
+#[test]
+fn cli_rejects_unknown_subcommand() {
+    let (ok, text) = run_cli(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"), "{text}");
+}
+
+#[test]
+fn cli_help_prints_usage() {
+    let (ok, text) = run_cli(&["--help"]);
+    assert!(ok);
+    assert!(text.contains("subcommands:"), "{text}");
+}
+
+#[test]
+fn cli_quickstart_no_pjrt_runs() {
+    let (ok, text) = run_cli(&["quickstart", "--no-pjrt"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("verified=true"), "{text}");
+}
+
+#[test]
+fn cli_serve_small_run() {
+    let (ok, text) =
+        run_cli(&["serve", "--no-pjrt", "--requests", "8", "--words", "256"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("8/8 ok"), "{text}");
+}

@@ -1,0 +1,183 @@
+//! Cross-layer integration tests: PJRT artifacts (L1/L2) executed under
+//! the Rust coordinator (L3), with the cycle-accurate fabric in the
+//! loop.  These require `make artifacts` to have run.
+
+use std::path::PathBuf;
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::hamming;
+use elastic_fpga::manager::{golden_pipeline, AppRequest, ElasticManager, StagePlacement};
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::runtime::{Runtime, RuntimeThread};
+use elastic_fpga::server::Server;
+use elastic_fpga::util::SplitMix64;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn data(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut v = vec![0u32; n];
+    rng.fill_u32(&mut v);
+    v
+}
+
+#[test]
+fn fabric_stream_equals_pjrt_artifact_stage_by_stage() {
+    // The cycle simulator's word-level datapath and the AOT-lowered
+    // JAX/Pallas artifacts must implement the *same function*.  Push a
+    // 16 KB buffer through the fabric one stage at a time and compare
+    // each intermediate against the corresponding artifact output.
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let x = data(4096, 1);
+    let mut cur = x.clone();
+    for kind in ModuleKind::pipeline() {
+        // Fabric path for this stage alone.
+        let mut mgr = ElasticManager::new(SystemConfig::paper_defaults(), None);
+        let req = AppRequest { app_id: 0, data: cur.clone(), stages: vec![kind] };
+        let fabric_out = mgr.execute(&req).unwrap().output;
+        // PJRT path.
+        let exe = rt.load(kind.artifact()).unwrap();
+        let pjrt_out = exe.run_u32(&cur).unwrap();
+        assert_eq!(fabric_out, pjrt_out, "stage {} diverged", kind.name());
+        cur = pjrt_out;
+    }
+    assert_eq!(cur, golden_pipeline(&x));
+}
+
+#[test]
+fn manager_uses_pjrt_for_on_server_stages() {
+    let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+    let mut mgr =
+        ElasticManager::new(SystemConfig::paper_defaults(), Some(rt.handle()));
+    mgr.fence_regions(2); // only the multiplier fits on the FPGA
+    let x = data(4096, 2);
+    let rep = mgr.execute(&AppRequest::pipeline(0, x.clone())).unwrap();
+    assert_eq!(rep.fpga_stages, 1);
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_pipeline(&x));
+    // Both on-server stages must have recorded *measured* wall time,
+    // proving the PJRT path (not the constant fallback) ran.
+    assert_eq!(rep.timeline.cpu_stages.len(), 2);
+    for (name, measured) in &rep.timeline.cpu_stages {
+        assert!(measured.is_some(), "stage {name} missing measurement");
+    }
+}
+
+#[test]
+fn server_end_to_end_with_pjrt_and_churn() {
+    let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+    let server = Server::start(SystemConfig::paper_defaults(), Some(rt.handle()));
+    let mut handles = Vec::new();
+    let mut inputs = Vec::new();
+    for i in 0..12u64 {
+        let x = data(4096, 100 + i);
+        inputs.push(x.clone());
+        handles.push(server.submit(AppRequest::pipeline((i % 4) as u32, x)).unwrap());
+    }
+    for (rx, x) in handles.into_iter().zip(&inputs) {
+        let rep = rx.recv().unwrap().report.unwrap();
+        assert!(rep.verified);
+        assert_eq!(&rep.output, &golden_pipeline(x));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn elastic_migration_with_pjrt_suffix() {
+    // Start with 1 region; each segment migrates one more stage onto the
+    // fabric; the CPU suffix runs through PJRT throughout.
+    let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+    let mut mgr =
+        ElasticManager::new(SystemConfig::paper_defaults(), Some(rt.handle()));
+    mgr.fence_regions(2);
+    let x = data(4096 * 3, 3);
+    let req = AppRequest::pipeline(0, x.clone());
+    let reports = mgr.execute_elastic(&req, 3).unwrap();
+    assert_eq!(
+        reports.iter().map(|r| r.fpga_stages).collect::<Vec<_>>(),
+        vec![1, 2, 3]
+    );
+    let stitched: Vec<u32> =
+        reports.iter().flat_map(|r| r.output.iter().copied()).collect();
+    assert_eq!(stitched, golden_pipeline(&x));
+}
+
+#[test]
+fn corrupted_words_corrected_through_the_full_stack() {
+    // Inject single-bit errors between encode and decode: run the
+    // encoder stage on the fabric, flip one bit per codeword, then run
+    // the decoder artifact — payloads must survive.
+    let mut mgr = ElasticManager::new(SystemConfig::paper_defaults(), None);
+    let x = data(256, 4);
+    let enc = mgr
+        .execute(&AppRequest {
+            app_id: 0,
+            data: x.clone(),
+            stages: vec![ModuleKind::HammingEncoder],
+        })
+        .unwrap()
+        .output;
+    let mut rng = SplitMix64::new(5);
+    let corrupted: Vec<u32> =
+        enc.iter().map(|&w| w ^ (1 << rng.below(31))).collect();
+    let mut mgr2 = ElasticManager::new(SystemConfig::paper_defaults(), None);
+    let mut cfg_req = AppRequest {
+        app_id: 0,
+        data: corrupted,
+        stages: vec![ModuleKind::HammingDecoder],
+    };
+    // The golden check inside execute() verifies dec(corrupted); what we
+    // care about is recovering the original payloads:
+    let dec = mgr2.execute(&cfg_req).unwrap().output;
+    let want: Vec<u32> =
+        x.iter().map(|&w| w & hamming::DATA_MASK).collect();
+    assert_eq!(dec, want);
+    cfg_req.data.clear(); // silence unused-mut lint paranoia
+}
+
+#[test]
+fn explicit_placement_mixed_fpga_cpu() {
+    let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+    let mut mgr =
+        ElasticManager::new(SystemConfig::paper_defaults(), Some(rt.handle()));
+    let x = data(4096, 6);
+    // Multiplier on FPGA region 2 (not 1 — placement is free), rest CPU.
+    let placement = vec![
+        StagePlacement::Fpga { kind: ModuleKind::Multiplier, region: 2 },
+        StagePlacement::OnServer { kind: ModuleKind::HammingEncoder },
+        StagePlacement::OnServer { kind: ModuleKind::HammingDecoder },
+    ];
+    let rep = mgr
+        .execute_placed(&AppRequest::pipeline(0, x.clone()), &placement)
+        .unwrap();
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_pipeline(&x));
+}
+
+#[test]
+fn non_artifact_geometry_falls_back_to_golden() {
+    // 128-word payload: no artifact has that geometry, so on-server
+    // stages must fall back to the golden model and still verify.
+    let rt = RuntimeThread::spawn(artifacts_dir()).unwrap();
+    let mut mgr =
+        ElasticManager::new(SystemConfig::paper_defaults(), Some(rt.handle()));
+    mgr.fence_regions(3);
+    let x = data(128, 7);
+    let rep = mgr.execute(&AppRequest::pipeline(0, x.clone())).unwrap();
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_pipeline(&x));
+}
+
+#[test]
+fn cli_experiment_paths_run() {
+    // The experiment drivers behind the CLI subcommands (no PJRT).
+    let cfg = SystemConfig::paper_defaults();
+    let oh = elastic_fpga::experiments::comm_overhead(&cfg);
+    assert_eq!(oh.best_time_to_grant, 4);
+    let rows = elastic_fpga::experiments::fig6(&cfg, &[4, 8]);
+    assert_eq!(rows.len(), 2);
+    assert!(elastic_fpga::experiments::table1_render().contains("Total"));
+    assert!(elastic_fpga::experiments::table2_render(&cfg).contains("69"));
+}

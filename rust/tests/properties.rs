@@ -1,0 +1,297 @@
+//! Property-based tests over the coordinator invariants (routing,
+//! batching/arbitration, isolation, state management), using the local
+//! `prop` harness (proptest is unavailable offline — DESIGN.md §7).
+
+use elastic_fpga::config::{CrossbarConfig, SystemConfig};
+use elastic_fpga::crossbar::Crossbar;
+use elastic_fpga::hamming;
+use elastic_fpga::manager::{golden_chain, AppRequest, ElasticManager};
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::prop::{check, Gen, DEFAULT_CASES};
+use elastic_fpga::sim::{Clock, Tick};
+use elastic_fpga::util::onehot::encode_onehot;
+use elastic_fpga::wishbone::Job;
+
+fn open_xbar(n: usize) -> Crossbar {
+    let mut cfg = CrossbarConfig::default();
+    cfg.grant_timeout = 1_000_000;
+    let mut xb = Crossbar::new(n, cfg);
+    let all = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+    for m in 0..n {
+        xb.set_allowed_slaves(m, all);
+    }
+    xb
+}
+
+/// Run with always-draining consumers; returns (events, per-slave words).
+fn run_draining(
+    xb: &mut Crossbar,
+    max: u64,
+) -> (Vec<elastic_fpga::crossbar::XbarEvent>, Vec<Vec<(u32, usize)>>) {
+    let n = xb.ports();
+    let mut clk = Clock::new();
+    let mut events = Vec::new();
+    let mut delivered = vec![Vec::new(); n];
+    for _ in 0..max {
+        let c = clk.advance();
+        xb.tick(c);
+        for s in 0..n {
+            delivered[s].extend(xb.drain_rx(s, usize::MAX));
+        }
+        events.extend(xb.take_events());
+        if xb.quiescent() {
+            break;
+        }
+    }
+    (events, delivered)
+}
+
+#[test]
+fn prop_routing_no_loss_no_duplication_no_misroute() {
+    // Any set of jobs on any ports: every word arrives exactly once, at
+    // exactly the addressed slave, in source order.
+    check(0xA11CE, DEFAULT_CASES, |g: &mut Gen| {
+        let n = g.int("ports", 2, 8) as usize;
+        let mut xb = open_xbar(n);
+        let jobs = g.int("jobs", 1, 12) as usize;
+        // expected[src][dst] = concatenated words in submission order.
+        let mut expected: Vec<Vec<Vec<u32>>> =
+            vec![vec![Vec::new(); n]; n];
+        for j in 0..jobs {
+            let src = g.int("src", 0, n as u64 - 1) as usize;
+            let dst = g.int("dst", 0, n as u64 - 1) as usize;
+            let len = g.int("len", 1, 40) as usize;
+            let words: Vec<u32> =
+                (0..len).map(|k| ((j << 16) + k) as u32).collect();
+            expected[src][dst].extend_from_slice(&words);
+            xb.push_job(src, Job::new(encode_onehot(dst as u32), words, 0));
+        }
+        let (events, delivered) = run_draining(&mut xb, 2_000_000);
+        if !xb.quiescent() {
+            return Err("did not quiesce".into());
+        }
+        if events.len() != jobs {
+            return Err(format!("{} events for {} jobs", events.len(), jobs));
+        }
+        if events.iter().any(|e| e.result.is_err()) {
+            return Err("unexpected error event".into());
+        }
+        // Per (src, dst): concatenated arrivals == concatenated jobs.
+        for s in 0..n {
+            let mut per_src: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for &(w, src) in &delivered[s] {
+                per_src[src].push(w);
+            }
+            for src in 0..n {
+                let want = &expected[src][s];
+                if &per_src[src] != want {
+                    return Err(format!(
+                        "misdelivery src={src} dst={s}: got {} want {} words",
+                        per_src[src].len(),
+                        want.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_isolation_mask_is_never_violated() {
+    // Whatever the isolation masks, a slave only ever receives words
+    // from masters whose mask includes it; disallowed jobs error.
+    check(0x150, DEFAULT_CASES, |g: &mut Gen| {
+        let n = 4usize;
+        let mut cfg = CrossbarConfig::default();
+        cfg.grant_timeout = 1_000_000;
+        let mut xb = Crossbar::new(n, cfg);
+        let mut masks = [0u32; 4];
+        for m in 0..n {
+            masks[m] = g.int("mask", 0, 15) as u32;
+            xb.set_allowed_slaves(m, masks[m]);
+        }
+        let jobs = g.int("jobs", 1, 8) as usize;
+        let mut allowed_jobs = 0usize;
+        for _ in 0..jobs {
+            let src = g.int("src", 0, 3) as usize;
+            let dst = g.int("dst", 0, 3) as usize;
+            if masks[src] >> dst & 1 == 1 {
+                allowed_jobs += 1;
+            }
+            xb.push_job(src, Job::new(encode_onehot(dst as u32), vec![7; 4], 0));
+        }
+        let (events, delivered) = run_draining(&mut xb, 1_000_000);
+        let ok = events.iter().filter(|e| e.result.is_ok()).count();
+        let rejected = events
+            .iter()
+            .filter(|e| {
+                e.result
+                    == Err(elastic_fpga::wishbone::WbError::InvalidDestination)
+            })
+            .count();
+        if ok != allowed_jobs || ok + rejected != jobs {
+            return Err(format!(
+                "ok={ok} rejected={rejected} expected allowed={allowed_jobs}/{jobs}"
+            ));
+        }
+        for s in 0..n {
+            for &(_, src) in &delivered[s] {
+                if masks[src] >> s & 1 == 0 {
+                    return Err(format!("slave {s} got a word from masked master {src}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wrr_budgets_bound_burst_lengths() {
+    // With two greedy masters on one slave, no delivery run from one
+    // master may exceed its programmed budget.
+    check(0xBBB, 32, |g: &mut Gen| {
+        let b0 = g.int("b0", 1, 64) as u32;
+        let b1 = g.int("b1", 1, 64) as u32;
+        let mut xb = open_xbar(4);
+        xb.set_allowed_packages(2, 0, b0);
+        xb.set_allowed_packages(2, 1, b1);
+        xb.push_job(0, Job::new(encode_onehot(2), vec![0xA; 400], 0));
+        xb.push_job(1, Job::new(encode_onehot(2), vec![0xB; 400], 1));
+        let (events, delivered) = run_draining(&mut xb, 2_000_000);
+        if events.iter().any(|e| e.result.is_err()) {
+            return Err("error event".into());
+        }
+        // No single *grant* may exceed its master's budget.  (Delivered
+        // runs may legitimately exceed it: a master can win two grants
+        // back to back while the rival is mid-re-issue.)
+        let max0 = xb.stats().port_max_burst[0];
+        let max1 = xb.stats().port_max_burst[1];
+        if max0 > b0 {
+            return Err(format!("master 0 burst {max0} > budget {b0}"));
+        }
+        if max1 > b1 {
+            return Err(format!("master 1 burst {max1} > budget {b1}"));
+        }
+        if delivered[2].len() != 800 {
+            return Err(format!("lost words: {}", delivered[2].len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_port_reset_always_recovers() {
+    // Resetting any port mid-flight never wedges the crossbar: after
+    // release, fresh jobs complete.
+    check(0x8E5E7, 32, |g: &mut Gen| {
+        let mut xb = open_xbar(4);
+        let victim = g.int("victim", 0, 3) as usize;
+        let reset_at = g.int("reset_at", 1, 30);
+        xb.push_job(0, Job::new(encode_onehot(2), vec![1; 16], 0));
+        xb.push_job(1, Job::new(encode_onehot(2), vec![2; 16], 0));
+        let mut clk = Clock::new();
+        for _ in 0..reset_at {
+            let c = clk.advance();
+            xb.tick(c);
+            for s in 0..4 {
+                xb.drain_rx(s, usize::MAX);
+            }
+        }
+        xb.set_port_reset(victim, true);
+        for _ in 0..10 {
+            let c = clk.advance();
+            xb.tick(c);
+            for s in 0..4 {
+                xb.drain_rx(s, usize::MAX);
+            }
+        }
+        xb.set_port_reset(victim, false);
+        // Let any surviving pre-reset traffic finish, then clear events.
+        let _ = run_draining(&mut xb, 10_000);
+        if !xb.quiescent() {
+            return Err("wedged after reset release".into());
+        }
+        xb.take_events();
+        // Fresh traffic on every port must complete.
+        for m in 0..4usize {
+            xb.push_job(m, Job::new(encode_onehot(((m + 1) % 4) as u32), vec![9; 4], 0));
+        }
+        let (events, _) = run_draining(&mut xb, 10_000);
+        let ok = events.iter().filter(|e| e.result.is_ok()).count();
+        if ok != 4 {
+            return Err(format!("only {ok}/4 post-reset jobs completed"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_manager_any_stage_chain_verifies() {
+    // Any chain of up to 4 stages, any availability, any burst-aligned
+    // length: the manager's output equals the golden chain.
+    check(0x31415, 24, |g: &mut Gen| {
+        let kinds = [
+            ModuleKind::Multiplier,
+            ModuleKind::HammingEncoder,
+            ModuleKind::HammingDecoder,
+        ];
+        let n_stages = g.int("stages", 1, 4) as usize;
+        let stages: Vec<ModuleKind> =
+            (0..n_stages).map(|_| g.choose("kind", &kinds)).collect();
+        let fenced = g.int("fenced", 0, 3) as usize;
+        let len = 8 * g.int("len8", 1, 32) as usize;
+        let data = g.buffer(len);
+        let mut mgr = ElasticManager::new(SystemConfig::paper_defaults(), None);
+        mgr.fence_regions(fenced);
+        let req = AppRequest { app_id: 0, data: data.clone(), stages: stages.clone() };
+        let rep = mgr
+            .execute(&req)
+            .map_err(|e| format!("execute failed: {e}"))?;
+        if rep.output != golden_chain(&stages, &data) {
+            return Err("output mismatch vs golden chain".into());
+        }
+        if rep.fpga_stages != n_stages.min(3 - fenced) {
+            return Err(format!(
+                "placement: {} FPGA stages, expected {}",
+                rep.fpga_stages,
+                n_stages.min(3 - fenced)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hamming_code_distance_at_least_3() {
+    // Random distinct payload pairs: codewords differ in >= 3 bits
+    // (single-error correction requires minimum distance 3).
+    check(0xD157, 256, |g: &mut Gen| {
+        let a = g.int("a", 0, hamming::DATA_MASK as u64) as u32;
+        let b = g.int("b", 0, hamming::DATA_MASK as u64) as u32;
+        if a == b {
+            return Ok(());
+        }
+        let d = (hamming::encode_word(a) ^ hamming::encode_word(b)).count_ones();
+        if d < 3 {
+            return Err(format!("distance {d} between {a:#x} and {b:#x}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_identity_any_buffer() {
+    // dec(enc(mult(x))) == (x*K) & DATA_MASK for arbitrary buffers.
+    check(0x1D, 64, |g: &mut Gen| {
+        let len = g.int("len", 1, 512) as usize;
+        let x = g.buffer(len);
+        let got = hamming::pipeline_buf(&x, hamming::MULT_CONSTANT);
+        for (xi, gi) in x.iter().zip(&got) {
+            if *gi != xi.wrapping_mul(hamming::MULT_CONSTANT) & hamming::DATA_MASK {
+                return Err("identity violated".into());
+            }
+        }
+        Ok(())
+    });
+}
