@@ -6,6 +6,7 @@
 //! Subcommands:
 //!   quickstart           run one 16 KB pipeline request end to end
 //!   serve                start the serving loop on a synthetic workload
+//!   fleet                run the multi-FPGA fleet simulator
 //!   fig5                 reproduce Fig 5 (elasticity execution times)
 //!   fig6                 reproduce Fig 6 (worst-case latency scaling)
 //!   table1               reproduce Table I (area usage)
@@ -94,6 +95,7 @@ usage: elastic-fpga <subcommand> [--flag value ...]
 subcommands:
   quickstart   run one 16 KB pipeline request end to end (uses artifacts/)
   serve        run the serving loop on a synthetic workload
+  fleet        run the multi-FPGA fleet simulator (event-driven fast-path)
   fig5         reproduce Fig 5 (elasticity execution times)
   fig6         reproduce Fig 6 (worst-case latency vs #PR regions)
   table1       reproduce Table I (area usage of all components)
@@ -104,8 +106,14 @@ subcommands:
 common flags:
   --artifacts DIR    artifact directory (default: artifacts)
   --config FILE      TOML config overlay
-  --requests N       request count for `serve` (default: 64)
+  --requests N       request count for `serve`/`fleet` (default: 64/10000)
   --no-pjrt          skip PJRT; use the golden model for CPU stages
+
+fleet flags:
+  --fabrics N        simulated boards (default: 8)
+  --policy P         least | sticky | bandwidth (default: least)
+  --seed N           workload seed (default: 1)
+  --oracle           disable the fast-path; run every request cycle-by-cycle
 ";
 
 #[cfg(test)]

@@ -45,6 +45,12 @@ impl BoardNode {
         self.manager.available_regions()
     }
 
+    /// Read-only manager access (policy scoring reads the register-file
+    /// view through this).
+    pub fn manager(&self) -> &ElasticManager {
+        &self.manager
+    }
+
     /// Direct manager access (tests / churn injection).
     pub fn manager_mut(&mut self) -> &mut ElasticManager {
         &mut self.manager
@@ -83,6 +89,16 @@ impl Cluster {
     /// The nodes (read-only).
     pub fn nodes(&self) -> &[BoardNode] {
         &self.nodes
+    }
+
+    /// Number of nodes.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The configured placement policy.
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
     }
 
     /// Mutable node access (churn injection).
@@ -124,11 +140,19 @@ impl Cluster {
     pub fn execute(&mut self, req: &AppRequest) -> Result<(usize, AppReport)> {
         let i = self.select_node(req);
         self.rr_next = self.rr_next.wrapping_add(1);
-        let node = &mut self.nodes[i];
-        let report = node.manager.execute(req)?;
-        node.served += 1;
-        node.fpga_stages_hosted += report.fpga_stages as u64;
+        let report = self.execute_on(i, req)?;
         Ok((i, report))
+    }
+
+    /// Execute `req` on a specific node, bypassing this scheduler's own
+    /// policy — the fleet layer picks nodes with its admission-control
+    /// policies and drives the cluster through this entry point.
+    pub fn execute_on(&mut self, node: usize, req: &AppRequest) -> Result<AppReport> {
+        let n = &mut self.nodes[node];
+        let report = n.manager.execute(req)?;
+        n.served += 1;
+        n.fpga_stages_hosted += report.fpga_stages as u64;
+        Ok(report)
     }
 
     /// Cluster-wide available regions.

@@ -39,9 +39,23 @@ pub use arbiter::{Arbiter, ArbiterState};
 pub use stats::XbarStats;
 
 use crate::config::CrossbarConfig;
-use crate::sim::Tick;
+use crate::sim::{EventDriven, Tick};
 use crate::util::onehot::{decode_onehot, isolation_permits};
 use crate::wishbone::{Job, MasterIf, MasterState, SlaveIf, WbError};
+
+/// One bus grant as recorded when grant recording is on (see
+/// [`Crossbar::set_record_grants`]): which master held which slave's bus
+/// and how many words it delivered before the bus rotated or the job
+/// finished.  The WRR fairness properties are stated over this log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GrantRecord {
+    /// Slave port whose bus was held.
+    pub slave: usize,
+    /// Master port that held it.
+    pub master: usize,
+    /// Words delivered during the grant.
+    pub words: u32,
+}
 
 /// A completion or error notification for one master-port job.
 #[derive(Debug, Clone, PartialEq)]
@@ -92,6 +106,10 @@ pub struct Crossbar {
     release_pending: Vec<bool>,
     events: Vec<XbarEvent>,
     stats: XbarStats,
+    /// Opt-in per-grant log (off by default: fleet-scale runs would grow
+    /// it without bound).
+    record_grants: bool,
+    grant_log: Vec<GrantRecord>,
     cycle: u64,
 }
 
@@ -113,6 +131,8 @@ impl Crossbar {
             release_pending: vec![false; n],
             events: Vec::new(),
             stats: XbarStats::new(n),
+            record_grants: false,
+            grant_log: Vec::new(),
             cfg,
             cycle: 0,
         }
@@ -215,6 +235,32 @@ impl Crossbar {
     /// Aggregate statistics.
     pub fn stats(&self) -> &XbarStats {
         &self.stats
+    }
+
+    /// Turn per-grant recording on/off (test observability for the WRR
+    /// fairness properties).
+    pub fn set_record_grants(&mut self, on: bool) {
+        self.record_grants = on;
+    }
+
+    /// Recorded grants, in bus order (empty unless recording is on).
+    pub fn grant_log(&self) -> &[GrantRecord] {
+        &self.grant_log
+    }
+
+    /// Take (and clear) the recorded grants.
+    pub fn take_grant_log(&mut self) -> Vec<GrantRecord> {
+        std::mem::take(&mut self.grant_log)
+    }
+
+    /// A fixed point the event-driven fast-path may jump over: nothing
+    /// in flight, every arbiter settled, no release pending.  Stricter
+    /// than [`Crossbar::quiescent`], which tolerates in-progress arbiter
+    /// state (a decision pipeline still draining after a withdrawal).
+    pub fn stable_point(&self) -> bool {
+        self.quiescent()
+            && self.release_pending.iter().all(|pending| !pending)
+            && self.arbiters.iter().all(|a| a.in_reset || a.is_free())
     }
 
     // ------------------------------------------------------------------
@@ -377,6 +423,7 @@ impl Crossbar {
                         // only registers the outcome on the master side
                         // ("a master interface releases the bus as soon as
                         // it completes sending its packages").
+                        self.log_grant(d, m);
                         self.release_pending[d] = true;
                         self.arbiters[d].drop_request(m);
                         self.finish_job(m, Ok(()));
@@ -384,6 +431,7 @@ impl Crossbar {
                         // WRR budget exhausted: rotate the grant (§IV.E.1
                         // "when the maximum number of packages is reached,
                         // it switches the grant to the next master").
+                        self.log_grant(d, m);
                         self.release_pending[d] = true;
                         self.arbiters[d].drop_request(m);
                         self.masters[m].state = MasterState::WaitFree;
@@ -414,6 +462,7 @@ impl Crossbar {
                     if self.masters[m].waited > self.cfg.ack_timeout {
                         // "if the destination slave does not respond in a
                         // defined period, a timeout error happens."
+                        self.log_grant(d, m);
                         self.release_pending[d] = true;
                         self.arbiters[d].drop_request(m);
                         self.finish_job(m, Err(WbError::AckTimeout));
@@ -454,6 +503,16 @@ impl Crossbar {
         decode_onehot(self.masters[m].job().expect("no job").dest_onehot)
             .expect("validated address") as usize
     }
+
+    fn log_grant(&mut self, slave: usize, master: usize) {
+        if self.record_grants {
+            self.grant_log.push(GrantRecord {
+                slave,
+                master,
+                words: self.masters[master].sent_in_grant,
+            });
+        }
+    }
 }
 
 impl Tick for Crossbar {
@@ -464,6 +523,20 @@ impl Tick for Crossbar {
             self.tick_master(m);
         }
         self.stats.cycles += 1;
+    }
+}
+
+impl EventDriven for Crossbar {
+    fn stable(&self) -> bool {
+        self.stable_point()
+    }
+
+    fn fast_forward(&mut self, to_cycle: u64) {
+        // Idle cycles change nothing but the counters; account them so a
+        // fast-path run's statistics equal the oracle's exactly.
+        let skipped = to_cycle.saturating_sub(self.cycle);
+        self.cycle = to_cycle;
+        self.stats.cycles += skipped;
     }
 }
 

@@ -1,49 +1,71 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: `thiserror` is unavailable in
+//! this offline environment (DESIGN.md §7).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the elastic-fpga coordinator.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ElasticError {
-    /// PJRT / XLA runtime failures (artifact load, compile, execute).
-    #[error("xla runtime error: {0}")]
+    /// Runtime failures (artifact load, compile, execute).
     Xla(String),
 
     /// Artifact missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Resource manager could not satisfy an allocation.
-    #[error("allocation error: {0}")]
     Allocation(String),
 
     /// A WISHBONE transaction failed (invalid destination, timeout, ...).
-    #[error("wishbone error: {0:?}")]
     Wishbone(crate::wishbone::WbError),
 
     /// Simulation invariant violated (a bug in the model, not the workload).
-    #[error("simulation invariant violated: {0}")]
     Sim(String),
 
     /// Server/request-path failures.
-    #[error("server error: {0}")]
     Server(String),
 
     /// Payload verification against the golden model failed.
-    #[error("verification error: {0}")]
     Verify(String),
 
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O error.
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for ElasticError {
-    fn from(e: xla::Error) -> Self {
-        ElasticError::Xla(e.to_string())
+impl fmt::Display for ElasticError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ElasticError::Xla(m) => write!(f, "xla runtime error: {m}"),
+            ElasticError::Artifact(m) => write!(f, "artifact error: {m}"),
+            ElasticError::Config(m) => write!(f, "config error: {m}"),
+            ElasticError::Allocation(m) => write!(f, "allocation error: {m}"),
+            ElasticError::Wishbone(e) => write!(f, "wishbone error: {e:?}"),
+            ElasticError::Sim(m) => {
+                write!(f, "simulation invariant violated: {m}")
+            }
+            ElasticError::Server(m) => write!(f, "server error: {m}"),
+            ElasticError::Verify(m) => write!(f, "verification error: {m}"),
+            ElasticError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ElasticError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ElasticError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ElasticError {
+    fn from(e: std::io::Error) -> Self {
+        ElasticError::Io(e)
     }
 }
 

@@ -25,7 +25,7 @@ use crate::crossbar::Crossbar;
 use crate::icap::{Icap, ReconfigDone, ReconfigRequest};
 use crate::modules::{ComputationModule, ModuleKind};
 use crate::regfile::RegisterFile;
-use crate::sim::Tick;
+use crate::sim::{EventDriven, Tick};
 use crate::wishbone::WbError;
 use crate::xdma::{AxiToWb, H2cBurst, WbToAxi, Xdma, BRIDGE_BUFFER_WORDS};
 use crate::{ElasticError, Result};
@@ -385,6 +385,25 @@ impl Tick for Fabric {
         self.tick_modules();
         self.tick_port0_slave();
         self.tick_bridge();
+    }
+}
+
+impl EventDriven for Fabric {
+    fn stable(&self) -> bool {
+        // `idle()` covers the datapath (crossbar masters, bridges, XDMA,
+        // ICAP, module FSMs, reassembly buffers); on top of that require
+        // the crossbar's arbiters to have settled and all pending
+        // register-file/ICAP mirroring to have been absorbed, so a tick
+        // would be a pure no-op.
+        self.idle()
+            && self.xbar.stable_point()
+            && self.regfile.generation() == self.synced_gen
+            && self.icap.status == self.mirrored_icap
+    }
+
+    fn fast_forward(&mut self, to_cycle: u64) {
+        self.xbar.fast_forward(to_cycle);
+        self.cycle = to_cycle;
     }
 }
 

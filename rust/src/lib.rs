@@ -28,6 +28,25 @@
 //!
 //! Python exists only on the build path (`make artifacts`); the request
 //! path is pure Rust.
+//!
+//! # Fleet-scale serving and the fast-path / oracle pair
+//!
+//! Above the single board, [`cluster`] places requests across N boards
+//! and [`fleet`] turns that into an elastic serving system: admission
+//! control (least-loaded, sticky-by-app, bandwidth-aware via the
+//! register-file view), overflow migration between server CPU and any
+//! fabric with free PR regions, and a virtual-time trace simulator that
+//! serves 100k+ requests across 8+ fabrics in seconds.  Speed comes
+//! from the **event-driven fast-path** in [`sim`]: when no WISHBONE
+//! master has a pending transaction, the run jumps to the next
+//! arrival/completion event instead of ticking every idle cycle, and
+//! per-shape service costs are memoized after one cycle-accurate run
+//! (fabric timing is data-independent).  The cycle-by-cycle path is kept
+//! as the **oracle**: equivalence tests replay identical workloads
+//! through both and require cycle-identical results.  [`server`] is the
+//! threaded on-line counterpart: a fabric-count-generic scheduler
+//! ([`server::ElasticServer`]) drives the same admission policies over
+//! real worker threads.
 
 pub mod area;
 pub mod baselines;
@@ -37,6 +56,7 @@ pub mod config;
 pub mod crossbar;
 pub mod experiments;
 pub mod fabric;
+pub mod fleet;
 pub mod hamming;
 pub mod icap;
 pub mod manager;

@@ -4,11 +4,13 @@
 use elastic_fpga::cli::{Cli, USAGE};
 use elastic_fpga::config::SystemConfig;
 use elastic_fpga::experiments;
+use elastic_fpga::fleet::{AdmissionPolicy, Fleet};
 use elastic_fpga::manager::AppRequest;
 use elastic_fpga::metrics::{LatencyRecorder, Throughput};
 use elastic_fpga::runtime::RuntimeThread;
 use elastic_fpga::server::{call, Server};
 use elastic_fpga::util::SplitMix64;
+use elastic_fpga::workload::{generate_count, WorkloadSpec};
 use elastic_fpga::Result;
 
 fn main() {
@@ -49,6 +51,7 @@ fn run(args: &[String]) -> Result<()> {
     match cli.command.as_str() {
         "quickstart" => quickstart(&cli, &cfg),
         "serve" => serve(&cli, &cfg),
+        "fleet" => fleet_sim(&cli, &cfg),
         "fig5" => {
             let runtime = load_runtime(&cli)?;
             let reps = cli.usize_or("reps", 10)?;
@@ -106,6 +109,54 @@ fn quickstart(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
         report.cost.cpu_ms
     );
     server.shutdown();
+    Ok(())
+}
+
+fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
+    let fabrics = cli.usize_or("fabrics", 8)?;
+    let requests = cli.usize_or("requests", 10_000)?;
+    let seed = cli.usize_or("seed", 1)? as u64;
+    let oracle = cli.bool_or("oracle", false)?;
+    let policy_name = cli.str_or("policy", "least");
+    let policy = AdmissionPolicy::parse(&policy_name).ok_or_else(|| {
+        elastic_fpga::ElasticError::Config(format!(
+            "--policy expects least|sticky|bandwidth, got '{policy_name}'"
+        ))
+    })?;
+    println!(
+        "fleet: {requests} requests over {fabrics} fabrics, policy {policy:?}, \
+         {}",
+        if oracle { "cycle-by-cycle oracle" } else { "event-driven fast-path" }
+    );
+    let trace = generate_count(&WorkloadSpec::fleet_mix(), seed, requests);
+    let mut fleet = Fleet::launch(fabrics, cfg, None, policy, !oracle);
+    let t0 = std::time::Instant::now();
+    let mut report = fleet.run_trace(&trace)?;
+    let wall = t0.elapsed();
+    println!(
+        "completed {}/{} | virtual makespan {:.1} ms | {:.0} req/s virtual | \
+         wall {:.2?} ({:.0} req/s simulated)",
+        report.completed,
+        requests,
+        cfg.cycles_to_ms(report.makespan_cycles),
+        report.throughput_per_s(cfg),
+        wall,
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "queue wait p50 {} p99 {} cycles | latency p50 {} p99 {} cycles",
+        report.queue_wait.percentile(0.50),
+        report.queue_wait.percentile(0.99),
+        report.latency.percentile(0.50),
+        report.latency.percentile(0.99),
+    );
+    println!(
+        "per-node served {:?} | migrated {} | oracle runs {} | fast-path hits {}",
+        report.per_node_served,
+        report.migrated,
+        report.oracle_runs,
+        report.fast_path_hits
+    );
     Ok(())
 }
 

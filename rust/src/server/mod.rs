@@ -1,28 +1,35 @@
 //! Multi-tenant serving loop: the deployment shape the paper's cloud
 //! story implies (apps submit acceleration requests; the manager
 //! allocates PR regions elastically; overflow compute runs on the
-//! server).
+//! server) — generalized to a **fabric-count-generic** scheduler so one
+//! server can front a whole board fleet.
 //!
 //! Architecture (std::thread + mpsc — tokio is unavailable offline, see
 //! DESIGN.md §7):
 //!
 //! ```text
 //!   clients --submit--> [bounded queue] --> scheduler thread
-//!                                            | fabric prefix (cycle sim)
-//!                                            v
-//!                                      [worker pool] -- on-server PJRT
-//!                                            |             stages
+//!                                            | admission policy picks a
+//!                                            | fabric lane; FPGA prefix
+//!                                            | runs on that lane's
+//!                                            v cycle simulator
+//!                                      [worker pool] -- on-server
+//!                                            |            suffix stages
 //!                                            v
 //!                                       response channels
 //! ```
 //!
-//! The scheduler owns the fabric (single synchronous design, as in
-//! hardware); CPU-suffix work is fanned out to workers so the fabric can
-//! start the next request while earlier requests finish on the host —
-//! pipeline parallelism across requests.  The bounded queue provides
+//! The scheduler owns every fabric (each a single synchronous design, as
+//! in hardware) and tracks a per-lane virtual clock of fabric cycles
+//! consumed; the admission policy ([`AdmissionPolicy`], shared with the
+//! [`crate::fleet`] trace simulator) routes each request to a lane.
+//! CPU-suffix work is fanned out to workers so a fabric can start the
+//! next request while earlier requests finish on the host — pipeline
+//! parallelism across requests.  The bounded queue provides
 //! backpressure: `submit` blocks when `queue_depth` requests are in
 //! flight.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -30,18 +37,49 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::SystemConfig;
+use crate::fleet::AdmissionPolicy;
 use crate::manager::{golden_chain, AppReport, AppRequest, ElasticManager, StagePlacement};
 use crate::modules::ModuleKind;
 use crate::runtime::RuntimeHandle;
 use crate::timing::{evaluate, ExecutionTimeline};
 use crate::{ElasticError, Result};
 
+/// Fleet shape of a serving instance.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetOptions {
+    /// Number of independent fabrics the scheduler drives.
+    pub fabrics: usize,
+    /// Admission policy routing requests to fabrics.
+    pub policy: AdmissionPolicy,
+}
+
+impl FleetOptions {
+    /// The single-board shape of the original prototype.
+    pub fn single() -> Self {
+        Self { fabrics: 1, policy: AdmissionPolicy::LeastLoaded }
+    }
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
 /// A finished request as the client sees it.
 #[derive(Debug)]
 pub struct Response {
     pub report: Result<AppReport>,
-    /// Wall-clock service time (queue + fabric sim + PJRT).
+    /// Wall-clock service time (queue + fabric sim + on-server stages).
     pub wall: std::time::Duration,
+    /// Fabric lane that served the request.
+    pub fabric: usize,
+    /// The lane's cumulative virtual clock (total fabric cycles it has
+    /// ever consumed) at admission — deterministic, unlike `wall`.  It
+    /// never drains, so it is a backlog *proxy* for ordering requests
+    /// admitted to the same lane, not a latency: use the fleet
+    /// simulator's `start - arrival` queue wait for that.
+    pub queue_wait_cycles: u64,
 }
 
 enum WorkerMsg {
@@ -53,6 +91,8 @@ enum WorkerMsg {
         fpga_stages: usize,
         placement: Vec<StagePlacement>,
         submitted: Instant,
+        fabric: usize,
+        queue_wait_cycles: u64,
         respond: Sender<Response>,
     },
     Stop,
@@ -90,7 +130,7 @@ impl Semaphore {
 }
 
 /// The serving engine.
-pub struct Server {
+pub struct ElasticServer {
     submit_tx: Option<Sender<Submission>>,
     scheduler: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
@@ -98,10 +138,23 @@ pub struct Server {
     in_flight: Arc<AtomicUsize>,
 }
 
-impl Server {
-    /// Start the scheduler + worker threads.  `runtime` is shared by all
-    /// workers (PJRT executables are compiled once).
+/// Legacy name for the single-fabric shape.
+pub type Server = ElasticServer;
+
+impl ElasticServer {
+    /// Start a single-fabric server (the original prototype shape).
+    /// `runtime` is shared by all workers.
     pub fn start(cfg: SystemConfig, runtime: Option<RuntimeHandle>) -> Self {
+        Self::start_fleet(cfg, FleetOptions::single(), runtime)
+    }
+
+    /// Start the scheduler + worker threads over `opts.fabrics`
+    /// independent fabric lanes.
+    pub fn start_fleet(
+        cfg: SystemConfig,
+        opts: FleetOptions,
+        runtime: Option<RuntimeHandle>,
+    ) -> Self {
         let (submit_tx, submit_rx) = channel::<Submission>();
         let (work_tx, work_rx) = channel::<WorkerMsg>();
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -136,6 +189,7 @@ impl Server {
                     submit_rx,
                     work_tx,
                     sched_cfg,
+                    opts,
                     sched_rt,
                     slots_s,
                     in_flight_s,
@@ -187,27 +241,80 @@ impl Server {
     }
 }
 
-impl Drop for Server {
+impl Drop for ElasticServer {
     fn drop(&mut self) {
         self.shutdown_inner();
     }
 }
 
+/// One fabric lane owned by the scheduler.
+struct Lane {
+    manager: ElasticManager,
+    /// Cumulative fabric cycles consumed on this lane (virtual clock;
+    /// the admission policy's load signal).
+    clock: u64,
+}
+
+fn select_lane(
+    lanes: &[Lane],
+    pins: &mut HashMap<u32, usize>,
+    policy: AdmissionPolicy,
+    req: &AppRequest,
+) -> usize {
+    let least_loaded = |lanes: &[Lane]| {
+        (0..lanes.len())
+            .min_by_key(|&i| (lanes[i].clock, i))
+            .expect("server has lanes")
+    };
+    match policy {
+        AdmissionPolicy::LeastLoaded => least_loaded(lanes),
+        AdmissionPolicy::StickyByApp => {
+            if let Some(&pinned) = pins.get(&req.app_id) {
+                pinned
+            } else {
+                let chosen = least_loaded(lanes);
+                pins.insert(req.app_id, chosen);
+                chosen
+            }
+        }
+        AdmissionPolicy::BandwidthAware => (0..lanes.len())
+            .min_by_key(|&i| {
+                let m = &lanes[i].manager;
+                let spare =
+                    m.spare_bandwidth().saturating_sub(m.bandwidth_in_use());
+                (std::cmp::Reverse(spare), lanes[i].clock, i)
+            })
+            .expect("server has lanes"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn scheduler_loop(
     submit_rx: Receiver<Submission>,
     work_tx: Sender<WorkerMsg>,
     cfg: SystemConfig,
+    opts: FleetOptions,
     runtime: Option<RuntimeHandle>,
     slots: Arc<Semaphore>,
     in_flight: Arc<AtomicUsize>,
 ) {
-    let mut manager = ElasticManager::new(cfg.clone(), runtime);
+    let mut lanes: Vec<Lane> = (0..opts.fabrics.max(1))
+        .map(|_| Lane {
+            manager: ElasticManager::new(cfg.clone(), runtime.clone()),
+            clock: 0,
+        })
+        .collect();
+    let mut pins: HashMap<u32, usize> = HashMap::new();
     while let Ok(sub) = submit_rx.recv() {
-        let placement = manager.plan(&sub.req.stages);
-        // Run the FPGA prefix synchronously on the fabric; hand the CPU
-        // suffix to the worker pool.
-        match run_fpga_prefix(&mut manager, &sub.req, &placement) {
+        let lane_idx = select_lane(&lanes, &mut pins, opts.policy, &sub.req);
+        let queue_wait_cycles = lanes[lane_idx].clock;
+        let lane = &mut lanes[lane_idx];
+        let placement = lane.manager.plan(&sub.req.stages);
+        // Run the FPGA prefix synchronously on the lane's fabric; hand
+        // the CPU suffix to the worker pool.
+        match run_fpga_prefix(&mut lane.manager, &sub.req, &placement) {
             Ok((partial, tl, fpga_stages)) => {
+                lane.clock += tl.fabric_cycles + tl.reconfig_cycles;
                 let remaining: Vec<ModuleKind> = placement
                     .iter()
                     .filter(|p| !p.is_fpga())
@@ -221,6 +328,8 @@ fn scheduler_loop(
                     fpga_stages,
                     placement,
                     submitted: sub.submitted,
+                    fabric: lane_idx,
+                    queue_wait_cycles,
                     respond: sub.respond,
                 };
                 if work_tx.send(msg).is_err() {
@@ -231,6 +340,8 @@ fn scheduler_loop(
                 let _ = sub.respond.send(Response {
                     report: Err(e),
                     wall: sub.submitted.elapsed(),
+                    fabric: lane_idx,
+                    queue_wait_cycles,
                 });
                 in_flight.fetch_sub(1, Ordering::SeqCst);
                 slots.release();
@@ -243,7 +354,7 @@ fn scheduler_loop(
     }
 }
 
-/// Execute the FPGA part of a request on the scheduler's fabric.
+/// Execute the FPGA part of a request on one lane's fabric.
 fn run_fpga_prefix(
     manager: &mut ElasticManager,
     req: &AppRequest,
@@ -310,6 +421,8 @@ fn worker_loop(
                 fpga_stages,
                 placement,
                 submitted,
+                fabric,
+                queue_wait_cycles,
                 respond,
             } => {
                 let mut failed: Option<ElasticError> = None;
@@ -353,7 +466,12 @@ fn worker_loop(
                         }
                     }
                 };
-                let _ = respond.send(Response { report, wall: submitted.elapsed() });
+                let _ = respond.send(Response {
+                    report,
+                    wall: submitted.elapsed(),
+                    fabric,
+                    queue_wait_cycles,
+                });
                 in_flight.fetch_sub(1, Ordering::SeqCst);
                 slots.release();
             }
@@ -375,7 +493,7 @@ fn run_stage(
 }
 
 /// Blocking convenience: submit and wait.
-pub fn call(server: &Server, req: AppRequest) -> Result<AppReport> {
+pub fn call(server: &ElasticServer, req: AppRequest) -> Result<AppReport> {
     let rx = server.submit(req)?;
     let resp = rx
         .recv()
@@ -454,5 +572,35 @@ mod tests {
     fn shutdown_is_idempotent_via_drop() {
         let server = Server::start(SystemConfig::paper_defaults(), None);
         drop(server); // must not hang or panic
+    }
+
+    #[test]
+    fn fleet_server_spreads_lanes_and_reports_them() {
+        let server = ElasticServer::start_fleet(
+            SystemConfig::paper_defaults(),
+            FleetOptions { fabrics: 2, policy: AdmissionPolicy::LeastLoaded },
+            None,
+        );
+        let mut rxs = Vec::new();
+        let mut inputs = Vec::new();
+        for i in 0..12u64 {
+            let d = data(64, 300 + i);
+            inputs.push(d.clone());
+            rxs.push(server.submit(AppRequest::pipeline((i % 4) as u32, d)).unwrap());
+        }
+        let mut lanes_seen = [0usize; 2];
+        for (rx, d) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().unwrap();
+            assert!(resp.fabric < 2);
+            lanes_seen[resp.fabric] += 1;
+            let rep = resp.report.unwrap();
+            assert!(rep.verified);
+            assert_eq!(&rep.output, &golden_pipeline(d));
+        }
+        assert!(
+            lanes_seen[0] > 0 && lanes_seen[1] > 0,
+            "least-loaded never used a lane: {lanes_seen:?}"
+        );
+        server.shutdown();
     }
 }

@@ -1,10 +1,26 @@
-//! Discrete, cycle-accurate simulation core.
+//! Discrete, cycle-accurate simulation core — with an event-driven
+//! fast-path for fleet-scale runs.
 //!
 //! The fabric is a synchronous digital design at one clock (250 MHz);
 //! every component implements [`Tick`] and advances exactly one clock
 //! per call.  §V.E of the paper is specified in clock cycles, so the
 //! simulator's unit of time *is* the fabric clock cycle; wall-clock
 //! quantities are derived via `SystemConfig::cycles_to_ms`.
+//!
+//! # Fast-path vs oracle
+//!
+//! Serving workloads spend most virtual time *idle*: between request
+//! arrivals nothing on the fabric changes, yet the cycle-by-cycle loop
+//! still executes every cycle.  [`Clock::run_scheduled`] is the
+//! event-driven alternative: when the component reports a stable fixed
+//! point ([`EventDriven::stable`]) and the next scheduled stimulus is
+//! k > 1 cycles away, the run jumps straight to the stimulus cycle
+//! (accounting the skipped cycles via [`EventDriven::fast_forward`]).
+//! Busy cycles are still executed one by one, so the fast-path is
+//! **cycle-exact**: the same schedule replayed in oracle mode (`fast =
+//! false`, every cycle ticked) produces identical component state,
+//! events, and statistics — pinned by `tests/fastpath_equivalence.rs`
+//! over randomized crossbar workloads.
 
 mod trace;
 
@@ -15,6 +31,57 @@ pub trait Tick {
     /// Advance one clock cycle.  `cycle` is the 1-indexed cycle number
     /// being executed (the paper counts "cc 1, cc 2, ..." the same way).
     fn tick(&mut self, cycle: u64);
+}
+
+/// A component the event-driven scheduler can fast-forward.
+pub trait EventDriven: Tick {
+    /// True when the component sits at a fixed point: ticking it cannot
+    /// change any observable state until new external stimulus arrives.
+    /// Implementations must be conservative — returning `false` only
+    /// costs cycles, returning `true` spuriously breaks cycle-exactness.
+    fn stable(&self) -> bool;
+
+    /// Account a jump to `to_cycle` (cycle counters, statistics) without
+    /// executing the skipped cycles.  Only called while [`stable`] holds.
+    ///
+    /// [`stable`]: EventDriven::stable
+    fn fast_forward(&mut self, to_cycle: u64);
+}
+
+/// External stimulus applied at scheduled cycles during a
+/// [`Clock::run_scheduled`] run: each entry runs immediately *before*
+/// its cycle executes, so a job pushed at cycle `t` is latched in cycle
+/// `t` — the same semantics as pushing it by hand and then ticking.
+pub struct Schedule<T> {
+    events: Vec<(u64, Box<dyn FnOnce(&mut T)>)>,
+}
+
+impl<T> Schedule<T> {
+    /// An empty schedule.
+    pub fn new() -> Self {
+        Self { events: Vec::new() }
+    }
+
+    /// Schedule `f` to run immediately before cycle `cycle` executes.
+    pub fn at(&mut self, cycle: u64, f: impl FnOnce(&mut T) + 'static) {
+        self.events.push((cycle, Box::new(f)));
+    }
+
+    /// Number of scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Is the schedule empty?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl<T> Default for Schedule<T> {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// The fabric clock: a monotonically increasing cycle counter with
@@ -41,6 +108,14 @@ impl Clock {
         self.cycle
     }
 
+    /// Jump forward to `cycle` without executing the skipped cycles
+    /// (event-driven fast-path; the component must be fast-forwarded in
+    /// lock-step).
+    pub fn jump_to(&mut self, cycle: u64) {
+        debug_assert!(cycle >= self.cycle, "clock cannot run backwards");
+        self.cycle = cycle;
+    }
+
     /// Run `component` for `n` cycles.
     pub fn run<T: Tick + ?Sized>(&mut self, component: &mut T, n: u64) {
         for _ in 0..n {
@@ -63,6 +138,55 @@ impl Clock {
             if done(component) {
                 return Some(c);
             }
+        }
+        None
+    }
+
+    /// Run `component` under `schedule` until it is stable with no
+    /// stimulus left, or until `max` cycles (executed plus skipped) have
+    /// elapsed.  Returns the cycle at which the run settled, or `None`
+    /// on budget exhaustion.
+    ///
+    /// `fast = false` is the cycle-by-cycle **oracle**: every cycle is
+    /// ticked, including idle gaps between scheduled events.  `fast =
+    /// true` is the event-driven **fast-path**: while the component is
+    /// [`stable`](EventDriven::stable), idle gaps are skipped in one
+    /// jump.  Both modes are cycle-exact and produce identical runs.
+    pub fn run_scheduled<T: EventDriven>(
+        &mut self,
+        component: &mut T,
+        schedule: Schedule<T>,
+        max: u64,
+        fast: bool,
+    ) -> Option<u64> {
+        let mut events = schedule.events;
+        events.sort_by_key(|(cycle, _)| *cycle);
+        let mut it = events.into_iter().peekable();
+        let end = self.cycle + max;
+        while self.cycle < end {
+            if component.stable() {
+                match it.peek().map(|(cycle, _)| *cycle) {
+                    // Settled: stable and nothing left to deliver.
+                    None => return Some(self.cycle),
+                    Some(t) if fast && t > self.cycle + 1 => {
+                        // Idle gap: jump to the cycle before the next
+                        // stimulus so the stimulus cycle itself executes.
+                        let target = (t - 1).min(end);
+                        component.fast_forward(target);
+                        self.jump_to(target);
+                        if self.cycle >= end {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let c = self.advance();
+            while it.peek().map(|(cycle, _)| *cycle <= c).unwrap_or(false) {
+                let (_, stimulus) = it.next().expect("peeked");
+                stimulus(component);
+            }
+            component.tick(c);
         }
         None
     }
@@ -105,5 +229,104 @@ mod tests {
         let mut clk = Clock::new();
         let mut c = Counter { seen: vec![] };
         assert_eq!(clk.run_until(&mut c, 3, |_| false), None);
+    }
+
+    /// Toy event-driven component: a down-counter that is busy for
+    /// `work` ticks after each kick and records which cycles executed
+    /// versus were skipped.
+    struct Worker {
+        work: u64,
+        ticked: Vec<u64>,
+        skipped_to: Vec<u64>,
+        cycle: u64,
+        accounted: u64,
+    }
+
+    impl Worker {
+        fn new() -> Self {
+            Self {
+                work: 0,
+                ticked: vec![],
+                skipped_to: vec![],
+                cycle: 0,
+                accounted: 0,
+            }
+        }
+
+        fn kick(&mut self, work: u64) {
+            self.work += work;
+        }
+    }
+
+    impl Tick for Worker {
+        fn tick(&mut self, cycle: u64) {
+            self.cycle = cycle;
+            self.accounted += 1;
+            self.ticked.push(cycle);
+            if self.work > 0 {
+                self.work -= 1;
+            }
+        }
+    }
+
+    impl EventDriven for Worker {
+        fn stable(&self) -> bool {
+            self.work == 0
+        }
+
+        fn fast_forward(&mut self, to_cycle: u64) {
+            self.accounted += to_cycle - self.cycle;
+            self.cycle = to_cycle;
+            self.skipped_to.push(to_cycle);
+        }
+    }
+
+    #[test]
+    fn scheduled_oracle_ticks_every_cycle() {
+        let mut clk = Clock::new();
+        let mut w = Worker::new();
+        let mut sched = Schedule::new();
+        sched.at(3, |w: &mut Worker| w.kick(2));
+        sched.at(10, |w: &mut Worker| w.kick(1));
+        let settled = clk.run_scheduled(&mut w, sched, 1000, false);
+        assert_eq!(settled, Some(10));
+        assert_eq!(w.ticked, (1..=10).collect::<Vec<u64>>());
+        assert!(w.skipped_to.is_empty());
+        assert_eq!(w.accounted, 10);
+    }
+
+    #[test]
+    fn scheduled_fast_path_skips_idle_gaps_exactly() {
+        let mut clk = Clock::new();
+        let mut w = Worker::new();
+        let mut sched = Schedule::new();
+        sched.at(3, |w: &mut Worker| w.kick(2));
+        sched.at(10, |w: &mut Worker| w.kick(1));
+        let settled = clk.run_scheduled(&mut w, sched, 1000, true);
+        // Identical settle cycle and accounted-cycle total as the oracle.
+        assert_eq!(settled, Some(10));
+        assert_eq!(w.accounted, 10);
+        // Cycles 1..2 and 5..9 were idle: only 3, 4, 10 executed.
+        assert_eq!(w.ticked, vec![3, 4, 10]);
+        assert_eq!(w.skipped_to, vec![2, 9]);
+    }
+
+    #[test]
+    fn scheduled_run_exhausts_budget_when_never_stable() {
+        let mut clk = Clock::new();
+        let mut w = Worker::new();
+        let mut sched = Schedule::new();
+        sched.at(1, |w: &mut Worker| w.kick(1_000_000));
+        assert_eq!(clk.run_scheduled(&mut w, sched, 50, true), None);
+        assert_eq!(clk.now(), 50);
+    }
+
+    #[test]
+    fn immediate_settle_with_empty_schedule() {
+        let mut clk = Clock::new();
+        let mut w = Worker::new();
+        assert_eq!(clk.run_scheduled(&mut w, Schedule::new(), 10, true), Some(0));
+        assert_eq!(clk.run_scheduled(&mut w, Schedule::new(), 10, false), Some(0));
+        assert_eq!(clk.now(), 0);
     }
 }

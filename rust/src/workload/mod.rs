@@ -66,6 +66,29 @@ impl WorkloadSpec {
             tenants: 4,
         }
     }
+
+    /// Fleet-scale mix: small payloads at a high aggregate rate — the
+    /// shape of a many-tenant serving front-end, where per-request fabric
+    /// time is short and scheduling dominates.
+    pub fn fleet_mix() -> Self {
+        Self {
+            // The 1 ms Bernoulli slots cap arrivals at 1000/s; 800/s is a
+            // heavily-loaded front-end without degenerating to the cap.
+            rate_per_s: 800.0,
+            duration_s: 10.0,
+            size_mix: vec![(8, 0.3), (16, 0.3), (32, 0.25), (64, 0.15)],
+            stage_mix: vec![
+                (ModuleKind::pipeline().to_vec(), 0.4),
+                (vec![ModuleKind::Multiplier], 0.25),
+                (vec![ModuleKind::HammingEncoder], 0.2),
+                (
+                    vec![ModuleKind::HammingEncoder, ModuleKind::HammingDecoder],
+                    0.15,
+                ),
+            ],
+            tenants: 4,
+        }
+    }
 }
 
 /// Draw an index from a weighted list.
@@ -81,38 +104,79 @@ fn weighted_pick<T>(rng: &mut SplitMix64, items: &[(T, f64)]) -> usize {
     items.len() - 1
 }
 
-/// Generate a deterministic trace.
+/// Generate a deterministic trace over the spec's duration.
 pub fn generate(spec: &WorkloadSpec, seed: u64) -> Vec<TraceEvent> {
+    let slots = (spec.duration_s * 1000.0).ceil() as u64;
+    generate_inner(spec, seed, Some(slots), None)
+}
+
+/// Generate a deterministic trace with exactly `count` arrivals,
+/// extending past the spec's nominal duration if needed (the fleet
+/// example asks for "100k requests", not "100 seconds").
+pub fn generate_count(
+    spec: &WorkloadSpec,
+    seed: u64,
+    count: usize,
+) -> Vec<TraceEvent> {
+    generate_inner(spec, seed, None, Some(count))
+}
+
+fn generate_inner(
+    spec: &WorkloadSpec,
+    seed: u64,
+    max_slots: Option<u64>,
+    max_events: Option<usize>,
+) -> Vec<TraceEvent> {
     assert!(spec.tenants >= 1 && spec.tenants <= 4, "4 app IDs in the prototype");
     assert!(
         spec.size_mix.iter().all(|(s, _)| s % 8 == 0 && *s > 0),
         "sizes must be positive multiples of the 8-word burst"
     );
+    assert!(
+        max_slots.is_some() || max_events.is_some(),
+        "unbounded trace requested"
+    );
+    assert!(
+        max_slots.is_some() || spec.rate_per_s > 0.0,
+        "count-bounded trace needs a positive arrival rate"
+    );
     let mut rng = SplitMix64::new(seed);
     let mut events = Vec::new();
     // 1 ms slots; Bernoulli(rate * 1ms) arrivals per slot.
-    let slots = (spec.duration_s * 1000.0).ceil() as u64;
     let p = (spec.rate_per_s / 1000.0).min(1.0);
     let mut next_tenant = 0u32;
-    for slot in 0..slots {
-        if !rng.chance(p) {
-            continue;
+    let mut slot = 0u64;
+    loop {
+        if let Some(max) = max_slots {
+            if slot >= max {
+                break;
+            }
         }
-        let jitter = rng.unit_f64();
-        let size = spec.size_mix[weighted_pick(&mut rng, &spec.size_mix)].0;
-        let stages =
-            spec.stage_mix[weighted_pick(&mut rng, &spec.stage_mix)].0.clone();
-        let mut data = vec![0u32; size];
-        rng.fill_u32(&mut data);
-        events.push(TraceEvent {
-            arrival_ms: slot as f64 + jitter,
-            request: AppRequest {
-                app_id: next_tenant % spec.tenants,
-                data,
-                stages,
-            },
-        });
-        next_tenant = next_tenant.wrapping_add(1);
+        if let Some(max) = max_events {
+            if events.len() >= max {
+                break;
+            }
+        }
+        let arrived = rng.chance(p);
+        if arrived {
+            let jitter = rng.unit_f64();
+            let size = spec.size_mix[weighted_pick(&mut rng, &spec.size_mix)].0;
+            let stages = spec.stage_mix[weighted_pick(&mut rng, &spec.stage_mix)]
+                .0
+                .clone();
+            let mut data = vec![0u32; size];
+            rng.fill_u32(&mut data);
+            events.push(TraceEvent {
+                arrival_ms: slot as f64 + jitter,
+                request: AppRequest {
+                    app_id: next_tenant % spec.tenants,
+                    data,
+                    stages,
+                },
+            });
+            next_tenant = next_tenant.wrapping_add(1);
+        }
+        slot += 1;
     }
     events
 }
@@ -192,6 +256,31 @@ mod tests {
         seen.sort_unstable();
         seen.dedup();
         assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn generate_count_yields_exactly_n() {
+        let spec = WorkloadSpec::fleet_mix();
+        let trace = generate_count(&spec, 11, 500);
+        assert_eq!(trace.len(), 500);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn generate_count_is_a_prefix_extension_of_generate() {
+        // Same seed: the duration-bounded trace is a prefix of the
+        // count-bounded one (identical RNG stream per slot).
+        let spec = WorkloadSpec::mixed();
+        let by_duration = generate(&spec, 21);
+        let by_count = generate_count(&spec, 21, by_duration.len() + 50);
+        assert_eq!(by_count.len(), by_duration.len() + 50);
+        for (a, b) in by_duration.iter().zip(&by_count) {
+            assert_eq!(a.arrival_ms, b.arrival_ms);
+            assert_eq!(a.request.data, b.request.data);
+            assert_eq!(a.request.stages, b.request.stages);
+        }
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Event-driven fast-path vs cycle-by-cycle oracle: for randomized 4x4
+//! crossbar workloads with scheduled arrivals, both runs must be
+//! **cycle-identical** — same per-job request/grant/completion cycles,
+//! same delivered words, same statistics (including total cycles: the
+//! fast-path accounts every skipped idle cycle), same settle cycle.
+
+use elastic_fpga::config::CrossbarConfig;
+use elastic_fpga::crossbar::{Crossbar, XbarEvent};
+use elastic_fpga::prop::{check, Gen};
+use elastic_fpga::sim::{Clock, EventDriven, Schedule, Tick};
+use elastic_fpga::util::onehot::encode_onehot;
+use elastic_fpga::wishbone::Job;
+
+/// Crossbar plus an always-draining consumer at every slave port (so
+/// multi-burst workloads never wedge on full rx buffers), recording
+/// deliveries for comparison.
+struct Harness {
+    xb: Crossbar,
+    delivered: Vec<Vec<(u32, usize)>>,
+    events: Vec<XbarEvent>,
+}
+
+impl Harness {
+    fn new(n: usize, cfg: CrossbarConfig) -> Self {
+        let mut xb = Crossbar::new(n, cfg);
+        for m in 0..n {
+            xb.set_allowed_slaves(m, (1u32 << n) - 1);
+        }
+        Self { xb, delivered: vec![Vec::new(); n], events: Vec::new() }
+    }
+}
+
+impl Tick for Harness {
+    fn tick(&mut self, cycle: u64) {
+        self.xb.tick(cycle);
+        for s in 0..self.xb.ports() {
+            let words = self.xb.drain_rx(s, usize::MAX);
+            self.delivered[s].extend(words);
+        }
+        self.events.extend(self.xb.take_events());
+    }
+}
+
+impl EventDriven for Harness {
+    fn stable(&self) -> bool {
+        self.xb.stable_point()
+    }
+
+    fn fast_forward(&mut self, to_cycle: u64) {
+        self.xb.fast_forward(to_cycle);
+    }
+}
+
+/// One randomized workload: jobs with arrival cycles, ports, lengths,
+/// and per-slave WRR budgets.
+#[derive(Clone)]
+struct Workload {
+    jobs: Vec<(u64, usize, u32, Vec<u32>, u32)>, // (cycle, src, dest, words, app)
+    budgets: Vec<(usize, usize, u32)>,           // (slave, master, packages)
+}
+
+fn draw_workload(g: &mut Gen) -> Workload {
+    let jobs = g.int("jobs", 1, 12) as usize;
+    let mut out = Workload { jobs: Vec::new(), budgets: Vec::new() };
+    for s in 0..4usize {
+        for m in 0..4usize {
+            let b = g.int("budget", 1, 32) as u32;
+            out.budgets.push((s, m, b));
+        }
+    }
+    for j in 0..jobs {
+        let cycle = g.int("arrival", 1, 300);
+        let src = g.int("src", 0, 3) as usize;
+        let dest = g.int("dest", 0, 3) as u32;
+        let len = g.int("len", 1, 40) as usize;
+        let words: Vec<u32> = (0..len).map(|k| ((j << 16) + k) as u32).collect();
+        out.jobs.push((cycle, src, dest, words, j as u32 % 4));
+    }
+    out
+}
+
+fn run(w: &Workload, fast: bool) -> (Harness, u64, Option<u64>) {
+    let mut h = Harness::new(4, CrossbarConfig::default());
+    for &(slave, master, packages) in &w.budgets {
+        h.xb.set_allowed_packages(slave, master, packages);
+    }
+    let mut sched: Schedule<Harness> = Schedule::new();
+    for (cycle, src, dest, words, app) in w.jobs.iter().cloned() {
+        sched.at(cycle, move |h: &mut Harness| {
+            h.xb.push_job(src, Job::new(encode_onehot(dest), words, app));
+        });
+    }
+    let mut clk = Clock::new();
+    let settled = clk.run_scheduled(&mut h, sched, 1_000_000, fast);
+    (h, clk.now(), settled)
+}
+
+#[test]
+fn fastpath_equals_oracle_for_100_randomized_workloads() {
+    check(0xFA57_0A7, 100, |g| {
+        let w = draw_workload(g);
+        let (fast, fast_now, fast_settled) = run(&w, true);
+        let (oracle, oracle_now, oracle_settled) = run(&w, false);
+        if fast_settled != oracle_settled {
+            return Err(format!(
+                "settle cycle diverged: fast {fast_settled:?} vs oracle {oracle_settled:?}"
+            ));
+        }
+        if fast_now != oracle_now {
+            return Err(format!(
+                "clock diverged: fast {fast_now} vs oracle {oracle_now}"
+            ));
+        }
+        if fast.events != oracle.events {
+            return Err(format!(
+                "event streams diverged ({} vs {} events)",
+                fast.events.len(),
+                oracle.events.len()
+            ));
+        }
+        if fast.delivered != oracle.delivered {
+            return Err("delivered words diverged".into());
+        }
+        if fast.xb.stats() != oracle.xb.stats() {
+            return Err(format!(
+                "stats diverged: fast {:?} vs oracle {:?}",
+                fast.xb.stats(),
+                oracle.xb.stats()
+            ));
+        }
+        // Sanity: the workload actually completed (settled, all jobs
+        // produced exactly one completion event).
+        if fast_settled.is_none() {
+            return Err("run did not settle within budget".into());
+        }
+        if fast.events.len() != w.jobs.len() {
+            return Err(format!(
+                "{} events for {} jobs",
+                fast.events.len(),
+                w.jobs.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fastpath_skips_are_observable_but_invisible() {
+    // A deterministic spot-check that the fast-path actually skips (the
+    // equivalence above would pass trivially if `stable()` never held).
+    let w = Workload {
+        jobs: vec![
+            (1, 0, 1, (0..8).collect(), 0),
+            (5_000, 2, 3, (0..8).collect(), 1),
+        ],
+        budgets: vec![],
+    };
+    let (fast, now, settled) = run(&w, true);
+    let (oracle, oracle_now, oracle_settled) = run(&w, false);
+    assert_eq!(settled, oracle_settled);
+    assert_eq!(now, oracle_now);
+    assert_eq!(fast.events, oracle.events);
+    // Both accounts show the same total cycles even though the fast run
+    // executed only a handful around each arrival.
+    assert_eq!(fast.xb.stats().cycles, oracle.xb.stats().cycles);
+    assert!(fast.xb.stats().cycles > 5_000, "skip accounting missing");
+}

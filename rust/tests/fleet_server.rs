@@ -1,0 +1,109 @@
+//! Deterministic end-to-end test of the fabric-count-generic server:
+//! a seeded workload through `ElasticServer` with 2 fabrics must
+//! complete every request (zero lost responses), verify every result,
+//! and report per-fabric queue-wait metrics that grow monotonically —
+//! the lane's virtual clock only ever accumulates fabric cycles.
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::fleet::AdmissionPolicy;
+use elastic_fpga::manager::{golden_chain, AppRequest};
+use elastic_fpga::server::{ElasticServer, FleetOptions};
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::workload::{generate_count, WorkloadSpec};
+
+const REQUESTS: usize = 48;
+
+fn seeded_requests() -> Vec<AppRequest> {
+    generate_count(&WorkloadSpec::fleet_mix(), 0xE2E, REQUESTS)
+        .into_iter()
+        .map(|ev| ev.request)
+        .collect()
+}
+
+#[test]
+fn two_fabric_server_completes_seeded_workload_deterministically() {
+    let server = ElasticServer::start_fleet(
+        SystemConfig::paper_defaults(),
+        FleetOptions { fabrics: 2, policy: AdmissionPolicy::StickyByApp },
+        None,
+    );
+    let requests = seeded_requests();
+    let mut rxs = Vec::new();
+    for req in &requests {
+        rxs.push(server.submit(req.clone()).unwrap());
+    }
+
+    // Zero lost responses: every channel yields exactly one response.
+    let mut completions = 0usize;
+    let mut per_fabric_waits: [Vec<u64>; 2] = [Vec::new(), Vec::new()];
+    for (rx, req) in rxs.into_iter().zip(&requests) {
+        let resp = rx.recv().expect("response lost");
+        assert!(rx.try_recv().is_err(), "duplicate response");
+        assert!(resp.fabric < 2, "unknown fabric {}", resp.fabric);
+        let report = resp.report.expect("request failed");
+        assert!(report.verified);
+        assert_eq!(report.output, golden_chain(&req.stages, &req.data));
+        per_fabric_waits[resp.fabric].push(resp.queue_wait_cycles);
+        completions += 1;
+    }
+    assert_eq!(completions, REQUESTS, "total completions");
+
+    // The scheduler thread serializes admissions, so per fabric the
+    // queue-wait cycles (that lane's backlog at admission) are monotone
+    // non-decreasing in submission order.
+    for (fabric, waits) in per_fabric_waits.iter().enumerate() {
+        assert!(!waits.is_empty(), "fabric {fabric} never used");
+        for w in waits.windows(2) {
+            assert!(
+                w[1] >= w[0],
+                "fabric {fabric} queue-wait regressed: {w:?}"
+            );
+        }
+    }
+    server.shutdown();
+
+    // Determinism: a second identical run reports identical queue waits.
+    let server2 = ElasticServer::start_fleet(
+        SystemConfig::paper_defaults(),
+        FleetOptions { fabrics: 2, policy: AdmissionPolicy::StickyByApp },
+        None,
+    );
+    let mut rxs2 = Vec::new();
+    for req in &requests {
+        rxs2.push(server2.submit(req.clone()).unwrap());
+    }
+    let mut per_fabric_waits2: [Vec<u64>; 2] = [Vec::new(), Vec::new()];
+    for rx in rxs2 {
+        let resp = rx.recv().expect("response lost");
+        per_fabric_waits2[resp.fabric].push(resp.queue_wait_cycles);
+    }
+    assert_eq!(per_fabric_waits, per_fabric_waits2, "run not deterministic");
+    server2.shutdown();
+}
+
+#[test]
+fn sticky_policy_keeps_each_app_on_one_fabric() {
+    let server = ElasticServer::start_fleet(
+        SystemConfig::paper_defaults(),
+        FleetOptions { fabrics: 2, policy: AdmissionPolicy::StickyByApp },
+        None,
+    );
+    let mut rng = SplitMix64::new(5);
+    let mut rxs = Vec::new();
+    for i in 0..24u64 {
+        let mut data = vec![0u32; 64];
+        rng.fill_u32(&mut data);
+        rxs.push(
+            server.submit(AppRequest::pipeline((i % 4) as u32, data)).unwrap(),
+        );
+    }
+    let mut app_fabric: [Option<usize>; 4] = [None; 4];
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let app = (i % 4) as usize;
+        let pinned = *app_fabric[app].get_or_insert(resp.fabric);
+        assert_eq!(resp.fabric, pinned, "app {app} moved fabrics");
+        assert!(resp.report.is_ok());
+    }
+    server.shutdown();
+}

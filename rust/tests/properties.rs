@@ -263,6 +263,155 @@ fn prop_manager_any_stage_chain_verifies() {
 }
 
 #[test]
+fn prop_wrr_share_matches_package_weights_within_one_grant() {
+    // Two saturated masters with arbitrary package budgets b0, b1: over
+    // any window of the grant sequence, each master's delivered share
+    // matches its configured package-count weight within ±1 grant —
+    // i.e. every grant delivers *exactly* the master's budget, and at
+    // any prefix of the sequence the masters' grant counts differ by at
+    // most one.
+    check(0x77AA, 48, |g: &mut Gen| {
+        let b0 = g.int("b0", 1, 16) as u32;
+        let b1 = g.int("b1", 1, 16) as u32;
+        let rounds = 12u32;
+        let mut xb = open_xbar(4);
+        xb.set_record_grants(true);
+        xb.set_allowed_packages(2, 0, b0);
+        xb.set_allowed_packages(2, 1, b1);
+        // Job lengths are exact multiples of the budgets, so both
+        // masters stay saturated for `rounds` full grants each.
+        xb.push_job(0, Job::new(encode_onehot(2), vec![0xA; (b0 * rounds) as usize], 0));
+        xb.push_job(1, Job::new(encode_onehot(2), vec![0xB; (b1 * rounds) as usize], 1));
+        let (events, delivered) = run_draining(&mut xb, 2_000_000);
+        if events.iter().any(|e| e.result.is_err()) {
+            return Err("error event".into());
+        }
+        if delivered[2].len() != ((b0 + b1) * rounds) as usize {
+            return Err(format!("lost words: {}", delivered[2].len()));
+        }
+        let log = xb.grant_log();
+        let budget = |m: usize| if m == 0 { b0 } else { b1 };
+        let mut counts = [0u32; 2];
+        for rec in log {
+            if rec.slave != 2 {
+                return Err(format!("grant on unexpected slave {}", rec.slave));
+            }
+            if rec.words != budget(rec.master) {
+                return Err(format!(
+                    "grant delivered {} words, master {} weight is {}",
+                    rec.words,
+                    rec.master,
+                    budget(rec.master)
+                ));
+            }
+            counts[rec.master] += 1;
+            // ±1: at every prefix the grant counts stay within one of
+            // each other while both masters are backlogged; once one
+            // finishes its `rounds` grants the other may finish alone.
+            let diff = counts[0].abs_diff(counts[1]);
+            if counts[0] < rounds && counts[1] < rounds && diff > 1 {
+                return Err(format!(
+                    "share skew: {counts:?} after {} grants (b0={b0} b1={b1})",
+                    counts[0] + counts[1]
+                ));
+            }
+        }
+        if counts != [rounds, rounds] {
+            return Err(format!("grant totals {counts:?}, expected {rounds} each"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_destination_absent_from_regfile_is_masked_never_granted() {
+    // Program the register-file isolation masks randomly and mirror
+    // them into the crossbar (the fabric's sync path).  A request to a
+    // destination absent from the master's allowed-addresses register
+    // must error in the master interface and never reach a grant: its
+    // event carries InvalidDestination with grant_cycle == 0, and no
+    // word of it is ever delivered.
+    check(0x150A, 64, |g: &mut Gen| {
+        use elastic_fpga::regfile::RegisterFile;
+        let n = 4usize;
+        let mut cfg = CrossbarConfig::default();
+        cfg.grant_timeout = 1_000_000;
+        let mut xb = Crossbar::new(n, cfg);
+        let mut rf = RegisterFile::new();
+        for m in 0..n {
+            rf.set_allowed_slaves(m, g.int("mask", 0, 15) as u32);
+        }
+        for m in 0..n {
+            xb.set_allowed_slaves(m, rf.allowed_slaves(m));
+        }
+        let jobs = g.int("jobs", 1, 10) as usize;
+        let mut expected_rejects = 0usize;
+        for j in 0..jobs {
+            let src = g.int("src", 0, 3) as usize;
+            // Destinations may also fall outside the port range (one-hot
+            // bits 4..7): always absent, always masked.
+            let dst = g.int("dst", 0, 7) as u32;
+            let allowed = (dst as usize) < n
+                && rf.allowed_slaves(src) >> dst & 1 == 1;
+            if !allowed {
+                expected_rejects += 1;
+            }
+            xb.push_job(
+                src,
+                Job::new(encode_onehot(dst), vec![j as u32; 4], 0),
+            );
+        }
+        let mut clk = Clock::new();
+        let mut events = Vec::new();
+        let mut delivered: Vec<Vec<(u32, usize)>> = vec![Vec::new(); n];
+        for _ in 0..1_000_000u64 {
+            let c = clk.advance();
+            xb.tick(c);
+            for s in 0..n {
+                delivered[s].extend(xb.drain_rx(s, usize::MAX));
+            }
+            events.extend(xb.take_events());
+            if xb.quiescent() {
+                break;
+            }
+        }
+        let rejected: Vec<_> = events
+            .iter()
+            .filter(|e| e.result == Err(elastic_fpga::wishbone::WbError::InvalidDestination))
+            .collect();
+        if rejected.len() != expected_rejects {
+            return Err(format!(
+                "{} rejects, expected {expected_rejects}",
+                rejected.len()
+            ));
+        }
+        for e in &rejected {
+            if e.grant_cycle != 0 {
+                return Err(format!(
+                    "masked request was granted at cycle {}",
+                    e.grant_cycle
+                ));
+            }
+            if e.words != 0 {
+                return Err("masked request delivered words".into());
+            }
+        }
+        // And nothing landed at a slave from a master whose register
+        // does not include it.
+        for s in 0..n {
+            for &(_, src) in &delivered[s] {
+                if rf.allowed_slaves(src) >> s & 1 == 0 {
+                    return Err(format!(
+                        "slave {s} received a word from masked master {src}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_hamming_code_distance_at_least_3() {
     // Random distinct payload pairs: codewords differ in >= 3 bits
     // (single-error correction requires minimum distance 3).
