@@ -20,8 +20,8 @@ use elastic_fpga::wishbone::Job;
 /// Run two greedy masters (0 and 1) into slave 3 for `cycles`, with the
 /// given WRR package budgets; returns words delivered per master.
 fn contend(budget0: u32, budget1: u32, cycles: u64) -> (u64, u64) {
-    let mut cfg = CrossbarConfig::default();
-    cfg.grant_timeout = 1_000_000;
+    let cfg =
+        CrossbarConfig { grant_timeout: 1_000_000, ..CrossbarConfig::default() };
     let mut xb = Crossbar::new(4, cfg);
     for m in 0..4 {
         xb.set_allowed_slaves(m, 0b1111);

@@ -17,8 +17,10 @@ use elastic_fpga::wishbone::Job;
 use elastic_fpga::xdma::H2cBurst;
 
 fn xbar_loop(cycles: u64) -> f64 {
-    let mut cfg = CrossbarConfig::default();
-    cfg.grant_timeout = u64::MAX / 2;
+    let cfg = CrossbarConfig {
+        grant_timeout: u64::MAX / 2,
+        ..CrossbarConfig::default()
+    };
     let mut xb = Crossbar::new(4, cfg);
     for m in 0..4 {
         xb.set_allowed_slaves(m, 0b1111);

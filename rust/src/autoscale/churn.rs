@@ -1,0 +1,141 @@
+//! Churn model: boards joining/leaving and regions fenced offline
+//! mid-trace — the k8s-style dynamics the ROADMAP calls for.
+//!
+//! A [`ChurnTrace`] is a time-ordered list of events the engine applies
+//! at its control-tick boundaries (the cadence at which a real control
+//! plane would observe node heartbeats).  Semantics are **graceful**:
+//! work already dispatched to a leaving board completes (drain), the
+//! board's reservations are then released and fenced, and — in reactive
+//! mode — the actuator re-places the lost capacity on surviving boards.
+
+use crate::util::SplitMix64;
+
+/// One churn event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// The board leaves: slices drain, regions fence `Offline`.
+    NodeDown {
+        /// Fleet node index.
+        node: usize,
+    },
+    /// The board rejoins empty (all its regions unfenced).
+    NodeUp {
+        /// Fleet node index.
+        node: usize,
+    },
+    /// Fence up to `regions` *available* regions on a live board
+    /// (reserved regions are never ripped out from under an app).
+    Fence {
+        /// Fleet node index.
+        node: usize,
+        /// Regions to fence.
+        regions: usize,
+    },
+    /// Unfence up to `regions` churn-fenced regions on a live board.
+    Unfence {
+        /// Fleet node index.
+        node: usize,
+        /// Regions to restore.
+        regions: usize,
+    },
+}
+
+/// A deterministic, time-ordered churn schedule (times in trace ms).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChurnTrace {
+    /// `(at_ms, event)` pairs, non-decreasing in time.
+    pub events: Vec<(f64, ChurnEvent)>,
+}
+
+impl ChurnTrace {
+    /// No churn.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// One outage of `node`: down at `down_ms`, back at `up_ms`.
+    pub fn outage(node: usize, down_ms: f64, up_ms: f64) -> Self {
+        assert!(down_ms < up_ms);
+        Self {
+            events: vec![
+                (down_ms, ChurnEvent::NodeDown { node }),
+                (up_ms, ChurnEvent::NodeUp { node }),
+            ],
+        }
+    }
+
+    /// Seeded synthetic churn over `duration_ms`: 1-2 board outages
+    /// (never node 0, so the fleet keeps a capacity floor) plus 1-2
+    /// region fence/unfence windows, all bounded inside the trace.
+    pub fn generate(seed: u64, nodes: usize, duration_ms: f64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut events = Vec::new();
+        if nodes > 1 {
+            let outages = 1 + rng.below(2) as usize;
+            for _ in 0..outages {
+                let node = 1 + rng.below_usize(nodes - 1);
+                let start = rng.unit_f64() * 0.6 * duration_ms;
+                let len = (0.1 + 0.2 * rng.unit_f64()) * duration_ms;
+                events.push((start, ChurnEvent::NodeDown { node }));
+                events.push((
+                    (start + len).min(duration_ms * 0.95),
+                    ChurnEvent::NodeUp { node },
+                ));
+            }
+        }
+        let fences = 1 + rng.below(2) as usize;
+        for _ in 0..fences {
+            let node = rng.below_usize(nodes);
+            let regions = 1 + rng.below_usize(2);
+            let start = rng.unit_f64() * 0.7 * duration_ms;
+            let len = (0.1 + 0.2 * rng.unit_f64()) * duration_ms;
+            events.push((start, ChurnEvent::Fence { node, regions }));
+            events.push((
+                (start + len).min(duration_ms * 0.95),
+                ChurnEvent::Unfence { node, regions },
+            ));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Self { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_churn_is_deterministic_ordered_and_bounded() {
+        let a = ChurnTrace::generate(11, 5, 10_000.0);
+        let b = ChurnTrace::generate(11, 5, 10_000.0);
+        assert_eq!(a, b);
+        assert!(!a.events.is_empty());
+        for w in a.events.windows(2) {
+            assert!(w[0].0 <= w[1].0, "events out of order");
+        }
+        for (at, ev) in &a.events {
+            assert!(*at >= 0.0 && *at <= 10_000.0);
+            match *ev {
+                ChurnEvent::NodeDown { node } | ChurnEvent::NodeUp { node } => {
+                    assert!((1..5).contains(&node), "node 0 must stay up");
+                }
+                ChurnEvent::Fence { node, regions }
+                | ChurnEvent::Unfence { node, regions } => {
+                    assert!(node < 5);
+                    assert!((1..=2).contains(&regions));
+                }
+            }
+        }
+        // Different seeds differ.
+        assert_ne!(a, ChurnTrace::generate(12, 5, 10_000.0));
+    }
+
+    #[test]
+    fn outage_helper_orders_events() {
+        let t = ChurnTrace::outage(2, 100.0, 400.0);
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[0], (100.0, ChurnEvent::NodeDown { node: 2 }));
+        assert_eq!(t.events[1], (400.0, ChurnEvent::NodeUp { node: 2 }));
+        assert!(ChurnTrace::none().events.is_empty());
+    }
+}

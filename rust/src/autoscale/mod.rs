@@ -1,0 +1,1165 @@
+//! Closed-loop elasticity control plane: the paper's *envisioned
+//! resource manager* ("can increase or decrease the number of PR regions
+//! allocated to an application based on its acceleration requirements
+//! and PR regions' availability", §VI), realized as a demand-driven
+//! autoscaler above the board [`crate::cluster`] and its per-board
+//! [`crate::manager`]s (the same substrate [`crate::fleet`] schedules;
+//! the threaded [`crate::server`] runs the lane-level on-line variant).
+//!
+//! The loop has the classic four parts (DESIGN.md §9):
+//!
+//! 1. **Monitor** ([`DemandMonitor`]) — per-app windowed signals from
+//!    [`crate::metrics`]: queue depth at the tick, arrival-rate EWMA,
+//!    p99 / mean / EWMA queue waits.
+//! 2. **Policy** ([`ScalingPolicy`]) — threshold + hysteresis decisions
+//!    mapping demand to a target PR-region count; two implementations
+//!    ship ([`TargetQueueDepth`], [`LatencySlo`]).
+//! 3. **Actuator** — steps allocations toward the target: every grow
+//!    programs regions through the **timed, serialized ICAP model**
+//!    ([`crate::manager::ElasticManager::reserve_region`]) and every
+//!    shrink drains then blanks them
+//!    ([`crate::manager::ElasticManager::blank_region`]); every
+//!    transition reprograms the register file's destination addresses
+//!    and WRR package weights
+//!    ([`crate::manager::ElasticManager::program_app_chain`]).  Grows
+//!    prefer topping up partial slices (defragmentation) before opening
+//!    a chain on a new board; churn re-placement migrates lost chains
+//!    across fabrics.
+//! 4. **Churn** ([`ChurnTrace`]) — boards leaving/joining and regions
+//!    fenced `Offline` mid-trace, applied gracefully (dispatched work
+//!    drains; nothing is preempted).
+//!
+//! Serving runs in virtual fabric cycles between control ticks, exactly
+//! like the fleet simulator: each app owns *slices* (a chain of reserved
+//! regions on one board, at most one slice per board) plus one on-server
+//! CPU lane; a request goes to the lane that completes it earliest, with
+//! service times from the memoized cycle-accurate oracle ([`CostModel`]).
+//! A static-allocation baseline (same engine, `reactive = false`, even
+//! region split) quantifies what the closed loop buys: strictly higher
+//! PR-region utilization at equal-or-better p99 queue wait on
+//! diurnal-with-churn traces — pinned by `rust/tests/autoscale.rs` and
+//! demonstrated at 100k-request scale by `examples/autoscale_serving.rs`.
+
+mod churn;
+mod cost;
+mod monitor;
+mod policy;
+
+pub use churn::{ChurnEvent, ChurnTrace};
+pub use cost::CostModel;
+pub use monitor::{DemandMonitor, DemandSignals};
+pub use policy::{
+    DemandSnapshot, LatencySlo, PolicyKind, ScalingPolicy, StaticPolicy,
+    TargetQueueDepth,
+};
+
+use std::cmp::Ordering;
+
+use crate::cluster::{Cluster, PlacementPolicy};
+use crate::config::SystemConfig;
+use crate::manager::{AppRequest, RegionState};
+use crate::metrics::CycleRecorder;
+use crate::modules::ModuleKind;
+use crate::workload::{self, TraceEvent};
+use crate::Result;
+
+/// What a recorded allocation transition was.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransitionKind {
+    /// Regions added to an app (policy decision or churn re-placement).
+    Grow,
+    /// Regions drained, blanked and returned to the pool.
+    Shrink,
+    /// Hardware-driven change (board loss, static re-install on rejoin).
+    Churn,
+}
+
+/// One recorded grow/shrink/churn transition: the placement history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    /// Virtual cycle the decision was actuated at.
+    pub at_cycle: u64,
+    /// Application whose allocation changed.
+    pub app_id: u32,
+    /// Board the regions live on.
+    pub node: usize,
+    /// Regions added (grow) or removed (shrink/churn).
+    pub regions: Vec<usize>,
+    /// Transition kind.
+    pub kind: TransitionKind,
+    /// Indices into [`AutoscaleReport::icap_events`] for the ICAP
+    /// programmings this transition scheduled.
+    pub icap_events: Vec<usize>,
+    /// Node regfile write-generation before/after: `after > before`
+    /// proves the transition reprogrammed destinations + WRR weights.
+    pub regfile_before: u64,
+    pub regfile_after: u64,
+}
+
+/// What an ICAP programming event wrote.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IcapEventKind {
+    /// A module bitstream instantiating `ModuleKind`.
+    Program(ModuleKind),
+    /// A blanking (grey-box) bitstream decoupling the region.
+    Blank,
+}
+
+/// One serialized ICAP programming on one board.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IcapEvent {
+    /// Board whose single ICAP port served the programming.
+    pub node: usize,
+    /// Target PR region.
+    pub region: usize,
+    /// Owning application.
+    pub app_id: u32,
+    /// Bitstream kind.
+    pub kind: IcapEventKind,
+    /// Virtual cycle the ICAP began streaming (respects the port's
+    /// serialization: never overlaps another event on the same node).
+    pub start_cycle: u64,
+    /// Virtual cycle programming completed.
+    pub end_cycle: u64,
+}
+
+/// Engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Control-loop period in virtual milliseconds.
+    pub tick_ms: f64,
+    /// Ticks an app must wait between policy-driven transitions.
+    pub cooldown_ticks: u64,
+    /// Full slices per app at t = 0 in reactive mode.
+    pub initial_full_slices: usize,
+    /// Explicit per-app initial region count (overrides the mode rule:
+    /// reactive starts at `initial_full_slices` chains, static splits
+    /// the fleet's regions evenly).
+    pub initial_regions_per_app: Option<usize>,
+    /// Queue-wait SLO for the attainment metric, in milliseconds.
+    pub slo_wait_ms: f64,
+    /// EWMA smoothing factor for the demand monitor.
+    pub ewma_alpha: f64,
+    /// `false` = static baseline: no policy actuation, no churn
+    /// re-placement (lost boards restore their original slices on
+    /// rejoin, as a fixed partitioning would).
+    pub reactive: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self {
+            tick_ms: 100.0,
+            cooldown_ticks: 2,
+            initial_full_slices: 1,
+            initial_regions_per_app: None,
+            slo_wait_ms: 25.0,
+            ewma_alpha: 0.3,
+            reactive: true,
+        }
+    }
+}
+
+/// Aggregate result of one engine run.
+#[derive(Debug)]
+pub struct AutoscaleReport {
+    /// Policy that drove the run.
+    pub policy: String,
+    /// Requests served (all of them; the engine loses none).
+    pub completed: u64,
+    /// Virtual cycle of the last completion.
+    pub makespan_cycles: u64,
+    /// Queue-wait distribution (start - arrival).
+    pub queue_wait: CycleRecorder,
+    /// End-to-end latency distribution (completion - arrival).
+    pub latency: CycleRecorder,
+    /// Fraction of requests whose queue wait met the SLO.
+    pub slo_attainment: f64,
+    /// Region-cycles held by in-service work over alive region-cycles:
+    /// the PR-region utilization the autoscaler maximizes.
+    pub utilization: f64,
+    /// Numerator of [`utilization`](Self::utilization).
+    pub busy_region_cycles: u64,
+    /// Denominator of [`utilization`](Self::utilization).
+    pub capacity_region_cycles: u64,
+    /// Requests served on a fabric slice / on the app's CPU lane.
+    pub fabric_requests: u64,
+    pub cpu_requests: u64,
+    /// Policy-driven grow / shrink transitions actuated.
+    pub grows: u64,
+    pub shrinks: u64,
+    /// Full placement history, in actuation order.
+    pub transitions: Vec<Transition>,
+    /// Every ICAP programming, serialized per board.
+    pub icap_events: Vec<IcapEvent>,
+    /// Final region map per node (index 0 is the unused placeholder).
+    pub final_regions: Vec<Vec<RegionState>>,
+    /// Cycle-accurate oracle executions the cost model needed.
+    pub oracle_runs: u64,
+}
+
+/// One reserved chain on one board.
+#[derive(Debug, Clone)]
+struct Slice {
+    node: usize,
+    /// Regions in chain order (stage i runs in `regions[i]`).
+    regions: Vec<usize>,
+    /// Virtual cycle the slice's backlog drains.
+    busy_until: u64,
+    /// Virtual cycle its last ICAP programming completes.
+    available_at: u64,
+}
+
+/// Per-app control-plane state.
+struct AppState {
+    chain: Vec<ModuleKind>,
+    slices: Vec<Slice>,
+    cpu_busy_until: u64,
+    monitor: DemandMonitor,
+    cooldown_until_tick: u64,
+}
+
+/// The closed-loop engine.
+pub struct Engine {
+    cfg: SystemConfig,
+    cluster: Cluster,
+    cost: CostModel,
+    policy: Box<dyn ScalingPolicy>,
+    opts: EngineOptions,
+    apps: Vec<AppState>,
+    node_alive: Vec<bool>,
+    /// Per-node virtual cycle the single ICAP port frees.
+    icap_free_at: Vec<u64>,
+    /// Per-(node, region) virtual cycle a blanked region becomes
+    /// reprogrammable.
+    region_free_at: Vec<Vec<u64>>,
+    initial_layout: Vec<(u32, usize, usize)>,
+    transitions: Vec<Transition>,
+    icap_events: Vec<IcapEvent>,
+    queue_wait: CycleRecorder,
+    latency: CycleRecorder,
+    busy_region_cycles: u64,
+    capacity_marks: Vec<(u64, usize)>,
+    /// Drain-tail region-cycles of boards that left while backlogged:
+    /// their dispatched work completes during the graceful drain, so
+    /// those region-cycles stay in the utilization denominator even
+    /// though the capacity marks drop at the outage instant.
+    capacity_extra: u64,
+    makespan: u64,
+    fabric_requests: u64,
+    cpu_requests: u64,
+    grows: u64,
+    shrinks: u64,
+    slo_ok: u64,
+    slo_cycles: u64,
+    tick_index: u64,
+    ran: bool,
+}
+
+impl Engine {
+    /// Build a control plane over `nodes` boards serving `tenants` apps.
+    pub fn new(
+        cfg: &SystemConfig,
+        nodes: usize,
+        tenants: usize,
+        policy: Box<dyn ScalingPolicy>,
+        opts: EngineOptions,
+    ) -> Self {
+        assert!(nodes >= 1, "need at least one board");
+        assert!((1..=4).contains(&tenants), "4 app IDs in the prototype");
+        assert!(
+            cfg.fabric.num_pr_regions <= crate::regfile::MAX_PR_REGIONS,
+            "the actuator programs through Table III (regions 1..={})",
+            crate::regfile::MAX_PR_REGIONS
+        );
+        let cluster =
+            Cluster::launch(nodes, cfg, None, PlacementPolicy::MostAvailable);
+        let apps = (0..tenants)
+            .map(|_| AppState {
+                chain: ModuleKind::pipeline().to_vec(),
+                slices: Vec::new(),
+                cpu_busy_until: 0,
+                monitor: DemandMonitor::new(opts.ewma_alpha),
+                cooldown_until_tick: 0,
+            })
+            .collect();
+        Self {
+            cost: CostModel::new(cfg),
+            cluster,
+            policy,
+            opts,
+            apps,
+            node_alive: vec![true; nodes],
+            icap_free_at: vec![0; nodes],
+            region_free_at: vec![
+                vec![0; cfg.fabric.num_pr_regions + 1];
+                nodes
+            ],
+            initial_layout: Vec::new(),
+            transitions: Vec::new(),
+            icap_events: Vec::new(),
+            queue_wait: CycleRecorder::new(),
+            latency: CycleRecorder::new(),
+            busy_region_cycles: 0,
+            capacity_marks: Vec::new(),
+            capacity_extra: 0,
+            makespan: 0,
+            fabric_requests: 0,
+            cpu_requests: 0,
+            grows: 0,
+            shrinks: 0,
+            slo_ok: 0,
+            slo_cycles: 0,
+            tick_index: 0,
+            ran: false,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// The underlying board cluster (read-only).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Run an arrival-ordered trace under a churn schedule to completion.
+    /// One-shot: build a fresh engine per run.
+    pub fn run(
+        &mut self,
+        trace: &[TraceEvent],
+        churn: &ChurnTrace,
+    ) -> Result<AutoscaleReport> {
+        assert!(!self.ran, "engines are one-shot; build a fresh one per run");
+        self.ran = true;
+        let cycles_per_ms = self.cfg.fabric.clock_mhz * 1000.0;
+        self.slo_cycles = (self.opts.slo_wait_ms * cycles_per_ms).round() as u64;
+        self.infer_chains(trace);
+        self.initial_allocation()?;
+        self.capacity_marks.push((0, self.alive_region_capacity()));
+
+        let tick_cycles = (self.opts.tick_ms * cycles_per_ms).round().max(1.0) as u64;
+        let mut churn_events = churn.events.clone();
+        churn_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut next_churn = 0usize;
+        let mut next_tick = tick_cycles;
+        for ev in trace {
+            let arrival = (ev.arrival_ms * cycles_per_ms).round() as u64;
+            while next_tick <= arrival {
+                self.apply_churn(&churn_events, &mut next_churn, next_tick, cycles_per_ms)?;
+                self.control_tick(next_tick)?;
+                next_tick += tick_cycles;
+            }
+            self.dispatch(arrival, &ev.request)?;
+        }
+        // Drain churn scheduled between the last control tick and trace
+        // end, so the final region map honors the whole schedule.
+        self.apply_churn(&churn_events, &mut next_churn, u64::MAX, cycles_per_ms)?;
+        Ok(self.build_report())
+    }
+
+    // ------------------------------------------------------------------
+    // serving (virtual time)
+    // ------------------------------------------------------------------
+
+    /// Route one request to the lane (fabric slice or the app's CPU
+    /// lane) that completes it earliest, charging virtual time.
+    fn dispatch(&mut self, arrival: u64, req: &AppRequest) -> Result<()> {
+        let app_idx = req.app_id as usize;
+        assert!(app_idx < self.apps.len(), "app {} beyond tenants", req.app_id);
+        let words = req.data.len();
+        // (completion, start, lane, service, regions_held); lane = None
+        // is the CPU lane.  Fabric candidates are scanned first so exact
+        // ties prefer the fabric.
+        let mut best: Option<(u64, u64, Option<usize>, u64, u64)> = None;
+        let lanes: Vec<(usize, usize, u64, u64)> = self.apps[app_idx]
+            .slices
+            .iter()
+            .map(|s| (s.node, s.regions.len(), s.busy_until, s.available_at))
+            .collect();
+        for (i, &(node, held, busy_until, available_at)) in
+            lanes.iter().enumerate()
+        {
+            if !self.node_alive[node] {
+                continue;
+            }
+            let fpga = held.min(req.stages.len());
+            let service =
+                self.cost.service_cycles(&self.cfg, &req.stages, words, fpga)?;
+            let start = arrival.max(busy_until).max(available_at);
+            let completion = start + service;
+            let better = match best {
+                None => true,
+                Some((bc, bs, _, _, _)) => (completion, start) < (bc, bs),
+            };
+            if better {
+                best = Some((completion, start, Some(i), service, held as u64));
+            }
+        }
+        let cpu_service =
+            self.cost.service_cycles(&self.cfg, &req.stages, words, 0)?;
+        let cpu_start = arrival.max(self.apps[app_idx].cpu_busy_until);
+        let cpu_completion = cpu_start + cpu_service;
+        let cpu_better = match best {
+            None => true,
+            Some((bc, bs, _, _, _)) => (cpu_completion, cpu_start) < (bc, bs),
+        };
+        if cpu_better {
+            best = Some((cpu_completion, cpu_start, None, cpu_service, 0));
+        }
+
+        let (completion, start, lane, service, held) =
+            best.expect("at least the CPU lane exists");
+        match lane {
+            Some(i) => {
+                self.apps[app_idx].slices[i].busy_until = completion;
+                self.busy_region_cycles += service * held;
+                self.fabric_requests += 1;
+            }
+            None => {
+                self.apps[app_idx].cpu_busy_until = completion;
+                self.cpu_requests += 1;
+            }
+        }
+        let wait = start - arrival;
+        self.queue_wait.record(wait);
+        self.latency.record(completion - arrival);
+        if wait <= self.slo_cycles {
+            self.slo_ok += 1;
+        }
+        self.apps[app_idx].monitor.on_dispatch(start, wait);
+        if completion > self.makespan {
+            self.makespan = completion;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // control loop
+    // ------------------------------------------------------------------
+
+    fn control_tick(&mut self, t: u64) -> Result<()> {
+        self.tick_index += 1;
+        let window_s = self.opts.tick_ms / 1e3;
+        for app in 0..self.apps.len() {
+            let signals = self.apps[app].monitor.observe(t, window_s);
+            let (slices, regions, chain_len) = {
+                let a = &self.apps[app];
+                (
+                    a.slices.len(),
+                    a.slices.iter().map(|s| s.regions.len()).sum::<usize>(),
+                    a.chain.len(),
+                )
+            };
+            let snap = DemandSnapshot {
+                app_id: app as u32,
+                signals,
+                slices,
+                regions,
+                chain_len,
+            };
+            let target = self.policy.target_regions(&snap);
+            if !self.opts.reactive
+                || self.tick_index < self.apps[app].cooldown_until_tick
+            {
+                continue;
+            }
+            match target.cmp(&regions) {
+                Ordering::Greater => {
+                    let got = self.grow(
+                        t,
+                        app as u32,
+                        target - regions,
+                        TransitionKind::Grow,
+                    )?;
+                    if got > 0 {
+                        // Counted here, not in the actuator: `grows` is
+                        // the number of *policy* decisions that landed
+                        // (t=0 installs and churn re-placement record
+                        // transitions but are not loop decisions).
+                        self.grows += 1;
+                        self.apps[app].cooldown_until_tick =
+                            self.tick_index + self.opts.cooldown_ticks;
+                    }
+                }
+                Ordering::Less => {
+                    if self.shrink(t, app as u32, regions - target)? > 0 {
+                        self.shrinks += 1;
+                        self.apps[app].cooldown_until_tick =
+                            self.tick_index + self.opts.cooldown_ticks;
+                    }
+                }
+                Ordering::Equal => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn infer_chains(&mut self, trace: &[TraceEvent]) {
+        for ev in trace {
+            let app = ev.request.app_id as usize;
+            assert!(app < self.apps.len(), "trace app beyond tenants");
+            if ev.request.stages.len() > self.apps[app].chain.len() {
+                self.apps[app].chain = ev.request.stages.clone();
+            }
+        }
+    }
+
+    fn initial_allocation(&mut self) -> Result<()> {
+        let total = self.cluster.node_count()
+            * self.cfg.fabric.num_pr_regions;
+        for app in 0..self.apps.len() {
+            let chain_len = self.apps[app].chain.len();
+            let want = self.opts.initial_regions_per_app.unwrap_or(
+                if self.opts.reactive {
+                    self.opts.initial_full_slices * chain_len
+                } else {
+                    total / self.apps.len()
+                },
+            );
+            self.grow(0, app as u32, want, TransitionKind::Grow)?;
+        }
+        let mut layout = Vec::new();
+        for (a, app) in self.apps.iter().enumerate() {
+            for s in &app.slices {
+                layout.push((a as u32, s.node, s.regions.len()));
+            }
+        }
+        self.initial_layout = layout;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // actuator
+    // ------------------------------------------------------------------
+
+    /// Add up to `want` regions to `app`: top up partial slices first
+    /// (defragmentation), then open chains on boards with free regions.
+    /// Returns how many regions were actually added.
+    fn grow(
+        &mut self,
+        t: u64,
+        app: u32,
+        want: usize,
+        kind: TransitionKind,
+    ) -> Result<usize> {
+        let mut remaining = want;
+        let chain_len = self.apps[app as usize].chain.len();
+        for i in 0..self.apps[app as usize].slices.len() {
+            if remaining == 0 {
+                break;
+            }
+            let (node, len) = {
+                let s = &self.apps[app as usize].slices[i];
+                (s.node, s.regions.len())
+            };
+            if !self.node_alive[node] || len >= chain_len {
+                continue;
+            }
+            let take = (chain_len - len).min(remaining);
+            remaining -= self.extend_slice(t, app, i, take, kind)?;
+        }
+        while remaining > 0 {
+            let Some(node) = self.pick_node_for_new_slice(app) else {
+                break;
+            };
+            let take = remaining.min(chain_len);
+            let got = self.create_slice_on(t, app, node, take, kind)?;
+            if got == 0 {
+                break;
+            }
+            remaining -= got;
+        }
+        Ok(want - remaining)
+    }
+
+    /// The alive board with the most free regions that doesn't already
+    /// host a slice of `app` (one slice per board per app).
+    fn pick_node_for_new_slice(&self, app: u32) -> Option<usize> {
+        let a = &self.apps[app as usize];
+        let mut best: Option<(usize, usize)> = None; // (avail, node)
+        for node in 0..self.cluster.node_count() {
+            if !self.node_alive[node]
+                || a.slices.iter().any(|s| s.node == node)
+            {
+                continue;
+            }
+            let avail = self.cluster.nodes()[node].available_regions();
+            if avail == 0 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((ba, _)) => avail > ba,
+            };
+            if better {
+                best = Some((avail, node));
+            }
+        }
+        best.map(|(_, node)| node)
+    }
+
+    fn create_slice_on(
+        &mut self,
+        t: u64,
+        app: u32,
+        node: usize,
+        count: usize,
+        kind: TransitionKind,
+    ) -> Result<usize> {
+        self.apps[app as usize].slices.push(Slice {
+            node,
+            regions: Vec::new(),
+            busy_until: 0,
+            available_at: 0,
+        });
+        let idx = self.apps[app as usize].slices.len() - 1;
+        let got = self.extend_slice(t, app, idx, count, kind)?;
+        if got == 0 {
+            self.apps[app as usize].slices.pop();
+        }
+        Ok(got)
+    }
+
+    /// Program `count` more regions into an existing slice through the
+    /// node's serialized ICAP, then reprogram the chain's destinations
+    /// and WRR weights.  Returns the number of regions added.
+    fn extend_slice(
+        &mut self,
+        t: u64,
+        app: u32,
+        slice_idx: usize,
+        count: usize,
+        kind: TransitionKind,
+    ) -> Result<usize> {
+        let node = self.apps[app as usize].slices[slice_idx].node;
+        let picks: Vec<usize> = self.cluster.nodes()[node]
+            .manager()
+            .regions()
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, st)| **st == RegionState::Available)
+            .map(|(i, _)| i)
+            .take(count)
+            .collect();
+        if picks.is_empty() {
+            return Ok(0);
+        }
+        let rf_before = self.node_regfile_generation(node);
+        let mut ev_idx = Vec::with_capacity(picks.len());
+        let mut last_end = t;
+        for &r in &picks {
+            let mk = {
+                let a = &self.apps[app as usize];
+                let pos = a.slices[slice_idx].regions.len();
+                a.chain[pos.min(a.chain.len() - 1)]
+            };
+            let spent = self
+                .cluster
+                .node_mut(node)
+                .manager_mut()
+                .reserve_region(app, mk, r)?;
+            let start = t
+                .max(self.icap_free_at[node])
+                .max(self.region_free_at[node][r]);
+            let end = start + spent;
+            self.icap_free_at[node] = end;
+            self.icap_events.push(IcapEvent {
+                node,
+                region: r,
+                app_id: app,
+                kind: IcapEventKind::Program(mk),
+                start_cycle: start,
+                end_cycle: end,
+            });
+            ev_idx.push(self.icap_events.len() - 1);
+            last_end = end;
+            self.apps[app as usize].slices[slice_idx].regions.push(r);
+        }
+        let chain_regions =
+            self.apps[app as usize].slices[slice_idx].regions.clone();
+        self.program_slice_chain(app, node, &chain_regions)?;
+        {
+            let s = &mut self.apps[app as usize].slices[slice_idx];
+            s.available_at = s.available_at.max(last_end);
+        }
+        let rf_after = self.node_regfile_generation(node);
+        let added = picks.len();
+        self.transitions.push(Transition {
+            at_cycle: t,
+            app_id: app,
+            node,
+            regions: picks,
+            kind,
+            icap_events: ev_idx,
+            regfile_before: rf_before,
+            regfile_after: rf_after,
+        });
+        Ok(added)
+    }
+
+    /// Remove up to `want` regions from `app`, smallest slices first
+    /// (consolidating toward full chains): drain, blank through the
+    /// ICAP, reprogram the surviving chain.  Returns regions removed.
+    fn shrink(&mut self, t: u64, app: u32, want: usize) -> Result<usize> {
+        let mut remaining = want;
+        while remaining > 0 {
+            let idx = {
+                let a = &self.apps[app as usize];
+                (0..a.slices.len()).min_by_key(|&i| {
+                    (
+                        a.slices[i].regions.len(),
+                        std::cmp::Reverse(a.slices[i].node),
+                    )
+                })
+            };
+            let Some(idx) = idx else { break };
+            let len = self.apps[app as usize].slices[idx].regions.len();
+            let k = remaining.min(len);
+            if k == 0 {
+                break;
+            }
+            self.retire_regions(t, app, idx, k)?;
+            remaining -= k;
+        }
+        Ok(want - remaining)
+    }
+
+    /// Drain + blank the last `count` regions of one slice.
+    fn retire_regions(
+        &mut self,
+        t: u64,
+        app: u32,
+        slice_idx: usize,
+        count: usize,
+    ) -> Result<()> {
+        let (node, drain_done, removed) = {
+            let s = &mut self.apps[app as usize].slices[slice_idx];
+            let keep = s.regions.len() - count;
+            (
+                s.node,
+                t.max(s.busy_until).max(s.available_at),
+                s.regions.split_off(keep),
+            )
+        };
+        let rf_before = self.node_regfile_generation(node);
+        let mut ev_idx = Vec::with_capacity(removed.len());
+        for &r in &removed {
+            let spent = self
+                .cluster
+                .node_mut(node)
+                .manager_mut()
+                .blank_region(r)?;
+            let start = drain_done.max(self.icap_free_at[node]);
+            let end = start + spent;
+            self.icap_free_at[node] = end;
+            self.region_free_at[node][r] = end;
+            self.icap_events.push(IcapEvent {
+                node,
+                region: r,
+                app_id: app,
+                kind: IcapEventKind::Blank,
+                start_cycle: start,
+                end_cycle: end,
+            });
+            ev_idx.push(self.icap_events.len() - 1);
+        }
+        let chain_regions =
+            self.apps[app as usize].slices[slice_idx].regions.clone();
+        self.program_slice_chain(app, node, &chain_regions)?;
+        if chain_regions.is_empty() {
+            self.apps[app as usize].slices.remove(slice_idx);
+        }
+        let rf_after = self.node_regfile_generation(node);
+        self.transitions.push(Transition {
+            at_cycle: t,
+            app_id: app,
+            node,
+            regions: removed,
+            kind: TransitionKind::Shrink,
+            icap_events: ev_idx,
+            regfile_before: rf_before,
+            regfile_after: rf_after,
+        });
+        Ok(())
+    }
+
+    /// WRR weight scales with the app's footprint on the node, so the
+    /// crossbar's bandwidth shares follow the allocation.
+    fn program_slice_chain(
+        &mut self,
+        app: u32,
+        node: usize,
+        regions: &[usize],
+    ) -> Result<()> {
+        let weight = (self.cfg.crossbar.default_packages
+            * (regions.len() as u32 + 1))
+            .min(0xFF);
+        self.cluster
+            .node_mut(node)
+            .manager_mut()
+            .program_app_chain(app, regions, weight)
+    }
+
+    fn node_regfile_generation(&self, node: usize) -> u64 {
+        self.cluster.nodes()[node].manager().fabric().regfile.generation()
+    }
+
+    // ------------------------------------------------------------------
+    // churn
+    // ------------------------------------------------------------------
+
+    fn apply_churn(
+        &mut self,
+        events: &[(f64, ChurnEvent)],
+        next: &mut usize,
+        upto_cycle: u64,
+        cycles_per_ms: f64,
+    ) -> Result<()> {
+        while *next < events.len() {
+            let (at_ms, ev) = events[*next];
+            let at = (at_ms * cycles_per_ms).round() as u64;
+            if at > upto_cycle {
+                break;
+            }
+            *next += 1;
+            match ev {
+                ChurnEvent::NodeDown { node } => {
+                    if node >= self.node_alive.len()
+                        || !self.node_alive[node]
+                        || self.node_alive.iter().filter(|a| **a).count() <= 1
+                    {
+                        continue;
+                    }
+                    let lost = self.node_down(at, node);
+                    if self.opts.reactive {
+                        for (app, count) in lost {
+                            self.grow(at, app, count, TransitionKind::Grow)?;
+                        }
+                    }
+                }
+                ChurnEvent::NodeUp { node } => {
+                    if node < self.node_alive.len() && !self.node_alive[node] {
+                        self.node_up(at, node)?;
+                    }
+                }
+                ChurnEvent::Fence { node, regions } => {
+                    if node < self.node_alive.len() && self.node_alive[node] {
+                        self.cluster
+                            .node_mut(node)
+                            .manager_mut()
+                            .fence_regions(regions);
+                        self.capacity_marks
+                            .push((at, self.alive_region_capacity()));
+                    }
+                }
+                ChurnEvent::Unfence { node, regions } => {
+                    if node < self.node_alive.len() && self.node_alive[node] {
+                        self.cluster
+                            .node_mut(node)
+                            .manager_mut()
+                            .unfence_regions(regions);
+                        self.capacity_marks
+                            .push((at, self.alive_region_capacity()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Graceful board loss: every slice on the node drains (dispatched
+    /// work completes), reservations release, regions fence `Offline`.
+    /// Returns `(app, regions_lost)` for re-placement.
+    fn node_down(&mut self, at: u64, node: usize) -> Vec<(u32, usize)> {
+        self.node_alive[node] = false;
+        let mut lost = Vec::new();
+        for app in 0..self.apps.len() {
+            let Some(idx) =
+                self.apps[app].slices.iter().position(|s| s.node == node)
+            else {
+                continue;
+            };
+            let slice = self.apps[app].slices.remove(idx);
+            // The drain tail: dispatched work still completes on the
+            // leaving board after its regions drop out of the capacity
+            // marks, so keep those region-cycles in the denominator.
+            if slice.busy_until > at {
+                self.capacity_extra +=
+                    (slice.busy_until - at) * slice.regions.len() as u64;
+            }
+            let g = self.node_regfile_generation(node);
+            self.cluster
+                .node_mut(node)
+                .manager_mut()
+                .release_app(app as u32);
+            lost.push((app as u32, slice.regions.len()));
+            self.transitions.push(Transition {
+                at_cycle: at,
+                app_id: app as u32,
+                node,
+                regions: slice.regions,
+                kind: TransitionKind::Churn,
+                icap_events: Vec::new(),
+                regfile_before: g,
+                regfile_after: g,
+            });
+        }
+        let mgr = self.cluster.node_mut(node).manager_mut();
+        let avail = mgr.available_regions();
+        mgr.fence_regions(avail);
+        self.capacity_marks.push((at, self.alive_region_capacity()));
+        lost
+    }
+
+    /// A board rejoins empty.  The static baseline re-installs its
+    /// original slices (a fixed partitioning follows the hardware); the
+    /// reactive engine leaves re-growth to the policy.
+    fn node_up(&mut self, at: u64, node: usize) -> Result<()> {
+        self.node_alive[node] = true;
+        self.cluster.node_mut(node).manager_mut().unfence_all();
+        self.capacity_marks.push((at, self.alive_region_capacity()));
+        if !self.opts.reactive {
+            let restores: Vec<(u32, usize)> = self
+                .initial_layout
+                .iter()
+                .filter(|&&(_, n, _)| n == node)
+                .map(|&(a, _, c)| (a, c))
+                .collect();
+            for (app, count) in restores {
+                if self.apps[app as usize]
+                    .slices
+                    .iter()
+                    .any(|s| s.node == node)
+                {
+                    continue;
+                }
+                self.create_slice_on(at, app, node, count, TransitionKind::Churn)?;
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // accounting
+    // ------------------------------------------------------------------
+
+    /// Regions not fenced `Offline` across the fleet (a dead board has
+    /// every region fenced).
+    fn alive_region_capacity(&self) -> usize {
+        self.cluster
+            .nodes()
+            .iter()
+            .map(|n| {
+                n.manager()
+                    .regions()
+                    .iter()
+                    .skip(1)
+                    .filter(|r| **r != RegionState::Offline)
+                    .count()
+            })
+            .sum()
+    }
+
+    fn build_report(&mut self) -> AutoscaleReport {
+        let capacity = capacity_integral(&self.capacity_marks, self.makespan)
+            + self.capacity_extra;
+        let completed = self.queue_wait.count() as u64;
+        AutoscaleReport {
+            policy: self.policy.name().to_string(),
+            completed,
+            makespan_cycles: self.makespan,
+            queue_wait: std::mem::take(&mut self.queue_wait),
+            latency: std::mem::take(&mut self.latency),
+            slo_attainment: if completed > 0 {
+                self.slo_ok as f64 / completed as f64
+            } else {
+                1.0
+            },
+            utilization: if capacity > 0 {
+                self.busy_region_cycles as f64 / capacity as f64
+            } else {
+                0.0
+            },
+            busy_region_cycles: self.busy_region_cycles,
+            capacity_region_cycles: capacity,
+            fabric_requests: self.fabric_requests,
+            cpu_requests: self.cpu_requests,
+            grows: self.grows,
+            shrinks: self.shrinks,
+            transitions: std::mem::take(&mut self.transitions),
+            icap_events: std::mem::take(&mut self.icap_events),
+            final_regions: self
+                .cluster
+                .nodes()
+                .iter()
+                .map(|n| n.manager().regions().to_vec())
+                .collect(),
+            oracle_runs: self.cost.oracle_runs,
+        }
+    }
+}
+
+/// Integrate alive-region capacity over `[0, makespan)` from the
+/// stepwise marks (time-ordered `(cycle, regions)` pairs).
+fn capacity_integral(marks: &[(u64, usize)], makespan: u64) -> u64 {
+    let mut total = 0u64;
+    for (i, &(start, cap)) in marks.iter().enumerate() {
+        if start >= makespan {
+            break;
+        }
+        let end = marks
+            .get(i + 1)
+            .map(|&(c, _)| c)
+            .unwrap_or(makespan)
+            .min(makespan);
+        total += (end.saturating_sub(start)) * cap as u64;
+    }
+    total
+}
+
+// ---------------------------------------------------------------------
+// canned scenario: diurnal tenants + churn, autoscaled vs static
+// ---------------------------------------------------------------------
+
+/// Autoscaled run and its static-allocation baseline over one trace.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    /// The closed-loop run.
+    pub autoscaled: AutoscaleReport,
+    /// Same trace, same churn, fixed even region split.
+    pub static_baseline: AutoscaleReport,
+}
+
+/// A serving profile where the fabric clearly beats the host for a full
+/// chain (lighter 2 ms descriptor rounds than Fig 5's 16 KB testbed) and
+/// partial bitstreams are region-sized (256 KB ≈ 0.5 ms of ICAP time).
+pub fn autoscale_profile() -> SystemConfig {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.timing.xdma_round_ms = 2.0;
+    cfg.manager.bitstream_bytes = 256 * 1024;
+    cfg
+}
+
+/// Run the diurnal-with-churn comparison: `tenants` anti-phase diurnal
+/// streams (30..450 req/s, `period_s`) over `nodes` boards, autoscaled
+/// under `policy` versus the static even split.  Churn (when enabled) is
+/// seeded from `seed` and shared by both runs.
+#[allow(clippy::too_many_arguments)]
+pub fn run_diurnal_scenario(
+    cfg: &SystemConfig,
+    nodes: usize,
+    tenants: u32,
+    requests: usize,
+    period_s: f64,
+    seed: u64,
+    churn: bool,
+    policy: PolicyKind,
+) -> Result<ScenarioReport> {
+    let specs = workload::diurnal_tenants(tenants, 30.0, 450.0, period_s, 64);
+    let trace = workload::generate_profiled(&specs, seed, requests);
+    let duration_ms = trace.last().map(|e| e.arrival_ms).unwrap_or(0.0);
+    let churn_trace = if churn {
+        ChurnTrace::generate(seed ^ 0xC0FFEE, nodes, duration_ms)
+    } else {
+        ChurnTrace::none()
+    };
+    let mut auto_engine = Engine::new(
+        cfg,
+        nodes,
+        tenants as usize,
+        policy.build(),
+        EngineOptions::default(),
+    );
+    let autoscaled = auto_engine.run(&trace, &churn_trace)?;
+    let mut static_engine = Engine::new(
+        cfg,
+        nodes,
+        tenants as usize,
+        Box::new(StaticPolicy),
+        EngineOptions { reactive: false, ..EngineOptions::default() },
+    );
+    let static_baseline = static_engine.run(&trace, &churn_trace)?;
+    Ok(ScenarioReport { autoscaled, static_baseline })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> SystemConfig {
+        let mut cfg = autoscale_profile();
+        cfg.manager.bitstream_bytes = 16 * 1024; // 8192 cycles of ICAP
+        cfg
+    }
+
+    #[test]
+    fn engine_scales_up_under_a_burst_and_back_down() {
+        let cfg = fast_cfg();
+        // One tenant bursting far beyond a single slice's throughput,
+        // then going quiet: the loop must grow, then shrink to the floor.
+        let tenants = vec![crate::workload::TenantSpec {
+            app_id: 0,
+            stages: ModuleKind::pipeline().to_vec(),
+            words: 64,
+            profile: crate::workload::RateProfile::Bursty {
+                burst_per_s: 600.0,
+                idle_per_s: 10.0,
+                burst_s: 1.5,
+                idle_s: 1.5,
+                phase_s: 0.0,
+            },
+        }];
+        let trace = crate::workload::generate_profiled(&tenants, 5, 1200);
+        let mut engine = Engine::new(
+            &cfg,
+            3,
+            1,
+            PolicyKind::TargetQueueDepth.build(),
+            EngineOptions::default(),
+        );
+        let report = engine.run(&trace, &ChurnTrace::none()).unwrap();
+        assert_eq!(report.completed, 1200);
+        assert!(report.grows > 0, "no grow under a 600 req/s burst");
+        assert!(report.shrinks > 0, "no shrink after the burst");
+        assert!(report.fabric_requests > 0);
+        assert!(report.utilization > 0.0 && report.utilization <= 1.0);
+        assert!(report.slo_attainment > 0.0 && report.slo_attainment <= 1.0);
+        // Every policy transition carries ICAP events + a regfile bump.
+        for tr in &report.transitions {
+            if matches!(tr.kind, TransitionKind::Grow | TransitionKind::Shrink)
+            {
+                assert!(!tr.icap_events.is_empty(), "{tr:?}");
+                assert!(tr.regfile_after > tr.regfile_before, "{tr:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_engine_never_reacts() {
+        let cfg = fast_cfg();
+        let specs = workload::diurnal_tenants(2, 20.0, 300.0, 2.0, 64);
+        let trace = workload::generate_profiled(&specs, 9, 600);
+        let mut engine = Engine::new(
+            &cfg,
+            2,
+            2,
+            Box::new(StaticPolicy),
+            EngineOptions { reactive: false, ..EngineOptions::default() },
+        );
+        let report = engine.run(&trace, &ChurnTrace::none()).unwrap();
+        assert_eq!(report.completed, 600);
+        // Only the t=0 installs appear; nothing after.
+        assert!(report.transitions.iter().all(|t| t.at_cycle == 0));
+        assert_eq!(report.shrinks, 0);
+    }
+
+    #[test]
+    fn capacity_integral_is_stepwise() {
+        let marks = vec![(0u64, 10usize), (100, 5), (300, 8)];
+        // 0..100 @10 + 100..300 @5 + 300..400 @8
+        assert_eq!(capacity_integral(&marks, 400), 1000 + 1000 + 800);
+        // Clipped at the makespan.
+        assert_eq!(capacity_integral(&marks, 50), 500);
+        assert_eq!(capacity_integral(&marks, 0), 0);
+    }
+}

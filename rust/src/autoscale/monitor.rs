@@ -1,0 +1,100 @@
+//! Per-app demand monitor: the sensing half of the control loop.
+//!
+//! Fed from [`crate::metrics`] primitives at dispatch time, it closes a
+//! window at every control tick and emits the [`DemandSignals`] the
+//! scaling policies act on: instantaneous queue depth, an EWMA of the
+//! arrival rate, and the window's queue-wait distribution (p99 / mean /
+//! EWMA trend).
+
+use crate::metrics::{CycleRecorder, Ewma};
+
+/// The demand observed for one app over the last control window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandSignals {
+    /// Requests dispatched but not yet started at the tick instant.
+    pub queue_depth: usize,
+    /// EWMA of the per-window arrival rate (requests per second).
+    pub arrival_rate_ewma: f64,
+    /// p99 queue wait over the window, in fabric cycles.
+    pub p99_wait_cycles: u64,
+    /// Mean queue wait over the window, in fabric cycles.
+    pub mean_wait_cycles: f64,
+    /// EWMA trend of queue waits in record order, in fabric cycles.
+    pub wait_ewma_cycles: f64,
+    /// Arrivals observed in the window.
+    pub arrivals: u64,
+}
+
+/// Windowed per-app demand sensor.
+#[derive(Debug, Clone)]
+pub struct DemandMonitor {
+    alpha: f64,
+    /// Start cycles of dispatched requests that may still be queued.
+    outstanding: Vec<u64>,
+    arrivals_window: u64,
+    wait_window: CycleRecorder,
+    rate_ewma: Ewma,
+}
+
+impl DemandMonitor {
+    /// New monitor with EWMA smoothing factor `alpha`.
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            alpha,
+            outstanding: Vec::new(),
+            arrivals_window: 0,
+            wait_window: CycleRecorder::with_ewma(alpha),
+            rate_ewma: Ewma::new(alpha),
+        }
+    }
+
+    /// Record one dispatched request: its scheduled start cycle and the
+    /// queue wait it will experience.
+    pub fn on_dispatch(&mut self, start_cycle: u64, wait_cycles: u64) {
+        self.outstanding.push(start_cycle);
+        self.arrivals_window += 1;
+        self.wait_window.record(wait_cycles);
+    }
+
+    /// Close the window at cycle `now` (a window of `window_s` seconds):
+    /// compute the signals and reset for the next window.
+    pub fn observe(&mut self, now: u64, window_s: f64) -> DemandSignals {
+        self.outstanding.retain(|&s| s > now);
+        let rate =
+            self.rate_ewma.update(self.arrivals_window as f64 / window_s);
+        let signals = DemandSignals {
+            queue_depth: self.outstanding.len(),
+            arrival_rate_ewma: rate,
+            p99_wait_cycles: self.wait_window.percentile(0.99),
+            mean_wait_cycles: self.wait_window.mean(),
+            wait_ewma_cycles: self.wait_window.ewma().unwrap_or(0.0),
+            arrivals: self.arrivals_window,
+        };
+        self.arrivals_window = 0;
+        self.wait_window = CycleRecorder::with_ewma(self.alpha);
+        signals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_reset_but_rate_ewma_persists() {
+        let mut m = DemandMonitor::new(0.5);
+        // Window 1: two requests, one still queued at the tick.
+        m.on_dispatch(50, 0);
+        m.on_dispatch(200, 150);
+        let s1 = m.observe(100, 1.0);
+        assert_eq!(s1.queue_depth, 1, "start 200 > now 100 is still queued");
+        assert_eq!(s1.arrivals, 2);
+        assert!((s1.arrival_rate_ewma - 2.0).abs() < 1e-12);
+        assert_eq!(s1.p99_wait_cycles, 150);
+        // Window 2: empty; the wait window resets, the rate EWMA decays.
+        let s2 = m.observe(300, 1.0);
+        assert_eq!(s2.queue_depth, 0, "request 200 started by now");
+        assert_eq!(s2.p99_wait_cycles, 0);
+        assert!((s2.arrival_rate_ewma - 1.0).abs() < 1e-12, "EWMA of 2 then 0");
+    }
+}

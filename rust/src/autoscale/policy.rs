@@ -1,0 +1,227 @@
+//! Scaling policies: the decision half of the control loop.
+//!
+//! A [`ScalingPolicy`] maps a per-app [`DemandSnapshot`] to a target
+//! PR-region count.  Policies are pure functions (all hysteresis state
+//! lives in the snapshot + the engine's cooldown), so runs replay
+//! deterministically.  Two concrete policies ship, both threshold +
+//! hysteresis as the paper's envisioned resource manager implies:
+//!
+//! * [`TargetQueueDepth`] — grow when the backlog per serving slice
+//!   exceeds a threshold, shrink only when the queue is empty *and* the
+//!   window's waits are calm (the hysteresis band);
+//! * [`LatencySlo`] — grow when the window's p99 queue wait violates the
+//!   SLO, shrink only well under it with an empty queue.
+
+use super::monitor::DemandSignals;
+
+/// Everything a policy may consult for one app at one control tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandSnapshot {
+    /// The app the decision is for.
+    pub app_id: u32,
+    /// Windowed demand signals from the monitor.
+    pub signals: DemandSignals,
+    /// Serving slices currently held (chains on distinct boards).
+    pub slices: usize,
+    /// PR regions currently reserved across the fleet.
+    pub regions: usize,
+    /// The app's chain length (regions in one full slice).
+    pub chain_len: usize,
+}
+
+/// A pluggable grow/shrink decision function.
+pub trait ScalingPolicy {
+    /// Human-readable policy name (reports, CLI).
+    fn name(&self) -> &'static str;
+
+    /// Target PR-region count for the app.  The engine steps toward the
+    /// target subject to availability, the per-node slice limit and the
+    /// cooldown; it never preempts in-flight work.
+    fn target_regions(&self, s: &DemandSnapshot) -> usize;
+}
+
+/// Grow when the queue per serving slice exceeds `grow_above`; shrink
+/// (one chain at a time, never below `min_slices`) only when the queue
+/// is empty and the window's p99 wait is under `calm_wait_cycles`.
+#[derive(Debug, Clone, Copy)]
+pub struct TargetQueueDepth {
+    /// Queued requests per slice that trigger a grow.
+    pub grow_above: f64,
+    /// p99 window wait (cycles) below which an idle app may shrink.
+    pub calm_wait_cycles: u64,
+    /// Minimum full slices an app keeps (its guaranteed share).
+    pub min_slices: usize,
+}
+
+impl Default for TargetQueueDepth {
+    fn default() -> Self {
+        // 3 queued requests per slice ≈ one service time of headroom;
+        // calm = 2 ms at the 250 MHz fabric clock.
+        Self { grow_above: 3.0, calm_wait_cycles: 500_000, min_slices: 1 }
+    }
+}
+
+impl ScalingPolicy for TargetQueueDepth {
+    fn name(&self) -> &'static str {
+        "target-queue-depth"
+    }
+
+    fn target_regions(&self, s: &DemandSnapshot) -> usize {
+        let floor = self.min_slices * s.chain_len;
+        let lanes = s.slices.max(1) as f64;
+        if s.signals.queue_depth as f64 / lanes > self.grow_above {
+            return (s.regions + s.chain_len).max(floor);
+        }
+        if s.signals.queue_depth == 0
+            && s.signals.p99_wait_cycles <= self.calm_wait_cycles
+            && s.regions > floor
+        {
+            return s.regions.saturating_sub(s.chain_len).max(floor);
+        }
+        s.regions.max(floor)
+    }
+}
+
+/// Grow when the window's p99 queue wait exceeds `slo_wait_cycles`;
+/// shrink only when idle and under `shrink_frac` of the SLO.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySlo {
+    /// The queue-wait SLO in fabric cycles.
+    pub slo_wait_cycles: u64,
+    /// Shrink only below this fraction of the SLO (hysteresis band).
+    pub shrink_frac: f64,
+    /// Minimum full slices an app keeps.
+    pub min_slices: usize,
+}
+
+impl Default for LatencySlo {
+    fn default() -> Self {
+        // 25 ms queue-wait SLO at the 250 MHz fabric clock.
+        Self { slo_wait_cycles: 6_250_000, shrink_frac: 0.2, min_slices: 1 }
+    }
+}
+
+impl ScalingPolicy for LatencySlo {
+    fn name(&self) -> &'static str {
+        "latency-slo"
+    }
+
+    fn target_regions(&self, s: &DemandSnapshot) -> usize {
+        let floor = self.min_slices * s.chain_len;
+        if s.signals.p99_wait_cycles > self.slo_wait_cycles {
+            return (s.regions + s.chain_len).max(floor);
+        }
+        let calm = self.slo_wait_cycles as f64 * self.shrink_frac;
+        if s.signals.queue_depth == 0
+            && (s.signals.p99_wait_cycles as f64) < calm
+            && s.regions > floor
+        {
+            return s.regions.saturating_sub(s.chain_len).max(floor);
+        }
+        s.regions.max(floor)
+    }
+}
+
+/// The non-policy: whatever is allocated stays allocated.  Used by the
+/// static-baseline engine (which also disables churn re-placement).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticPolicy;
+
+impl ScalingPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn target_regions(&self, s: &DemandSnapshot) -> usize {
+        s.regions
+    }
+}
+
+/// CLI-facing policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// [`TargetQueueDepth`] with defaults.
+    TargetQueueDepth,
+    /// [`LatencySlo`] with defaults.
+    LatencySlo,
+}
+
+impl PolicyKind {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "depth" | "queue-depth" | "target-queue-depth" => {
+                Some(PolicyKind::TargetQueueDepth)
+            }
+            "slo" | "latency" | "latency-slo" => Some(PolicyKind::LatencySlo),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy with its defaults.
+    pub fn build(self) -> Box<dyn ScalingPolicy> {
+        match self {
+            PolicyKind::TargetQueueDepth => {
+                Box::new(TargetQueueDepth::default())
+            }
+            PolicyKind::LatencySlo => Box::new(LatencySlo::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(depth: usize, p99: u64, slices: usize, regions: usize) -> DemandSnapshot {
+        DemandSnapshot {
+            app_id: 0,
+            signals: DemandSignals {
+                queue_depth: depth,
+                arrival_rate_ewma: 0.0,
+                p99_wait_cycles: p99,
+                mean_wait_cycles: 0.0,
+                wait_ewma_cycles: 0.0,
+                arrivals: depth as u64,
+            },
+            slices,
+            regions,
+            chain_len: 3,
+        }
+    }
+
+    #[test]
+    fn queue_depth_policy_has_a_hysteresis_band() {
+        let p = TargetQueueDepth::default();
+        // Deep backlog on one slice: grow by one chain.
+        assert_eq!(p.target_regions(&snap(10, 0, 1, 3)), 6);
+        // Same backlog spread over three slices: within threshold, hold.
+        assert_eq!(p.target_regions(&snap(9, 1_000_000, 3, 9)), 9);
+        // Idle and calm: shrink one chain, never below the floor.
+        assert_eq!(p.target_regions(&snap(0, 0, 3, 9)), 6);
+        assert_eq!(p.target_regions(&snap(0, 0, 1, 3)), 3, "floor holds");
+        // Idle but waits not calm yet: hold (the hysteresis band).
+        assert_eq!(p.target_regions(&snap(0, 1_000_000, 3, 9)), 9);
+        // Below the floor (post-churn shortfall): grow back to it.
+        assert_eq!(p.target_regions(&snap(0, 0, 0, 0)), 3);
+    }
+
+    #[test]
+    fn latency_slo_policy_tracks_the_slo() {
+        let p = LatencySlo::default();
+        assert_eq!(p.target_regions(&snap(1, 7_000_000, 1, 3)), 6, "violation");
+        assert_eq!(p.target_regions(&snap(1, 3_000_000, 2, 6)), 6, "inside band");
+        assert_eq!(p.target_regions(&snap(0, 100, 2, 6)), 3, "calm: shrink");
+        assert_eq!(p.target_regions(&snap(0, 100, 1, 3)), 3, "floor");
+    }
+
+    #[test]
+    fn policy_kind_parses_and_builds() {
+        assert_eq!(PolicyKind::parse("depth"), Some(PolicyKind::TargetQueueDepth));
+        assert_eq!(PolicyKind::parse("latency-slo"), Some(PolicyKind::LatencySlo));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(PolicyKind::TargetQueueDepth.build().name(), "target-queue-depth");
+        assert_eq!(PolicyKind::LatencySlo.build().name(), "latency-slo");
+        assert_eq!(StaticPolicy.target_regions(&snap(50, 9_999_999, 1, 3)), 3);
+    }
+}

@@ -7,6 +7,7 @@
 //!   quickstart           run one 16 KB pipeline request end to end
 //!   serve                start the serving loop on a synthetic workload
 //!   fleet                run the multi-FPGA fleet simulator
+//!   autoscale            run the closed-loop autoscaler vs the static baseline
 //!   fig5                 reproduce Fig 5 (elasticity execution times)
 //!   fig6                 reproduce Fig 6 (worst-case latency scaling)
 //!   table1               reproduce Table I (area usage)
@@ -75,6 +76,16 @@ impl Cli {
         }
     }
 
+    /// f64 flag with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ElasticError::Config(format!("--{key} expects a number, got '{v}'"))
+            }),
+        }
+    }
+
     /// bool flag (present or `--key true/false`).
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
         match self.flags.get(key).map(String::as_str) {
@@ -96,6 +107,7 @@ subcommands:
   quickstart   run one 16 KB pipeline request end to end (uses artifacts/)
   serve        run the serving loop on a synthetic workload
   fleet        run the multi-FPGA fleet simulator (event-driven fast-path)
+  autoscale    closed-loop PR-region autoscaler vs static baseline (diurnal+churn)
   fig5         reproduce Fig 5 (elasticity execution times)
   fig6         reproduce Fig 6 (worst-case latency vs #PR regions)
   table1       reproduce Table I (area usage of all components)
@@ -106,7 +118,8 @@ subcommands:
 common flags:
   --artifacts DIR    artifact directory (default: artifacts)
   --config FILE      TOML config overlay
-  --requests N       request count for `serve`/`fleet` (default: 64/10000)
+  --requests N       request count for `serve`/`fleet`/`autoscale`
+                     (default: 64/10000/20000)
   --no-pjrt          skip PJRT; use the golden model for CPU stages
 
 fleet flags:
@@ -114,6 +127,14 @@ fleet flags:
   --policy P         least | sticky | bandwidth (default: least)
   --seed N           workload seed (default: 1)
   --oracle           disable the fast-path; run every request cycle-by-cycle
+
+autoscale flags:
+  --fabrics N        simulated boards (default: 5)
+  --tenants N        diurnal tenant streams, 1..=4 (default: 4)
+  --policy P         depth | slo (default: depth)
+  --period S         diurnal period in seconds (default: 20)
+  --seed N           workload + churn seed (default: 1)
+  --churn B          inject board outages + region fencing (default: true)
 ";
 
 #[cfg(test)]
@@ -145,6 +166,15 @@ mod tests {
         assert!(c.usize_or("requests", 1).is_err());
         let c = Cli::parse(&argv(&["serve", "--no-pjrt", "maybe"])).unwrap();
         assert!(c.bool_or("no-pjrt", false).is_err());
+        let c = Cli::parse(&argv(&["autoscale", "--period", "x"])).unwrap();
+        assert!(c.f64_or("period", 1.0).is_err());
+    }
+
+    #[test]
+    fn parses_f64_flags() {
+        let c = Cli::parse(&argv(&["autoscale", "--period", "12.5"])).unwrap();
+        assert_eq!(c.f64_or("period", 1.0).unwrap(), 12.5);
+        assert_eq!(c.f64_or("missing", 20.0).unwrap(), 20.0);
     }
 
     #[test]

@@ -284,8 +284,8 @@ fn slave_stall_pauses_and_resumes() {
 
 #[test]
 fn ack_timeout_fires_on_permanently_full_slave() {
-    let mut cfg = CrossbarConfig::default();
-    cfg.ack_timeout = 20;
+    let cfg =
+        CrossbarConfig { ack_timeout: 20, ..CrossbarConfig::default() };
     let mut xb = Crossbar::new(4, cfg);
     for m in 0..4 {
         xb.set_allowed_slaves(m, 0b1111);
@@ -345,9 +345,11 @@ fn grant_timeout_when_slave_monopolized() {
     // Master 0 holds the bus forever: a huge WRR budget plus a consumer
     // that never drains leaves it stalled mid-grant.  Master 1's grant
     // watchdog must fire.
-    let mut cfg = CrossbarConfig::default();
-    cfg.grant_timeout = 30;
-    cfg.ack_timeout = 10_000;
+    let cfg = CrossbarConfig {
+        grant_timeout: 30,
+        ack_timeout: 10_000,
+        ..CrossbarConfig::default()
+    };
     let mut xb = Crossbar::new(4, cfg);
     for m in 0..4 {
         xb.set_allowed_slaves(m, 0b1111);

@@ -20,6 +20,14 @@ pub enum ElasticError {
     /// Resource manager could not satisfy an allocation.
     Allocation(String),
 
+    /// A region / port / app ID falls outside the Table III register-file
+    /// window (4 ports: bridge + PR regions 1..=3, app IDs 0..=3).  Ports
+    /// beyond the window cannot be programmed for isolation, destinations
+    /// or bandwidth, so the manager refuses them instead of silently
+    /// running with power-on defaults (see `regfile` docs and ROADMAP's
+    /// "scale the crossbar beyond the 4-port window" item).
+    RegfileWindow(String),
+
     /// A WISHBONE transaction failed (invalid destination, timeout, ...).
     Wishbone(crate::wishbone::WbError),
 
@@ -43,6 +51,9 @@ impl fmt::Display for ElasticError {
             ElasticError::Artifact(m) => write!(f, "artifact error: {m}"),
             ElasticError::Config(m) => write!(f, "config error: {m}"),
             ElasticError::Allocation(m) => write!(f, "allocation error: {m}"),
+            ElasticError::RegfileWindow(m) => {
+                write!(f, "register-file window error: {m}")
+            }
             ElasticError::Wishbone(e) => write!(f, "wishbone error: {e:?}"),
             ElasticError::Sim(m) => {
                 write!(f, "simulation invariant violated: {m}")

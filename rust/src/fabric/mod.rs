@@ -230,6 +230,11 @@ impl Fabric {
     // ------------------------------------------------------------------
 
     /// Mirror register-file configuration into the crossbar and modules.
+    ///
+    /// Only the Table III window (4 ports) is mirrored — there are no
+    /// registers for ports beyond it, and the manager refuses to place
+    /// work there ([`crate::ElasticError::RegfileWindow`]), so extra
+    /// ports keep their isolated power-on state.
     fn sync_regfile(&mut self) {
         if self.regfile.generation() == self.synced_gen {
             return;

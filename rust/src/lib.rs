@@ -47,8 +47,24 @@
 //! threaded on-line counterpart: a fabric-count-generic scheduler
 //! ([`server::ElasticServer`]) drives the same admission policies over
 //! real worker threads.
+//!
+//! # The closed elasticity loop
+//!
+//! [`autoscale`] realizes the paper's *envisioned resource manager*: a
+//! demand-driven control plane that grows and shrinks each app's
+//! PR-region reservations over simulated time.  A per-app monitor reads
+//! queue depth, arrival EWMA and p99 queue waits from [`metrics`]; a
+//! pluggable [`autoscale::ScalingPolicy`] (target-queue-depth or
+//! latency-SLO, threshold + hysteresis) emits grow/shrink decisions; the
+//! actuator programs every transition through the timed, serialized
+//! [`icap`] model, reprograms [`regfile`] destinations and WRR weights,
+//! and migrates chains across fabrics under a k8s-style churn model
+//! (boards leaving/joining, regions fenced mid-trace, graceful drain).
+//! The threaded [`server`] runs the same loop on-line as a lane-level
+//! control tick interleaved with serving.
 
 pub mod area;
+pub mod autoscale;
 pub mod baselines;
 pub mod cli;
 pub mod cluster;

@@ -1,6 +1,7 @@
 //! `elastic-fpga` — leader binary: CLI over the experiment drivers and
 //! the serving loop.  See `elastic-fpga --help` / [`elastic_fpga::cli`].
 
+use elastic_fpga::autoscale::{self, PolicyKind};
 use elastic_fpga::cli::{Cli, USAGE};
 use elastic_fpga::config::SystemConfig;
 use elastic_fpga::experiments;
@@ -52,6 +53,7 @@ fn run(args: &[String]) -> Result<()> {
         "quickstart" => quickstart(&cli, &cfg),
         "serve" => serve(&cli, &cfg),
         "fleet" => fleet_sim(&cli, &cfg),
+        "autoscale" => autoscale_cmd(&cli),
         "fig5" => {
             let runtime = load_runtime(&cli)?;
             let reps = cli.usize_or("reps", 10)?;
@@ -157,6 +159,52 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
         report.oracle_runs,
         report.fast_path_hits
     );
+    Ok(())
+}
+
+fn autoscale_cmd(cli: &Cli) -> Result<()> {
+    let nodes = cli.usize_or("fabrics", 5)?;
+    let tenants = cli.usize_or("tenants", 4)? as u32;
+    let requests = cli.usize_or("requests", 20_000)?;
+    let period_s = cli.f64_or("period", 20.0)?;
+    let seed = cli.usize_or("seed", 1)? as u64;
+    let churn = cli.bool_or("churn", true)?;
+    let policy_name = cli.str_or("policy", "depth");
+    let policy = PolicyKind::parse(&policy_name).ok_or_else(|| {
+        elastic_fpga::ElasticError::Config(format!(
+            "--policy expects depth|slo, got '{policy_name}'"
+        ))
+    })?;
+    let cfg = autoscale::autoscale_profile();
+    println!(
+        "autoscale: {requests} requests, {tenants} diurnal tenants over \
+         {nodes} boards, policy {policy:?}, churn {churn}"
+    );
+    let t0 = std::time::Instant::now();
+    let rep = autoscale::run_diurnal_scenario(
+        &cfg, nodes, tenants, requests, period_s, seed, churn, policy,
+    )?;
+    println!("(simulated in {:.2?})", t0.elapsed());
+    for (name, r) in [
+        ("autoscaled", &rep.autoscaled),
+        ("static    ", &rep.static_baseline),
+    ] {
+        let mut r2_wait = r.queue_wait.clone();
+        println!(
+            "{name}: util {:.1}% | queue wait p50 {:.2} ms p99 {:.2} ms | \
+             SLO {:.1}% | fabric/cpu {}/{} | grows {} shrinks {} | \
+             icap events {}",
+            r.utilization * 100.0,
+            cfg.cycles_to_ms(r2_wait.percentile(0.50)),
+            cfg.cycles_to_ms(r2_wait.percentile(0.99)),
+            r.slo_attainment * 100.0,
+            r.fabric_requests,
+            r.cpu_requests,
+            r.grows,
+            r.shrinks,
+            r.icap_events.len(),
+        );
+    }
     Ok(())
 }
 

@@ -14,6 +14,15 @@
 //! Reconfiguration can run through the ICAP model (timed, serialized) or
 //! the paper's own prototype path of statically installed modules
 //! (§V.B); Fig 5's execution times exclude reconfiguration either way.
+//!
+//! Two allocation disciplines share the region map:
+//!
+//! * **per-request** ([`ElasticManager::execute`]) — regions are taken at
+//!   request start and released at completion (the Fig-5 primitive);
+//! * **reserved** ([`ElasticManager::reserve_region`] /
+//!   [`ElasticManager::blank_region`]) — regions belong to an app across
+//!   requests, programmed and blanked through the timed ICAP; this is
+//!   what the closed-loop autoscaler ([`crate::autoscale`]) actuates.
 
 mod app;
 
@@ -101,6 +110,22 @@ impl ElasticManager {
                 *r = RegionState::Available;
             }
         }
+    }
+
+    /// Bring up to `n` offline regions back (lowest index first);
+    /// returns how many were actually unfenced.
+    pub fn unfence_regions(&mut self, n: usize) -> usize {
+        let mut left = n;
+        for r in 1..self.regions.len() {
+            if left == 0 {
+                break;
+            }
+            if self.regions[r] == RegionState::Offline {
+                self.regions[r] = RegionState::Available;
+                left -= 1;
+            }
+        }
+        n - left
     }
 
     /// Direct fabric access (benches, tests).
@@ -194,6 +219,75 @@ impl ElasticManager {
         }
     }
 
+    /// Program destinations **and WRR bandwidth weights** for an app
+    /// whose FPGA chain occupies `ports` in order (Table III destination
+    /// + package-number registers).  `packages` is the per-grant package
+    /// budget written for every hop of the chain (clamped to the 8-bit
+    /// field).  An empty `ports` detaches the app (destination = bridge).
+    ///
+    /// This is the autoscaler's regfile-reprogram primitive: every
+    /// grow/shrink transition re-runs it so traffic and bandwidth follow
+    /// the new region map (§IV.A "updates the other module's destination
+    /// addresses").
+    pub fn program_app_chain(
+        &mut self,
+        app_id: u32,
+        ports: &[usize],
+        packages: u32,
+    ) -> Result<()> {
+        if app_id as usize >= crate::regfile::MAX_PORTS {
+            return Err(ElasticError::RegfileWindow(format!(
+                "app {app_id} has no Table III destination register"
+            )));
+        }
+        for &p in ports {
+            if !crate::regfile::RegisterFile::covers_region(p) {
+                return Err(ElasticError::RegfileWindow(format!(
+                    "region {p} is outside the Table III window"
+                )));
+            }
+        }
+        self.program_chain(app_id, ports);
+        let w = packages.clamp(1, 0xFF);
+        let rf = &mut self.fabric.regfile;
+        let first = ports.first().copied().unwrap_or(0);
+        rf.set_allowed_packages(first, 0, w);
+        for (i, &p) in ports.iter().enumerate() {
+            let next = ports.get(i + 1).copied().unwrap_or(0);
+            rf.set_allowed_packages(next, p, w);
+        }
+        Ok(())
+    }
+
+    /// Stream one region's bitstream through the timed ICAP model and
+    /// tick the fabric until the module instantiates; returns the fabric
+    /// cycles spent programming.
+    fn program_region_icap(
+        &mut self,
+        region: usize,
+        kind: ModuleKind,
+        app_id: u32,
+    ) -> Result<u64> {
+        self.fabric.reconfigure(region, kind, app_id)?;
+        let words = (self.cfg.manager.bitstream_bytes / 4) as u64;
+        let budget = crate::icap::Icap::expected_cycles(words) + 16;
+        let before = self.fabric.now();
+        for _ in 0..budget {
+            let c = self.fabric.now() + 1;
+            crate::sim::Tick::tick(&mut self.fabric, c);
+            if self.fabric.module_at(region).is_some() {
+                break;
+            }
+        }
+        let spent = self.fabric.now() - before;
+        if self.fabric.module_at(region).is_none() {
+            return Err(ElasticError::Allocation(format!(
+                "reconfiguration of region {region} failed"
+            )));
+        }
+        Ok(spent)
+    }
+
     /// Install the FPGA stages of a placement; returns the chain ports
     /// and the ICAP cycles spent (0 on the static path).
     fn install(
@@ -205,6 +299,16 @@ impl ElasticManager {
         let mut icap_cycles = 0u64;
         for p in placement {
             if let StagePlacement::Fpga { kind, region } = *p {
+                if !crate::regfile::RegisterFile::covers_region(region) {
+                    // Ports beyond the 4-port Table III window cannot be
+                    // programmed for isolation/destination/bandwidth;
+                    // refuse instead of silently running with defaults.
+                    return Err(ElasticError::RegfileWindow(format!(
+                        "region {region} is outside the Table III window \
+                         (regions 1..={})",
+                        crate::regfile::MAX_PR_REGIONS
+                    )));
+                }
                 if self.regions[region] != RegionState::Available {
                     return Err(ElasticError::Allocation(format!(
                         "region {region} not available"
@@ -219,29 +323,78 @@ impl ElasticManager {
         for p in placement {
             if let StagePlacement::Fpga { kind, region } = *p {
                 if self.use_icap {
-                    self.fabric.reconfigure(region, kind, app_id)?;
-                    let words = (self.cfg.manager.bitstream_bytes / 4) as u64;
-                    let budget = crate::icap::Icap::expected_cycles(words) + 16;
-                    let before = self.fabric.now();
-                    for _ in 0..budget {
-                        let c = self.fabric.now() + 1;
-                        crate::sim::Tick::tick(&mut self.fabric, c);
-                        if self.fabric.module_at(region).is_some() {
-                            break;
-                        }
-                    }
-                    icap_cycles += self.fabric.now() - before;
-                    if self.fabric.module_at(region).is_none() {
-                        return Err(ElasticError::Allocation(format!(
-                            "reconfiguration of region {region} failed"
-                        )));
-                    }
+                    icap_cycles +=
+                        self.program_region_icap(region, kind, app_id)?;
                 } else {
                     self.fabric.install_static_module(region, kind, app_id);
                 }
             }
         }
         Ok((ports, icap_cycles))
+    }
+
+    /// Reserve `region` for `app_id` and program `kind` into it through
+    /// the timed, serialized ICAP model; returns the fabric cycles the
+    /// programming took.  Unlike [`execute`](Self::execute), the
+    /// reservation is **held** until [`blank_region`](Self::blank_region)
+    /// or [`release_app`](Self::release_app) — this is the allocation
+    /// primitive of the closed-loop autoscaler ([`crate::autoscale`]),
+    /// where PR regions belong to an app across many requests.
+    pub fn reserve_region(
+        &mut self,
+        app_id: u32,
+        kind: ModuleKind,
+        region: usize,
+    ) -> Result<u64> {
+        if region == 0 || region >= self.regions.len() {
+            return Err(ElasticError::Allocation(format!(
+                "region {region} out of range"
+            )));
+        }
+        if !crate::regfile::RegisterFile::covers_region(region) {
+            return Err(ElasticError::RegfileWindow(format!(
+                "region {region} is outside the Table III window"
+            )));
+        }
+        if self.regions[region] != RegionState::Available {
+            return Err(ElasticError::Allocation(format!(
+                "region {region} not available"
+            )));
+        }
+        self.regions[region] = RegionState::Allocated { app_id, kind };
+        match self.program_region_icap(region, kind, app_id) {
+            Ok(cycles) => Ok(cycles),
+            Err(e) => {
+                self.fabric.clear_region(region);
+                self.regions[region] = RegionState::Available;
+                Err(e)
+            }
+        }
+    }
+
+    /// Release a reserved region by streaming a blanking (grey-box)
+    /// bitstream through the ICAP — the PR practice for decoupling a
+    /// region — then freeing it; returns the ICAP fabric cycles spent.
+    pub fn blank_region(&mut self, region: usize) -> Result<u64> {
+        if region == 0 || region >= self.regions.len() {
+            return Err(ElasticError::Allocation(format!(
+                "region {region} out of range"
+            )));
+        }
+        let (app_id, kind) = match &self.regions[region] {
+            RegionState::Allocated { app_id, kind } => (*app_id, *kind),
+            other => {
+                return Err(ElasticError::Allocation(format!(
+                    "region {region} not allocated (state {other:?})"
+                )))
+            }
+        };
+        // The blanking bitstream is modeled at the same size as a module
+        // bitstream; the ICAP serializes it like any other programming.
+        let spent = self.program_region_icap(region, kind, app_id)?;
+        self.fabric.clear_region(region);
+        self.regions[region] = RegionState::Available;
+        Ok(spent)
     }
 
     /// Release an app's regions.
@@ -395,23 +548,10 @@ impl ElasticManager {
             reports.push(self.execute(&sub)?);
             // A region frees between segments (elasticity event).
             if i + 1 < segments {
-                self.unfence_n(1);
+                self.unfence_regions(1);
             }
         }
         Ok(reports)
-    }
-
-    fn unfence_n(&mut self, n: usize) {
-        let mut left = n;
-        for r in 1..self.regions.len() {
-            if left == 0 {
-                break;
-            }
-            if self.regions[r] == RegionState::Offline {
-                self.regions[r] = RegionState::Available;
-                left -= 1;
-            }
-        }
     }
 
     /// Run one stage on the server.  Uses the PJRT artifact when its

@@ -171,6 +171,88 @@ fn zero_regions_runs_everything_on_server() {
 }
 
 #[test]
+fn regions_beyond_table3_window_get_typed_error() {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.fabric.num_ports = 8;
+    cfg.fabric.num_pr_regions = 7;
+    let mut m = ElasticManager::new(cfg, None);
+    // A 5-stage chain plans onto regions 1..=5; regions 4 and 5 have no
+    // Table III registers, so execution must fail with the typed error
+    // instead of silently running those ports with power-on defaults.
+    let req = AppRequest {
+        app_id: 0,
+        data: data(64, 20),
+        stages: vec![crate::modules::ModuleKind::Multiplier; 5],
+    };
+    match m.execute(&req) {
+        Err(crate::ElasticError::RegfileWindow(_)) => {}
+        other => panic!("expected RegfileWindow error, got {other:?}"),
+    }
+    // The partial allocation rolled back.
+    assert_eq!(m.available_regions(), 7);
+    // Chains that fit the window still serve on the same manager.
+    let ok = AppRequest::pipeline(0, data(64, 21));
+    assert!(m.execute(&ok).unwrap().verified);
+}
+
+#[test]
+fn reserve_and_blank_regions_hold_allocations_through_icap() {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.manager.bitstream_bytes = 4096; // 1024 words, keeps the test fast
+    let mut m = ElasticManager::new(cfg, None);
+    let spent = m
+        .reserve_region(1, crate::modules::ModuleKind::Multiplier, 2)
+        .unwrap();
+    assert!(spent >= 2 * 1024, "ICAP time unaccounted: {spent}");
+    assert_eq!(m.available_regions(), 2);
+    assert!(matches!(
+        m.regions()[2],
+        RegionState::Allocated { app_id: 1, .. }
+    ));
+    // The module is really instantiated on the fabric.
+    assert!(m.fabric().module_at(2).is_some());
+    // Double-reserve and out-of-range regions are refused.
+    assert!(m
+        .reserve_region(1, crate::modules::ModuleKind::Multiplier, 2)
+        .is_err());
+    assert!(matches!(
+        m.reserve_region(0, crate::modules::ModuleKind::Multiplier, 9),
+        Err(crate::ElasticError::Allocation(_))
+    ));
+    // Blanking goes back through the timed ICAP and frees the region.
+    let blank = m.blank_region(2).unwrap();
+    assert!(blank >= 2 * 1024);
+    assert_eq!(m.available_regions(), 3);
+    assert!(m.fabric().module_at(2).is_none());
+    assert!(m.blank_region(2).is_err(), "already free");
+}
+
+#[test]
+fn program_app_chain_writes_destinations_and_weights() {
+    let mut m = mgr();
+    m.program_app_chain(2, &[1, 3], 32).unwrap();
+    let rf = &m.fabric().regfile;
+    assert_eq!(rf.app_destination(2), 1 << 1);
+    assert_eq!(rf.pr_destination(1), 1 << 3);
+    assert_eq!(rf.pr_destination(3), 1 << 0);
+    assert_eq!(rf.allowed_packages(1, 0), 32, "bridge hop weight");
+    assert_eq!(rf.allowed_packages(3, 1), 32);
+    assert_eq!(rf.allowed_packages(0, 3), 32);
+    assert!(m.program_app_chain(4, &[1], 8).is_err(), "app beyond window");
+    assert!(m.program_app_chain(0, &[4], 8).is_err(), "region beyond window");
+}
+
+#[test]
+fn unfence_regions_partially_restores() {
+    let mut m = mgr();
+    assert_eq!(m.fence_regions(3), 3);
+    assert_eq!(m.unfence_regions(2), 2);
+    assert_eq!(m.available_regions(), 2);
+    assert_eq!(m.unfence_regions(5), 1, "only one region was still offline");
+    assert_eq!(m.available_regions(), 3);
+}
+
+#[test]
 fn two_sequential_apps_isolated() {
     let mut m = mgr();
     let a = AppRequest::pipeline(0, data(64, 10));

@@ -1,13 +1,55 @@
-//! Lightweight metrics: counters and latency recorders for the server
-//! and benches (no external deps — see DESIGN.md §7).
+//! Lightweight metrics: counters, latency recorders and EWMA trackers
+//! for the server, the autoscaler's demand monitor, and the benches (no
+//! external deps — the container is offline, see DESIGN.md §7).
 
 use std::time::Duration;
+
+/// Exponentially-weighted moving average with smoothing factor `alpha`
+/// in `(0, 1]`: `v' = v + alpha * (x - v)`, primed by the first sample.
+/// The autoscaler's demand monitor uses this for arrival rates and
+/// queue-wait trends (DESIGN.md §9).
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    /// New tracker; `alpha` must be in `(0, 1]`.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha {alpha} out of (0,1]");
+        Self { alpha, value: 0.0, primed: false }
+    }
+
+    /// Fold in one sample; returns the updated average.
+    pub fn update(&mut self, sample: f64) -> f64 {
+        if self.primed {
+            self.value += self.alpha * (sample - self.value);
+        } else {
+            self.value = sample;
+            self.primed = true;
+        }
+        self.value
+    }
+
+    /// Current average (0.0 before the first sample).
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    /// Has at least one sample been folded in?
+    pub fn is_primed(&self) -> bool {
+        self.primed
+    }
+}
 
 /// A latency recorder with percentile queries.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples_us: Vec<u64>,
     sorted: bool,
+    ewma: Option<Ewma>,
 }
 
 impl LatencyRecorder {
@@ -16,16 +58,31 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// Empty recorder that also tracks an EWMA of the samples **in
+    /// record order** (a windowed-rate signal percentiles can't give:
+    /// recent samples dominate).
+    pub fn with_ewma(alpha: f64) -> Self {
+        Self { ewma: Some(Ewma::new(alpha)), ..Self::default() }
+    }
+
+    /// EWMA of the recorded samples in µs; `None` unless built with
+    /// [`with_ewma`](Self::with_ewma) and at least one sample recorded.
+    pub fn ewma_us(&self) -> Option<f64> {
+        self.ewma.filter(Ewma::is_primed).map(|e| e.value())
+    }
+
     /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
-        self.sorted = false;
+        self.record_us(d.as_micros() as u64);
     }
 
     /// Record a raw microsecond sample.
     pub fn record_us(&mut self, us: u64) {
         self.samples_us.push(us);
         self.sorted = false;
+        if let Some(e) = self.ewma.as_mut() {
+            e.update(us as f64);
+        }
     }
 
     /// Number of samples.
@@ -60,10 +117,17 @@ impl LatencyRecorder {
         self.samples_us.iter().copied().max().unwrap_or(0)
     }
 
-    /// Merge another recorder's samples.
+    /// Merge another recorder's samples.  The EWMA (if configured) folds
+    /// the other's samples in their stored order — call before any
+    /// percentile query on `other` if record order matters.
     pub fn merge(&mut self, other: &LatencyRecorder) {
         self.samples_us.extend_from_slice(&other.samples_us);
         self.sorted = false;
+        if let Some(e) = self.ewma.as_mut() {
+            for &us in &other.samples_us {
+                e.update(us as f64);
+            }
+        }
     }
 }
 
@@ -75,6 +139,7 @@ impl LatencyRecorder {
 pub struct CycleRecorder {
     samples: Vec<u64>,
     sorted: bool,
+    ewma: Option<Ewma>,
 }
 
 impl CycleRecorder {
@@ -83,10 +148,25 @@ impl CycleRecorder {
         Self::default()
     }
 
+    /// Empty recorder that also tracks an EWMA of the samples in record
+    /// order (the autoscaler's queue-wait trend signal).
+    pub fn with_ewma(alpha: f64) -> Self {
+        Self { ewma: Some(Ewma::new(alpha)), ..Self::default() }
+    }
+
+    /// EWMA of the recorded samples in cycles; `None` unless built with
+    /// [`with_ewma`](Self::with_ewma) and at least one sample recorded.
+    pub fn ewma(&self) -> Option<f64> {
+        self.ewma.filter(Ewma::is_primed).map(|e| e.value())
+    }
+
     /// Record one sample (cycles).
     pub fn record(&mut self, cycles: u64) {
         self.samples.push(cycles);
         self.sorted = false;
+        if let Some(e) = self.ewma.as_mut() {
+            e.update(cycles as f64);
+        }
     }
 
     /// Number of samples.
@@ -121,10 +201,16 @@ impl CycleRecorder {
         self.samples.iter().copied().max().unwrap_or(0)
     }
 
-    /// Merge another recorder's samples.
+    /// Merge another recorder's samples (EWMA folds them in stored
+    /// order, as in [`LatencyRecorder::merge`]).
     pub fn merge(&mut self, other: &CycleRecorder) {
         self.samples.extend_from_slice(&other.samples);
         self.sorted = false;
+        if let Some(e) = self.ewma.as_mut() {
+            for &c in &other.samples {
+                e.update(c as f64);
+            }
+        }
     }
 }
 
@@ -228,6 +314,45 @@ mod tests {
         let mut empty = CycleRecorder::new();
         assert_eq!(empty.percentile(0.9), 0);
         assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges_toward_constant_input() {
+        let mut e = Ewma::new(0.5);
+        assert!(!e.is_primed());
+        assert_eq!(e.value(), 0.0);
+        assert_eq!(e.update(100.0), 100.0, "first sample primes");
+        e.update(0.0);
+        assert!((e.value() - 50.0).abs() < 1e-12);
+        for _ in 0..64 {
+            e.update(10.0);
+        }
+        assert!((e.value() - 10.0).abs() < 1e-6, "converges: {}", e.value());
+    }
+
+    #[test]
+    fn recorder_ewma_tracks_record_order() {
+        let mut r = CycleRecorder::with_ewma(0.5);
+        assert_eq!(r.ewma(), None, "unprimed");
+        r.record(100);
+        r.record(0);
+        assert!((r.ewma().unwrap() - 50.0).abs() < 1e-12);
+        // Percentile queries must not disturb the EWMA.
+        let _ = r.percentile(0.5);
+        assert!((r.ewma().unwrap() - 50.0).abs() < 1e-12);
+        // A plain recorder reports no EWMA.
+        let mut plain = CycleRecorder::new();
+        plain.record(7);
+        assert_eq!(plain.ewma(), None);
+
+        let mut l = LatencyRecorder::with_ewma(1.0);
+        l.record_us(10);
+        l.record_us(30);
+        assert!((l.ewma_us().unwrap() - 30.0).abs() < 1e-12, "alpha=1 tracks last");
+        let mut other = LatencyRecorder::new();
+        other.record_us(50);
+        l.merge(&other);
+        assert!((l.ewma_us().unwrap() - 50.0).abs() < 1e-12, "merge folds samples");
     }
 
     #[test]

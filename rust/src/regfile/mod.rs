@@ -31,11 +31,29 @@
 //! [7:0] ... master 3 in bits [31:24]); a field value of 0 means "use the
 //! default budget" so an unprogrammed register file stays functional.
 //! Error-status registers hold 8-bit error codes per region / app ID.
+//!
+//! # The 4-port window
+//!
+//! Table III is hard-wired to a 4-port crossbar: destination, isolation,
+//! bandwidth and error registers exist for the bridge port plus PR
+//! regions 1..=[`MAX_PR_REGIONS`], and for app IDs 0..=3 — there simply
+//! are no registers for a 5th port.  Configurations with more crossbar
+//! ports can still *simulate* (the crossbar itself is size-generic, see
+//! the Fig 6 sweep), but the manager refuses to place work on regions it
+//! cannot program, returning [`crate::ElasticError::RegfileWindow`]
+//! instead of silently running those ports with power-on defaults.
+//! A scalable register-file layout is an open ROADMAP item.
 
 use crate::wishbone::WbError;
 
 /// Number of registers (Table III).
 pub const NUM_REGS: usize = 20;
+
+/// Crossbar ports Table III can program: bridge port 0 + PR regions 1..=3.
+pub const MAX_PORTS: usize = 4;
+
+/// PR regions (= non-bridge ports) addressable by Table III.
+pub const MAX_PR_REGIONS: usize = MAX_PORTS - 1;
 
 /// Symbolic register indices.
 pub mod regs {
@@ -114,6 +132,17 @@ impl Default for RegisterFile {
 }
 
 impl RegisterFile {
+    /// Does Table III provide programming registers for crossbar `port`?
+    pub fn covers_port(port: usize) -> bool {
+        port < MAX_PORTS
+    }
+
+    /// Does Table III provide programming registers for PR `region`
+    /// (1-indexed, region = crossbar port)?
+    pub fn covers_region(region: usize) -> bool {
+        (1..=MAX_PR_REGIONS).contains(&region)
+    }
+
     /// Power-on state: device ID set, everything else zero.
     pub fn new() -> Self {
         let mut regs = [0u32; NUM_REGS];
@@ -374,5 +403,16 @@ mod tests {
     #[should_panic]
     fn out_of_range_index_panics() {
         RegisterFile::new().read(NUM_REGS);
+    }
+
+    #[test]
+    fn table3_window_bounds() {
+        assert!(RegisterFile::covers_port(0));
+        assert!(RegisterFile::covers_port(3));
+        assert!(!RegisterFile::covers_port(4));
+        assert!(!RegisterFile::covers_region(0), "port 0 is the bridge");
+        assert!(RegisterFile::covers_region(1));
+        assert!(RegisterFile::covers_region(MAX_PR_REGIONS));
+        assert!(!RegisterFile::covers_region(MAX_PR_REGIONS + 1));
     }
 }

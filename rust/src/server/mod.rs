@@ -30,7 +30,7 @@
 //! flight.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -51,18 +51,69 @@ pub struct FleetOptions {
     pub fabrics: usize,
     /// Admission policy routing requests to fabrics.
     pub policy: AdmissionPolicy,
+    /// Optional lane-level autoscaling tick interleaved with serving.
+    pub autoscale: Option<LaneAutoscale>,
 }
 
 impl FleetOptions {
     /// The single-board shape of the original prototype.
     pub fn single() -> Self {
-        Self { fabrics: 1, policy: AdmissionPolicy::LeastLoaded }
+        Self {
+            fabrics: 1,
+            policy: AdmissionPolicy::LeastLoaded,
+            autoscale: None,
+        }
     }
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
         Self::single()
+    }
+}
+
+/// On-line lane elasticity: every `every` admissions the scheduler runs
+/// a control tick — the serving-loop counterpart of the trace-driven
+/// [`crate::autoscale::Engine`].  The demand signal is the server's
+/// bounded-queue depth; actuation fences/unfences PR regions on every
+/// lane, so subsequent placements shift between fabric and the server
+/// CPU (per-app region *reservations* live in the autoscale engine; the
+/// threaded server scales the fabric footprint as a whole).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneAutoscale {
+    /// Admissions between control ticks (0 disables).
+    pub every: usize,
+    /// Unfence one region per lane when in-flight depth exceeds this.
+    pub grow_above: usize,
+    /// Fence one region per lane when in-flight depth is at or below
+    /// this (hysteresis: keep `grow_above > shrink_below`).
+    pub shrink_below: usize,
+    /// Regions each lane always keeps available.
+    pub min_regions: usize,
+}
+
+impl Default for LaneAutoscale {
+    fn default() -> Self {
+        Self { every: 8, grow_above: 8, shrink_below: 1, min_regions: 1 }
+    }
+}
+
+/// Counters for the server's lane autoscaler.
+#[derive(Debug, Default)]
+pub struct ScaleStats {
+    grows: AtomicU64,
+    shrinks: AtomicU64,
+}
+
+impl ScaleStats {
+    /// Control ticks that unfenced at least one region.
+    pub fn grows(&self) -> u64 {
+        self.grows.load(Ordering::Relaxed)
+    }
+
+    /// Control ticks that fenced at least one region.
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks.load(Ordering::Relaxed)
     }
 }
 
@@ -136,6 +187,7 @@ pub struct ElasticServer {
     workers: Vec<JoinHandle<()>>,
     slots: Arc<Semaphore>,
     in_flight: Arc<AtomicUsize>,
+    scale_stats: Arc<ScaleStats>,
 }
 
 /// Legacy name for the single-fabric shape.
@@ -182,6 +234,8 @@ impl ElasticServer {
         let sched_rt = runtime;
         let slots_s = Arc::clone(&slots);
         let in_flight_s = Arc::clone(&in_flight);
+        let scale_stats = Arc::new(ScaleStats::default());
+        let scale_stats_s = Arc::clone(&scale_stats);
         let scheduler = std::thread::Builder::new()
             .name("efpga-scheduler".into())
             .spawn(move || {
@@ -193,6 +247,7 @@ impl ElasticServer {
                     sched_rt,
                     slots_s,
                     in_flight_s,
+                    scale_stats_s,
                 )
             })
             .expect("spawn scheduler");
@@ -203,6 +258,7 @@ impl ElasticServer {
             workers,
             slots,
             in_flight,
+            scale_stats,
         }
     }
 
@@ -223,6 +279,11 @@ impl ElasticServer {
     /// Requests currently queued or executing.
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Lane-autoscaler counters (all zero when autoscale is off).
+    pub fn scale_stats(&self) -> &ScaleStats {
+        &self.scale_stats
     }
 
     /// Stop accepting requests, drain, and join all threads.
@@ -297,6 +358,7 @@ fn scheduler_loop(
     runtime: Option<RuntimeHandle>,
     slots: Arc<Semaphore>,
     in_flight: Arc<AtomicUsize>,
+    scale_stats: Arc<ScaleStats>,
 ) {
     let mut lanes: Vec<Lane> = (0..opts.fabrics.max(1))
         .map(|_| Lane {
@@ -305,7 +367,16 @@ fn scheduler_loop(
         })
         .collect();
     let mut pins: HashMap<u32, usize> = HashMap::new();
+    let mut admitted: usize = 0;
     while let Ok(sub) = submit_rx.recv() {
+        admitted += 1;
+        // Control-loop tick interleaved with serving: scale every lane's
+        // fabric footprint against the queue's demand signal.
+        if let Some(scale) = opts.autoscale {
+            if scale.every > 0 && admitted % scale.every == 0 {
+                autoscale_tick(&mut lanes, &scale, &in_flight, &scale_stats);
+            }
+        }
         let lane_idx = select_lane(&lanes, &mut pins, opts.policy, &sub.req);
         let queue_wait_cycles = lanes[lane_idx].clock;
         let lane = &mut lanes[lane_idx];
@@ -351,6 +422,41 @@ fn scheduler_loop(
     // Drain: tell workers to stop once the queue is empty.
     for _ in 0..64 {
         let _ = work_tx.send(WorkerMsg::Stop);
+    }
+}
+
+/// One lane-autoscale control tick: grow (unfence a region per lane)
+/// when the queue is deep, shrink (fence one per lane, keeping
+/// `min_regions`) when it is drained.
+fn autoscale_tick(
+    lanes: &mut [Lane],
+    scale: &LaneAutoscale,
+    in_flight: &AtomicUsize,
+    stats: &ScaleStats,
+) {
+    let depth = in_flight.load(Ordering::SeqCst);
+    if depth > scale.grow_above {
+        let mut grew = false;
+        for lane in lanes.iter_mut() {
+            if lane.manager.unfence_regions(1) > 0 {
+                grew = true;
+            }
+        }
+        if grew {
+            stats.grows.fetch_add(1, Ordering::Relaxed);
+        }
+    } else if depth <= scale.shrink_below {
+        let mut shrank = false;
+        for lane in lanes.iter_mut() {
+            if lane.manager.available_regions() > scale.min_regions
+                && lane.manager.fence_regions(1) > 0
+            {
+                shrank = true;
+            }
+        }
+        if shrank {
+            stats.shrinks.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -578,7 +684,11 @@ mod tests {
     fn fleet_server_spreads_lanes_and_reports_them() {
         let server = ElasticServer::start_fleet(
             SystemConfig::paper_defaults(),
-            FleetOptions { fabrics: 2, policy: AdmissionPolicy::LeastLoaded },
+            FleetOptions {
+                fabrics: 2,
+                policy: AdmissionPolicy::LeastLoaded,
+                autoscale: None,
+            },
             None,
         );
         let mut rxs = Vec::new();
@@ -601,6 +711,51 @@ mod tests {
             lanes_seen[0] > 0 && lanes_seen[1] > 0,
             "least-loaded never used a lane: {lanes_seen:?}"
         );
+        server.shutdown();
+    }
+
+    #[test]
+    fn lane_autoscale_ticks_scale_the_fabric_footprint() {
+        // Phase A: sequential calls keep the queue at depth 1, so every
+        // tick is a shrink until lanes hit the 1-region floor — later
+        // requests run a 1-stage FPGA prefix + CPU suffix, still
+        // verified.  Phase B: a burst drives the depth past grow_above,
+        // so ticks unfence the regions back.
+        let server = ElasticServer::start_fleet(
+            SystemConfig::paper_defaults(),
+            FleetOptions {
+                fabrics: 1,
+                policy: AdmissionPolicy::LeastLoaded,
+                autoscale: Some(LaneAutoscale {
+                    every: 1,
+                    grow_above: 8,
+                    // Depth reads 1 (or briefly 2) between sequential
+                    // calls; 2 keeps the shrink phase race-free.
+                    shrink_below: 2,
+                    min_regions: 1,
+                }),
+            },
+            None,
+        );
+        for i in 0..6u64 {
+            let rep = call(&server, AppRequest::pipeline(0, data(64, i))).unwrap();
+            assert!(rep.verified);
+        }
+        assert!(server.scale_stats().shrinks() > 0, "idle lanes never shrank");
+
+        let mut rxs = Vec::new();
+        for i in 0..24u64 {
+            rxs.push(
+                server
+                    .submit(AppRequest::pipeline((i % 4) as u32, data(64, 100 + i)))
+                    .unwrap(),
+            );
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.report.unwrap().verified);
+        }
+        assert!(server.scale_stats().grows() > 0, "burst never grew lanes");
         server.shutdown();
     }
 }

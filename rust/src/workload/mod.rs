@@ -91,6 +91,191 @@ impl WorkloadSpec {
     }
 }
 
+/// Time-varying arrival-rate profile for one tenant's request stream —
+/// the demand shapes the closed-loop autoscaler ([`crate::autoscale`])
+/// reacts to.
+#[derive(Debug, Clone)]
+pub enum RateProfile {
+    /// Flat rate (the original [`WorkloadSpec`] behavior).
+    Constant {
+        /// Requests per second.
+        rate_per_s: f64,
+    },
+    /// Sinusoidal day/night cycle:
+    /// `rate(t) = floor + (peak-floor)/2 * (1 + sin(2π(t/period + phase)))`.
+    /// Anti-phase tenants (phase `k/n`) peak at different times — the
+    /// consolidation opportunity a static split cannot exploit.
+    Diurnal {
+        /// Trough rate (requests per second).
+        floor_per_s: f64,
+        /// Peak rate (requests per second).
+        peak_per_s: f64,
+        /// Cycle length in seconds.
+        period_s: f64,
+        /// Phase offset in cycles (0.25 = peak a quarter-period earlier).
+        phase: f64,
+    },
+    /// Square-wave on/off bursts.
+    Bursty {
+        /// Rate during a burst (requests per second).
+        burst_per_s: f64,
+        /// Rate between bursts (requests per second).
+        idle_per_s: f64,
+        /// Burst length in seconds.
+        burst_s: f64,
+        /// Idle length in seconds.
+        idle_s: f64,
+        /// Shift of the burst window start, in seconds.
+        phase_s: f64,
+    },
+}
+
+impl RateProfile {
+    /// Instantaneous arrival rate (requests per second) at time `t_s`.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            RateProfile::Constant { rate_per_s } => rate_per_s,
+            RateProfile::Diurnal { floor_per_s, peak_per_s, period_s, phase } => {
+                let x = std::f64::consts::TAU * (t_s / period_s + phase);
+                floor_per_s + 0.5 * (peak_per_s - floor_per_s) * (1.0 + x.sin())
+            }
+            RateProfile::Bursty {
+                burst_per_s,
+                idle_per_s,
+                burst_s,
+                idle_s,
+                phase_s,
+            } => {
+                let cycle = burst_s + idle_s;
+                if (t_s + phase_s).rem_euclid(cycle) < burst_s {
+                    burst_per_s
+                } else {
+                    idle_per_s
+                }
+            }
+        }
+    }
+}
+
+/// One tenant's stream: a fixed acceleration requirement (stage chain +
+/// payload size) arriving under a [`RateProfile`].
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Application ID (0..=3 in the 4-port prototype).
+    pub app_id: u32,
+    /// The tenant's stage chain.
+    pub stages: Vec<ModuleKind>,
+    /// Payload size in words (multiple of the 8-word burst).
+    pub words: usize,
+    /// Arrival-rate profile.
+    pub profile: RateProfile,
+}
+
+/// Anti-phase diurnal tenants running the Fig-5 pipeline: tenant `k` of
+/// `n` is phase-shifted by `k/n` of a period, so peaks rotate around the
+/// tenant set while the aggregate stays roughly flat.
+pub fn diurnal_tenants(
+    tenants: u32,
+    floor_per_s: f64,
+    peak_per_s: f64,
+    period_s: f64,
+    words: usize,
+) -> Vec<TenantSpec> {
+    assert!((1..=4).contains(&tenants), "4 app IDs in the prototype");
+    (0..tenants)
+        .map(|i| TenantSpec {
+            app_id: i,
+            stages: ModuleKind::pipeline().to_vec(),
+            words,
+            profile: RateProfile::Diurnal {
+                floor_per_s,
+                peak_per_s,
+                period_s,
+                phase: i as f64 / tenants as f64,
+            },
+        })
+        .collect()
+}
+
+/// Staggered on/off bursty tenants running the Fig-5 pipeline.
+pub fn bursty_tenants(
+    tenants: u32,
+    burst_per_s: f64,
+    idle_per_s: f64,
+    burst_s: f64,
+    idle_s: f64,
+    words: usize,
+) -> Vec<TenantSpec> {
+    assert!((1..=4).contains(&tenants), "4 app IDs in the prototype");
+    let cycle = burst_s + idle_s;
+    (0..tenants)
+        .map(|i| TenantSpec {
+            app_id: i,
+            stages: ModuleKind::pipeline().to_vec(),
+            words,
+            profile: RateProfile::Bursty {
+                burst_per_s,
+                idle_per_s,
+                burst_s,
+                idle_s,
+                phase_s: i as f64 * cycle / tenants as f64,
+            },
+        })
+        .collect()
+}
+
+/// Generate a deterministic merged trace of exactly `count` arrivals
+/// from per-tenant rate profiles (1 ms Bernoulli slots per tenant, like
+/// [`generate`], so each tenant caps at 1000 req/s).
+pub fn generate_profiled(
+    tenants: &[TenantSpec],
+    seed: u64,
+    count: usize,
+) -> Vec<TraceEvent> {
+    assert!(!tenants.is_empty() && tenants.len() <= 4);
+    assert!(count > 0);
+    for t in tenants {
+        assert!(t.app_id < 4, "4 app IDs in the prototype");
+        assert!(
+            t.words > 0 && t.words % 8 == 0,
+            "payload must be a positive multiple of the 8-word burst"
+        );
+        assert!(!t.stages.is_empty(), "empty stage chain");
+    }
+    let mut rng = SplitMix64::new(seed);
+    let mut events = Vec::with_capacity(count + tenants.len());
+    let mut slot = 0u64;
+    while events.len() < count {
+        assert!(
+            slot < 100_000_000,
+            "profiled trace generation stalled (all rates ~0?)"
+        );
+        let t_s = slot as f64 / 1000.0;
+        for spec in tenants {
+            let p = (spec.profile.rate_at(t_s) / 1000.0).clamp(0.0, 1.0);
+            if rng.chance(p) {
+                let jitter = rng.unit_f64();
+                let mut data = vec![0u32; spec.words];
+                rng.fill_u32(&mut data);
+                events.push(TraceEvent {
+                    arrival_ms: slot as f64 + jitter,
+                    request: AppRequest {
+                        app_id: spec.app_id,
+                        data,
+                        stages: spec.stages.clone(),
+                    },
+                });
+            }
+        }
+        slot += 1;
+    }
+    // Same-slot arrivals of different tenants carry independent jitter;
+    // restore global arrival order before truncating to the count.
+    events.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    events.truncate(count);
+    events
+}
+
 /// Draw an index from a weighted list.
 fn weighted_pick<T>(rng: &mut SplitMix64, items: &[(T, f64)]) -> usize {
     let total: f64 = items.iter().map(|(_, w)| *w).sum();
@@ -127,7 +312,7 @@ fn generate_inner(
     max_slots: Option<u64>,
     max_events: Option<usize>,
 ) -> Vec<TraceEvent> {
-    assert!(spec.tenants >= 1 && spec.tenants <= 4, "4 app IDs in the prototype");
+    assert!((1..=4).contains(&spec.tenants), "4 app IDs in the prototype");
     assert!(
         spec.size_mix.iter().all(|(s, _)| s % 8 == 0 && *s > 0),
         "sizes must be positive multiples of the 8-word burst"
@@ -289,5 +474,98 @@ mod tests {
         let mut spec = WorkloadSpec::fig5_mix();
         spec.size_mix = vec![(13, 1.0)];
         generate(&spec, 0);
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_between_floor_and_peak() {
+        let p = RateProfile::Diurnal {
+            floor_per_s: 10.0,
+            peak_per_s: 110.0,
+            period_s: 8.0,
+            phase: 0.0,
+        };
+        // sin(2π t/8): peak at t = 2 s, trough at t = 6 s.
+        assert!((p.rate_at(2.0) - 110.0).abs() < 1e-9);
+        assert!((p.rate_at(6.0) - 10.0).abs() < 1e-9);
+        assert!((p.rate_at(0.0) - 60.0).abs() < 1e-9, "midpoint at phase 0");
+        // A quarter-period phase shift moves the peak earlier.
+        let shifted = RateProfile::Diurnal {
+            floor_per_s: 10.0,
+            peak_per_s: 110.0,
+            period_s: 8.0,
+            phase: 0.25,
+        };
+        assert!((shifted.rate_at(0.0) - 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bursty_rate_alternates() {
+        let p = RateProfile::Bursty {
+            burst_per_s: 500.0,
+            idle_per_s: 5.0,
+            burst_s: 1.0,
+            idle_s: 3.0,
+            phase_s: 0.0,
+        };
+        assert_eq!(p.rate_at(0.5), 500.0);
+        assert_eq!(p.rate_at(2.0), 5.0);
+        assert_eq!(p.rate_at(4.5), 500.0, "periodic");
+        assert_eq!(RateProfile::Constant { rate_per_s: 7.0 }.rate_at(99.0), 7.0);
+    }
+
+    #[test]
+    fn profiled_trace_is_deterministic_sorted_and_exact() {
+        let tenants = diurnal_tenants(4, 30.0, 450.0, 4.0, 64);
+        let a = generate_profiled(&tenants, 17, 800);
+        let b = generate_profiled(&tenants, 17, 800);
+        assert_eq!(a.len(), 800);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.request.app_id, y.request.app_id);
+            assert_eq!(x.request.data, y.request.data);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+        // All four tenants appear, with the agreed shape.
+        let mut seen: Vec<u32> = a.iter().map(|e| e.request.app_id).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        for e in &a {
+            assert_eq!(e.request.data.len(), 64);
+            assert_eq!(e.request.stages.len(), 3);
+        }
+    }
+
+    #[test]
+    fn profiled_trace_follows_the_demand_wave() {
+        // One tenant, hard day/night: arrivals must concentrate in the
+        // high-rate half-periods.
+        let tenants = vec![TenantSpec {
+            app_id: 0,
+            stages: ModuleKind::pipeline().to_vec(),
+            words: 8,
+            profile: RateProfile::Bursty {
+                burst_per_s: 400.0,
+                idle_per_s: 4.0,
+                burst_s: 1.0,
+                idle_s: 1.0,
+                phase_s: 0.0,
+            },
+        }];
+        let trace = generate_profiled(&tenants, 3, 600);
+        let (mut burst, mut idle) = (0usize, 0usize);
+        for e in &trace {
+            if (e.arrival_ms / 1000.0).rem_euclid(2.0) < 1.0 {
+                burst += 1;
+            } else {
+                idle += 1;
+            }
+        }
+        assert!(
+            burst > idle * 10,
+            "bursts not dominant: {burst} vs {idle}"
+        );
     }
 }

@@ -1,0 +1,213 @@
+//! Acceptance tests for the closed-loop elasticity control plane:
+//!
+//! * on a diurnal+churn trace the autoscaler achieves **strictly higher
+//!   PR-region utilization** than the static even split at
+//!   **equal-or-better p99 queue wait**;
+//! * every grow/shrink transition is accompanied by serialized ICAP
+//!   events and a register-file reprogram;
+//! * same seed + same churn trace ⇒ identical placement history and
+//!   final region map across runs (churn determinism);
+//! * a board outage drains gracefully and its chains migrate to a
+//!   surviving board.
+
+use elastic_fpga::autoscale::{
+    autoscale_profile, run_diurnal_scenario, AutoscaleReport, ChurnTrace,
+    Engine, EngineOptions, PolicyKind, TransitionKind,
+};
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::manager::RegionState;
+use elastic_fpga::workload::{diurnal_tenants, generate_profiled};
+
+const NODES: usize = 5;
+const TENANTS: u32 = 4;
+const REQUESTS: usize = 4000;
+const PERIOD_S: f64 = 2.5;
+const SEED: u64 = 1;
+
+/// The scenario profile with a test-sized partial bitstream (64 KB =
+/// 32768 ICAP fabric cycles per region) so the timed programmings stay
+/// cheap.
+fn fast_cfg() -> SystemConfig {
+    let mut cfg = autoscale_profile();
+    cfg.manager.bitstream_bytes = 64 * 1024;
+    cfg
+}
+
+fn assert_transitions_are_actuated(report: &AutoscaleReport) {
+    let mut saw_policy_transition = false;
+    for tr in &report.transitions {
+        if !matches!(tr.kind, TransitionKind::Grow | TransitionKind::Shrink) {
+            continue;
+        }
+        saw_policy_transition = true;
+        assert!(
+            !tr.icap_events.is_empty(),
+            "transition without an ICAP event: {tr:?}"
+        );
+        assert!(
+            tr.regfile_after > tr.regfile_before,
+            "transition without a regfile reprogram: {tr:?}"
+        );
+        for &e in &tr.icap_events {
+            let ev = &report.icap_events[e];
+            assert_eq!(ev.node, tr.node);
+            assert_eq!(ev.app_id, tr.app_id);
+            assert!(tr.regions.contains(&ev.region));
+        }
+    }
+    assert!(saw_policy_transition, "no grow/shrink transitions at all");
+}
+
+fn assert_icap_serialized(report: &AutoscaleReport, nodes: usize) {
+    for node in 0..nodes {
+        let mut events: Vec<_> = report
+            .icap_events
+            .iter()
+            .filter(|e| e.node == node)
+            .collect();
+        events.sort_by_key(|e| e.start_cycle);
+        for e in &events {
+            assert!(e.end_cycle > e.start_cycle, "zero-length ICAP: {e:?}");
+        }
+        for w in events.windows(2) {
+            assert!(
+                w[1].start_cycle >= w[0].end_cycle,
+                "overlapping ICAP programmings on node {node}: {:?} / {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn autoscaler_beats_static_split_on_diurnal_churn() {
+    let cfg = fast_cfg();
+    let rep = run_diurnal_scenario(
+        &cfg,
+        NODES,
+        TENANTS,
+        REQUESTS,
+        PERIOD_S,
+        SEED,
+        true,
+        PolicyKind::TargetQueueDepth,
+    )
+    .unwrap();
+    let auto = &rep.autoscaled;
+    let stat = &rep.static_baseline;
+    assert_eq!(auto.completed, REQUESTS as u64);
+    assert_eq!(stat.completed, REQUESTS as u64);
+
+    // The acceptance criterion: strictly higher PR-region utilization at
+    // equal-or-better p99 queue wait.
+    assert!(
+        auto.utilization > stat.utilization,
+        "autoscaler utilization {:.4} not above static {:.4}",
+        auto.utilization,
+        stat.utilization
+    );
+    let mut auto_wait = auto.queue_wait.clone();
+    let mut stat_wait = stat.queue_wait.clone();
+    assert!(
+        auto_wait.percentile(0.99) <= stat_wait.percentile(0.99),
+        "autoscaler p99 wait {} above static {}",
+        auto_wait.percentile(0.99),
+        stat_wait.percentile(0.99)
+    );
+    assert!(auto.slo_attainment >= stat.slo_attainment);
+
+    // The loop exercised both directions and actuated every transition
+    // through the ICAP + register file.
+    assert!(auto.grows > 0, "no grow decisions on a diurnal trace");
+    assert!(auto.shrinks > 0, "no shrink decisions on a diurnal trace");
+    assert_transitions_are_actuated(auto);
+    assert_transitions_are_actuated(stat); // t=0 installs + rejoins
+    assert_icap_serialized(auto, NODES);
+    assert_icap_serialized(stat, NODES);
+
+    // The cost oracle ran once per shape, not per request.
+    assert!(auto.oracle_runs < 16, "oracle runs: {}", auto.oracle_runs);
+}
+
+#[test]
+fn same_seed_and_churn_trace_replay_identically() {
+    let cfg = fast_cfg();
+    let specs = diurnal_tenants(TENANTS, 30.0, 450.0, PERIOD_S, 64);
+    let trace = generate_profiled(&specs, 7, 2500);
+    let duration_ms = trace.last().unwrap().arrival_ms;
+    let churn = ChurnTrace::generate(99, NODES, duration_ms);
+    let run = || {
+        let mut engine = Engine::new(
+            &cfg,
+            NODES,
+            TENANTS as usize,
+            PolicyKind::LatencySlo.build(),
+            EngineOptions::default(),
+        );
+        engine.run(&trace, &churn).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.transitions, b.transitions, "placement history diverged");
+    assert_eq!(a.icap_events, b.icap_events, "ICAP schedule diverged");
+    assert_eq!(a.final_regions, b.final_regions, "final region map diverged");
+    assert_eq!(a.makespan_cycles, b.makespan_cycles);
+    assert_eq!(a.busy_region_cycles, b.busy_region_cycles);
+    assert_eq!(a.grows, b.grows);
+    assert_eq!(a.shrinks, b.shrinks);
+    let (mut aw, mut bw) = (a.queue_wait.clone(), b.queue_wait.clone());
+    assert_eq!(aw.percentile(0.99), bw.percentile(0.99));
+}
+
+#[test]
+fn board_outage_drains_gracefully_and_chains_migrate() {
+    let cfg = fast_cfg();
+    // Demand low enough that the policy never grows on its own: the only
+    // reallocation is churn-driven, which makes the migration visible.
+    let specs = diurnal_tenants(2, 20.0, 150.0, 2.0, 64);
+    let trace = generate_profiled(&specs, 3, 1500);
+    let last_ms = trace.last().unwrap().arrival_ms;
+    let (down_ms, up_ms) = (last_ms * 0.3, last_ms * 0.7);
+    let churn = ChurnTrace::outage(1, down_ms, up_ms);
+    let mut engine = Engine::new(
+        &cfg,
+        3,
+        2,
+        PolicyKind::TargetQueueDepth.build(),
+        EngineOptions::default(),
+    );
+    let rep = engine.run(&trace, &churn).unwrap();
+    assert_eq!(rep.completed, 1500);
+
+    // Initial layout: app 0 on node 0, app 1 on node 1.  The outage must
+    // record a graceful release of node 1's chain...
+    let cycles_per_ms = cfg.fabric.clock_mhz * 1000.0;
+    let down_cycle = (down_ms * cycles_per_ms).round() as u64;
+    assert!(
+        rep.transitions
+            .iter()
+            .any(|t| t.node == 1 && t.kind == TransitionKind::Churn),
+        "no graceful release recorded for the lost board"
+    );
+    // ...and a re-placement grow on a surviving board in the same
+    // control step (the cross-fabric migration).
+    assert!(
+        rep.transitions.iter().any(|t| {
+            t.kind == TransitionKind::Grow
+                && t.at_cycle == down_cycle
+                && t.node != 1
+        }),
+        "lost capacity was not re-placed: {:?}",
+        rep.transitions
+    );
+    // After the rejoin nothing moved back (reactive mode leaves regrowth
+    // to demand): node 1 ends unfenced and empty.
+    assert!(
+        rep.final_regions[1][1..]
+            .iter()
+            .all(|r| *r == RegionState::Available),
+        "node 1 should end unfenced and empty: {:?}",
+        rep.final_regions[1]
+    );
+}

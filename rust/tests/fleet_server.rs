@@ -24,7 +24,11 @@ fn seeded_requests() -> Vec<AppRequest> {
 fn two_fabric_server_completes_seeded_workload_deterministically() {
     let server = ElasticServer::start_fleet(
         SystemConfig::paper_defaults(),
-        FleetOptions { fabrics: 2, policy: AdmissionPolicy::StickyByApp },
+        FleetOptions {
+            fabrics: 2,
+            policy: AdmissionPolicy::StickyByApp,
+            autoscale: None,
+        },
         None,
     );
     let requests = seeded_requests();
@@ -65,7 +69,11 @@ fn two_fabric_server_completes_seeded_workload_deterministically() {
     // Determinism: a second identical run reports identical queue waits.
     let server2 = ElasticServer::start_fleet(
         SystemConfig::paper_defaults(),
-        FleetOptions { fabrics: 2, policy: AdmissionPolicy::StickyByApp },
+        FleetOptions {
+            fabrics: 2,
+            policy: AdmissionPolicy::StickyByApp,
+            autoscale: None,
+        },
         None,
     );
     let mut rxs2 = Vec::new();
@@ -85,7 +93,11 @@ fn two_fabric_server_completes_seeded_workload_deterministically() {
 fn sticky_policy_keeps_each_app_on_one_fabric() {
     let server = ElasticServer::start_fleet(
         SystemConfig::paper_defaults(),
-        FleetOptions { fabrics: 2, policy: AdmissionPolicy::StickyByApp },
+        FleetOptions {
+            fabrics: 2,
+            policy: AdmissionPolicy::StickyByApp,
+            autoscale: None,
+        },
         None,
     );
     let mut rng = SplitMix64::new(5);

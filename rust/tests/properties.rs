@@ -13,8 +13,8 @@ use elastic_fpga::util::onehot::encode_onehot;
 use elastic_fpga::wishbone::Job;
 
 fn open_xbar(n: usize) -> Crossbar {
-    let mut cfg = CrossbarConfig::default();
-    cfg.grant_timeout = 1_000_000;
+    let cfg =
+        CrossbarConfig { grant_timeout: 1_000_000, ..CrossbarConfig::default() };
     let mut xb = Crossbar::new(n, cfg);
     let all = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
     for m in 0..n {
@@ -103,8 +103,10 @@ fn prop_isolation_mask_is_never_violated() {
     // from masters whose mask includes it; disallowed jobs error.
     check(0x150, DEFAULT_CASES, |g: &mut Gen| {
         let n = 4usize;
-        let mut cfg = CrossbarConfig::default();
-        cfg.grant_timeout = 1_000_000;
+        let cfg = CrossbarConfig {
+            grant_timeout: 1_000_000,
+            ..CrossbarConfig::default()
+        };
         let mut xb = Crossbar::new(n, cfg);
         let mut masks = [0u32; 4];
         for m in 0..n {
@@ -334,8 +336,10 @@ fn prop_destination_absent_from_regfile_is_masked_never_granted() {
     check(0x150A, 64, |g: &mut Gen| {
         use elastic_fpga::regfile::RegisterFile;
         let n = 4usize;
-        let mut cfg = CrossbarConfig::default();
-        cfg.grant_timeout = 1_000_000;
+        let cfg = CrossbarConfig {
+            grant_timeout: 1_000_000,
+            ..CrossbarConfig::default()
+        };
         let mut xb = Crossbar::new(n, cfg);
         let mut rf = RegisterFile::new();
         for m in 0..n {
@@ -440,6 +444,135 @@ fn prop_pipeline_identity_any_buffer() {
             if *gi != xi.wrapping_mul(hamming::MULT_CONSTANT) & hamming::DATA_MASK {
                 return Err("identity violated".into());
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_icap_serializes_overlapping_reconfigs() {
+    // Overlapping ReconfigRequests against one ICAP: the single physical
+    // port must service them strictly one-at-a-time (a start attempt
+    // while busy is rejected; the next acceptance lands exactly at the
+    // previous completion), in FIFO order, each completing at its
+    // accept cycle + expected_cycles(words).
+    use elastic_fpga::icap::{Icap, ReconfigRequest};
+
+    check(0x1CA9, 48, |g: &mut Gen| {
+        let n = g.int("requests", 2, 6) as usize;
+        let fifo = g.int("fifo", 1, 64) as usize;
+        let mut pending = Vec::new();
+        for region in 0..n {
+            pending.push(ReconfigRequest {
+                region: 1 + region % 3,
+                kind: ModuleKind::Multiplier,
+                app_id: (region % 4) as u32,
+                bitstream_words: 1 + g.rng().below(256),
+                fail_after: None,
+            });
+        }
+        let mut icap = Icap::new(fifo);
+        let mut clk = Clock::new();
+        let mut next = 0usize;
+        let mut accepts: Vec<(u64, u64)> = Vec::new(); // (cycle, words)
+        let mut completions: Vec<u64> = Vec::new();
+        let mut rejected_while_busy = 0u64;
+
+        // Everyone offered every cycle: only the head can ever win.
+        if icap.start(pending[next].clone()) {
+            accepts.push((clk.now(), pending[next].bitstream_words));
+            next += 1;
+        }
+        let budget: u64 =
+            pending.iter().map(|r| 2 * r.bitstream_words + 8).sum();
+        for _ in 0..budget {
+            let c = clk.advance();
+            icap.tick(c);
+            for done in icap.take_done() {
+                completions.push(done.cycle);
+                if !done.ok {
+                    return Err("clean bitstream reported failure".into());
+                }
+            }
+            if next < pending.len() {
+                let was_busy = icap.busy();
+                if icap.start(pending[next].clone()) {
+                    if was_busy {
+                        return Err("start accepted while busy".into());
+                    }
+                    accepts.push((c, pending[next].bitstream_words));
+                    next += 1;
+                } else {
+                    rejected_while_busy += 1;
+                }
+            }
+            if completions.len() == pending.len() {
+                break;
+            }
+        }
+        if completions.len() != pending.len() {
+            return Err(format!(
+                "only {}/{} programmings completed",
+                completions.len(),
+                pending.len()
+            ));
+        }
+        if rejected_while_busy == 0 {
+            return Err("requests never overlapped".into());
+        }
+        // Strict one-at-a-time FIFO: acceptance i+1 happens exactly at
+        // completion i, and every programming takes exactly
+        // expected_cycles from its acceptance.
+        for (i, &(accept, words)) in accepts.iter().enumerate() {
+            let done = completions[i];
+            if done != accept + Icap::expected_cycles(words) {
+                return Err(format!(
+                    "programming {i}: accepted {accept}, {words} words, \
+                     done {done} != {}",
+                    accept + Icap::expected_cycles(words)
+                ));
+            }
+            if i + 1 < accepts.len() && accepts[i + 1].0 != done {
+                return Err(format!(
+                    "programming {} accepted at {} but {} completed at {done}",
+                    i + 1,
+                    accepts[i + 1].0,
+                    i
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_icap_expected_cycles_matches_timed_completion() {
+    // A fresh ICAP + fresh clock: the analytic expected_cycles(words) is
+    // exactly the timed completion cycle, for any bitstream length and
+    // any CDC FIFO depth >= 1 (the 2x-faster producer always keeps the
+    // 125 MHz consumer fed).
+    use elastic_fpga::icap::{Icap, ReconfigRequest};
+
+    check(0x1CAB, 64, |g: &mut Gen| {
+        let words = 1 + g.rng().below(2048);
+        let fifo = g.int("fifo", 1, 64) as usize;
+        let mut icap = Icap::new(fifo);
+        assert!(icap.start(ReconfigRequest {
+            region: 1,
+            kind: ModuleKind::HammingEncoder,
+            app_id: 0,
+            bitstream_words: words,
+            fail_after: None,
+        }));
+        let mut clk = Clock::new();
+        let done_at = clk
+            .run_until(&mut icap, 2 * words + 16, |i| !i.busy())
+            .ok_or_else(|| "programming never finished".to_string())?;
+        let expected = Icap::expected_cycles(words);
+        if done_at != expected {
+            return Err(format!(
+                "{words} words: completed at {done_at}, expected {expected}"
+            ));
         }
         Ok(())
     });
