@@ -49,12 +49,12 @@ fn fabric_loop(rounds: u64) -> f64 {
     let cfg = SystemConfig::paper_defaults();
     let mut f = Fabric::new(cfg);
     let ports = [1usize, 2, 3];
-    f.regfile.set_app_destination(0, 0b0010);
-    f.regfile.set_allowed_slaves(0, 0b0010);
+    f.regfile.set_app_destination(0, 0b0010).unwrap();
+    f.regfile.set_allowed_slaves(0, 0b0010).unwrap();
     for (i, &p) in ports.iter().enumerate() {
         let next = ports.get(i + 1).copied().unwrap_or(0);
-        f.regfile.set_pr_destination(p, 1 << next);
-        f.regfile.set_allowed_slaves(p, 1 << next);
+        f.regfile.set_pr_destination(p, 1 << next).unwrap();
+        f.regfile.set_allowed_slaves(p, 1 << next).unwrap();
     }
     for (&p, &k) in ports.iter().zip(ModuleKind::pipeline().iter()) {
         f.install_static_module(p, k, 0);

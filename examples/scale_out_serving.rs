@@ -1,0 +1,167 @@
+//! Scale-out serving on 16-port boards: the placements PR 2 refused.
+//!
+//! ```bash
+//! cargo run --release --example scale_out_serving            # 40k requests
+//! cargo run --release --example scale_out_serving -- 10000   # CI smoke
+//! ```
+//!
+//! Until the banked register-file layout, `configs/scale16.toml` could
+//! only be *simulated*: the manager refused any placement past crossbar
+//! port 3 (and any app ID past 3) with `ElasticError::RegfileWindow`,
+//! capping every board at 3 programmable PR regions.  This example
+//! drives the two things that used to fail:
+//!
+//! 1. **Direct programming** — an `ElasticManager` on the shipped
+//!    16-port config programs destinations, isolation masks and WRR
+//!    package budgets for a chain spanning regions 4..=12, then
+//!    executes a 9-stage request entirely on fabric;
+//! 2. **Closed-loop serving** — the autoscaler (feed-forward
+//!    predictive policy) serves six diurnal tenants — app IDs 4 and 5
+//!    included — over two 15-region boards with churn, against the
+//!    static even split; the transition history shows regions beyond
+//!    port 3 in live use from the first allocation on.
+
+use elastic_fpga::autoscale::{
+    run_diurnal_scenario, serving_profile_on, AutoscaleReport, PolicyKind,
+};
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::manager::{AppRequest, ElasticManager};
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::util::SplitMix64;
+
+const NODES: usize = 2;
+const TENANTS: u32 = 6; // app IDs 0..=5 — two beyond the old window
+const PERIOD_S: f64 = 10.0;
+const SEED: u64 = 1;
+
+fn scale16_cfg() -> SystemConfig {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/scale16.toml");
+    let cfg = SystemConfig::load(std::path::Path::new(path))
+        .expect("configs/scale16.toml must parse");
+    // Serving-profile timing (lighter descriptor rounds, region-sized
+    // partial bitstreams) — the same overlay the `autoscale --config`
+    // CLI path applies.
+    serving_profile_on(cfg)
+}
+
+/// Part 1: program a chain across regions Table III never had registers
+/// for, and run a 9-stage request on it.
+fn direct_programming(cfg: &SystemConfig) {
+    let mut mgr = ElasticManager::new(cfg.clone(), None);
+    let chain: Vec<usize> = (4..=12).collect();
+    mgr.program_app_chain(2, &chain, 32)
+        .expect("regions 4..=12 are inside the 16-port layout");
+    let rf = &mgr.fabric().regfile;
+    println!("programmed app 2 across regions 4..=12:");
+    for &r in &chain {
+        println!(
+            "  region {r:>2}: dest {:#07x}  mask {:#07x}  wrr {}",
+            rf.pr_destination(r).unwrap(),
+            rf.allowed_slaves(r).unwrap(),
+            rf.allowed_packages(if r == 12 { 0 } else { r + 1 }, r).unwrap(),
+        );
+    }
+
+    let mut data = vec![0u32; 512];
+    SplitMix64::new(7).fill_u32(&mut data);
+    let req = AppRequest {
+        app_id: 2,
+        data,
+        stages: vec![ModuleKind::Multiplier; 9],
+    };
+    let rep = mgr.execute(&req).expect("9-stage chain on a 16-port board");
+    assert_eq!(rep.fpga_stages, 9, "whole chain must land on fabric");
+    assert!(rep.verified);
+    println!(
+        "9-stage request: {} words, {} FPGA stages, verified={}, \
+         {:.2} ms modelled\n",
+        rep.output.len(),
+        rep.fpga_stages,
+        rep.verified,
+        rep.cost.total_ms()
+    );
+}
+
+fn describe(cfg: &SystemConfig, name: &str, r: &AutoscaleReport) {
+    let mut wait = r.queue_wait.clone();
+    println!(
+        "{name} ({}): util {:.1}% | queue wait p50 {:.2} ms p99 {:.2} ms | \
+         SLO {:.1}% | fabric/cpu {}/{} | grows {} shrinks {} | icap {}",
+        r.policy,
+        r.utilization * 100.0,
+        cfg.cycles_to_ms(wait.percentile(0.50)),
+        cfg.cycles_to_ms(wait.percentile(0.99)),
+        r.slo_attainment * 100.0,
+        r.fabric_requests,
+        r.cpu_requests,
+        r.grows,
+        r.shrinks,
+        r.icap_events.len(),
+    );
+}
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .map(|a| a.parse().expect("usage: scale_out_serving [requests]"))
+        .unwrap_or(40_000);
+    let cfg = scale16_cfg();
+    println!(
+        "scale-out serving: {} boards x {} PR regions, {} tenants, \
+         {requests} requests\n",
+        NODES, cfg.fabric.num_pr_regions, TENANTS
+    );
+
+    direct_programming(&cfg);
+
+    let t0 = std::time::Instant::now();
+    let rep = run_diurnal_scenario(
+        &cfg,
+        NODES,
+        TENANTS,
+        requests,
+        PERIOD_S,
+        SEED,
+        true,
+        PolicyKind::Predictive,
+    )
+    .expect("scenario must complete");
+    println!("(simulated in {:.2?})", t0.elapsed());
+    describe(&cfg, "autoscaled", &rep.autoscaled);
+    describe(&cfg, "static    ", &rep.static_baseline);
+
+    let auto = &rep.autoscaled;
+    assert_eq!(auto.completed, requests as u64, "requests lost");
+    assert_eq!(
+        rep.static_baseline.completed,
+        requests as u64,
+        "requests lost by the baseline"
+    );
+    // The point of the refactor: allocations beyond the old 4-port
+    // register-file window, live in the transition history.
+    let high_regions: usize = auto
+        .transitions
+        .iter()
+        .flat_map(|t| t.regions.iter())
+        .filter(|&&r| r > 3)
+        .count();
+    assert!(
+        high_regions > 0,
+        "no placement ever used a region beyond crossbar port 3"
+    );
+    let high_apps = auto.transitions.iter().any(|t| t.app_id > 3);
+    assert!(high_apps, "no allocation for an app ID beyond Table III");
+    if requests >= 10_000 {
+        // Long enough for the diurnal peaks to bite: the predictive
+        // loop must actually exercise both directions.
+        assert!(auto.grows > 0, "no grow over a diurnal trace");
+        assert!(auto.shrinks > 0, "no shrink over a diurnal trace");
+    }
+    println!(
+        "\nOK: {high_regions} region placements beyond the Table III \
+         window (apps 0..={} serving), utilization {:.1}% vs static {:.1}%",
+        TENANTS - 1,
+        auto.utilization * 100.0,
+        rep.static_baseline.utilization * 100.0
+    );
+}

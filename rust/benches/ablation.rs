@@ -78,12 +78,12 @@ fn bridge_policy_cycles(policy: RequestPolicy) -> u64 {
     let mut f = Fabric::new(cfg);
     f.axi2wb.policy = policy;
     let ports = [1usize, 2, 3];
-    f.regfile.set_app_destination(0, 0b0010);
-    f.regfile.set_allowed_slaves(0, 0b0010);
+    f.regfile.set_app_destination(0, 0b0010).unwrap();
+    f.regfile.set_allowed_slaves(0, 0b0010).unwrap();
     for (i, &p) in ports.iter().enumerate() {
         let next = ports.get(i + 1).copied().unwrap_or(0);
-        f.regfile.set_pr_destination(p, 1 << next);
-        f.regfile.set_allowed_slaves(p, 1 << next);
+        f.regfile.set_pr_destination(p, 1 << next).unwrap();
+        f.regfile.set_allowed_slaves(p, 1 << next).unwrap();
     }
     for (&p, &k) in ports.iter().zip(ModuleKind::pipeline().iter()) {
         f.install_static_module(p, k, 0);

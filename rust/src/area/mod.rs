@@ -145,16 +145,38 @@ pub fn regfile_registers(pr_regions: usize) -> usize {
     20 + 3 * pr_regions.saturating_sub(3)
 }
 
-/// Register-file area scaled from the measured 20-register point.
-pub fn regfile_area(pr_regions: usize) -> ComponentArea {
-    let regs = regfile_registers(pr_regions) as f64;
-    let scale = regs / 20.0;
+/// Register count of the **banked layout v2** actually implemented in
+/// [`crate::regfile::RegfileLayout`].  The paper's §V.G rule keeps the
+/// package-number register at four 8-bit fields, which stops being
+/// programmable past 4 masters; the banked layout instead spills budget
+/// and error fields across ⌈N/4⌉-register banks, so growth is mildly
+/// superlinear (20 regs at 4 ports, 122 at 16).  Identical to §V.G's
+/// count at the paper's own 4-port point.
+pub fn banked_regfile_registers(num_ports: usize) -> usize {
+    crate::regfile::RegfileLayout::new(num_ports).num_regs()
+}
+
+/// Area of a `regs`-register file, scaled from the measured 20-register
+/// Table I point.
+fn regfile_area_for(regs: usize) -> ComponentArea {
+    let scale = regs as f64 / 20.0;
     ComponentArea {
         luts: (table1::REGISTER_FILE.luts as f64 * scale).round() as u64,
         ffs: (table1::REGISTER_FILE.ffs as f64 * scale).round() as u64,
         brams: 0.0,
         power_mw: None,
     }
+}
+
+/// Register-file area under the paper's §V.G growth rule.
+pub fn regfile_area(pr_regions: usize) -> ComponentArea {
+    regfile_area_for(regfile_registers(pr_regions))
+}
+
+/// Banked-layout register-file area, scaled from the same measured
+/// 20-register Table I point as [`regfile_area`].
+pub fn banked_regfile_area(num_ports: usize) -> ComponentArea {
+    regfile_area_for(banked_regfile_registers(num_ports))
 }
 
 /// Vivado-style utilization report for the whole shell (Table I format).
@@ -362,6 +384,18 @@ mod tests {
         let a4 = regfile_area(4);
         assert_eq!(a3.luts, 265);
         assert!(a4.luts > a3.luts);
+    }
+
+    #[test]
+    fn banked_regfile_matches_table3_at_four_ports_and_spills_beyond() {
+        // At the paper's own point the banked layout is Table III.
+        assert_eq!(banked_regfile_registers(4), regfile_registers(3));
+        assert_eq!(banked_regfile_area(4).luts, regfile_area(3).luts);
+        // Beyond it, the budget/error spill makes v2 strictly larger
+        // than §V.G's 3-per-region rule (full programmability costs).
+        assert_eq!(banked_regfile_registers(16), 122);
+        assert!(banked_regfile_registers(16) > regfile_registers(15));
+        assert!(banked_regfile_area(16).luts > regfile_area(15).luts);
     }
 
     #[test]

@@ -12,8 +12,9 @@
 //!    [`crate::metrics`]: queue depth at the tick, arrival-rate EWMA,
 //!    p99 / mean / EWMA queue waits.
 //! 2. **Policy** ([`ScalingPolicy`]) — threshold + hysteresis decisions
-//!    mapping demand to a target PR-region count; two implementations
-//!    ship ([`TargetQueueDepth`], [`LatencySlo`]).
+//!    mapping demand to a target PR-region count; three implementations
+//!    ship: reactive [`TargetQueueDepth`] and [`LatencySlo`], and the
+//!    feed-forward [`Predictive`] driven by the arrival-rate EWMA slope.
 //! 3. **Actuator** — steps allocations toward the target: every grow
 //!    programs regions through the **timed, serialized ICAP model**
 //!    ([`crate::manager::ElasticManager::reserve_region`]) and every
@@ -49,8 +50,8 @@ pub use churn::{ChurnEvent, ChurnTrace};
 pub use cost::CostModel;
 pub use monitor::{DemandMonitor, DemandSignals};
 pub use policy::{
-    DemandSnapshot, LatencySlo, PolicyKind, ScalingPolicy, StaticPolicy,
-    TargetQueueDepth,
+    DemandSnapshot, LatencySlo, PolicyKind, Predictive, ScalingPolicy,
+    StaticPolicy, TargetQueueDepth,
 };
 
 use std::cmp::Ordering;
@@ -266,11 +267,13 @@ impl Engine {
         opts: EngineOptions,
     ) -> Self {
         assert!(nodes >= 1, "need at least one board");
-        assert!((1..=4).contains(&tenants), "4 app IDs in the prototype");
+        // App IDs are destination-register indices: the banked layout
+        // provides one per crossbar port.
         assert!(
-            cfg.fabric.num_pr_regions <= crate::regfile::MAX_PR_REGIONS,
-            "the actuator programs through Table III (regions 1..={})",
-            crate::regfile::MAX_PR_REGIONS
+            tenants >= 1 && tenants <= cfg.fabric.num_ports,
+            "tenants {} exceed the {}-port layout's app-ID registers",
+            tenants,
+            cfg.fabric.num_ports
         );
         let cluster =
             Cluster::launch(nodes, cfg, None, PlacementPolicy::MostAvailable);
@@ -1040,6 +1043,19 @@ pub fn autoscale_profile() -> SystemConfig {
     cfg
 }
 
+/// Overlay the serving-profile knobs of [`autoscale_profile`] onto an
+/// arbitrary board shape (e.g. `configs/scale16.toml`): timing and the
+/// partial-bitstream size come from the profile, everything else —
+/// ports, PR regions, crossbar, server — from `cfg`.  Shared by the
+/// `autoscale --config` CLI path and `examples/scale_out_serving.rs` so
+/// both drive the same board model.
+pub fn serving_profile_on(mut cfg: SystemConfig) -> SystemConfig {
+    let profile = autoscale_profile();
+    cfg.timing = profile.timing;
+    cfg.manager.bitstream_bytes = profile.manager.bitstream_bytes;
+    cfg
+}
+
 /// Run the diurnal-with-churn comparison: `tenants` anti-phase diurnal
 /// streams (30..450 req/s, `period_s`) over `nodes` boards, autoscaled
 /// under `policy` versus the static even split.  Churn (when enabled) is
@@ -1132,6 +1148,62 @@ mod tests {
                 assert!(tr.regfile_after > tr.regfile_before, "{tr:?}");
             }
         }
+    }
+
+    #[test]
+    fn predictive_engine_rides_a_ramp() {
+        let cfg = fast_cfg();
+        // One tenant ramping 20 -> 500 req/s over a diurnal half-period:
+        // the feed-forward policy must grow (on the slope) and shrink
+        // again on the way down, serving everything.
+        let specs = workload::diurnal_tenants(1, 20.0, 500.0, 3.0, 64);
+        let trace = workload::generate_profiled(&specs, 11, 1500);
+        let mut engine = Engine::new(
+            &cfg,
+            3,
+            1,
+            PolicyKind::Predictive.build(),
+            EngineOptions::default(),
+        );
+        let report = engine.run(&trace, &ChurnTrace::none()).unwrap();
+        assert_eq!(report.completed, 1500);
+        assert_eq!(report.policy, "predictive-ewma");
+        assert!(report.grows > 0, "no grow on a 25x rate ramp");
+        assert!(report.shrinks > 0, "no shrink after the peak");
+        for tr in &report.transitions {
+            if matches!(tr.kind, TransitionKind::Grow | TransitionKind::Shrink)
+            {
+                assert!(tr.regfile_after > tr.regfile_before, "{tr:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sixteen_port_board_exposes_all_regions_to_the_engine() {
+        // A single scale-out board: 15 PR regions, 5 tenants (beyond the
+        // old 4-app window).  The initial allocation alone needs
+        // placements past region 3, which PR 2 refused with
+        // RegfileWindow.
+        let mut cfg = fast_cfg();
+        cfg.fabric.num_ports = 16;
+        cfg.fabric.num_pr_regions = 15;
+        let specs = workload::diurnal_tenants(5, 20.0, 200.0, 2.0, 64);
+        let trace = workload::generate_profiled(&specs, 13, 1000);
+        let mut engine = Engine::new(
+            &cfg,
+            1,
+            5,
+            PolicyKind::TargetQueueDepth.build(),
+            EngineOptions::default(),
+        );
+        let report = engine.run(&trace, &ChurnTrace::none()).unwrap();
+        assert_eq!(report.completed, 1000);
+        let high_region = report
+            .transitions
+            .iter()
+            .flat_map(|t| t.regions.iter())
+            .any(|&r| r > crate::regfile::MAX_PR_REGIONS);
+        assert!(high_region, "no placement ever used a region beyond port 3");
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub struct DemandSignals {
     pub queue_depth: usize,
     /// EWMA of the per-window arrival rate (requests per second).
     pub arrival_rate_ewma: f64,
+    /// Change of the arrival-rate EWMA since the previous window
+    /// (req/s per window): the feed-forward signal the predictive
+    /// policy extrapolates.  Positive = demand ramping up.
+    pub arrival_rate_slope: f64,
     /// p99 queue wait over the window, in fabric cycles.
     pub p99_wait_cycles: u64,
     /// Mean queue wait over the window, in fabric cycles.
@@ -60,11 +64,19 @@ impl DemandMonitor {
     /// compute the signals and reset for the next window.
     pub fn observe(&mut self, now: u64, window_s: f64) -> DemandSignals {
         self.outstanding.retain(|&s| s > now);
+        let prev_rate = if self.rate_ewma.is_primed() {
+            Some(self.rate_ewma.value())
+        } else {
+            None
+        };
         let rate =
             self.rate_ewma.update(self.arrivals_window as f64 / window_s);
         let signals = DemandSignals {
             queue_depth: self.outstanding.len(),
             arrival_rate_ewma: rate,
+            // First window: no history, slope 0 (never extrapolate from
+            // a single sample).
+            arrival_rate_slope: prev_rate.map(|p| rate - p).unwrap_or(0.0),
             p99_wait_cycles: self.wait_window.percentile(0.99),
             mean_wait_cycles: self.wait_window.mean(),
             wait_ewma_cycles: self.wait_window.ewma().unwrap_or(0.0),
@@ -96,5 +108,25 @@ mod tests {
         assert_eq!(s2.queue_depth, 0, "request 200 started by now");
         assert_eq!(s2.p99_wait_cycles, 0);
         assert!((s2.arrival_rate_ewma - 1.0).abs() < 1e-12, "EWMA of 2 then 0");
+    }
+
+    #[test]
+    fn slope_tracks_the_rate_ramp() {
+        let mut m = DemandMonitor::new(0.5);
+        // Window 1: 2 req/s.  No history yet -> slope 0.
+        m.on_dispatch(1, 0);
+        m.on_dispatch(2, 0);
+        let s1 = m.observe(10, 1.0);
+        assert_eq!(s1.arrival_rate_slope, 0.0, "no slope from one sample");
+        // Window 2: 6 req/s.  EWMA 2 -> 4; slope +2 per window.
+        for i in 0..6 {
+            m.on_dispatch(20 + i, 0);
+        }
+        let s2 = m.observe(30, 1.0);
+        assert!((s2.arrival_rate_ewma - 4.0).abs() < 1e-12);
+        assert!((s2.arrival_rate_slope - 2.0).abs() < 1e-12, "ramp up");
+        // Window 3: silence.  EWMA 4 -> 2; slope -2 per window.
+        let s3 = m.observe(50, 1.0);
+        assert!((s3.arrival_rate_slope + 2.0).abs() < 1e-12, "ramp down");
     }
 }

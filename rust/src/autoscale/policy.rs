@@ -10,7 +10,13 @@
 //!   exceeds a threshold, shrink only when the queue is empty *and* the
 //!   window's waits are calm (the hysteresis band);
 //! * [`LatencySlo`] — grow when the window's p99 queue wait violates the
-//!   SLO, shrink only well under it with an empty queue.
+//!   SLO, shrink only well under it with an empty queue;
+//! * [`Predictive`] — feed-forward: extrapolate the arrival-rate EWMA
+//!   slope one horizon ahead and size the allocation for the *predicted*
+//!   rate, so capacity is programmed through the (slow, serialized) ICAP
+//!   before the backlog materializes.  Reuses the reactive policies'
+//!   hysteresis shape (calm-band shrink, floor) and the engine's
+//!   cooldown.
 
 use super::monitor::DemandSignals;
 
@@ -122,6 +128,91 @@ impl ScalingPolicy for LatencySlo {
     }
 }
 
+/// Feed-forward scaling from the arrival-rate EWMA slope (the ROADMAP
+/// "predictive policies from the arrival EWMA" item).
+///
+/// Reactive policies pay one full control period of backlog before they
+/// grow — and the grow itself then waits on the serialized ICAP.  This
+/// policy extrapolates the monitor's rate EWMA `horizon_windows` ahead
+/// and targets enough slices for the **predicted** rate:
+///
+/// ```text
+/// predicted = max(ewma, ewma + slope * horizon_windows)
+/// slices    = ceil(predicted / slice_rate_per_s)
+/// ```
+///
+/// A backlog trigger borrowed from [`TargetQueueDepth`] stays in as a
+/// safety net (mispredictions must still be corrected reactively), and
+/// the shrink side keeps the same hysteresis band: only when the queue
+/// is empty, the window's p99 wait is calm, *and* the prediction — not
+/// just the instantaneous rate — has fallen.
+#[derive(Debug, Clone, Copy)]
+pub struct Predictive {
+    /// Control windows of lookahead to extrapolate the EWMA slope over.
+    pub horizon_windows: f64,
+    /// Sustainable request rate of one full slice (req/s); sizes the
+    /// target from the predicted rate.
+    pub slice_rate_per_s: f64,
+    /// Reactive safety net: backlog per slice that forces a grow even
+    /// when the slope predicts none.
+    pub grow_above: f64,
+    /// p99 window wait (cycles) below which an idle app may shrink.
+    pub calm_wait_cycles: u64,
+    /// Minimum full slices an app keeps.
+    pub min_slices: usize,
+}
+
+impl Default for Predictive {
+    fn default() -> Self {
+        // Two windows of lookahead covers the engine's default cooldown
+        // (2 ticks); 120 req/s per slice matches the autoscale profile's
+        // full-chain service rate within a factor of two, which is all
+        // the safety-net needs.  Calm = 2 ms at 250 MHz.
+        Self {
+            horizon_windows: 2.0,
+            slice_rate_per_s: 120.0,
+            grow_above: 3.0,
+            calm_wait_cycles: 500_000,
+            min_slices: 1,
+        }
+    }
+}
+
+impl ScalingPolicy for Predictive {
+    fn name(&self) -> &'static str {
+        "predictive-ewma"
+    }
+
+    fn target_regions(&self, s: &DemandSnapshot) -> usize {
+        let floor = self.min_slices * s.chain_len;
+        let ewma = s.signals.arrival_rate_ewma;
+        let predicted =
+            ewma.max(ewma + s.signals.arrival_rate_slope * self.horizon_windows);
+        let want_slices =
+            (predicted / self.slice_rate_per_s).ceil().max(0.0) as usize;
+        let predicted_target = (want_slices * s.chain_len).max(floor);
+        // Feed-forward grow: provision ahead of the predicted rate.
+        if predicted_target > s.regions {
+            return predicted_target;
+        }
+        // Reactive safety net against misprediction.
+        let lanes = s.slices.max(1) as f64;
+        if s.signals.queue_depth as f64 / lanes > self.grow_above {
+            return (s.regions + s.chain_len).max(floor);
+        }
+        // Hysteresis band on the way down: idle, calm, and predicted
+        // demand below the current allocation.
+        if s.signals.queue_depth == 0
+            && s.signals.p99_wait_cycles <= self.calm_wait_cycles
+            && predicted_target < s.regions
+            && s.regions > floor
+        {
+            return s.regions.saturating_sub(s.chain_len).max(floor);
+        }
+        s.regions.max(floor)
+    }
+}
+
 /// The non-policy: whatever is allocated stays allocated.  Used by the
 /// static-baseline engine (which also disables churn re-placement).
 #[derive(Debug, Clone, Copy, Default)]
@@ -144,6 +235,8 @@ pub enum PolicyKind {
     TargetQueueDepth,
     /// [`LatencySlo`] with defaults.
     LatencySlo,
+    /// [`Predictive`] with defaults.
+    Predictive,
 }
 
 impl PolicyKind {
@@ -154,6 +247,9 @@ impl PolicyKind {
                 Some(PolicyKind::TargetQueueDepth)
             }
             "slo" | "latency" | "latency-slo" => Some(PolicyKind::LatencySlo),
+            "predictive" | "feedforward" | "predictive-ewma" => {
+                Some(PolicyKind::Predictive)
+            }
             _ => None,
         }
     }
@@ -165,6 +261,7 @@ impl PolicyKind {
                 Box::new(TargetQueueDepth::default())
             }
             PolicyKind::LatencySlo => Box::new(LatencySlo::default()),
+            PolicyKind::Predictive => Box::new(Predictive::default()),
         }
     }
 }
@@ -179,6 +276,7 @@ mod tests {
             signals: DemandSignals {
                 queue_depth: depth,
                 arrival_rate_ewma: 0.0,
+                arrival_rate_slope: 0.0,
                 p99_wait_cycles: p99,
                 mean_wait_cycles: 0.0,
                 wait_ewma_cycles: 0.0,
@@ -188,6 +286,19 @@ mod tests {
             regions,
             chain_len: 3,
         }
+    }
+
+    fn rate_snap(
+        ewma: f64,
+        slope: f64,
+        depth: usize,
+        slices: usize,
+        regions: usize,
+    ) -> DemandSnapshot {
+        let mut s = snap(depth, 0, slices, regions);
+        s.signals.arrival_rate_ewma = ewma;
+        s.signals.arrival_rate_slope = slope;
+        s
     }
 
     #[test]
@@ -216,12 +327,37 @@ mod tests {
     }
 
     #[test]
+    fn predictive_policy_provisions_ahead_of_the_ramp() {
+        let p = Predictive::default(); // 120 req/s per slice, 2 windows
+        // Flat 100 req/s, empty queue: one slice suffices, hold.
+        assert_eq!(p.target_regions(&rate_snap(100.0, 0.0, 0, 1, 3)), 3);
+        // Same rate but ramping +100 req/s per window: predicted 300
+        // req/s -> 3 slices, *before* any backlog exists.
+        assert_eq!(p.target_regions(&rate_snap(100.0, 100.0, 0, 1, 3)), 9);
+        // Falling slope never extrapolates below the current EWMA on the
+        // grow side: predicted = max(ewma, ...) -> 250 req/s still needs
+        // 3 slices.
+        assert_eq!(p.target_regions(&rate_snap(250.0, -50.0, 0, 3, 9)), 9);
+        // Reactive safety net: deep backlog grows even with zero slope.
+        assert_eq!(p.target_regions(&rate_snap(10.0, 0.0, 9, 1, 3)), 6);
+        // Shrink only when idle, calm, and the prediction has fallen.
+        assert_eq!(p.target_regions(&rate_snap(50.0, -30.0, 0, 3, 9)), 6);
+        // Idle but the prediction still fills the allocation: hold.
+        assert_eq!(p.target_regions(&rate_snap(260.0, 0.0, 0, 3, 9)), 9);
+        // Floor holds.
+        assert_eq!(p.target_regions(&rate_snap(0.0, -10.0, 0, 1, 3)), 3);
+    }
+
+    #[test]
     fn policy_kind_parses_and_builds() {
         assert_eq!(PolicyKind::parse("depth"), Some(PolicyKind::TargetQueueDepth));
         assert_eq!(PolicyKind::parse("latency-slo"), Some(PolicyKind::LatencySlo));
+        assert_eq!(PolicyKind::parse("predictive"), Some(PolicyKind::Predictive));
+        assert_eq!(PolicyKind::parse("feedforward"), Some(PolicyKind::Predictive));
         assert_eq!(PolicyKind::parse("nope"), None);
         assert_eq!(PolicyKind::TargetQueueDepth.build().name(), "target-queue-depth");
         assert_eq!(PolicyKind::LatencySlo.build().name(), "latency-slo");
+        assert_eq!(PolicyKind::Predictive.build().name(), "predictive-ewma");
         assert_eq!(StaticPolicy.target_regions(&snap(50, 9_999_999, 1, 3)), 3);
     }
 }

@@ -130,11 +130,13 @@ fleet flags:
 
 autoscale flags:
   --fabrics N        simulated boards (default: 5)
-  --tenants N        diurnal tenant streams, 1..=4 (default: 4)
-  --policy P         depth | slo (default: depth)
+  --tenants N        diurnal tenant streams, up to the port count (default: 4)
+  --policy P         depth | slo | predictive (default: depth)
   --period S         diurnal period in seconds (default: 20)
   --seed N           workload + churn seed (default: 1)
   --churn B          inject board outages + region fencing (default: true)
+  --config FILE      board shape overlay (e.g. configs/scale16.toml for
+                     16-port boards; default: the autoscale profile)
 ";
 
 #[cfg(test)]

@@ -16,7 +16,10 @@ use toml::TomlDoc;
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
     /// Crossbar port count (paper prototype: 4 — port 0 is the AXI
-    /// bridge, ports 1..=3 host PR regions).
+    /// bridge, ports 1..=3 host PR regions).  The register file is
+    /// banked to this width ([`FabricConfig::regfile_layout`]), so any
+    /// count in 2..=32 is fully programmable (`configs/scale16.toml`
+    /// ships the 16-port scale-out shape).
     pub num_ports: usize,
     /// Fabric clock (MHz).  XDMA side of the shell runs at 250 MHz.
     pub clock_mhz: f64,
@@ -24,6 +27,14 @@ pub struct FabricConfig {
     pub icap_clock_mhz: f64,
     /// Number of PR regions (= num_ports - 1 in the prototype).
     pub num_pr_regions: usize,
+}
+
+impl FabricConfig {
+    /// The banked register-file layout this shell is programmed through
+    /// (one bank set per crossbar port — see `regfile`).
+    pub fn regfile_layout(&self) -> crate::regfile::RegfileLayout {
+        crate::regfile::RegfileLayout::new(self.num_ports)
+    }
 }
 
 impl Default for FabricConfig {
@@ -236,6 +247,7 @@ mod tests {
         let c = SystemConfig::paper_defaults();
         assert_eq!(c.fabric.num_ports, 4);
         assert_eq!(c.fabric.num_pr_regions, 3);
+        assert_eq!(c.fabric.regfile_layout().num_regs(), 20, "Table III");
         assert_eq!(c.fabric.clock_mhz, 250.0);
         assert_eq!(c.fabric.icap_clock_mhz, 125.0);
         assert_eq!(c.crossbar.default_packages, 8);

@@ -20,12 +20,14 @@ pub enum ElasticError {
     /// Resource manager could not satisfy an allocation.
     Allocation(String),
 
-    /// A region / port / app ID falls outside the Table III register-file
-    /// window (4 ports: bridge + PR regions 1..=3, app IDs 0..=3).  Ports
-    /// beyond the window cannot be programmed for isolation, destinations
-    /// or bandwidth, so the manager refuses them instead of silently
-    /// running with power-on defaults (see `regfile` docs and ROADMAP's
-    /// "scale the crossbar beyond the 4-port window" item).
+    /// A region / port / app ID falls outside the **configured**
+    /// register-file layout (`crate::regfile::RegfileLayout`, banked to
+    /// the crossbar width).  Such a port cannot be programmed for
+    /// isolation, destinations or bandwidth, so the register file and
+    /// the manager refuse it instead of panicking or silently running
+    /// with power-on defaults.  Since the banked layout v2, every port
+    /// of a shell is programmable — this error only fires for addresses
+    /// past the shell's own width (e.g. region 17 on a 16-port board).
     RegfileWindow(String),
 
     /// A WISHBONE transaction failed (invalid destination, timeout, ...).

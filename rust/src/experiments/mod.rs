@@ -118,18 +118,18 @@ pub fn bandwidth_case(accs: usize, packages: u32, words: usize) -> Result<Bandwi
     let kinds = ModuleKind::pipeline();
     let ports: Vec<usize> = (1..=accs).collect();
     // Program the chain + budgets.
-    fabric.regfile.set_app_destination(0, 1 << ports[0]);
-    fabric.regfile.set_allowed_slaves(0, 1 << ports[0]);
+    fabric.regfile.set_app_destination(0, 1 << ports[0])?;
+    fabric.regfile.set_allowed_slaves(0, 1 << ports[0])?;
     for (i, &p) in ports.iter().enumerate() {
         let next = ports.get(i + 1).copied().unwrap_or(0);
-        fabric.regfile.set_pr_destination(p, 1 << next);
-        fabric.regfile.set_allowed_slaves(p, 1 << next);
+        fabric.regfile.set_pr_destination(p, 1 << next)?;
+        fabric.regfile.set_allowed_slaves(p, 1 << next)?;
     }
     for slave in 0..4usize {
         for master in 0..4usize {
             fabric
                 .regfile
-                .set_allowed_packages(slave, master, packages.min(255));
+                .set_allowed_packages(slave, master, packages.min(255))?;
         }
     }
     for (&p, &k) in ports.iter().zip(kinds.iter()) {

@@ -67,7 +67,8 @@ pub struct Fabric {
 }
 
 impl Fabric {
-    /// Build the shell from a configuration.
+    /// Build the shell from a configuration.  The register file is
+    /// banked to the crossbar width, so every port is programmable.
     pub fn new(cfg: SystemConfig) -> Self {
         let n = cfg.fabric.num_ports;
         assert!(
@@ -75,7 +76,7 @@ impl Fabric {
             "prototype wiring: one PR region per non-bridge port"
         );
         let mut xbar = Crossbar::new(n, cfg.crossbar.clone());
-        let regfile = RegisterFile::new();
+        let regfile = RegisterFile::with_ports(n);
         // Power-on: crossbar mirrors the (zeroed) regfile — fully isolated.
         for p in 0..n {
             xbar.set_allowed_slaves(p, 0);
@@ -143,7 +144,9 @@ impl Fabric {
         }
         // Old module (if any) is torn out; port isolated during PR.
         self.modules[region] = None;
-        self.regfile.set_port_reset(region, true);
+        self.regfile
+            .set_port_reset(region, true)
+            .expect("validated region within layout");
         Ok(())
     }
 
@@ -151,7 +154,9 @@ impl Fabric {
     /// clearing a region does not require programming a bitstream).
     pub fn clear_region(&mut self, region: usize) {
         self.modules[region] = None;
-        self.regfile.set_port_reset(region, true);
+        self.regfile
+            .set_port_reset(region, true)
+            .expect("region within layout");
     }
 
     /// Install a module *statically*, without ICAP programming.  This is
@@ -168,9 +173,14 @@ impl Fabric {
         assert!(region > 0 && region < self.xbar.ports(), "bad region {region}");
         let mut m = ComputationModule::new(kind, region, app_id);
         m.batch_words = BRIDGE_BUFFER_WORDS;
-        m.dest_onehot = self.regfile.pr_destination(region);
+        m.dest_onehot = self
+            .regfile
+            .pr_destination(region)
+            .expect("region within layout");
         self.modules[region] = Some(m);
-        self.regfile.set_port_reset(region, false);
+        self.regfile
+            .set_port_reset(region, false)
+            .expect("region within layout");
     }
 
     /// Which module currently occupies `region`?
@@ -231,21 +241,30 @@ impl Fabric {
 
     /// Mirror register-file configuration into the crossbar and modules.
     ///
-    /// Only the Table III window (4 ports) is mirrored — there are no
-    /// registers for ports beyond it, and the manager refuses to place
-    /// work there ([`crate::ElasticError::RegfileWindow`]), so extra
-    /// ports keep their isolated power-on state.
+    /// The register file is banked to the crossbar width
+    /// ([`crate::regfile::RegfileLayout`]), so *every* port's isolation
+    /// mask, reset bit, WRR package budgets and destination address are
+    /// mirrored — no port is left on power-on defaults.
     fn sync_regfile(&mut self) {
         if self.regfile.generation() == self.synced_gen {
             return;
         }
         let n = self.xbar.ports();
-        for p in 0..n.min(4) {
-            self.xbar.set_allowed_slaves(p, self.regfile.allowed_slaves(p));
-            let was_reset = self.regfile.port_reset(p);
+        debug_assert_eq!(n, self.regfile.layout().num_ports());
+        for p in 0..n {
+            let allowed = self
+                .regfile
+                .allowed_slaves(p)
+                .expect("port within layout");
+            self.xbar.set_allowed_slaves(p, allowed);
+            let was_reset =
+                self.regfile.port_reset(p).expect("port within layout");
             self.xbar.set_port_reset(p, was_reset);
-            for m in 0..n.min(4) {
-                let budget = self.regfile.allowed_packages(p, m);
+            for m in 0..n {
+                let budget = self
+                    .regfile
+                    .allowed_packages(p, m)
+                    .expect("port within layout");
                 let effective = if budget == 0 {
                     self.cfg.crossbar.default_packages
                 } else {
@@ -254,10 +273,13 @@ impl Fabric {
                 self.xbar.set_allowed_packages(p, m, effective);
             }
         }
-        // Destination addresses (Table III regs 1-3) into the modules.
-        for region in 1..n.min(4) {
+        // Destination addresses into the modules.
+        for region in 1..n {
             if let Some(m) = self.modules[region].as_mut() {
-                m.dest_onehot = self.regfile.pr_destination(region);
+                m.dest_onehot = self
+                    .regfile
+                    .pr_destination(region)
+                    .expect("region within layout");
             }
         }
         self.synced_gen = self.regfile.generation();
@@ -274,28 +296,37 @@ impl Fabric {
         if done.ok {
             let mut m = ComputationModule::new(done.kind, done.region, done.app_id);
             m.batch_words = BRIDGE_BUFFER_WORDS;
-            m.dest_onehot = self.regfile.pr_destination(done.region);
+            m.dest_onehot = self
+                .regfile
+                .pr_destination(done.region)
+                .expect("region within layout");
             self.modules[done.region] = Some(m);
             // Release the reset: the region rejoins the crossbar (§IV.C).
-            self.regfile.set_port_reset(done.region, false);
+            self.regfile
+                .set_port_reset(done.region, false)
+                .expect("region within layout");
         }
         self.reconfig_log.push(done);
     }
 
     fn route_events(&mut self) {
         for ev in self.xbar.take_events() {
+            let app_covered =
+                self.regfile.layout().covers_app(ev.app_id as usize);
             if ev.port == 0 {
                 self.axi2wb.on_send_complete(ev.result);
-                if (ev.app_id as usize) < 4 {
-                    self.regfile.set_app_error(ev.app_id as usize, ev.result.err());
+                if app_covered {
+                    let _ = self
+                        .regfile
+                        .set_app_error(ev.app_id as usize, ev.result.err());
                 }
             } else if let Some(m) = self.modules[ev.port].as_mut() {
                 m.on_send_complete(ev.result);
-                if (1..=3).contains(&ev.port) {
-                    self.regfile.set_pr_error(ev.port, ev.result.err());
-                }
-                if (ev.app_id as usize) < 4 && ev.result.is_err() {
-                    self.regfile.set_app_error(ev.app_id as usize, ev.result.err());
+                let _ = self.regfile.set_pr_error(ev.port, ev.result.err());
+                if app_covered && ev.result.is_err() {
+                    let _ = self
+                        .regfile
+                        .set_app_error(ev.app_id as usize, ev.result.err());
                 }
             }
         }
@@ -366,10 +397,12 @@ impl Fabric {
 
     fn tick_bridge(&mut self) {
         let regfile = &self.regfile;
-        if let Some(job) = self
-            .axi2wb
-            .tick(&mut self.xdma, |app| regfile.app_destination((app as usize).min(3)))
-        {
+        // An app ID with no destination register resolves to 0 (not
+        // one-hot): the master interface rejects it as
+        // InvalidDestination, exactly like an unprogrammed app.
+        if let Some(job) = self.axi2wb.tick(&mut self.xdma, |app| {
+            regfile.app_destination(app as usize).unwrap_or(0)
+        }) {
             self.xbar.push_job(0, job);
         }
     }
@@ -414,11 +447,7 @@ impl EventDriven for Fabric {
 
 /// Errors the fabric surfaces per app after a run (regfile view).
 pub fn app_error(fabric: &Fabric, app_id: u32) -> Option<WbError> {
-    if (app_id as usize) < 4 {
-        fabric.regfile.app_error(app_id as usize)
-    } else {
-        None
-    }
+    fabric.regfile.app_error(app_id as usize).ok().flatten()
 }
 
 #[cfg(test)]

@@ -16,12 +16,12 @@ fn fabric() -> Fabric {
 /// `app`: port0 -> ports[0] -> ports[1] -> ... -> port0.
 fn program_chain(f: &mut Fabric, app: u32, ports: &[usize]) {
     let first = ports.first().copied().unwrap_or(0);
-    f.regfile.set_app_destination(app as usize, 1 << first);
-    f.regfile.set_allowed_slaves(0, 1 << first);
+    f.regfile.set_app_destination(app as usize, 1 << first).unwrap();
+    f.regfile.set_allowed_slaves(0, 1 << first).unwrap();
     for (i, &p) in ports.iter().enumerate() {
         let next = ports.get(i + 1).copied().unwrap_or(0);
-        f.regfile.set_pr_destination(p, 1 << next);
-        f.regfile.set_allowed_slaves(p, 1 << next);
+        f.regfile.set_pr_destination(p, 1 << next).unwrap();
+        f.regfile.set_allowed_slaves(p, 1 << next).unwrap();
     }
 }
 
@@ -154,7 +154,7 @@ fn icap_reconfiguration_installs_module_and_releases_reset() {
         fail_after: None,
     })
     .unwrap();
-    assert!(f.regfile.port_reset(1), "reset asserted during PR");
+    assert!(f.regfile.port_reset(1).unwrap(), "reset asserted during PR");
     assert!(f.module_at(1).is_none());
     // Run past the programming time (128 words * 2 cc).
     for _ in 0..300 {
@@ -162,7 +162,7 @@ fn icap_reconfiguration_installs_module_and_releases_reset() {
         f.tick(c);
     }
     assert!(f.module_at(1).is_some(), "module installed");
-    assert!(!f.regfile.port_reset(1), "reset released");
+    assert!(!f.regfile.port_reset(1).unwrap(), "reset released");
     assert_eq!(f.regfile.icap_status(), crate::regfile::IcapStatus::Done);
     assert_eq!(f.reconfig_log().len(), 1);
     assert!(f.reconfig_log()[0].ok);
@@ -193,7 +193,7 @@ fn failed_bitstream_leaves_region_empty_with_error_status() {
     }
     assert!(f.module_at(2).is_none());
     assert_eq!(f.regfile.icap_status(), crate::regfile::IcapStatus::Error);
-    assert!(f.regfile.port_reset(2), "failed region stays isolated");
+    assert!(f.regfile.port_reset(2).unwrap(), "failed region stays isolated");
 }
 
 #[test]
@@ -220,10 +220,10 @@ fn destination_update_redirects_mid_stream_output() {
     // the encoder at port 2.
     let mut f = fabric();
     // multiplier at 1 -> port 0 initially.
-    f.regfile.set_app_destination(0, 0b0010);
-    f.regfile.set_allowed_slaves(0, 0b0010);
-    f.regfile.set_pr_destination(1, 0b0001);
-    f.regfile.set_allowed_slaves(1, 0b0101); // may reach 0 or 2
+    f.regfile.set_app_destination(0, 0b0010).unwrap();
+    f.regfile.set_allowed_slaves(0, 0b0010).unwrap();
+    f.regfile.set_pr_destination(1, 0b0001).unwrap();
+    f.regfile.set_allowed_slaves(1, 0b0101).unwrap(); // may reach 0 or 2
     f.install_static_module(1, ModuleKind::Multiplier, 0);
     let batch1 = rand_words(8, 5);
     stream_app(&mut f, 0, &batch1);
@@ -234,10 +234,10 @@ fn destination_update_redirects_mid_stream_output() {
     );
     // Now the encoder "becomes available": install at port 2 and repoint
     // the multiplier's destination register.
-    f.regfile.set_pr_destination(2, 0b0001);
-    f.regfile.set_allowed_slaves(2, 0b0001);
+    f.regfile.set_pr_destination(2, 0b0001).unwrap();
+    f.regfile.set_allowed_slaves(2, 0b0001).unwrap();
     f.install_static_module(2, ModuleKind::HammingEncoder, 0);
-    f.regfile.set_pr_destination(1, 0b0100);
+    f.regfile.set_pr_destination(1, 0b0100).unwrap();
     let batch2 = rand_words(8, 6);
     stream_app(&mut f, 0, &batch2);
     f.run_until_idle(10_000).unwrap();
@@ -253,13 +253,13 @@ fn two_apps_share_the_fabric_in_isolation() {
     // App 0 owns the multiplier at port 1; app 1 owns the encoder at
     // port 2.  Both stream concurrently; outputs must not mix.
     let mut f = fabric();
-    f.regfile.set_app_destination(0, 0b0010);
-    f.regfile.set_app_destination(1, 0b0100);
-    f.regfile.set_allowed_slaves(0, 0b0110);
-    f.regfile.set_pr_destination(1, 0b0001);
-    f.regfile.set_allowed_slaves(1, 0b0001);
-    f.regfile.set_pr_destination(2, 0b0001);
-    f.regfile.set_allowed_slaves(2, 0b0001);
+    f.regfile.set_app_destination(0, 0b0010).unwrap();
+    f.regfile.set_app_destination(1, 0b0100).unwrap();
+    f.regfile.set_allowed_slaves(0, 0b0110).unwrap();
+    f.regfile.set_pr_destination(1, 0b0001).unwrap();
+    f.regfile.set_allowed_slaves(1, 0b0001).unwrap();
+    f.regfile.set_pr_destination(2, 0b0001).unwrap();
+    f.regfile.set_allowed_slaves(2, 0b0001).unwrap();
     f.install_static_module(1, ModuleKind::Multiplier, 0);
     f.install_static_module(2, ModuleKind::HammingEncoder, 1);
     let a = rand_words(64, 7);
@@ -284,10 +284,10 @@ fn module_sending_to_disallowed_port_records_pr_error() {
     // Isolation violation from a *module* (not the bridge): the regfile
     // must capture the PR region's error status (Table III reg 17).
     let mut f = fabric();
-    f.regfile.set_app_destination(0, 0b0010);
-    f.regfile.set_allowed_slaves(0, 0b0010);
-    f.regfile.set_pr_destination(1, 0b0100); // points at port 2...
-    f.regfile.set_allowed_slaves(1, 0b0001); // ...but only port 0 allowed
+    f.regfile.set_app_destination(0, 0b0010).unwrap();
+    f.regfile.set_allowed_slaves(0, 0b0010).unwrap();
+    f.regfile.set_pr_destination(1, 0b0100).unwrap(); // points at port 2...
+    f.regfile.set_allowed_slaves(1, 0b0001).unwrap(); // ...but only port 0 allowed
     f.install_static_module(1, ModuleKind::Multiplier, 0);
     stream_app(&mut f, 0, &rand_words(8, 9));
     // Run; module's send must fail with InvalidDestination.
@@ -296,7 +296,7 @@ fn module_sending_to_disallowed_port_records_pr_error() {
         f.tick(c);
     }
     assert_eq!(
-        f.regfile.pr_error(1),
+        f.regfile.pr_error(1).unwrap(),
         Some(crate::wishbone::WbError::InvalidDestination)
     );
     assert_eq!(f.app_output(0), &[] as &[u32], "nothing reached the host");
@@ -341,7 +341,7 @@ fn fabric_starts_isolated_until_programmed() {
     let mut f = fabric();
     f.install_static_module(1, ModuleKind::Multiplier, 0);
     // NOTE: no allowed_slaves programming for port 0.
-    f.regfile.set_app_destination(0, 0b0010);
+    f.regfile.set_app_destination(0, 0b0010).unwrap();
     f.h2c_push(0, H2cBurst { app_id: 0, words: vec![1; 8] });
     for _ in 0..100 {
         let c = f.now() + 1;

@@ -54,14 +54,26 @@
 //! demand-driven control plane that grows and shrinks each app's
 //! PR-region reservations over simulated time.  A per-app monitor reads
 //! queue depth, arrival EWMA and p99 queue waits from [`metrics`]; a
-//! pluggable [`autoscale::ScalingPolicy`] (target-queue-depth or
-//! latency-SLO, threshold + hysteresis) emits grow/shrink decisions; the
-//! actuator programs every transition through the timed, serialized
-//! [`icap`] model, reprograms [`regfile`] destinations and WRR weights,
-//! and migrates chains across fabrics under a k8s-style churn model
-//! (boards leaving/joining, regions fenced mid-trace, graceful drain).
-//! The threaded [`server`] runs the same loop on-line as a lane-level
+//! pluggable [`autoscale::ScalingPolicy`] (target-queue-depth,
+//! latency-SLO, or the feed-forward predictive policy on the
+//! arrival-EWMA slope) emits grow/shrink decisions; the actuator
+//! programs every transition through the timed, serialized [`icap`]
+//! model, reprograms [`regfile`] destinations and WRR weights, and
+//! migrates chains across fabrics under a k8s-style churn model (boards
+//! leaving/joining, regions fenced mid-trace, graceful drain).  The
+//! threaded [`server`] runs the same loop on-line as a lane-level
 //! control tick interleaved with serving.
+//!
+//! # The banked register file
+//!
+//! [`regfile`] banks the Table III register map to the crossbar width
+//! ([`regfile::RegfileLayout`], 2..=32 ports): the 4-port instantiation
+//! is byte-for-byte Table III (golden test), wider shells spill budget
+//! and error fields across ⌈N/4⌉-register banks, and a v1-compat window
+//! keeps Table III byte addresses working at any width.  Every layer up
+//! to the control plane programs isolation, destinations and WRR
+//! weights at full width — `configs/scale16.toml` serves all 15 PR
+//! regions per board (DESIGN.md §10, `examples/scale_out_serving.rs`).
 
 pub mod area;
 pub mod autoscale;

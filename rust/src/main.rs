@@ -172,10 +172,27 @@ fn autoscale_cmd(cli: &Cli) -> Result<()> {
     let policy_name = cli.str_or("policy", "depth");
     let policy = PolicyKind::parse(&policy_name).ok_or_else(|| {
         elastic_fpga::ElasticError::Config(format!(
-            "--policy expects depth|slo, got '{policy_name}'"
+            "--policy expects depth|slo|predictive, got '{policy_name}'"
         ))
     })?;
-    let cfg = autoscale::autoscale_profile();
+    // A --config overlay selects the board shape (e.g. scale16's 16-port
+    // shells); the serving-profile timing knobs stay the autoscale
+    // profile's so fabric lanes remain attractive.
+    let cfg = match cli.flags.get("config") {
+        Some(path) => autoscale::serving_profile_on(SystemConfig::load(
+            std::path::Path::new(path),
+        )?),
+        None => autoscale::autoscale_profile(),
+    };
+    // App IDs are destination-register indices, one per crossbar port;
+    // refuse impossible tenant counts with a typed error (the engine's
+    // own bound is an assert).
+    if tenants == 0 || tenants as usize > cfg.fabric.num_ports {
+        return Err(elastic_fpga::ElasticError::Config(format!(
+            "--tenants expects 1..={} on this board shape, got {tenants}",
+            cfg.fabric.num_ports
+        )));
+    }
     println!(
         "autoscale: {requests} requests, {tenants} diurnal tenants over \
          {nodes} boards, policy {policy:?}, churn {churn}"

@@ -30,7 +30,8 @@ impl StagePlacement {
 /// One acceleration request: a payload and its stage chain.
 #[derive(Debug, Clone)]
 pub struct AppRequest {
-    /// Application ID (0..=3 in the 4-port prototype).
+    /// Application ID — an index into the register file's app-ID
+    /// destination bank (one register per crossbar port).
     pub app_id: u32,
     /// Payload words (length must be a multiple of the 8-word burst).
     pub data: Vec<u32>,

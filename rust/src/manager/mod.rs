@@ -156,13 +156,16 @@ impl ElasticManager {
     /// [`available_regions`]: ElasticManager::available_regions
     /// [`spare_bandwidth`]: ElasticManager::spare_bandwidth
     pub fn bandwidth_in_use(&self) -> u32 {
-        let ports = self.regions.len().min(4);
-        (1..ports)
+        (1..self.regions.len())
             .filter(|&r| {
                 matches!(self.regions[r], RegionState::Allocated { .. })
             })
             .map(|r| {
-                let budget = self.fabric.regfile.allowed_packages(0, r);
+                let budget = self
+                    .fabric
+                    .regfile
+                    .allowed_packages(0, r)
+                    .expect("region within layout");
                 if budget == 0 {
                     self.cfg.crossbar.default_packages
                 } else {
@@ -206,17 +209,20 @@ impl ElasticManager {
     }
 
     /// Program the register file for an app whose FPGA chain occupies
-    /// `ports` in order: port0 -> ports[0] -> ... -> port0.
-    fn program_chain(&mut self, app_id: u32, ports: &[usize]) {
+    /// `ports` in order: port0 -> ports[0] -> ... -> port0.  Errors with
+    /// [`ElasticError::RegfileWindow`] when the app ID or any port falls
+    /// outside the configured layout.
+    fn program_chain(&mut self, app_id: u32, ports: &[usize]) -> Result<()> {
         let rf = &mut self.fabric.regfile;
         let first = ports.first().copied().unwrap_or(0);
-        rf.set_app_destination(app_id as usize, 1 << first);
-        rf.set_allowed_slaves(0, 1 << first);
+        rf.set_app_destination(app_id as usize, 1 << first)?;
+        rf.set_allowed_slaves(0, 1 << first)?;
         for (i, &p) in ports.iter().enumerate() {
             let next = ports.get(i + 1).copied().unwrap_or(0);
-            rf.set_pr_destination(p, 1 << next);
-            rf.set_allowed_slaves(p, 1 << next);
+            rf.set_pr_destination(p, 1 << next)?;
+            rf.set_allowed_slaves(p, 1 << next)?;
         }
+        Ok(())
     }
 
     /// Program destinations **and WRR bandwidth weights** for an app
@@ -235,26 +241,32 @@ impl ElasticManager {
         ports: &[usize],
         packages: u32,
     ) -> Result<()> {
-        if app_id as usize >= crate::regfile::MAX_PORTS {
+        let layout = *self.fabric.regfile.layout();
+        if !layout.covers_app(app_id as usize) {
             return Err(ElasticError::RegfileWindow(format!(
-                "app {app_id} has no Table III destination register"
+                "app {app_id} has no destination register in the \
+                 configured {}-port layout",
+                layout.num_ports()
             )));
         }
         for &p in ports {
-            if !crate::regfile::RegisterFile::covers_region(p) {
+            if !layout.covers_region(p) {
                 return Err(ElasticError::RegfileWindow(format!(
-                    "region {p} is outside the Table III window"
+                    "region {p} is outside the configured {}-port layout \
+                     (regions 1..={})",
+                    layout.num_ports(),
+                    layout.num_pr_regions()
                 )));
             }
         }
-        self.program_chain(app_id, ports);
+        self.program_chain(app_id, ports)?;
         let w = packages.clamp(1, 0xFF);
         let rf = &mut self.fabric.regfile;
         let first = ports.first().copied().unwrap_or(0);
-        rf.set_allowed_packages(first, 0, w);
+        rf.set_allowed_packages(first, 0, w)?;
         for (i, &p) in ports.iter().enumerate() {
             let next = ports.get(i + 1).copied().unwrap_or(0);
-            rf.set_allowed_packages(next, p, w);
+            rf.set_allowed_packages(next, p, w)?;
         }
         Ok(())
     }
@@ -299,14 +311,16 @@ impl ElasticManager {
         let mut icap_cycles = 0u64;
         for p in placement {
             if let StagePlacement::Fpga { kind, region } = *p {
-                if !crate::regfile::RegisterFile::covers_region(region) {
-                    // Ports beyond the 4-port Table III window cannot be
-                    // programmed for isolation/destination/bandwidth;
-                    // refuse instead of silently running with defaults.
+                let layout = self.fabric.regfile.layout();
+                if !layout.covers_region(region) {
+                    // A region the layout cannot program (explicit
+                    // placements may name one) would run with power-on
+                    // defaults; refuse with the typed error.
                     return Err(ElasticError::RegfileWindow(format!(
-                        "region {region} is outside the Table III window \
-                         (regions 1..={})",
-                        crate::regfile::MAX_PR_REGIONS
+                        "region {region} is outside the configured \
+                         {}-port layout (regions 1..={})",
+                        layout.num_ports(),
+                        layout.num_pr_regions()
                     )));
                 }
                 if self.regions[region] != RegionState::Available {
@@ -319,7 +333,7 @@ impl ElasticManager {
             }
         }
         // Destinations first, so module install sees the right regfile.
-        self.program_chain(app_id, &ports);
+        self.program_chain(app_id, &ports)?;
         for p in placement {
             if let StagePlacement::Fpga { kind, region } = *p {
                 if self.use_icap {
@@ -346,14 +360,10 @@ impl ElasticManager {
         kind: ModuleKind,
         region: usize,
     ) -> Result<u64> {
-        if region == 0 || region >= self.regions.len() {
-            return Err(ElasticError::Allocation(format!(
-                "region {region} out of range"
-            )));
-        }
-        if !crate::regfile::RegisterFile::covers_region(region) {
+        if !self.fabric.regfile.layout().covers_region(region) {
             return Err(ElasticError::RegfileWindow(format!(
-                "region {region} is outside the Table III window"
+                "region {region} is outside the configured {}-port layout",
+                self.fabric.regfile.layout().num_ports()
             )));
         }
         if self.regions[region] != RegionState::Available {

@@ -171,28 +171,100 @@ fn zero_regions_runs_everything_on_server() {
 }
 
 #[test]
-fn regions_beyond_table3_window_get_typed_error() {
+fn regions_beyond_table3_window_now_execute() {
+    // The PR-2 behavior this refactor removes: a 5-stage chain on an
+    // 8-port shell used to fail with RegfileWindow because regions 4 and
+    // 5 had no Table III registers.  The banked layout programs them.
     let mut cfg = SystemConfig::paper_defaults();
     cfg.fabric.num_ports = 8;
     cfg.fabric.num_pr_regions = 7;
     let mut m = ElasticManager::new(cfg, None);
-    // A 5-stage chain plans onto regions 1..=5; regions 4 and 5 have no
-    // Table III registers, so execution must fail with the typed error
-    // instead of silently running those ports with power-on defaults.
     let req = AppRequest {
         app_id: 0,
         data: data(64, 20),
         stages: vec![crate::modules::ModuleKind::Multiplier; 5],
     };
-    match m.execute(&req) {
+    let rep = m.execute(&req).unwrap();
+    assert_eq!(rep.fpga_stages, 5, "all five stages hosted on fabric");
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden_chain(&req.stages, &req.data));
+    assert_eq!(m.available_regions(), 7, "regions released after execute");
+}
+
+#[test]
+fn regions_beyond_the_configured_layout_get_typed_error() {
+    // RegfileWindow survives, but only past the *configured* layout: an
+    // explicit placement naming a region the shell does not have.
+    let mut m = mgr(); // 4 ports
+    let req = AppRequest {
+        app_id: 0,
+        data: data(64, 22),
+        stages: vec![crate::modules::ModuleKind::Multiplier],
+    };
+    let placement = vec![StagePlacement::Fpga {
+        kind: crate::modules::ModuleKind::Multiplier,
+        region: 7,
+    }];
+    match m.execute_placed(&req, &placement) {
         Err(crate::ElasticError::RegfileWindow(_)) => {}
         other => panic!("expected RegfileWindow error, got {other:?}"),
     }
-    // The partial allocation rolled back.
-    assert_eq!(m.available_regions(), 7);
-    // Chains that fit the window still serve on the same manager.
-    let ok = AppRequest::pipeline(0, data(64, 21));
-    assert!(m.execute(&ok).unwrap().verified);
+    assert_eq!(m.available_regions(), 3, "nothing leaked");
+}
+
+#[test]
+fn sixteen_port_manager_programs_all_fifteen_regions() {
+    // The scale16 shape end to end: reserve every region, verify the
+    // register image carries destinations + isolation + WRR budgets for
+    // all 15 PR regions, then run a chain spanning high regions.
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.fabric.num_ports = 16;
+    cfg.fabric.num_pr_regions = 15;
+    cfg.manager.bitstream_bytes = 4096; // keep the timed ICAP fast
+    let mut m = ElasticManager::new(cfg, None);
+    for r in 1..=15usize {
+        let app = (r % 4) as u32;
+        m.reserve_region(app, crate::modules::ModuleKind::Multiplier, r)
+            .unwrap();
+    }
+    assert_eq!(m.available_regions(), 0);
+    for app in 0..4u32 {
+        let chain: Vec<usize> =
+            (1..=15).filter(|r| r % 4 == app as usize).collect();
+        m.program_app_chain(app, &chain, 24).unwrap();
+    }
+    let rf = &m.fabric().regfile;
+    for r in 1..=15usize {
+        assert_ne!(rf.pr_destination(r).unwrap(), 0, "region {r} dest");
+        assert_ne!(rf.allowed_slaves(r).unwrap(), 0, "region {r} mask");
+    }
+    // Every chain hop carries the programmed WRR budget.
+    assert_eq!(rf.allowed_packages(4, 0).unwrap(), 24, "bridge -> region 4");
+    assert_eq!(rf.allowed_packages(8, 4).unwrap(), 24);
+    assert_eq!(rf.allowed_packages(0, 12).unwrap(), 24, "tail -> bridge");
+    for app in 0..4u32 {
+        m.release_app(app);
+    }
+    assert_eq!(m.available_regions(), 15);
+
+    // A 6-stage chain — impossible under Table III — now executes.
+    let req = AppRequest {
+        app_id: 0,
+        data: data(64, 23),
+        stages: vec![crate::modules::ModuleKind::Multiplier; 6],
+    };
+    let rep = m.execute(&req).unwrap();
+    assert_eq!(rep.fpga_stages, 6);
+    assert!(rep.verified);
+    // Beyond the configured 16 ports the typed refusal still applies.
+    assert!(matches!(
+        m.program_app_chain(0, &[16], 8),
+        Err(crate::ElasticError::RegfileWindow(_))
+    ));
+    assert!(matches!(
+        m.program_app_chain(16, &[1], 8),
+        Err(crate::ElasticError::RegfileWindow(_))
+    ));
 }
 
 #[test]
@@ -211,13 +283,13 @@ fn reserve_and_blank_regions_hold_allocations_through_icap() {
     ));
     // The module is really instantiated on the fabric.
     assert!(m.fabric().module_at(2).is_some());
-    // Double-reserve and out-of-range regions are refused.
+    // Double-reserve and out-of-layout regions are refused.
     assert!(m
         .reserve_region(1, crate::modules::ModuleKind::Multiplier, 2)
         .is_err());
     assert!(matches!(
         m.reserve_region(0, crate::modules::ModuleKind::Multiplier, 9),
-        Err(crate::ElasticError::Allocation(_))
+        Err(crate::ElasticError::RegfileWindow(_))
     ));
     // Blanking goes back through the timed ICAP and frees the region.
     let blank = m.blank_region(2).unwrap();
@@ -232,12 +304,12 @@ fn program_app_chain_writes_destinations_and_weights() {
     let mut m = mgr();
     m.program_app_chain(2, &[1, 3], 32).unwrap();
     let rf = &m.fabric().regfile;
-    assert_eq!(rf.app_destination(2), 1 << 1);
-    assert_eq!(rf.pr_destination(1), 1 << 3);
-    assert_eq!(rf.pr_destination(3), 1 << 0);
-    assert_eq!(rf.allowed_packages(1, 0), 32, "bridge hop weight");
-    assert_eq!(rf.allowed_packages(3, 1), 32);
-    assert_eq!(rf.allowed_packages(0, 3), 32);
+    assert_eq!(rf.app_destination(2).unwrap(), 1 << 1);
+    assert_eq!(rf.pr_destination(1).unwrap(), 1 << 3);
+    assert_eq!(rf.pr_destination(3).unwrap(), 1 << 0);
+    assert_eq!(rf.allowed_packages(1, 0).unwrap(), 32, "bridge hop weight");
+    assert_eq!(rf.allowed_packages(3, 1).unwrap(), 32);
+    assert_eq!(rf.allowed_packages(0, 3).unwrap(), 32);
     assert!(m.program_app_chain(4, &[1], 8).is_err(), "app beyond window");
     assert!(m.program_app_chain(0, &[4], 8).is_err(), "region beyond window");
 }

@@ -1,0 +1,367 @@
+//! The banked register-file layout (v2): Table III generalized to any
+//! crossbar width.
+//!
+//! Table III hard-wires the register map to a 4-port crossbar.  The
+//! banked layout keeps the *same bank order* and the same intra-register
+//! field packing, but computes every bank's base address from the port
+//! count `N`:
+//!
+//! | bank                | registers            | base (register index)  |
+//! |---------------------|----------------------|------------------------|
+//! | device ID           | 1                    | 0                      |
+//! | PR destinations     | N-1 (regions 1..N-1) | 1                      |
+//! | reset bits          | 1 (ports [N-1:0])    | N                      |
+//! | allowed addresses   | N (one per master)   | N + 1                  |
+//! | package budgets     | N·⌈N/4⌉              | 2N + 1                 |
+//! | app destinations    | N (app IDs 0..N-1)   | 2N + 1 + N·⌈N/4⌉       |
+//! | PR error status     | ⌈(N-1)/4⌉            | 3N + 1 + N·⌈N/4⌉       |
+//! | app error status    | ⌈N/4⌉                | + ⌈(N-1)/4⌉            |
+//! | ICAP status         | 1                    | last                   |
+//!
+//! Package-budget and error-status registers hold four 8-bit fields per
+//! 32-bit register, exactly as in Table III; widths beyond 4 simply
+//! spill into the next register of the bank (master `m`'s budget at
+//! slave `s` lives in register `packages_base + s·⌈N/4⌉ + m/4`, bits
+//! `[8(m%4)+7 : 8(m%4)]`).  The reset bank stays a single register:
+//! the crossbar caps ports at 32, so the bits always fit.
+//!
+//! **The 4-port instantiation is byte-for-byte Table III** — every base
+//! above evaluates to the Table III register number at `N = 4`, pinned
+//! by the golden byte-image test in the parent module.
+
+/// A banked register-file layout for an `N`-port crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegfileLayout {
+    num_ports: usize,
+}
+
+/// 8-bit fields packed per 32-bit register (package budgets, error
+/// status) — a Table III invariant the banked layout preserves.
+pub const FIELDS_PER_REG: usize = 4;
+
+impl RegfileLayout {
+    /// Fewest ports a layout can describe (bridge + one PR region).
+    pub const MIN_PORTS: usize = 2;
+    /// Most ports a layout can describe (one-hot addresses and the
+    /// reset register are 32 bits wide).
+    pub const MAX_PORTS: usize = 32;
+
+    /// Layout for an `num_ports`-wide crossbar (port 0 is the bridge,
+    /// ports `1..num_ports` host PR regions).
+    pub fn new(num_ports: usize) -> Self {
+        assert!(
+            (Self::MIN_PORTS..=Self::MAX_PORTS).contains(&num_ports),
+            "layout needs {}..={} ports, got {num_ports}",
+            Self::MIN_PORTS,
+            Self::MAX_PORTS
+        );
+        Self { num_ports }
+    }
+
+    /// The paper's Table III instantiation (4 ports, 20 registers).
+    pub fn table3() -> Self {
+        Self::new(4)
+    }
+
+    /// Crossbar ports this layout programs.
+    pub fn num_ports(&self) -> usize {
+        self.num_ports
+    }
+
+    /// PR regions (= non-bridge ports) this layout programs.
+    pub fn num_pr_regions(&self) -> usize {
+        self.num_ports - 1
+    }
+
+    /// Application IDs with a destination register.
+    pub fn num_app_ids(&self) -> usize {
+        self.num_ports
+    }
+
+    /// Does the layout provide registers for crossbar `port`?
+    pub fn covers_port(&self, port: usize) -> bool {
+        port < self.num_ports
+    }
+
+    /// Does the layout provide registers for PR `region` (1-indexed,
+    /// region = crossbar port; port 0 is the bridge)?
+    pub fn covers_region(&self, region: usize) -> bool {
+        (1..self.num_ports).contains(&region)
+    }
+
+    /// Does the layout provide a destination register for `app_id`?
+    pub fn covers_app(&self, app_id: usize) -> bool {
+        app_id < self.num_app_ids()
+    }
+
+    /// Budget registers per slave port: ⌈N/4⌉ (Table III: 1).
+    pub fn budget_regs_per_slave(&self) -> usize {
+        self.num_ports.div_ceil(FIELDS_PER_REG)
+    }
+
+    // ------------------------------------------------------------------
+    // bank bases and per-field addressing
+    // ------------------------------------------------------------------
+
+    /// Register 0: the FPGA device ID.
+    pub fn device_id_reg(&self) -> usize {
+        0
+    }
+
+    /// Destination-address register of PR `region` (1..N-1).
+    pub fn pr_dest_reg(&self, region: usize) -> usize {
+        debug_assert!(self.covers_region(region));
+        region
+    }
+
+    /// The reset register (bit `p` resets port `p`).
+    pub fn reset_reg(&self) -> usize {
+        self.num_ports
+    }
+
+    /// Allowed-addresses (isolation mask) register of `port`'s master.
+    pub fn allowed_reg(&self, port: usize) -> usize {
+        debug_assert!(self.covers_port(port));
+        self.reset_reg() + 1 + port
+    }
+
+    /// First register of the package-budget bank.
+    pub fn packages_base(&self) -> usize {
+        self.reset_reg() + 1 + self.num_ports
+    }
+
+    /// Register holding `master`'s package budget at `slave`.
+    pub fn packages_reg(&self, slave: usize, master: usize) -> usize {
+        debug_assert!(self.covers_port(slave) && self.covers_port(master));
+        self.packages_base()
+            + slave * self.budget_regs_per_slave()
+            + master / FIELDS_PER_REG
+    }
+
+    /// Bit shift of `master`'s 8-bit field within its budget register.
+    pub fn packages_shift(master: usize) -> u32 {
+        8 * (master % FIELDS_PER_REG) as u32
+    }
+
+    /// Destination-address register of application `app_id`.
+    pub fn app_dest_reg(&self, app_id: usize) -> usize {
+        debug_assert!(self.covers_app(app_id));
+        self.packages_base()
+            + self.num_ports * self.budget_regs_per_slave()
+            + app_id
+    }
+
+    /// First register of the PR-region error-status bank.
+    pub fn pr_error_base(&self) -> usize {
+        self.app_dest_reg(0) + self.num_app_ids()
+    }
+
+    /// Error-status register of PR `region`.
+    pub fn pr_error_reg(&self, region: usize) -> usize {
+        debug_assert!(self.covers_region(region));
+        self.pr_error_base() + (region - 1) / FIELDS_PER_REG
+    }
+
+    /// Bit shift of `region`'s 8-bit error field.
+    pub fn pr_error_shift(region: usize) -> u32 {
+        8 * ((region - 1) % FIELDS_PER_REG) as u32
+    }
+
+    /// Error-status register of application `app_id`.
+    pub fn app_error_reg(&self, app_id: usize) -> usize {
+        debug_assert!(self.covers_app(app_id));
+        self.pr_error_base()
+            + self.num_pr_regions().div_ceil(FIELDS_PER_REG)
+            + app_id / FIELDS_PER_REG
+    }
+
+    /// Bit shift of `app_id`'s 8-bit error field.
+    pub fn app_error_shift(app_id: usize) -> u32 {
+        8 * (app_id % FIELDS_PER_REG) as u32
+    }
+
+    /// The ICAP status register (always the last register).
+    pub fn icap_reg(&self) -> usize {
+        self.app_error_reg(0)
+            + self.num_app_ids().div_ceil(FIELDS_PER_REG)
+    }
+
+    /// Total registers in the layout (Table III: 20).
+    pub fn num_regs(&self) -> usize {
+        self.icap_reg() + 1
+    }
+
+    // ------------------------------------------------------------------
+    // v1 (Table III) compatibility window
+    // ------------------------------------------------------------------
+
+    /// Translate a Table III register index (0..20) into this layout's
+    /// register index, or `None` when the entry does not exist here
+    /// (e.g. PR region 3 on a 3-port layout).
+    ///
+    /// Every Table III register maps onto a *whole* register of the
+    /// banked layout with identical intra-register field packing, so
+    /// host software written against Table III byte addresses keeps
+    /// working unmodified on any width — the v1 compatibility window.
+    pub fn v1_compat_index(&self, table3_index: usize) -> Option<usize> {
+        use super::regs;
+        Some(match table3_index {
+            regs::DEVICE_ID => self.device_id_reg(),
+            r @ regs::PR1_DEST..=regs::PR3_DEST => {
+                let region = r - regs::PR1_DEST + 1;
+                if !self.covers_region(region) {
+                    return None;
+                }
+                self.pr_dest_reg(region)
+            }
+            regs::RESET => self.reset_reg(),
+            r @ regs::ALLOWED_PORT0..=regs::ALLOWED_PORT3 => {
+                let port = r - regs::ALLOWED_PORT0;
+                if !self.covers_port(port) {
+                    return None;
+                }
+                self.allowed_reg(port)
+            }
+            r @ regs::PACKAGES_PORT0..=regs::PACKAGES_PORT3 => {
+                let slave = r - regs::PACKAGES_PORT0;
+                if !self.covers_port(slave) {
+                    return None;
+                }
+                // Table III's packages register holds masters 0..=3,
+                // exactly the first budget register of the slave's bank.
+                self.packages_reg(slave, 0)
+            }
+            r @ regs::APP0_DEST..=regs::APP3_DEST => {
+                let app = r - regs::APP0_DEST;
+                if !self.covers_app(app) {
+                    return None;
+                }
+                self.app_dest_reg(app)
+            }
+            // Table III's error registers hold fields for regions 1..=3
+            // and apps 0..=3 — the first register of each error bank.
+            regs::PR_ERROR_STATUS => self.pr_error_reg(1),
+            regs::APP_ERROR_STATUS => self.app_error_reg(0),
+            regs::ICAP_STATUS => self.icap_reg(),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_instantiation_reproduces_every_table3_index() {
+        use crate::regfile::regs;
+        let l = RegfileLayout::table3();
+        assert_eq!(l.num_regs(), 20);
+        assert_eq!(l.device_id_reg(), regs::DEVICE_ID);
+        assert_eq!(l.pr_dest_reg(1), regs::PR1_DEST);
+        assert_eq!(l.pr_dest_reg(2), regs::PR2_DEST);
+        assert_eq!(l.pr_dest_reg(3), regs::PR3_DEST);
+        assert_eq!(l.reset_reg(), regs::RESET);
+        for p in 0..4 {
+            assert_eq!(l.allowed_reg(p), regs::ALLOWED_PORT0 + p);
+            assert_eq!(l.app_dest_reg(p), regs::APP0_DEST + p);
+            for m in 0..4 {
+                assert_eq!(l.packages_reg(p, m), regs::PACKAGES_PORT0 + p);
+            }
+        }
+        assert_eq!(l.pr_error_reg(1), regs::PR_ERROR_STATUS);
+        assert_eq!(l.pr_error_reg(3), regs::PR_ERROR_STATUS);
+        assert_eq!(l.app_error_reg(0), regs::APP_ERROR_STATUS);
+        assert_eq!(l.app_error_reg(3), regs::APP_ERROR_STATUS);
+        assert_eq!(l.icap_reg(), regs::ICAP_STATUS);
+        // The 4-port compat window is the identity.
+        for i in 0..20 {
+            assert_eq!(l.v1_compat_index(i), Some(i), "table3 reg {i}");
+        }
+        assert_eq!(l.v1_compat_index(20), None);
+    }
+
+    #[test]
+    fn banks_are_contiguous_and_disjoint_at_any_width() {
+        for n in RegfileLayout::MIN_PORTS..=RegfileLayout::MAX_PORTS {
+            let l = RegfileLayout::new(n);
+            // Walk the banks in order; every register index must be used
+            // exactly once.
+            let mut next = 0usize;
+            let mut take = |idx: usize, what: &str| {
+                assert_eq!(idx, next, "{what} not contiguous at n={n}");
+                next += 1;
+            };
+            take(l.device_id_reg(), "device id");
+            for r in 1..n {
+                take(l.pr_dest_reg(r), "pr dest");
+            }
+            take(l.reset_reg(), "reset");
+            for p in 0..n {
+                take(l.allowed_reg(p), "allowed");
+            }
+            for s in 0..n {
+                for chunk in 0..l.budget_regs_per_slave() {
+                    take(l.packages_reg(s, chunk * FIELDS_PER_REG), "packages");
+                }
+            }
+            for a in 0..n {
+                take(l.app_dest_reg(a), "app dest");
+            }
+            for chunk in 0..(n - 1).div_ceil(FIELDS_PER_REG) {
+                take(l.pr_error_reg(1 + chunk * FIELDS_PER_REG), "pr error");
+            }
+            for chunk in 0..n.div_ceil(FIELDS_PER_REG) {
+                take(l.app_error_reg(chunk * FIELDS_PER_REG), "app error");
+            }
+            take(l.icap_reg(), "icap");
+            assert_eq!(l.num_regs(), next, "register count at n={n}");
+        }
+    }
+
+    #[test]
+    fn sixteen_port_layout_addresses() {
+        let l = RegfileLayout::new(16);
+        assert_eq!(l.num_pr_regions(), 15);
+        assert_eq!(l.budget_regs_per_slave(), 4);
+        assert_eq!(l.reset_reg(), 16);
+        assert_eq!(l.allowed_reg(0), 17);
+        assert_eq!(l.packages_base(), 33);
+        // Slave 2, master 13 → base + 2*4 + 3, field 13 % 4 = 1.
+        assert_eq!(l.packages_reg(2, 13), 33 + 8 + 3);
+        assert_eq!(RegfileLayout::packages_shift(13), 8);
+        assert_eq!(l.app_dest_reg(0), 97);
+        assert_eq!(l.pr_error_base(), 113);
+        assert_eq!(l.pr_error_reg(15), 113 + 3);
+        assert_eq!(l.app_error_reg(15), 117 + 3);
+        assert_eq!(l.icap_reg(), 121);
+        assert_eq!(l.num_regs(), 122);
+    }
+
+    #[test]
+    fn compat_window_maps_onto_wide_layouts() {
+        use crate::regfile::regs;
+        let l = RegfileLayout::new(16);
+        assert_eq!(l.v1_compat_index(regs::DEVICE_ID), Some(0));
+        assert_eq!(l.v1_compat_index(regs::PR2_DEST), Some(2));
+        assert_eq!(l.v1_compat_index(regs::RESET), Some(16));
+        assert_eq!(l.v1_compat_index(regs::ALLOWED_PORT3), Some(20));
+        assert_eq!(l.v1_compat_index(regs::PACKAGES_PORT1), Some(33 + 4));
+        assert_eq!(l.v1_compat_index(regs::APP3_DEST), Some(100));
+        assert_eq!(l.v1_compat_index(regs::PR_ERROR_STATUS), Some(113));
+        assert_eq!(l.v1_compat_index(regs::APP_ERROR_STATUS), Some(117));
+        assert_eq!(l.v1_compat_index(regs::ICAP_STATUS), Some(121));
+        // A 3-port layout has no region-3 / port-3 entries.
+        let s = RegfileLayout::new(3);
+        assert_eq!(s.v1_compat_index(regs::PR3_DEST), None);
+        assert_eq!(s.v1_compat_index(regs::ALLOWED_PORT3), None);
+        assert_eq!(s.v1_compat_index(regs::APP3_DEST), None);
+        assert_eq!(s.v1_compat_index(regs::PR2_DEST), Some(2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_too_many_ports() {
+        RegfileLayout::new(33);
+    }
+}

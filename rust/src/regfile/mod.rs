@@ -1,8 +1,9 @@
-//! The register file (§IV.D, Table III — reproduced exactly).
+//! The register file (§IV.D) — Table III reproduced exactly at 4 ports,
+//! generalized to any crossbar width by the banked layout v2.
 //!
 //! Twenty 32-bit registers provide configuration to the crossbar and PR
 //! regions and collect status from ICAP, the computation modules and the
-//! AXI-WB bridge:
+//! AXI-WB bridge.  Table III (the 4-port instantiation):
 //!
 //! | N  | Address | Contents                                          |
 //! |----|---------|---------------------------------------------------|
@@ -32,30 +33,43 @@
 //! default budget" so an unprogrammed register file stays functional.
 //! Error-status registers hold 8-bit error codes per region / app ID.
 //!
-//! # The 4-port window
+//! # The banked layout v2
 //!
-//! Table III is hard-wired to a 4-port crossbar: destination, isolation,
-//! bandwidth and error registers exist for the bridge port plus PR
-//! regions 1..=[`MAX_PR_REGIONS`], and for app IDs 0..=3 — there simply
-//! are no registers for a 5th port.  Configurations with more crossbar
-//! ports can still *simulate* (the crossbar itself is size-generic, see
-//! the Fig 6 sweep), but the manager refuses to place work on regions it
-//! cannot program, returning [`crate::ElasticError::RegfileWindow`]
-//! instead of silently running those ports with power-on defaults.
-//! A scalable register-file layout is an open ROADMAP item.
+//! A [`RegfileLayout`] computes every bank's base address from the port
+//! count, so a [`RegisterFile`] built with [`RegisterFile::with_ports`]
+//! programs destinations, isolation masks, WRR package budgets, app
+//! destinations and error status for **any** crossbar width — budget
+//! and error fields beyond 4 spill into ⌈N/4⌉-register banks with the
+//! same 8-bit packing.  The 4-port instantiation is byte-for-byte
+//! identical to Table III (golden test below), and the Table III byte
+//! addresses keep working on wider layouts through the v1 compatibility
+//! window ([`RegisterFile::v1_read_addr`] /
+//! [`RegisterFile::v1_write_addr`]).
+//!
+//! Typed accessors return `Err(`[`crate::ElasticError::RegfileWindow`]`)`
+//! for ports/regions/apps outside the *configured* layout instead of
+//! panicking, so a stray AXI-Lite-style host access can never crash the
+//! shell model; the manager surfaces the same typed error when asked to
+//! place work it cannot program.
+
+mod layout;
+
+pub use layout::{RegfileLayout, FIELDS_PER_REG};
 
 use crate::wishbone::WbError;
+use crate::{ElasticError, Result};
 
-/// Number of registers (Table III).
+/// Number of registers in the Table III (4-port) instantiation.
 pub const NUM_REGS: usize = 20;
 
-/// Crossbar ports Table III can program: bridge port 0 + PR regions 1..=3.
+/// Crossbar ports Table III programs: bridge port 0 + PR regions 1..=3.
 pub const MAX_PORTS: usize = 4;
 
 /// PR regions (= non-bridge ports) addressable by Table III.
 pub const MAX_PR_REGIONS: usize = MAX_PORTS - 1;
 
-/// Symbolic register indices.
+/// Symbolic Table III register indices (the 4-port instantiation; wider
+/// layouts derive their map from [`RegfileLayout`]).
 pub mod regs {
     pub const DEVICE_ID: usize = 0;
     pub const PR1_DEST: usize = 1;
@@ -83,7 +97,7 @@ pub mod regs {
 /// the host reads to confirm the shell is alive).
 pub const DEVICE_ID_VALUE: u32 = 0x4B43_5531; // "KCU1"
 
-/// ICAP status codes stored in register 19.
+/// ICAP status codes stored in the ICAP status register.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IcapStatus {
     Idle,
@@ -119,7 +133,8 @@ impl IcapStatus {
 /// (§IV.B) or by index from the fabric side.
 #[derive(Debug, Clone)]
 pub struct RegisterFile {
-    regs: [u32; NUM_REGS],
+    layout: RegfileLayout,
+    regs: Vec<u32>,
     /// Write-generation counter so the fabric can cheaply detect
     /// configuration changes and re-derive crossbar state.
     generation: u64,
@@ -132,55 +147,92 @@ impl Default for RegisterFile {
 }
 
 impl RegisterFile {
-    /// Does Table III provide programming registers for crossbar `port`?
-    pub fn covers_port(port: usize) -> bool {
-        port < MAX_PORTS
-    }
-
-    /// Does Table III provide programming registers for PR `region`
-    /// (1-indexed, region = crossbar port)?
-    pub fn covers_region(region: usize) -> bool {
-        (1..=MAX_PR_REGIONS).contains(&region)
-    }
-
-    /// Power-on state: device ID set, everything else zero.
+    /// Power-on Table III file (4 ports): device ID set, all else zero.
     pub fn new() -> Self {
-        let mut regs = [0u32; NUM_REGS];
-        regs[regs::DEVICE_ID] = DEVICE_ID_VALUE;
-        Self { regs, generation: 0 }
+        Self::with_layout(RegfileLayout::table3())
     }
 
-    /// Read by register index.
+    /// Power-on file for an `num_ports`-wide crossbar.
+    pub fn with_ports(num_ports: usize) -> Self {
+        Self::with_layout(RegfileLayout::new(num_ports))
+    }
+
+    /// Power-on file under an explicit layout.
+    pub fn with_layout(layout: RegfileLayout) -> Self {
+        let mut regs = vec![0u32; layout.num_regs()];
+        regs[layout.device_id_reg()] = DEVICE_ID_VALUE;
+        Self { layout, regs, generation: 0 }
+    }
+
+    /// The layout this file is banked under.
+    pub fn layout(&self) -> &RegfileLayout {
+        &self.layout
+    }
+
+    /// Total registers (Table III: 20).
+    pub fn num_regs(&self) -> usize {
+        self.regs.len()
+    }
+
+    /// Read by register index.  Panics on out-of-range indices — index
+    /// arithmetic comes from the layout, so a violation is a model bug;
+    /// host-facing paths go through [`read_addr`](Self::read_addr).
     pub fn read(&self, index: usize) -> u32 {
-        assert!(index < NUM_REGS, "register index {index} out of range");
+        assert!(index < self.regs.len(), "register index {index} out of range");
         self.regs[index]
     }
 
-    /// Write by register index.
+    /// Write by register index (same contract as [`read`](Self::read)).
     pub fn write(&mut self, index: usize, value: u32) {
-        assert!(index < NUM_REGS, "register index {index} out of range");
+        assert!(index < self.regs.len(), "register index {index} out of range");
         self.regs[index] = value;
         self.generation += 1;
     }
 
-    /// Read by byte address (AXI-Lite view, Table III addressing).
+    /// Read by byte address (AXI-Lite view; this layout's addressing).
     pub fn read_addr(&self, addr: u32) -> Option<u32> {
         let idx = (addr / 4) as usize;
-        if addr % 4 == 0 && idx < NUM_REGS {
+        if addr % 4 == 0 && idx < self.regs.len() {
             Some(self.regs[idx])
         } else {
             None
         }
     }
 
-    /// Write by byte address (AXI-Lite view).
+    /// Write by byte address (AXI-Lite view).  Out-of-range or unaligned
+    /// addresses are refused, never panicking the shell.
     pub fn write_addr(&mut self, addr: u32, value: u32) -> bool {
         let idx = (addr / 4) as usize;
-        if addr % 4 == 0 && idx < NUM_REGS {
+        if addr % 4 == 0 && idx < self.regs.len() {
             self.write(idx, value);
             true
         } else {
             false
+        }
+    }
+
+    /// Read by **Table III** byte address, translated through the v1
+    /// compatibility window — host software written against the 4-port
+    /// map keeps working on any layout width.
+    pub fn v1_read_addr(&self, addr: u32) -> Option<u32> {
+        if addr % 4 != 0 {
+            return None;
+        }
+        let v2 = self.layout.v1_compat_index((addr / 4) as usize)?;
+        Some(self.regs[v2])
+    }
+
+    /// Write by **Table III** byte address through the v1 window.
+    pub fn v1_write_addr(&mut self, addr: u32, value: u32) -> bool {
+        if addr % 4 != 0 {
+            return false;
+        }
+        match self.layout.v1_compat_index((addr / 4) as usize) {
+            Some(v2) => {
+                self.write(v2, value);
+                true
+            }
+            None => false,
         }
     }
 
@@ -189,123 +241,211 @@ impl RegisterFile {
         self.generation
     }
 
+    fn window_err(&self, what: &str, i: usize) -> ElasticError {
+        ElasticError::RegfileWindow(format!(
+            "{what} {i} is outside the configured {}-port register-file \
+             layout",
+            self.layout.num_ports()
+        ))
+    }
+
+    fn check_region(&self, region: usize) -> Result<()> {
+        if self.layout.covers_region(region) {
+            Ok(())
+        } else {
+            Err(self.window_err("PR region", region))
+        }
+    }
+
+    fn check_port(&self, port: usize) -> Result<()> {
+        if self.layout.covers_port(port) {
+            Ok(())
+        } else {
+            Err(self.window_err("port", port))
+        }
+    }
+
+    fn check_app(&self, app_id: usize) -> Result<()> {
+        if self.layout.covers_app(app_id) {
+            Ok(())
+        } else {
+            Err(self.window_err("app ID", app_id))
+        }
+    }
+
     // ------------------------------------------------------------------
     // typed views (the fabric side)
     // ------------------------------------------------------------------
 
-    /// PR region `r` (1-indexed, 1..=3) destination address (one-hot).
-    pub fn pr_destination(&self, region: usize) -> u32 {
-        assert!((1..=3).contains(&region), "PR region {region} out of range");
-        self.regs[regs::PR1_DEST + region - 1]
+    /// PR region `r` (1-indexed) destination address (one-hot).
+    pub fn pr_destination(&self, region: usize) -> Result<u32> {
+        self.check_region(region)?;
+        Ok(self.regs[self.layout.pr_dest_reg(region)])
     }
 
     /// Program PR region `r`'s destination (one-hot slave address).
-    pub fn set_pr_destination(&mut self, region: usize, dest_onehot: u32) {
-        assert!((1..=3).contains(&region));
-        self.write(regs::PR1_DEST + region - 1, dest_onehot);
+    pub fn set_pr_destination(
+        &mut self,
+        region: usize,
+        dest_onehot: u32,
+    ) -> Result<()> {
+        self.check_region(region)?;
+        self.write(self.layout.pr_dest_reg(region), dest_onehot);
+        Ok(())
     }
 
-    /// Reset bit for port `p` (register 4, bits [3:0]).
-    pub fn port_reset(&self, port: usize) -> bool {
-        assert!(port < 4);
-        self.regs[regs::RESET] >> port & 1 == 1
+    /// Reset bit for port `p`.
+    pub fn port_reset(&self, port: usize) -> Result<bool> {
+        self.check_port(port)?;
+        Ok(self.regs[self.layout.reset_reg()] >> port & 1 == 1)
     }
 
     /// Set/clear port `p`'s reset bit.
-    pub fn set_port_reset(&mut self, port: usize, on: bool) {
-        assert!(port < 4);
-        let mut v = self.regs[regs::RESET];
+    pub fn set_port_reset(&mut self, port: usize, on: bool) -> Result<()> {
+        self.check_port(port)?;
+        let idx = self.layout.reset_reg();
+        let mut v = self.regs[idx];
         if on {
             v |= 1 << port;
         } else {
             v &= !(1 << port);
         }
-        self.write(regs::RESET, v);
+        self.write(idx, v);
+        Ok(())
     }
 
-    /// Allowed-slaves isolation mask for port `p`'s master (regs 5-8).
-    pub fn allowed_slaves(&self, port: usize) -> u32 {
-        assert!(port < 4);
-        self.regs[regs::ALLOWED_PORT0 + port]
+    /// Allowed-slaves isolation mask for port `p`'s master.
+    pub fn allowed_slaves(&self, port: usize) -> Result<u32> {
+        self.check_port(port)?;
+        Ok(self.regs[self.layout.allowed_reg(port)])
     }
 
     /// Program port `p`'s isolation mask.
-    pub fn set_allowed_slaves(&mut self, port: usize, mask: u32) {
-        assert!(port < 4);
-        self.write(regs::ALLOWED_PORT0 + port, mask);
+    pub fn set_allowed_slaves(&mut self, port: usize, mask: u32) -> Result<()> {
+        self.check_port(port)?;
+        self.write(self.layout.allowed_reg(port), mask);
+        Ok(())
     }
 
-    /// Package budget for `master` at `slave` (regs 9-12, 8-bit fields;
-    /// 0 = unprogrammed, caller substitutes the default).
-    pub fn allowed_packages(&self, slave: usize, master: usize) -> u32 {
-        assert!(slave < 4 && master < 4);
-        self.regs[regs::PACKAGES_PORT0 + slave] >> (8 * master) & 0xFF
+    /// Package budget for `master` at `slave` (8-bit fields; 0 =
+    /// unprogrammed, caller substitutes the default).
+    pub fn allowed_packages(&self, slave: usize, master: usize) -> Result<u32> {
+        self.check_port(slave)?;
+        self.check_port(master)?;
+        let idx = self.layout.packages_reg(slave, master);
+        Ok(self.regs[idx] >> RegfileLayout::packages_shift(master) & 0xFF)
     }
 
     /// Program the package budget for `master` at `slave` (1..=255).
-    pub fn set_allowed_packages(&mut self, slave: usize, master: usize, packages: u32) {
-        assert!(slave < 4 && master < 4);
-        assert!(packages <= 0xFF, "package field is 8 bits");
-        let idx = regs::PACKAGES_PORT0 + slave;
+    pub fn set_allowed_packages(
+        &mut self,
+        slave: usize,
+        master: usize,
+        packages: u32,
+    ) -> Result<()> {
+        self.check_port(slave)?;
+        self.check_port(master)?;
+        if packages > 0xFF {
+            return Err(ElasticError::Config(format!(
+                "package budget {packages} does not fit the 8-bit field"
+            )));
+        }
+        let idx = self.layout.packages_reg(slave, master);
+        let shift = RegfileLayout::packages_shift(master);
         let mut v = self.regs[idx];
-        v &= !(0xFF << (8 * master));
-        v |= packages << (8 * master);
+        v &= !(0xFF << shift);
+        v |= packages << shift;
         self.write(idx, v);
+        Ok(())
     }
 
-    /// Application `id`'s destination address (regs 13-16).
-    pub fn app_destination(&self, app_id: usize) -> u32 {
-        assert!(app_id < 4);
-        self.regs[regs::APP0_DEST + app_id]
+    /// Application `id`'s destination address.
+    pub fn app_destination(&self, app_id: usize) -> Result<u32> {
+        self.check_app(app_id)?;
+        Ok(self.regs[self.layout.app_dest_reg(app_id)])
     }
 
     /// Program application `id`'s destination.
-    pub fn set_app_destination(&mut self, app_id: usize, dest_onehot: u32) {
-        assert!(app_id < 4);
-        self.write(regs::APP0_DEST + app_id, dest_onehot);
+    pub fn set_app_destination(
+        &mut self,
+        app_id: usize,
+        dest_onehot: u32,
+    ) -> Result<()> {
+        self.check_app(app_id)?;
+        self.write(self.layout.app_dest_reg(app_id), dest_onehot);
+        Ok(())
     }
 
-    /// Last transaction error for PR region `r` (register 17; 8-bit code
-    /// fields for regions [3:1], 0 = OK).
-    pub fn pr_error(&self, region: usize) -> Option<WbError> {
-        assert!((1..=3).contains(&region));
-        WbError::from_code(self.regs[regs::PR_ERROR_STATUS] >> (8 * (region - 1)) & 0xFF)
+    /// Last transaction error for PR region `r` (8-bit code, 0 = OK).
+    pub fn pr_error(&self, region: usize) -> Result<Option<WbError>> {
+        self.check_region(region)?;
+        let idx = self.layout.pr_error_reg(region);
+        Ok(WbError::from_code(
+            self.regs[idx] >> RegfileLayout::pr_error_shift(region) & 0xFF,
+        ))
+    }
+
+    /// Update one 8-bit status field.  Unchanged bytes are not
+    /// re-written: the write generation drives the fabric's full-width
+    /// crossbar remirror, so a success reported on every transfer must
+    /// not look like a configuration change.
+    fn set_status_byte(&mut self, idx: usize, shift: u32, code: u32) {
+        let mut v = self.regs[idx];
+        v &= !(0xFF << shift);
+        v |= code << shift;
+        if v != self.regs[idx] {
+            self.write(idx, v);
+        }
     }
 
     /// Record PR region `r`'s last transaction status.
-    pub fn set_pr_error(&mut self, region: usize, err: Option<WbError>) {
-        assert!((1..=3).contains(&region));
-        let idx = regs::PR_ERROR_STATUS;
-        let mut v = self.regs[idx];
-        v &= !(0xFF << (8 * (region - 1)));
-        v |= err.map(WbError::code).unwrap_or(0) << (8 * (region - 1));
-        self.write(idx, v);
+    pub fn set_pr_error(
+        &mut self,
+        region: usize,
+        err: Option<WbError>,
+    ) -> Result<()> {
+        self.check_region(region)?;
+        self.set_status_byte(
+            self.layout.pr_error_reg(region),
+            RegfileLayout::pr_error_shift(region),
+            err.map(WbError::code).unwrap_or(0),
+        );
+        Ok(())
     }
 
-    /// Last transaction error for application `id` (register 18).
-    pub fn app_error(&self, app_id: usize) -> Option<WbError> {
-        assert!(app_id < 4);
-        WbError::from_code(self.regs[regs::APP_ERROR_STATUS] >> (8 * app_id) & 0xFF)
+    /// Last transaction error for application `id`.
+    pub fn app_error(&self, app_id: usize) -> Result<Option<WbError>> {
+        self.check_app(app_id)?;
+        let idx = self.layout.app_error_reg(app_id);
+        Ok(WbError::from_code(
+            self.regs[idx] >> RegfileLayout::app_error_shift(app_id) & 0xFF,
+        ))
     }
 
     /// Record application `id`'s last transaction status.
-    pub fn set_app_error(&mut self, app_id: usize, err: Option<WbError>) {
-        assert!(app_id < 4);
-        let idx = regs::APP_ERROR_STATUS;
-        let mut v = self.regs[idx];
-        v &= !(0xFF << (8 * app_id));
-        v |= err.map(WbError::code).unwrap_or(0) << (8 * app_id);
-        self.write(idx, v);
+    pub fn set_app_error(
+        &mut self,
+        app_id: usize,
+        err: Option<WbError>,
+    ) -> Result<()> {
+        self.check_app(app_id)?;
+        self.set_status_byte(
+            self.layout.app_error_reg(app_id),
+            RegfileLayout::app_error_shift(app_id),
+            err.map(WbError::code).unwrap_or(0),
+        );
+        Ok(())
     }
 
-    /// ICAP status (register 19).
+    /// ICAP status.
     pub fn icap_status(&self) -> IcapStatus {
-        IcapStatus::from_code(self.regs[regs::ICAP_STATUS]).unwrap_or(IcapStatus::Error)
+        IcapStatus::from_code(self.regs[self.layout.icap_reg()])
+            .unwrap_or(IcapStatus::Error)
     }
 
     /// Record ICAP status.
     pub fn set_icap_status(&mut self, st: IcapStatus) {
-        self.write(regs::ICAP_STATUS, st.code());
+        self.write(self.layout.icap_reg(), st.code());
     }
 }
 
@@ -328,7 +468,7 @@ mod tests {
         let mut rf = RegisterFile::new();
         assert_eq!(rf.read_addr(0x0), Some(DEVICE_ID_VALUE));
         assert!(rf.write_addr(0x14, 0b1110));
-        assert_eq!(rf.allowed_slaves(0), 0b1110);
+        assert_eq!(rf.allowed_slaves(0).unwrap(), 0b1110);
         assert!(rf.write_addr(0x4C, 2));
         assert_eq!(rf.icap_status(), IcapStatus::Done);
         // Address 0x50 is out of range; 0x2 is unaligned.
@@ -337,37 +477,170 @@ mod tests {
         assert!(!rf.write_addr(0x50, 1));
     }
 
+    /// Golden Table III byte image: a fixed programming sequence through
+    /// the typed v2 accessors must land in exactly the Table III bytes.
+    /// Pins the 4-port instantiation of the banked layout byte-for-byte.
+    #[test]
+    fn golden_table3_byte_image() {
+        let mut rf = RegisterFile::new();
+        rf.set_pr_destination(1, 0b0100).unwrap(); // mult -> enc
+        rf.set_pr_destination(2, 0b1000).unwrap(); // enc -> dec
+        rf.set_pr_destination(3, 0b0001).unwrap(); // dec -> bridge
+        rf.set_port_reset(2, true).unwrap();
+        rf.set_allowed_slaves(0, 0b0010).unwrap();
+        rf.set_allowed_slaves(1, 0b0100).unwrap();
+        rf.set_allowed_slaves(2, 0b1000).unwrap();
+        rf.set_allowed_slaves(3, 0b0001).unwrap();
+        rf.set_allowed_packages(1, 0, 16).unwrap();
+        rf.set_allowed_packages(2, 1, 32).unwrap();
+        rf.set_allowed_packages(3, 2, 64).unwrap();
+        rf.set_allowed_packages(0, 3, 128).unwrap();
+        rf.set_app_destination(0, 0b0010).unwrap();
+        rf.set_app_destination(3, 0b1000).unwrap();
+        rf.set_pr_error(2, Some(WbError::GrantTimeout)).unwrap();
+        rf.set_app_error(1, Some(WbError::InvalidDestination)).unwrap();
+        rf.set_icap_status(IcapStatus::Busy);
+        let golden: [u32; NUM_REGS] = [
+            DEVICE_ID_VALUE, // 0x00 device ID
+            0b0100,          // 0x04 PR1 dest
+            0b1000,          // 0x08 PR2 dest
+            0b0001,          // 0x0C PR3 dest
+            0b0100,          // 0x10 reset, bit 2
+            0b0010,          // 0x14 allowed port 0
+            0b0100,          // 0x18 allowed port 1
+            0b1000,          // 0x1C allowed port 2
+            0b0001,          // 0x20 allowed port 3
+            128 << 24,       // 0x24 packages port 0, master 3
+            16,              // 0x28 packages port 1, master 0
+            32 << 8,         // 0x2C packages port 2, master 1
+            64 << 16,        // 0x30 packages port 3, master 2
+            0b0010,          // 0x34 app 0 dest
+            0,               // 0x38 app 1 dest
+            0,               // 0x3C app 2 dest
+            0b1000,          // 0x40 app 3 dest
+            0x2 << 8,        // 0x44 PR error, region 2 = GrantTimeout
+            0x1 << 8,        // 0x48 app error, app 1 = InvalidDestination
+            1,               // 0x4C ICAP = Busy
+        ];
+        for (i, &want) in golden.iter().enumerate() {
+            assert_eq!(
+                rf.read_addr(4 * i as u32),
+                Some(want),
+                "Table III register {i} (byte 0x{:02X})",
+                4 * i
+            );
+            // The v1 compat path is the identity at 4 ports.
+            assert_eq!(rf.v1_read_addr(4 * i as u32), Some(want));
+        }
+    }
+
+    #[test]
+    fn wide_layout_programs_every_region_and_spills_fields() {
+        let mut rf = RegisterFile::with_ports(16);
+        assert_eq!(rf.num_regs(), 122);
+        for r in 1..16 {
+            rf.set_pr_destination(r, 1 << ((r + 1) % 16)).unwrap();
+            rf.set_allowed_slaves(r, 1 << ((r + 1) % 16)).unwrap();
+        }
+        for m in 0..16 {
+            rf.set_allowed_packages(5, m, (m as u32 + 1) * 10).unwrap();
+        }
+        for m in 0..16 {
+            assert_eq!(
+                rf.allowed_packages(5, m).unwrap(),
+                ((m as u32 + 1) * 10) & 0xFF
+            );
+        }
+        // Fields spill into the bank's later registers, 4 per register.
+        let l = *rf.layout();
+        assert_eq!(rf.read(l.packages_reg(5, 0)), 40 << 24 | 30 << 16 | 20 << 8 | 10);
+        assert_eq!(rf.read(l.packages_reg(5, 15)) >> 24, 160 & 0xFF);
+        // Errors for regions beyond Table III land in the spill regs.
+        rf.set_pr_error(13, Some(WbError::AckTimeout)).unwrap();
+        assert_eq!(rf.pr_error(13).unwrap(), Some(WbError::AckTimeout));
+        assert_eq!(rf.pr_error(12).unwrap(), None);
+        rf.set_app_error(9, Some(WbError::PortInReset)).unwrap();
+        assert_eq!(rf.app_error(9).unwrap(), Some(WbError::PortInReset));
+    }
+
+    #[test]
+    fn v1_window_reaches_translated_registers_on_wide_layouts() {
+        let mut rf = RegisterFile::with_ports(16);
+        // Table III 0x14 = allowed port 0; lives at reg 17 here.
+        assert!(rf.v1_write_addr(0x14, 0b10));
+        assert_eq!(rf.allowed_slaves(0).unwrap(), 0b10);
+        assert_eq!(rf.read(17), 0b10);
+        assert_eq!(rf.v1_read_addr(0x14), Some(0b10));
+        // Table III 0x4C = ICAP status; lives at reg 121 here.
+        assert!(rf.v1_write_addr(0x4C, 2));
+        assert_eq!(rf.icap_status(), IcapStatus::Done);
+        // Out-of-window and unaligned v1 addresses are refused.
+        assert!(!rf.v1_write_addr(0x50, 1));
+        assert_eq!(rf.v1_read_addr(0x52), None);
+    }
+
+    #[test]
+    fn out_of_window_accesses_error_instead_of_panicking() {
+        let mut rf = RegisterFile::new();
+        assert!(matches!(
+            rf.set_allowed_slaves(4, 0b1),
+            Err(ElasticError::RegfileWindow(_))
+        ));
+        assert!(matches!(
+            rf.pr_destination(4),
+            Err(ElasticError::RegfileWindow(_))
+        ));
+        assert!(matches!(
+            rf.set_pr_destination(0, 1),
+            Err(ElasticError::RegfileWindow(_)),
+        ));
+        assert!(matches!(
+            rf.app_error(4),
+            Err(ElasticError::RegfileWindow(_))
+        ));
+        assert!(matches!(
+            rf.set_allowed_packages(1, 9, 8),
+            Err(ElasticError::RegfileWindow(_))
+        ));
+        assert!(matches!(
+            rf.set_allowed_packages(1, 1, 300),
+            Err(ElasticError::Config(_))
+        ));
+        let g = rf.generation();
+        assert_eq!(g, 0, "refused writes must not bump the generation");
+    }
+
     #[test]
     fn reset_bits_are_independent() {
         let mut rf = RegisterFile::new();
-        rf.set_port_reset(2, true);
-        assert!(rf.port_reset(2));
-        assert!(!rf.port_reset(0));
-        rf.set_port_reset(0, true);
-        rf.set_port_reset(2, false);
-        assert!(rf.port_reset(0));
-        assert!(!rf.port_reset(2));
+        rf.set_port_reset(2, true).unwrap();
+        assert!(rf.port_reset(2).unwrap());
+        assert!(!rf.port_reset(0).unwrap());
+        rf.set_port_reset(0, true).unwrap();
+        rf.set_port_reset(2, false).unwrap();
+        assert!(rf.port_reset(0).unwrap());
+        assert!(!rf.port_reset(2).unwrap());
         assert_eq!(rf.read(regs::RESET), 0b0001);
     }
 
     #[test]
     fn package_fields_pack_four_masters() {
         let mut rf = RegisterFile::new();
-        rf.set_allowed_packages(1, 0, 16);
-        rf.set_allowed_packages(1, 3, 128);
-        assert_eq!(rf.allowed_packages(1, 0), 16);
-        assert_eq!(rf.allowed_packages(1, 3), 128);
-        assert_eq!(rf.allowed_packages(1, 1), 0, "unprogrammed field");
+        rf.set_allowed_packages(1, 0, 16).unwrap();
+        rf.set_allowed_packages(1, 3, 128).unwrap();
+        assert_eq!(rf.allowed_packages(1, 0).unwrap(), 16);
+        assert_eq!(rf.allowed_packages(1, 3).unwrap(), 128);
+        assert_eq!(rf.allowed_packages(1, 1).unwrap(), 0, "unprogrammed field");
         assert_eq!(rf.read(regs::PACKAGES_PORT1), 128 << 24 | 16);
     }
 
     #[test]
     fn pr_destinations() {
         let mut rf = RegisterFile::new();
-        rf.set_pr_destination(1, 0b0100);
-        rf.set_pr_destination(3, 0b0001);
-        assert_eq!(rf.pr_destination(1), 0b0100);
-        assert_eq!(rf.pr_destination(3), 0b0001);
+        rf.set_pr_destination(1, 0b0100).unwrap();
+        rf.set_pr_destination(3, 0b0001).unwrap();
+        assert_eq!(rf.pr_destination(1).unwrap(), 0b0100);
+        assert_eq!(rf.pr_destination(3).unwrap(), 0b0001);
         assert_eq!(rf.read_addr(0x4), Some(0b0100));
         assert_eq!(rf.read_addr(0xC), Some(0b0001));
     }
@@ -375,28 +648,45 @@ mod tests {
     #[test]
     fn error_status_fields() {
         let mut rf = RegisterFile::new();
-        assert_eq!(rf.pr_error(1), None);
-        rf.set_pr_error(2, Some(WbError::GrantTimeout));
-        assert_eq!(rf.pr_error(2), Some(WbError::GrantTimeout));
-        assert_eq!(rf.pr_error(1), None);
-        rf.set_pr_error(2, None);
-        assert_eq!(rf.pr_error(2), None);
+        assert_eq!(rf.pr_error(1).unwrap(), None);
+        rf.set_pr_error(2, Some(WbError::GrantTimeout)).unwrap();
+        assert_eq!(rf.pr_error(2).unwrap(), Some(WbError::GrantTimeout));
+        assert_eq!(rf.pr_error(1).unwrap(), None);
+        rf.set_pr_error(2, None).unwrap();
+        assert_eq!(rf.pr_error(2).unwrap(), None);
 
-        rf.set_app_error(3, Some(WbError::InvalidDestination));
-        assert_eq!(rf.app_error(3), Some(WbError::InvalidDestination));
-        rf.set_app_error(3, None);
-        assert_eq!(rf.app_error(3), None);
+        rf.set_app_error(3, Some(WbError::InvalidDestination)).unwrap();
+        assert_eq!(rf.app_error(3).unwrap(), Some(WbError::InvalidDestination));
+        rf.set_app_error(3, None).unwrap();
+        assert_eq!(rf.app_error(3).unwrap(), None);
     }
 
     #[test]
     fn generation_tracks_writes() {
         let mut rf = RegisterFile::new();
         let g0 = rf.generation();
-        rf.set_allowed_slaves(0, 0b1111);
+        rf.set_allowed_slaves(0, 0b1111).unwrap();
         assert!(rf.generation() > g0);
         let g1 = rf.generation();
         let _ = rf.read(regs::ALLOWED_PORT0);
         assert_eq!(rf.generation(), g1, "reads don't bump generation");
+    }
+
+    #[test]
+    fn unchanged_error_status_does_not_bump_generation() {
+        // A success reported on every completed transfer writes 0 over
+        // 0; it must not look like a configuration change (the fabric
+        // remirrors the whole crossbar on every generation bump).
+        let mut rf = RegisterFile::new();
+        let g0 = rf.generation();
+        rf.set_pr_error(1, None).unwrap();
+        rf.set_app_error(0, None).unwrap();
+        assert_eq!(rf.generation(), g0, "0-over-0 status bumped generation");
+        rf.set_pr_error(1, Some(WbError::GrantTimeout)).unwrap();
+        let g1 = rf.generation();
+        assert!(g1 > g0, "real status change must be visible");
+        rf.set_pr_error(1, Some(WbError::GrantTimeout)).unwrap();
+        assert_eq!(rf.generation(), g1, "same-code rewrite bumped generation");
     }
 
     #[test]
@@ -406,13 +696,19 @@ mod tests {
     }
 
     #[test]
-    fn table3_window_bounds() {
-        assert!(RegisterFile::covers_port(0));
-        assert!(RegisterFile::covers_port(3));
-        assert!(!RegisterFile::covers_port(4));
-        assert!(!RegisterFile::covers_region(0), "port 0 is the bridge");
-        assert!(RegisterFile::covers_region(1));
-        assert!(RegisterFile::covers_region(MAX_PR_REGIONS));
-        assert!(!RegisterFile::covers_region(MAX_PR_REGIONS + 1));
+    fn layout_window_bounds() {
+        let rf = RegisterFile::new();
+        let l = rf.layout();
+        assert!(l.covers_port(0));
+        assert!(l.covers_port(3));
+        assert!(!l.covers_port(4));
+        assert!(!l.covers_region(0), "port 0 is the bridge");
+        assert!(l.covers_region(1));
+        assert!(l.covers_region(MAX_PR_REGIONS));
+        assert!(!l.covers_region(MAX_PR_REGIONS + 1));
+        let wide = RegisterFile::with_ports(16);
+        assert!(wide.layout().covers_region(15));
+        assert!(!wide.layout().covers_region(16));
+        assert!(wide.layout().covers_app(15));
     }
 }

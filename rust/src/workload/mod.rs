@@ -181,7 +181,10 @@ pub fn diurnal_tenants(
     period_s: f64,
     words: usize,
 ) -> Vec<TenantSpec> {
-    assert!((1..=4).contains(&tenants), "4 app IDs in the prototype");
+    assert!(
+        (1..=32).contains(&tenants),
+        "app IDs are one-hot destination-register indices (max 32)"
+    );
     (0..tenants)
         .map(|i| TenantSpec {
             app_id: i,
@@ -206,7 +209,10 @@ pub fn bursty_tenants(
     idle_s: f64,
     words: usize,
 ) -> Vec<TenantSpec> {
-    assert!((1..=4).contains(&tenants), "4 app IDs in the prototype");
+    assert!(
+        (1..=32).contains(&tenants),
+        "app IDs are one-hot destination-register indices (max 32)"
+    );
     let cycle = burst_s + idle_s;
     (0..tenants)
         .map(|i| TenantSpec {
@@ -232,10 +238,13 @@ pub fn generate_profiled(
     seed: u64,
     count: usize,
 ) -> Vec<TraceEvent> {
-    assert!(!tenants.is_empty() && tenants.len() <= 4);
+    assert!(!tenants.is_empty() && tenants.len() <= 32);
     assert!(count > 0);
     for t in tenants {
-        assert!(t.app_id < 4, "4 app IDs in the prototype");
+        assert!(
+            t.app_id < 32,
+            "app IDs are one-hot destination-register indices (max 32)"
+        );
         assert!(
             t.words > 0 && t.words % 8 == 0,
             "payload must be a positive multiple of the 8-word burst"
@@ -312,7 +321,10 @@ fn generate_inner(
     max_slots: Option<u64>,
     max_events: Option<usize>,
 ) -> Vec<TraceEvent> {
-    assert!((1..=4).contains(&spec.tenants), "4 app IDs in the prototype");
+    assert!(
+        (1..=32).contains(&spec.tenants),
+        "app IDs are one-hot destination-register indices (max 32)"
+    );
     assert!(
         spec.size_mix.iter().all(|(s, _)| s % 8 == 0 && *s > 0),
         "sizes must be positive multiples of the 8-word burst"

@@ -21,9 +21,50 @@ fn shipped_scale16_config_parses() {
     assert_eq!(cfg.fabric.num_ports, 16);
     assert_eq!(cfg.fabric.num_pr_regions, 15);
     assert_eq!(cfg.server.workers, 4);
-    // And it can actually build a fabric.
+    assert_eq!(cfg.fabric.regfile_layout().num_regs(), 122);
+    // And it can actually build a fabric, with a regfile banked to 16
+    // ports.
     let f = elastic_fpga::fabric::Fabric::new(cfg);
     assert_eq!(f.xbar.ports(), 16);
+    assert_eq!(f.regfile.layout().num_ports(), 16);
+}
+
+#[test]
+fn shipped_scale16_config_serves_chains_beyond_the_table3_window() {
+    // The acceptance criterion: with configs/scale16.toml the manager
+    // programs destinations, allowed-address masks, and WRR package
+    // budgets for all 15 PR regions — no RegfileWindow within the
+    // configured layout.
+    use elastic_fpga::manager::{AppRequest, ElasticManager};
+    use elastic_fpga::modules::ModuleKind;
+    let cfg = SystemConfig::load(&repo("configs/scale16.toml")).unwrap();
+    let mut m = ElasticManager::new(cfg, None);
+    let chain: Vec<usize> = (1..=15).collect();
+    m.program_app_chain(0, &chain, 17).unwrap();
+    let rf = &m.fabric().regfile;
+    for r in 1..=15usize {
+        assert_ne!(rf.pr_destination(r).unwrap(), 0, "region {r} dest");
+        assert_ne!(rf.allowed_slaves(r).unwrap(), 0, "region {r} mask");
+        // Each region's master budget at its downstream slave hop.
+        let next = if r == 15 { 0 } else { r + 1 };
+        assert_eq!(
+            rf.allowed_packages(next, r).unwrap(),
+            17,
+            "region {r} WRR budget"
+        );
+    }
+    assert_eq!(rf.allowed_packages(1, 0).unwrap(), 17, "bridge hop");
+    // A 9-stage chain executes fully on fabric (PR 2 capped at 3).
+    let mut data = vec![0u32; 64];
+    elastic_fpga::util::SplitMix64::new(42).fill_u32(&mut data);
+    let req = AppRequest {
+        app_id: 5, // beyond the old 4-app window too
+        data,
+        stages: vec![ModuleKind::Multiplier; 9],
+    };
+    let rep = m.execute(&req).unwrap();
+    assert_eq!(rep.fpga_stages, 9);
+    assert!(rep.verified);
 }
 
 fn bin() -> PathBuf {

@@ -327,36 +327,38 @@ fn prop_wrr_share_matches_package_weights_within_one_grant() {
 
 #[test]
 fn prop_destination_absent_from_regfile_is_masked_never_granted() {
-    // Program the register-file isolation masks randomly and mirror
-    // them into the crossbar (the fabric's sync path).  A request to a
-    // destination absent from the master's allowed-addresses register
-    // must error in the master interface and never reach a grant: its
-    // event carries InvalidDestination with grant_cycle == 0, and no
-    // word of it is ever delivered.
+    // Program the register-file isolation masks randomly — at 4, 8 and
+    // 16 ports, through the banked layout — and mirror them into the
+    // crossbar (the fabric's sync path).  A request to a destination
+    // absent from the master's allowed-addresses register must error in
+    // the master interface and never reach a grant: its event carries
+    // InvalidDestination with grant_cycle == 0, and no word of it is
+    // ever delivered.
     check(0x150A, 64, |g: &mut Gen| {
         use elastic_fpga::regfile::RegisterFile;
-        let n = 4usize;
+        let n = g.choose("ports", &[4usize, 8, 16]);
         let cfg = CrossbarConfig {
             grant_timeout: 1_000_000,
             ..CrossbarConfig::default()
         };
         let mut xb = Crossbar::new(n, cfg);
-        let mut rf = RegisterFile::new();
+        let mut rf = RegisterFile::with_ports(n);
         for m in 0..n {
-            rf.set_allowed_slaves(m, g.int("mask", 0, 15) as u32);
+            let mask = g.int("mask", 0, (1u64 << n) - 1) as u32;
+            rf.set_allowed_slaves(m, mask).unwrap();
         }
         for m in 0..n {
-            xb.set_allowed_slaves(m, rf.allowed_slaves(m));
+            xb.set_allowed_slaves(m, rf.allowed_slaves(m).unwrap());
         }
         let jobs = g.int("jobs", 1, 10) as usize;
         let mut expected_rejects = 0usize;
         for j in 0..jobs {
-            let src = g.int("src", 0, 3) as usize;
+            let src = g.int("src", 0, n as u64 - 1) as usize;
             // Destinations may also fall outside the port range (one-hot
-            // bits 4..7): always absent, always masked.
-            let dst = g.int("dst", 0, 7) as u32;
+            // bits n..2n-1): always absent, always masked.
+            let dst = g.int("dst", 0, 2 * n as u64 - 1) as u32;
             let allowed = (dst as usize) < n
-                && rf.allowed_slaves(src) >> dst & 1 == 1;
+                && rf.allowed_slaves(src).unwrap() >> dst & 1 == 1;
             if !allowed {
                 expected_rejects += 1;
             }
@@ -404,12 +406,110 @@ fn prop_destination_absent_from_regfile_is_masked_never_granted() {
         // does not include it.
         for s in 0..n {
             for &(_, src) in &delivered[s] {
-                if rf.allowed_slaves(src) >> s & 1 == 0 {
+                if rf.allowed_slaves(src).unwrap() >> s & 1 == 0 {
                     return Err(format!(
                         "slave {s} received a word from masked master {src}"
                     ));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_banked_layout_round_trips_every_field() {
+    // Any port count in 2..=32: a random programming sequence through
+    // the typed accessors reads back exactly, field-disjointly — writes
+    // to one (port, master/app/region) never disturb another — and the
+    // raw register image agrees with the layout's address arithmetic.
+    check(0xBA2C, DEFAULT_CASES, |g: &mut Gen| {
+        use elastic_fpga::regfile::{RegfileLayout, RegisterFile};
+        use elastic_fpga::wishbone::WbError;
+        let n = g.int("ports", 2, 32) as usize;
+        let mut rf = RegisterFile::with_ports(n);
+        if rf.num_regs() != RegfileLayout::new(n).num_regs() {
+            return Err("layout/register-count mismatch".into());
+        }
+        // Shadow model of every programmable field.
+        let mut dests = vec![0u32; n]; // region r (index 0 unused)
+        let mut masks = vec![0u32; n];
+        let mut budgets = vec![vec![0u32; n]; n]; // [slave][master]
+        let mut app_dests = vec![0u32; n];
+        let writes = g.int("writes", 1, 60) as usize;
+        for _ in 0..writes {
+            match g.int("kind", 0, 3) {
+                0 => {
+                    let r = g.int("r", 1, n as u64 - 1) as usize;
+                    let v = g.int("v", 0, u32::MAX as u64) as u32;
+                    rf.set_pr_destination(r, v).map_err(|e| e.to_string())?;
+                    dests[r] = v;
+                }
+                1 => {
+                    let p = g.int("p", 0, n as u64 - 1) as usize;
+                    let v = g.int("v", 0, u32::MAX as u64) as u32;
+                    rf.set_allowed_slaves(p, v).map_err(|e| e.to_string())?;
+                    masks[p] = v;
+                }
+                2 => {
+                    let s = g.int("s", 0, n as u64 - 1) as usize;
+                    let m = g.int("m", 0, n as u64 - 1) as usize;
+                    let v = g.int("v", 0, 255) as u32;
+                    rf.set_allowed_packages(s, m, v)
+                        .map_err(|e| e.to_string())?;
+                    budgets[s][m] = v;
+                }
+                _ => {
+                    let a = g.int("a", 0, n as u64 - 1) as usize;
+                    let v = g.int("v", 0, u32::MAX as u64) as u32;
+                    rf.set_app_destination(a, v).map_err(|e| e.to_string())?;
+                    app_dests[a] = v;
+                }
+            }
+        }
+        for r in 1..n {
+            if rf.pr_destination(r).unwrap() != dests[r] {
+                return Err(format!("dest round-trip failed at region {r}"));
+            }
+        }
+        for p in 0..n {
+            if rf.allowed_slaves(p).unwrap() != masks[p] {
+                return Err(format!("mask round-trip failed at port {p}"));
+            }
+            if rf.app_destination(p).unwrap() != app_dests[p] {
+                return Err(format!("app-dest round-trip failed at app {p}"));
+            }
+            for m in 0..n {
+                if rf.allowed_packages(p, m).unwrap() != budgets[p][m] {
+                    return Err(format!(
+                        "budget round-trip failed at slave {p} master {m}"
+                    ));
+                }
+            }
+        }
+        // Error fields round-trip independently too.
+        let r = g.int("err_r", 1, n as u64 - 1) as usize;
+        rf.set_pr_error(r, Some(WbError::AckTimeout)).unwrap();
+        if rf.pr_error(r).unwrap() != Some(WbError::AckTimeout) {
+            return Err("pr-error round-trip failed".into());
+        }
+        for other in (1..n).filter(|&o| o != r) {
+            if rf.pr_error(other).unwrap().is_some() {
+                return Err(format!("pr-error leaked into region {other}"));
+            }
+        }
+        // Accesses one past the layout fail typed, never panic, and
+        // leave the image untouched.
+        let gen_before = rf.generation();
+        if rf.set_allowed_slaves(n, 1).is_ok()
+            || rf.set_pr_destination(n, 1).is_ok()
+            || rf.set_app_destination(n, 1).is_ok()
+            || rf.set_allowed_packages(0, n, 1).is_ok()
+        {
+            return Err("out-of-layout write accepted".into());
+        }
+        if rf.generation() != gen_before {
+            return Err("refused write bumped the generation".into());
         }
         Ok(())
     });
