@@ -26,8 +26,8 @@ fn contend(budget0: u32, budget1: u32, cycles: u64) -> (u64, u64) {
     for m in 0..4 {
         xb.set_allowed_slaves(m, 0b1111);
     }
-    xb.set_allowed_packages(3, 0, budget0);
-    xb.set_allowed_packages(3, 1, budget1);
+    xb.set_allowed_packages(3, 0, budget0).unwrap();
+    xb.set_allowed_packages(3, 1, budget1).unwrap();
     // Greedy: both masters always have a large job queued.
     xb.push_job(0, Job::new(encode_onehot(3), vec![0xAA; 100_000], 0));
     xb.push_job(1, Job::new(encode_onehot(3), vec![0xBB; 100_000], 1));

@@ -49,16 +49,23 @@ fn scale16_cfg() -> SystemConfig {
 fn direct_programming(cfg: &SystemConfig) {
     let mut mgr = ElasticManager::new(cfg.clone(), None);
     let chain: Vec<usize> = (4..=12).collect();
-    mgr.program_app_chain(2, &chain, 32)
+    mgr.program_app_chain(2, &chain)
         .expect("regions 4..=12 are inside the 16-port layout");
+    // The shipped [qos] table contracts app 2 at 600/1000: the plan
+    // compiler — not this call site — lowered that share into the nine
+    // masters' budget fields (38 packages, largest-remainder split).
+    let shares = mgr.bandwidth_shares();
+    println!(
+        "programmed app 2 across regions 4..=12 (bandwidth {:?} ppu):",
+        shares
+    );
     let rf = &mgr.fabric().regfile;
-    println!("programmed app 2 across regions 4..=12:");
     for &r in &chain {
         println!(
             "  region {r:>2}: dest {:#07x}  mask {:#07x}  wrr {}",
             rf.pr_destination(r).unwrap(),
             rf.allowed_slaves(r).unwrap(),
-            rf.allowed_packages(if r == 12 { 0 } else { r + 1 }, r).unwrap(),
+            rf.allowed_packages(0, r).unwrap(),
         );
     }
 

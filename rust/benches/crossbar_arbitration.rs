@@ -1,0 +1,113 @@
+//! Crossbar arbitration hot-path bench: cycles simulated per second for
+//! the WRR decision pipeline at 4 and 16 ports, contended (every master
+//! fighting over one slave — arbitration dominates) and uncontended
+//! (distinct destinations — pure datapath).  Also emits
+//! `BENCH_crossbar.json` so the perf trajectory is machine-readable
+//! across PRs.
+//!
+//! ```bash
+//! cargo bench --bench crossbar_arbitration            # full run
+//! cargo bench --bench crossbar_arbitration -- --smoke # CI smoke mode
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::CrossbarConfig;
+use elastic_fpga::crossbar::Crossbar;
+use elastic_fpga::qos::BandwidthPlan;
+use elastic_fpga::sim::{Clock, Tick};
+use elastic_fpga::util::onehot::encode_onehot;
+use elastic_fpga::wishbone::Job;
+
+/// One measured case: `ports` crossbar, all masters busy for `cycles`.
+fn run_case(ports: usize, contended: bool, cycles: u64) -> f64 {
+    let cfg = CrossbarConfig {
+        grant_timeout: u64::MAX / 2,
+        ..CrossbarConfig::default()
+    };
+    let mut xb = Crossbar::new(ports, cfg);
+    let all = if ports == 32 { u32::MAX } else { (1u32 << ports) - 1 };
+    for m in 0..ports {
+        xb.set_allowed_slaves(m, all);
+    }
+    // An app-aware rotation (every port its own app) exercises the
+    // permuted-walk path the bandwidth plane added to the arbiter.
+    let mut plan = BandwidthPlan::new();
+    let mut port_app = vec![None; ports];
+    for p in 1..ports {
+        plan.set_share((p - 1) as u32, (1000 / ports) as u32).unwrap();
+        port_app[p] = Some((p - 1) as u32);
+    }
+    let prog = plan.compile(&port_app, 64, 8).unwrap();
+    for (m, &b) in prog.budgets.iter().enumerate() {
+        for s in 0..ports {
+            xb.set_allowed_packages(s, m, b).unwrap();
+        }
+    }
+    xb.set_rotation_order(&prog.rotation).unwrap();
+    for m in 0..ports {
+        let dest = if contended { 0 } else { (m + 1) % ports } as u32;
+        xb.push_job(m, Job::new(encode_onehot(dest), vec![0xA5; 1 << 20], m as u32));
+    }
+    let mut clk = Clock::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..cycles {
+        let c = clk.advance();
+        xb.tick(c);
+        for s in 0..ports {
+            xb.drain_rx(s, usize::MAX);
+        }
+    }
+    cycles as f64 / t0.elapsed().as_secs_f64() / 1e6
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let cycles: u64 = if smoke { 50_000 } else { 1_000_000 };
+    harness::section(if smoke {
+        "crossbar arbitration hot path (smoke)"
+    } else {
+        "crossbar arbitration hot path"
+    });
+
+    let cases = [
+        ("xbar4_contended", 4usize, true),
+        ("xbar4_uncontended", 4, false),
+        ("xbar16_contended", 16, true),
+        ("xbar16_uncontended", 16, false),
+    ];
+    let mut rows = Vec::new();
+    for (name, ports, contended) in cases {
+        let mcps = run_case(ports, contended, cycles);
+        println!("  {name:<24} {mcps:>8.2} Mcycles/s");
+        rows.push((name, mcps));
+    }
+
+    // Floors: half the post-optimization rates observed in CI-class
+    // containers; generous enough to absorb machine noise, tight enough
+    // to catch a hot-path regression.  Skipped in smoke mode (CI boxes
+    // share cores).
+    if !smoke {
+        let mut claims = harness::Claims::new();
+        for &(name, mcps) in &rows {
+            claims.check(mcps > 0.5, &format!("{name} above 0.5 Mcycles/s"));
+        }
+        claims.finish();
+    }
+
+    // Machine-readable trajectory point.
+    let mut json = String::from("{\n  \"bench\": \"crossbar_arbitration\",\n");
+    json.push_str(&format!("  \"cycles_per_case\": {cycles},\n"));
+    json.push_str("  \"results\": [\n");
+    for (i, (name, mcps)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mcycles_per_s\": {mcps:.3}}}{}\n",
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_crossbar.json", &json)
+        .expect("write BENCH_crossbar.json");
+    println!("  wrote BENCH_crossbar.json");
+}

@@ -21,7 +21,9 @@
 //!    shrink drains then blanks them
 //!    ([`crate::manager::ElasticManager::blank_region`]); every
 //!    transition reprograms the register file's destination addresses
-//!    and WRR package weights
+//!    and **recompiles the per-app bandwidth plan** — the app's share
+//!    contract follows its footprint and the [`crate::qos`] compiler
+//!    lowers it to WRR budgets
 //!    ([`crate::manager::ElasticManager::program_app_chain`]).  Grows
 //!    prefer topping up partial slices (defragmentation) before opening
 //!    a chain on a new board; churn re-placement migrates lost chains
@@ -275,8 +277,19 @@ impl Engine {
             tenants,
             cfg.fabric.num_ports
         );
-        let cluster =
+        let mut cluster =
             Cluster::launch(nodes, cfg, None, PlacementPolicy::MostAvailable);
+        // The closed loop owns the bandwidth plane: shares are derived
+        // from footprints on every transition, so static [qos] contracts
+        // are cleared up front (left in place they would fight — and on
+        // small boards overcommit against — the loop's recompilation).
+        for node in 0..nodes {
+            cluster
+                .node_mut(node)
+                .manager_mut()
+                .set_bandwidth_plan(crate::qos::BandwidthPlan::new())
+                .expect("the empty plan compiles on a fresh board");
+        }
         let apps = (0..tenants)
             .map(|_| AppState {
                 chain: ModuleKind::pipeline().to_vec(),
@@ -786,21 +799,22 @@ impl Engine {
         Ok(())
     }
 
-    /// WRR weight scales with the app's footprint on the node, so the
-    /// crossbar's bandwidth shares follow the allocation.
+    /// Recompile the node's bandwidth plan on every scale transition:
+    /// the app's share contract follows its region footprint
+    /// (`SHARE_UNIT · regions / ports`), and the plan compiler — not an
+    /// ad-hoc weight — lowers it to per-master budgets and an app-aware
+    /// rotation order.  Budgets are never reset to defaults mid-flight.
     fn program_slice_chain(
         &mut self,
         app: u32,
         node: usize,
         regions: &[usize],
     ) -> Result<()> {
-        let weight = (self.cfg.crossbar.default_packages
-            * (regions.len() as u32 + 1))
-            .min(0xFF);
-        self.cluster
-            .node_mut(node)
-            .manager_mut()
-            .program_app_chain(app, regions, weight)
+        let share = (crate::qos::SHARE_UNIT as u64 * regions.len() as u64
+            / self.cfg.fabric.num_ports as u64) as u32;
+        let mgr = self.cluster.node_mut(node).manager_mut();
+        mgr.stage_bandwidth_share(app, share)?;
+        mgr.program_app_chain(app, regions)
     }
 
     fn node_regfile_generation(&self, node: usize) -> u64 {
@@ -891,10 +905,14 @@ impl Engine {
                     (slice.busy_until - at) * slice.regions.len() as u64;
             }
             let g = self.node_regfile_generation(node);
-            self.cluster
-                .node_mut(node)
-                .manager_mut()
-                .release_app(app as u32);
+            let mgr = self.cluster.node_mut(node).manager_mut();
+            mgr.release_app(app as u32);
+            // Retire the lost app's share contract, or the board would
+            // rejoin with a stale (possibly overcommitting) plan.  No
+            // recompile needed: the board is fenced, and any rejoin
+            // goes through an allocation event that applies the plan.
+            mgr.stage_bandwidth_share(app as u32, 0)
+                .expect("share removal never overcommits");
             lost.push((app as u32, slice.regions.len()));
             self.transitions.push(Transition {
                 at_cycle: at,

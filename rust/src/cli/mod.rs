@@ -118,6 +118,10 @@ subcommands:
 common flags:
   --artifacts DIR    artifact directory (default: artifacts)
   --config FILE      TOML config overlay
+  --plan SPEC        per-app bandwidth shares, app=ppu pairs out of 1000
+                     (e.g. `--plan 0=750,1=250`; overrides [qos.shares];
+                     refused by `autoscale`, which derives shares from
+                     footprints)
   --requests N       request count for `serve`/`fleet`/`autoscale`
                      (default: 64/10000/20000)
   --no-pjrt          skip PJRT; use the golden model for CPU stages

@@ -126,6 +126,33 @@ impl Default for ManagerConfig {
     }
 }
 
+/// The per-app bandwidth plane (see [`crate::qos`] and DESIGN.md §11).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosConfig {
+    /// WRR rotation quantum `T`: total packages a full rotation hands
+    /// to the contracted share plane (1..=255; each app's per-rotation
+    /// packages are `T · share / SHARE_UNIT`).
+    pub rotation_packages: u32,
+    /// Explicit `(app_id, share_ppu)` contracts; everything else rides
+    /// the best-effort pool at the crossbar's default budget.
+    pub shares: Vec<(u32, u32)>,
+}
+
+impl QosConfig {
+    /// The configured plan as a validated [`crate::qos::BandwidthPlan`].
+    pub fn plan(&self) -> crate::Result<crate::qos::BandwidthPlan> {
+        crate::qos::BandwidthPlan::with_shares(&self.shares)
+    }
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        // No contracts: the compiler emits the pre-plan default-budget
+        // image, so an unconfigured [qos] table changes nothing.
+        Self { rotation_packages: 64, shares: Vec::new() }
+    }
+}
+
 /// Server parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -149,6 +176,7 @@ pub struct SystemConfig {
     pub timing: TimingConfig,
     pub manager: ManagerConfig,
     pub server: ServerConfig,
+    pub qos: QosConfig,
     /// Artifact directory (HLO text + manifest.json).
     pub artifact_dir: String,
 }
@@ -161,17 +189,80 @@ impl SystemConfig {
 
     /// Load from a TOML-subset file, overlaying the defaults.
     pub fn load(path: &Path) -> Result<Self> {
-        Ok(Self::from_doc(&TomlDoc::load(path)?))
+        Self::from_doc(&TomlDoc::load(path)?)
     }
 
     /// Parse from text, overlaying the defaults.
     pub fn parse(text: &str) -> Result<Self> {
-        Ok(Self::from_doc(&TomlDoc::parse(text)?))
+        Self::from_doc(&TomlDoc::parse(text)?)
     }
 
-    fn from_doc(doc: &TomlDoc) -> Self {
+    /// Parse the `[qos.shares]` table: `appN = ppu` keys.
+    fn qos_shares(doc: &TomlDoc) -> Result<Vec<(u32, u32)>> {
+        let mut shares = Vec::new();
+        for key in doc.keys_under("qos.shares") {
+            let name = key.trim_start_matches("qos.shares.");
+            let app: u32 = name
+                .strip_prefix("app")
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| {
+                    crate::ElasticError::Config(format!(
+                        "[qos.shares] key '{name}' is not appN (e.g. app0)"
+                    ))
+                })?;
+            let ppu = doc.get(key).and_then(|v| v.as_usize()).ok_or_else(
+                || {
+                    crate::ElasticError::Config(format!(
+                        "[qos.shares] {name} must be an integer share"
+                    ))
+                },
+            )?;
+            // Range-check before narrowing: a 64-bit value must not
+            // wrap into a plausible share.
+            if ppu > crate::qos::SHARE_UNIT as usize {
+                return Err(crate::ElasticError::Config(format!(
+                    "[qos.shares] {name} = {ppu} exceeds {}",
+                    crate::qos::SHARE_UNIT
+                )));
+            }
+            shares.push((app, ppu as u32));
+        }
+        Ok(shares)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
         let d = Self::paper_defaults();
-        Self {
+        // Range-check the full-width value before narrowing to u32, so
+        // an out-of-range 64-bit quantum fails instead of wrapping.
+        let rotation_packages = doc.usize_or(
+            "qos.rotation_packages",
+            d.qos.rotation_packages as usize,
+        );
+        if !(1..=255).contains(&rotation_packages) {
+            return Err(crate::ElasticError::Config(format!(
+                "qos.rotation_packages {rotation_packages} must be 1..=255"
+            )));
+        }
+        let qos = QosConfig {
+            rotation_packages: rotation_packages as u32,
+            shares: Self::qos_shares(doc)?,
+        };
+        // Reject overcommitted share tables at parse time, so every
+        // consumer downstream can trust the configured plan.
+        qos.plan()?;
+        // The default budget is an 8-bit regfile field and a plan
+        // compiler input: out-of-range values must fail here with a
+        // typed error, not at manager construction.
+        let default_packages = doc.usize_or(
+            "crossbar.default_packages",
+            d.crossbar.default_packages as usize,
+        );
+        if !(1..=255).contains(&default_packages) {
+            return Err(crate::ElasticError::Config(format!(
+                "crossbar.default_packages {default_packages} must be 1..=255"
+            )));
+        }
+        Ok(Self {
             fabric: FabricConfig {
                 num_ports: doc.usize_or("fabric.num_ports", d.fabric.num_ports),
                 clock_mhz: doc.f64_or("fabric.clock_mhz", d.fabric.clock_mhz),
@@ -223,8 +314,9 @@ impl SystemConfig {
                 queue_depth: doc
                     .usize_or("server.queue_depth", d.server.queue_depth),
             },
+            qos,
             artifact_dir: doc.str_or("artifact_dir", &d.artifact_dir),
-        }
+        })
     }
 
     /// Fabric clock period in nanoseconds.
@@ -264,6 +356,52 @@ mod tests {
         assert_eq!(c.timing.cpu_stage_ms, 5.5);
         // untouched values keep defaults
         assert_eq!(c.fabric.clock_mhz, 250.0);
+    }
+
+    #[test]
+    fn qos_table_parses_and_validates() {
+        let c = SystemConfig::parse(
+            "[qos]\nrotation_packages = 100\n\
+             [qos.shares]\napp0 = 600\napp2 = 200\n",
+        )
+        .unwrap();
+        assert_eq!(c.qos.rotation_packages, 100);
+        assert_eq!(c.qos.shares, vec![(0, 600), (2, 200)]);
+        let plan = c.qos.plan().unwrap();
+        assert_eq!(plan.share_of(0), Some(600));
+        assert_eq!(plan.best_effort_share(), 200);
+        // Unconfigured: empty plan, default quantum.
+        let d = SystemConfig::paper_defaults();
+        assert_eq!(d.qos.rotation_packages, 64);
+        assert!(d.qos.plan().unwrap().is_empty());
+        // Overcommit, bad keys and bad quanta are parse-time errors.
+        assert!(SystemConfig::parse(
+            "[qos.shares]\napp0 = 700\napp1 = 400\n"
+        )
+        .is_err());
+        assert!(SystemConfig::parse("[qos.shares]\ntenant0 = 10\n").is_err());
+        assert!(SystemConfig::parse("[qos]\nrotation_packages = 0\n").is_err());
+        assert!(
+            SystemConfig::parse("[qos]\nrotation_packages = 256\n").is_err()
+        );
+        // The default budget is an 8-bit field and a compiler input:
+        // out-of-range values fail at parse, not at manager start.
+        assert!(
+            SystemConfig::parse("[crossbar]\ndefault_packages = 300\n")
+                .is_err()
+        );
+        assert!(
+            SystemConfig::parse("[crossbar]\ndefault_packages = 0\n").is_err()
+        );
+        // 64-bit values must fail, not wrap into the valid range
+        // (4294967360 = 2^32 + 64; 4294968296 = 2^32 + 1000).
+        assert!(SystemConfig::parse(
+            "[qos]\nrotation_packages = 4294967360\n"
+        )
+        .is_err());
+        assert!(
+            SystemConfig::parse("[qos.shares]\napp0 = 4294968296\n").is_err()
+        );
     }
 
     #[test]

@@ -13,11 +13,27 @@
 //! crossbar's area low (§II.A notes arbitration logic dominates crossbar
 //! area) and simplifies multicast management.
 //!
+//! # App-aware rotation order
+//!
+//! The WRR rotation walks a *programmable permutation* of the master
+//! ports ([`Arbiter::set_rotation_order`]), not raw port-index order.
+//! The bandwidth-plan compiler ([`crate::qos`]) places every app's
+//! masters adjacently in that permutation, so a multi-region app's
+//! per-rotation share is contiguous and stays proportional even when
+//! the app spans more than 4 masters.  The power-on order is the
+//! identity permutation — exactly the classic index-order WRR.
+//!
+//! Programming errors (zero budgets, out-of-range masters, malformed
+//! permutations) surface as typed [`ElasticError`] results, consistent
+//! with the register file's `Result` accessors: a bad host-programmed
+//! value must never crash the shell model.
+//!
 //! Timing: a request raised in cycle `t` is first *seen* in cycle `t+1`
 //! and granted at the end of cycle `t+2` — the paper's "an arbiter spends
 //! 2 ccs to grant the request and enable the slave interface".
 
 use crate::util::lzc::lzc_select;
+use crate::{ElasticError, Result};
 
 /// Arbiter FSM state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,22 +57,40 @@ pub struct Arbiter {
     last_grant: Option<u32>,
     /// Per-master package budget per grant (Table III regs 9-12).
     budgets: Vec<u32>,
+    /// Rotation permutation: `order[pos]` = master port at rotation
+    /// position `pos` (identity at power-on).
+    order: Vec<usize>,
+    /// Inverse permutation: `pos_of[port]` = rotation position.
+    pos_of: Vec<u32>,
     /// Port held in reset (no grant decisions — §IV.C).
     pub in_reset: bool,
 }
 
 impl Arbiter {
-    /// New free arbiter with a uniform default package budget.
-    pub fn new(n: usize, default_budget: u32) -> Self {
-        assert!(default_budget > 0, "package budget must be positive");
-        Self {
+    /// New free arbiter with a uniform default package budget and the
+    /// identity rotation order.  Errors on a zero budget or a port
+    /// count outside 1..=32.
+    pub fn new(n: usize, default_budget: u32) -> Result<Self> {
+        if default_budget == 0 {
+            return Err(ElasticError::Config(
+                "package budget must be positive".into(),
+            ));
+        }
+        if n == 0 || n > 32 {
+            return Err(ElasticError::Config(format!(
+                "arbiter width {n} outside 1..=32"
+            )));
+        }
+        Ok(Self {
             n,
             state: ArbiterState::Free,
             requests: 0,
             last_grant: None,
             budgets: vec![default_budget; n],
+            order: (0..n).collect(),
+            pos_of: (0..n as u32).collect(),
             in_reset: false,
-        }
+        })
     }
 
     /// Current FSM state.
@@ -99,9 +133,70 @@ impl Arbiter {
     }
 
     /// Program master `m`'s package budget (register-file write).
-    pub fn set_budget(&mut self, m: usize, packages: u32) {
-        assert!(packages > 0, "package budget must be positive");
+    /// Typed refusal — never a panic — on a zero budget or a master
+    /// outside this arbiter's width.
+    pub fn set_budget(&mut self, m: usize, packages: u32) -> Result<()> {
+        if packages == 0 {
+            return Err(ElasticError::Config(
+                "package budget must be positive".into(),
+            ));
+        }
+        if m >= self.n {
+            return Err(ElasticError::Config(format!(
+                "master {m} outside the {}-port arbiter", self.n
+            )));
+        }
         self.budgets[m] = packages;
+        Ok(())
+    }
+
+    /// Program the WRR rotation order: `order[pos]` names the master
+    /// port visited at rotation position `pos`.  Must be a permutation
+    /// of `0..n`.  The in-flight grant and pending requests are
+    /// unaffected; only future rotation decisions follow the new order.
+    pub fn set_rotation_order(&mut self, order: &[usize]) -> Result<()> {
+        if order.len() != self.n {
+            return Err(ElasticError::Config(format!(
+                "rotation order names {} ports, arbiter has {}",
+                order.len(),
+                self.n
+            )));
+        }
+        let mut pos_of = vec![u32::MAX; self.n];
+        for (pos, &port) in order.iter().enumerate() {
+            if port >= self.n || pos_of[port] != u32::MAX {
+                return Err(ElasticError::Config(format!(
+                    "rotation order is not a permutation of 0..{}",
+                    self.n
+                )));
+            }
+            pos_of[port] = pos as u32;
+        }
+        self.order = order.to_vec();
+        self.pos_of = pos_of;
+        Ok(())
+    }
+
+    /// The rotation order in force (`order[pos]` = master port).
+    pub fn rotation_order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// LZC-select the next requester in WRR order, walking the
+    /// programmed rotation permutation.
+    fn select(&self) -> Option<usize> {
+        // Map the request vector into rotation-position space, pick the
+        // first position after the last grantee's, map back to a port.
+        let mut pos_requests = 0u32;
+        let mut req = self.requests & ((1u64 << self.n) - 1) as u32;
+        while req != 0 {
+            let m = req.trailing_zeros() as usize;
+            pos_requests |= 1 << self.pos_of[m];
+            req &= req - 1;
+        }
+        let last_pos = self.last_grant.map(|m| self.pos_of[m as usize]);
+        lzc_select(pos_requests, self.n as u32, last_pos)
+            .map(|pos| self.order[pos as usize])
     }
 
     /// Release the bus (registered: called by the crossbar at the start of
@@ -113,8 +208,9 @@ impl Arbiter {
         self.state = ArbiterState::Free;
     }
 
-    /// Full reset (§IV.C): drop requests and any grant; keep budgets (they
-    /// live in the register file and survive module reconfiguration).
+    /// Full reset (§IV.C): drop requests and any grant; keep budgets and
+    /// the rotation order (they live in the configuration plane and
+    /// survive module reconfiguration).
     pub fn reset(&mut self) {
         self.state = ArbiterState::Free;
         self.requests = 0;
@@ -130,10 +226,8 @@ impl Arbiter {
             ArbiterState::Free => {
                 // Decision cycle 1: LZC-select the next requester in WRR
                 // order.
-                if let Some(winner) =
-                    lzc_select(self.requests, self.n as u32, self.last_grant)
-                {
-                    self.state = ArbiterState::Deciding { candidate: winner as usize };
+                if let Some(winner) = self.select() {
+                    self.state = ArbiterState::Deciding { candidate: winner };
                 }
             }
             ArbiterState::Deciding { candidate } => {
@@ -142,10 +236,8 @@ impl Arbiter {
                 // case re-decide.
                 if self.is_requesting(candidate) {
                     self.state = ArbiterState::Granted { master: candidate };
-                } else if let Some(winner) =
-                    lzc_select(self.requests, self.n as u32, self.last_grant)
-                {
-                    self.state = ArbiterState::Deciding { candidate: winner as usize };
+                } else if let Some(winner) = self.select() {
+                    self.state = ArbiterState::Deciding { candidate: winner };
                 } else {
                     self.state = ArbiterState::Free;
                 }
@@ -161,9 +253,13 @@ impl Arbiter {
 mod tests {
     use super::*;
 
+    fn arb(n: usize, budget: u32) -> Arbiter {
+        Arbiter::new(n, budget).unwrap()
+    }
+
     #[test]
     fn grant_takes_exactly_two_ticks() {
-        let mut a = Arbiter::new(4, 8);
+        let mut a = arb(4, 8);
         a.raise_request(2);
         assert!(a.is_free());
         a.tick(); // decision cycle 1
@@ -174,7 +270,7 @@ mod tests {
 
     #[test]
     fn wrr_order_rotates_from_last_grant() {
-        let mut a = Arbiter::new(4, 8);
+        let mut a = arb(4, 8);
         a.raise_request(0);
         a.raise_request(2);
         a.tick();
@@ -190,7 +286,7 @@ mod tests {
 
     #[test]
     fn withdrawal_during_decision_reevaluates() {
-        let mut a = Arbiter::new(4, 8);
+        let mut a = arb(4, 8);
         a.raise_request(1);
         a.tick(); // deciding on 1
         a.drop_request(1);
@@ -203,7 +299,7 @@ mod tests {
 
     #[test]
     fn withdrawal_with_no_others_returns_to_free() {
-        let mut a = Arbiter::new(4, 8);
+        let mut a = arb(4, 8);
         a.raise_request(1);
         a.tick();
         a.drop_request(1);
@@ -213,7 +309,7 @@ mod tests {
 
     #[test]
     fn reset_holds_off_grants() {
-        let mut a = Arbiter::new(4, 8);
+        let mut a = arb(4, 8);
         a.in_reset = true;
         a.raise_request(0);
         a.tick();
@@ -227,17 +323,60 @@ mod tests {
 
     #[test]
     fn budgets_are_programmable_per_master() {
-        let mut a = Arbiter::new(4, 8);
+        let mut a = arb(4, 8);
         assert_eq!(a.budget(3), 8);
-        a.set_budget(3, 128);
+        a.set_budget(3, 128).unwrap();
         assert_eq!(a.budget(3), 128);
         assert_eq!(a.budget(2), 8);
     }
 
     #[test]
-    #[should_panic]
-    fn zero_budget_rejected() {
-        let mut a = Arbiter::new(4, 8);
-        a.set_budget(0, 0);
+    fn bad_programming_errors_instead_of_panicking() {
+        assert!(matches!(
+            Arbiter::new(4, 0),
+            Err(ElasticError::Config(_))
+        ));
+        assert!(matches!(
+            Arbiter::new(33, 8),
+            Err(ElasticError::Config(_))
+        ));
+        let mut a = arb(4, 8);
+        assert!(matches!(a.set_budget(0, 0), Err(ElasticError::Config(_))));
+        assert!(matches!(a.set_budget(4, 8), Err(ElasticError::Config(_))));
+        assert_eq!(a.budget(0), 8, "refused write left the budget alone");
+        assert!(a.set_rotation_order(&[0, 1, 2]).is_err(), "wrong length");
+        assert!(a.set_rotation_order(&[0, 1, 2, 2]).is_err(), "duplicate");
+        assert!(a.set_rotation_order(&[0, 1, 2, 4]).is_err(), "out of range");
+        assert_eq!(a.rotation_order(), &[0, 1, 2, 3], "order unchanged");
+    }
+
+    #[test]
+    fn programmed_rotation_order_drives_the_walk() {
+        // Order 0,2,3,1: after 0's grant, 2 precedes 1 even though 1 has
+        // the lower port index.
+        let mut a = arb(4, 8);
+        a.set_rotation_order(&[0, 2, 3, 1]).unwrap();
+        for m in 0..4 {
+            a.raise_request(m);
+        }
+        let mut grants = Vec::new();
+        for _ in 0..4 {
+            a.tick();
+            a.tick();
+            let g = a.granted_master().unwrap();
+            grants.push(g);
+            a.drop_request(g);
+            a.release();
+            a.raise_request(g); // stay saturated
+        }
+        assert_eq!(grants, vec![0, 2, 3, 1]);
+    }
+
+    #[test]
+    fn rotation_order_survives_reset() {
+        let mut a = arb(4, 8);
+        a.set_rotation_order(&[3, 2, 1, 0]).unwrap();
+        a.reset();
+        assert_eq!(a.rotation_order(), &[3, 2, 1, 0]);
     }
 }

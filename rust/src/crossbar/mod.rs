@@ -42,6 +42,7 @@ use crate::config::CrossbarConfig;
 use crate::sim::{EventDriven, Tick};
 use crate::util::onehot::{decode_onehot, isolation_permits};
 use crate::wishbone::{Job, MasterIf, MasterState, SlaveIf, WbError};
+use crate::Result;
 
 /// One bus grant as recorded when grant recording is on (see
 /// [`Crossbar::set_record_grants`]): which master held which slave's bus
@@ -119,6 +120,10 @@ impl Crossbar {
     /// the paper's configuration flow — use [`Crossbar::set_allowed_slaves`].
     pub fn new(n: usize, cfg: CrossbarConfig) -> Self {
         assert!(n >= 2 && n <= 32, "port count must be in 2..=32");
+        assert!(
+            cfg.default_packages > 0,
+            "default package budget must be positive"
+        );
         Self {
             n,
             masters: (0..n).map(|_| MasterIf::new(0)).collect(),
@@ -126,7 +131,10 @@ impl Crossbar {
                 .map(|_| SlaveIf::new(cfg.slave_buffer_words))
                 .collect(),
             arbiters: (0..n)
-                .map(|_| Arbiter::new(n, cfg.default_packages))
+                .map(|_| {
+                    Arbiter::new(n, cfg.default_packages)
+                        .expect("width and default budget validated above")
+                })
                 .collect(),
             release_pending: vec![false; n],
             events: Vec::new(),
@@ -154,9 +162,37 @@ impl Crossbar {
     }
 
     /// Program per-master package budgets at a slave port (Table III regs
-    /// 9-12: "package numbers allowed in port N for ports [3:0]").
-    pub fn set_allowed_packages(&mut self, slave: usize, master: usize, packages: u32) {
-        self.arbiters[slave].set_budget(master, packages);
+    /// 9-12: "package numbers allowed in port N for ports [3:0]").  A bad
+    /// host-programmed budget (zero, or a master beyond the width) is
+    /// refused with a typed error instead of crashing the shell model.
+    pub fn set_allowed_packages(
+        &mut self,
+        slave: usize,
+        master: usize,
+        packages: u32,
+    ) -> Result<()> {
+        if slave >= self.n {
+            return Err(crate::ElasticError::Config(format!(
+                "slave {slave} outside the {}-port crossbar", self.n
+            )));
+        }
+        self.arbiters[slave].set_budget(master, packages)
+    }
+
+    /// Program the app-aware WRR rotation order on **every** slave-port
+    /// arbiter (rotation order is a property of the master plane; see
+    /// [`crate::qos`]).  `order` must be a permutation of `0..N`.
+    pub fn set_rotation_order(&mut self, order: &[usize]) -> Result<()> {
+        for a in &mut self.arbiters {
+            a.set_rotation_order(order)?;
+        }
+        Ok(())
+    }
+
+    /// The rotation order in force (identity unless a bandwidth plan
+    /// programmed an app-aware order).
+    pub fn rotation_order(&self) -> &[usize] {
+        self.arbiters[0].rotation_order()
     }
 
     /// Assert/deassert reset on a port pair (Table III reg 4).  While in
@@ -504,13 +540,18 @@ impl Crossbar {
             .expect("validated address") as usize
     }
 
+    /// Account one finished grant (bus released or budget rotation):
+    /// per-app grant/package counters always, the per-grant log when
+    /// recording is on.
     fn log_grant(&mut self, slave: usize, master: usize) {
+        let words = self.masters[master].sent_in_grant;
+        let app_id = self.masters[master]
+            .job()
+            .map(|j| j.app_id)
+            .unwrap_or(0);
+        self.stats.account_app_grant(app_id, words);
         if self.record_grants {
-            self.grant_log.push(GrantRecord {
-                slave,
-                master,
-                words: self.masters[master].sent_in_grant,
-            });
+            self.grant_log.push(GrantRecord { slave, master, words });
         }
     }
 }

@@ -1,5 +1,8 @@
 //! Aggregate crossbar statistics (observability for benches and the
-//! §V.D bandwidth experiments).
+//! §V.D bandwidth experiments), including the per-app grant/package
+//! accounting the bandwidth plane ([`crate::qos`]) is audited against.
+
+use std::collections::BTreeMap;
 
 /// Counters accumulated across the crossbar's lifetime.
 #[derive(Debug, Clone, PartialEq)]
@@ -25,6 +28,13 @@ pub struct XbarStats {
     pub isolation_rejects: u64,
     /// Jobs that completed with an error.
     pub errors: u64,
+    /// Finished grants per application ID (a grant interrupted by a port
+    /// reset mid-burst is not counted — it never released cleanly).
+    pub app_grants: BTreeMap<u32, u64>,
+    /// Packages (words) delivered per application ID across finished
+    /// grants — the observable the per-app bandwidth shares of
+    /// [`crate::qos::BandwidthPlan`] are enforced over.
+    pub app_packages: BTreeMap<u32, u64>,
 }
 
 impl XbarStats {
@@ -41,6 +51,8 @@ impl XbarStats {
             stall_cycles: 0,
             isolation_rejects: 0,
             errors: 0,
+            app_grants: BTreeMap::new(),
+            app_packages: BTreeMap::new(),
         }
     }
 
@@ -54,6 +66,34 @@ impl XbarStats {
             self.words as f64 / self.cycles as f64
         }
     }
+
+    /// Record one finished grant for `app_id` that delivered `words`
+    /// packages (called by the crossbar at every bus release/rotation).
+    pub(crate) fn account_app_grant(&mut self, app_id: u32, words: u32) {
+        *self.app_grants.entry(app_id).or_insert(0) += 1;
+        *self.app_packages.entry(app_id).or_insert(0) += words as u64;
+    }
+
+    /// Finished grants for `app_id`.
+    pub fn app_grants(&self, app_id: u32) -> u64 {
+        self.app_grants.get(&app_id).copied().unwrap_or(0)
+    }
+
+    /// Packages delivered for `app_id` across finished grants.
+    pub fn app_packages(&self, app_id: u32) -> u64 {
+        self.app_packages.get(&app_id).copied().unwrap_or(0)
+    }
+
+    /// `app_id`'s fraction of all packages delivered through finished
+    /// grants (0.0 when nothing finished yet).
+    pub fn app_package_share(&self, app_id: u32) -> f64 {
+        let total: u64 = self.app_packages.values().sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.app_packages(app_id) as f64 / total as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -64,5 +104,19 @@ mod tests {
     fn words_per_cycle_handles_zero() {
         let s = XbarStats::new(4);
         assert_eq!(s.words_per_cycle(), 0.0);
+    }
+
+    #[test]
+    fn app_accounting_accumulates_and_shares() {
+        let mut s = XbarStats::new(4);
+        assert_eq!(s.app_grants(7), 0);
+        assert_eq!(s.app_package_share(7), 0.0);
+        s.account_app_grant(7, 16);
+        s.account_app_grant(7, 16);
+        s.account_app_grant(3, 32);
+        assert_eq!(s.app_grants(7), 2);
+        assert_eq!(s.app_packages(7), 32);
+        assert_eq!(s.app_packages(3), 32);
+        assert_eq!(s.app_package_share(7), 0.5);
     }
 }

@@ -240,7 +240,7 @@ fn larger_budget_reduces_total_cycles() {
     let mut cycles = Vec::new();
     for budget in [16u32, 128] {
         let mut xb = xbar4();
-        xb.set_allowed_packages(1, 0, budget);
+        xb.set_allowed_packages(1, 0, budget).unwrap();
         xb.push_job(0, Job::new(encode_onehot(1), vec![5; total_words], 0));
         let mut clk = Clock::new();
         let mut got = 0usize;
@@ -354,7 +354,7 @@ fn grant_timeout_when_slave_monopolized() {
     for m in 0..4 {
         xb.set_allowed_slaves(m, 0b1111);
     }
-    xb.set_allowed_packages(2, 0, 255);
+    xb.set_allowed_packages(2, 0, 255).unwrap();
     xb.push_job(0, Job::new(encode_onehot(2), vec![1; 64], 0));
     xb.push_job(1, Job::new(encode_onehot(2), vec![2; 8], 0));
     let mut clk = Clock::new();

@@ -270,7 +270,9 @@ impl Fabric {
                 } else {
                     budget
                 };
-                self.xbar.set_allowed_packages(p, m, effective);
+                self.xbar
+                    .set_allowed_packages(p, m, effective)
+                    .expect("in-layout master with a positive budget");
             }
         }
         // Destination addresses into the modules.

@@ -49,9 +49,11 @@ pub enum AdmissionPolicy {
     /// Pin each application to the fabric that first served it (cache-
     /// and reconfiguration-friendly: the app's modules stay resident).
     StickyByApp,
-    /// Prefer the fabric with the most spare crossbar bandwidth, read
-    /// from the manager's register-file view (Table III package-number
-    /// registers); ties broken least-loaded.
+    /// Admit on spare **bandwidth share**: prefer the fabric whose
+    /// bandwidth plane has the largest unclaimed share
+    /// ([`crate::manager::ElasticManager::spare_share`], derived from
+    /// the register-file budget banks and the plan in force); ties
+    /// broken least-loaded.
     BandwidthAware,
 }
 
@@ -267,13 +269,11 @@ impl Fleet {
     }
 
     fn most_spare_bandwidth(&self) -> usize {
-        // Maximize spare crossbar bandwidth from the register-file view;
-        // ties go to the least-loaded node.
+        // Maximize the unclaimed bandwidth share (register-file view of
+        // the plan in force); ties go to the least-loaded node.
         (0..self.cluster.node_count())
             .min_by_key(|&i| {
-                let m = self.cluster.nodes()[i].manager();
-                let spare =
-                    m.spare_bandwidth().saturating_sub(m.bandwidth_in_use());
+                let spare = self.cluster.nodes()[i].manager().spare_share();
                 (std::cmp::Reverse(spare), self.busy_until[i], i)
             })
             .expect("fleet has nodes")

@@ -69,11 +69,28 @@
 //! [`regfile`] banks the Table III register map to the crossbar width
 //! ([`regfile::RegfileLayout`], 2..=32 ports): the 4-port instantiation
 //! is byte-for-byte Table III (golden test), wider shells spill budget
-//! and error fields across ⌈N/4⌉-register banks, and a v1-compat window
-//! keeps Table III byte addresses working at any width.  Every layer up
-//! to the control plane programs isolation, destinations and WRR
-//! weights at full width — `configs/scale16.toml` serves all 15 PR
-//! regions per board (DESIGN.md §10, `examples/scale_out_serving.rs`).
+//! and error fields across ⌈N/4⌉-register banks, a v1-compat window
+//! keeps Table III byte addresses working at any width, and a
+//! byte-granular AXI-Lite shim ([`regfile::RegisterFile::write_byte`])
+//! gives the host read-modify-write access to individual packed fields.
+//! Every layer up to the control plane programs isolation, destinations
+//! and WRR weights at full width — `configs/scale16.toml` serves all 15
+//! PR regions per board (DESIGN.md §10, `examples/scale_out_serving.rs`).
+//!
+//! # The per-app bandwidth plane
+//!
+//! [`qos`] lifts bandwidth from per-master package budgets to a
+//! first-class application contract: a [`qos::BandwidthPlan`] holds
+//! per-app shares in parts-per-unit (plus the best-effort remainder),
+//! and a deterministic compiler lowers it to per-master WRR budgets
+//! over the full banked width together with an app-aware arbiter
+//! rotation order (same-app masters adjacent, so a chain spanning >4
+//! masters keeps a contiguous, proportional share).  The manager
+//! recompiles the plan on every allocation event
+//! ([`manager::ElasticManager::apply_plan`]), the autoscaler re-derives
+//! shares from footprints on every transition, the fleet admits on
+//! spare share, and `[qos]` config tables / the `--plan` flag make the
+//! contract operator-visible (DESIGN.md §11).
 
 pub mod area;
 pub mod autoscale;
@@ -91,6 +108,7 @@ pub mod manager;
 pub mod metrics;
 pub mod modules;
 pub mod prop;
+pub mod qos;
 pub mod regfile;
 pub mod runtime;
 pub mod server;

@@ -30,10 +30,21 @@ fn main() {
 }
 
 fn load_config(cli: &Cli) -> Result<SystemConfig> {
-    match cli.flags.get("config") {
-        Some(path) => SystemConfig::load(std::path::Path::new(path)),
-        None => Ok(SystemConfig::paper_defaults()),
+    let cfg = match cli.flags.get("config") {
+        Some(path) => SystemConfig::load(std::path::Path::new(path))?,
+        None => SystemConfig::paper_defaults(),
+    };
+    overlay_plan(cli, cfg)
+}
+
+/// Apply the `--plan app=share,...` flag over the configured `[qos]`
+/// table (the CLI face of the per-app bandwidth plane).
+fn overlay_plan(cli: &Cli, mut cfg: SystemConfig) -> Result<SystemConfig> {
+    if let Some(spec) = cli.flags.get("plan") {
+        let plan = elastic_fpga::qos::BandwidthPlan::parse(spec)?;
+        cfg.qos.shares = plan.shares().to_vec();
     }
+    Ok(cfg)
 }
 
 fn load_runtime(cli: &Cli) -> Result<Option<RuntimeThread>> {
@@ -178,6 +189,17 @@ fn autoscale_cmd(cli: &Cli) -> Result<()> {
     // A --config overlay selects the board shape (e.g. scale16's 16-port
     // shells); the serving-profile timing knobs stay the autoscale
     // profile's so fabric lanes remain attractive.
+    // The closed-loop engine owns the bandwidth plane (shares are
+    // re-derived from footprints on every transition), so a --plan
+    // overlay would be silently discarded — refuse it instead.
+    if cli.flags.contains_key("plan") {
+        return Err(elastic_fpga::ElasticError::Config(
+            "--plan has no effect under `autoscale`: the engine derives \
+             each app's share from its region footprint; use [qos.shares] \
+             with quickstart/serve/fleet instead"
+                .into(),
+        ));
+    }
     let cfg = match cli.flags.get("config") {
         Some(path) => autoscale::serving_profile_on(SystemConfig::load(
             std::path::Path::new(path),

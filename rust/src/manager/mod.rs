@@ -32,6 +32,7 @@ use crate::config::SystemConfig;
 use crate::fabric::Fabric;
 use crate::hamming;
 use crate::modules::ModuleKind;
+use crate::qos::{BandwidthPlan, PlanProgram, SHARE_UNIT};
 use crate::runtime::RuntimeHandle;
 use crate::timing::{evaluate, CostBreakdown, ExecutionTimeline};
 use crate::xdma::H2cBurst;
@@ -53,6 +54,16 @@ pub struct ElasticManager {
     fabric: Fabric,
     runtime: Option<RuntimeHandle>,
     regions: Vec<RegionState>, // index 0 unused; 1..=N are PR regions
+    /// The board's bandwidth contract; every allocation transition
+    /// recompiles it into per-master budgets ([`Self::apply_plan`]).
+    plan: BandwidthPlan,
+    /// Chain ownership programmed directly via
+    /// [`Self::program_app_chain`] (index = crossbar port) — regions the
+    /// allocation map does not track but the bandwidth compiler must.
+    chain_owner: Vec<Option<u32>>,
+    /// The last program this manager wrote, so per-request allocation
+    /// events skip the N²-register rewrite when nothing changed.
+    applied_program: Option<PlanProgram>,
     cfg: SystemConfig,
     /// Use the ICAP timing model when installing modules (otherwise the
     /// §V.B static path).
@@ -61,17 +72,35 @@ pub struct ElasticManager {
 
 impl ElasticManager {
     /// Build a manager over a fresh fabric.  `runtime` enables real PJRT
-    /// execution of on-server stages and result verification.
+    /// execution of on-server stages and result verification.  The
+    /// `[qos]` plan from `cfg` is compiled and applied immediately.
     pub fn new(cfg: SystemConfig, runtime: Option<RuntimeHandle>) -> Self {
         let fabric = Fabric::new(cfg.clone());
         let n = cfg.fabric.num_pr_regions;
-        Self {
+        // Construction contract (like the port-count asserts in
+        // `Fabric::new`): the config must carry a valid [qos] table.
+        // Parsed configs always do — `SystemConfig::from_doc` refuses
+        // overcommitted shares and out-of-range quanta with typed
+        // errors; only hand-built configs can trip these expects.
+        let plan = cfg
+            .qos
+            .plan()
+            .expect("SystemConfig.qos.shares must not overcommit SHARE_UNIT");
+        let mut mgr = Self {
             fabric,
             runtime,
             regions: (0..=n).map(|_| RegionState::Available).collect(),
+            plan,
+            chain_owner: vec![None; cfg.fabric.num_ports],
+            applied_program: None,
             cfg,
             use_icap: false,
-        }
+        };
+        mgr.apply_plan().expect(
+            "SystemConfig.qos.rotation_packages and \
+             crossbar.default_packages must be 1..=255",
+        );
+        mgr
     }
 
     /// Region states (1-indexed; entry 0 is a placeholder).
@@ -143,43 +172,127 @@ impl ElasticManager {
         &self.cfg
     }
 
-    /// Crossbar bandwidth currently allocated at the bridge port, read
-    /// from the **register-file view** (Table III package-number regs):
-    /// the sum of per-grant package budgets programmed for the masters
-    /// of occupied PR regions.  Note that `execute` releases an app's
-    /// regions on completion, so schedulers that score boards strictly
-    /// *between* synchronous executes (the fleet and the threaded
-    /// server both do) observe 0 here and their bandwidth-aware policy
-    /// reduces to spare capacity ([`spare_bandwidth`]); a nonzero
-    /// reading needs an allocation held across the scoring point.
-    ///
-    /// [`available_regions`]: ElasticManager::available_regions
-    /// [`spare_bandwidth`]: ElasticManager::spare_bandwidth
-    pub fn bandwidth_in_use(&self) -> u32 {
-        (1..self.regions.len())
-            .filter(|&r| {
-                matches!(self.regions[r], RegionState::Allocated { .. })
-            })
-            .map(|r| {
-                let budget = self
-                    .fabric
-                    .regfile
-                    .allowed_packages(0, r)
-                    .expect("region within layout");
-                if budget == 0 {
-                    self.cfg.crossbar.default_packages
-                } else {
-                    budget
-                }
-            })
-            .sum()
+    /// The board's bandwidth plan.
+    pub fn bandwidth_plan(&self) -> &BandwidthPlan {
+        &self.plan
     }
 
-    /// Spare crossbar bandwidth in packages-per-rotation: free regions at
-    /// the default budget, minus nothing already allocated (occupied
-    /// regions are excluded by construction).
-    pub fn spare_bandwidth(&self) -> u32 {
-        self.available_regions() as u32 * self.cfg.crossbar.default_packages
+    /// Replace the bandwidth plan and recompile it into the register
+    /// file and the arbiters immediately.
+    pub fn set_bandwidth_plan(
+        &mut self,
+        plan: BandwidthPlan,
+    ) -> Result<PlanProgram> {
+        self.plan = plan;
+        self.apply_plan()
+    }
+
+    /// Update one app's share contract **without** recompiling — for
+    /// callers about to trigger an allocation event (which applies the
+    /// plan anyway), so a transition costs one compile, not two.
+    pub fn stage_bandwidth_share(&mut self, app: u32, ppu: u32) -> Result<()> {
+        self.plan.set_share(app, ppu)
+    }
+
+    /// Which app owns each crossbar port's master: the allocation map
+    /// first (reserved / executing regions), then chains programmed
+    /// directly through [`Self::program_app_chain`].
+    fn port_app_map(&self) -> Vec<Option<u32>> {
+        let mut map = self.chain_owner.clone();
+        for r in 1..self.regions.len() {
+            if let RegionState::Allocated { app_id, .. } = self.regions[r] {
+                map[r] = Some(app_id);
+            }
+        }
+        map[0] = None; // the bridge serves every app
+        map
+    }
+
+    /// Recompile the bandwidth plan against current port ownership and
+    /// program the result: per-master package budgets into the banked
+    /// register file (generation-bumped, so the fabric remirrors them
+    /// into every arbiter) and the app-aware rotation order into the
+    /// crossbar.  This is the single path by which WRR budgets are
+    /// written — no layer hand-assembles them any more.
+    pub fn apply_plan(&mut self) -> Result<PlanProgram> {
+        let port_app = self.port_app_map();
+        let prog = self.plan.compile(
+            &port_app,
+            self.cfg.qos.rotation_packages,
+            self.cfg.crossbar.default_packages,
+        )?;
+        // Per-request allocation events (every `execute`) would
+        // otherwise rewrite N² budget registers and force a full fabric
+        // remirror even when the compiled image is unchanged — e.g. the
+        // empty plan, where it is always the default image.
+        if self.applied_program.as_ref() == Some(&prog) {
+            return Ok(prog);
+        }
+        self.fabric.regfile.write_master_budgets(&prog.budgets)?;
+        self.fabric.xbar.set_rotation_order(&prog.rotation)?;
+        self.applied_program = Some(prog.clone());
+        Ok(prog)
+    }
+
+    /// Per-app bandwidth in use, **in share terms**: each resident
+    /// app's effective fraction of the WRR rotation quantum in
+    /// parts-per-[`SHARE_UNIT`], computed from the register-file view
+    /// (the sum of its masters' programmed package budgets over the
+    /// rotation quantum).  Best-effort apps report the share their
+    /// default budgets actually occupy.
+    pub fn bandwidth_shares(&self) -> Vec<(u32, u32)> {
+        let quantum = self.cfg.qos.rotation_packages.max(1) as u64;
+        // Sum packages per app first, convert to share once: summing
+        // per-port floored shares would lose up to a ppu per master.
+        let mut packages: Vec<(u32, u64)> = Vec::new();
+        for (port, owner) in self.port_app_map().iter().enumerate() {
+            let Some(app) = *owner else { continue };
+            let budget = self
+                .fabric
+                .regfile
+                .allowed_packages(0, port)
+                .expect("owned port within layout");
+            let budget = if budget == 0 {
+                self.cfg.crossbar.default_packages
+            } else {
+                budget
+            };
+            match packages.iter_mut().find(|(a, _)| *a == app) {
+                Some((_, pk)) => *pk += budget as u64,
+                None => packages.push((app, budget as u64)),
+            }
+        }
+        packages.sort_unstable_by_key(|&(a, _)| a);
+        packages
+            .into_iter()
+            .map(|(a, pk)| (a, (pk * SHARE_UNIT as u64 / quantum) as u32))
+            .collect()
+    }
+
+    /// Total bandwidth in use in share terms: the sum of
+    /// [`Self::bandwidth_shares`], capped at [`SHARE_UNIT`].  Note that
+    /// `execute` releases an app's regions on completion, so schedulers
+    /// that score boards strictly *between* synchronous executes (the
+    /// fleet and the threaded server both do) observe 0 here; a nonzero
+    /// reading needs an allocation held across the scoring point.
+    pub fn bandwidth_in_use(&self) -> u32 {
+        self.bandwidth_shares()
+            .iter()
+            .map(|&(_, s)| s)
+            .sum::<u32>()
+            .min(SHARE_UNIT)
+    }
+
+    /// Share of the bandwidth plane available to new admissions, in
+    /// parts-per-[`SHARE_UNIT`]: the plane not claimed by resident apps,
+    /// scaled by the fraction of PR regions still free (a board whose
+    /// regions are fenced or occupied can promise proportionally less,
+    /// whatever its budget registers say).
+    pub fn spare_share(&self) -> u32 {
+        let total = self.cfg.fabric.num_pr_regions.max(1) as u64;
+        let unclaimed =
+            (SHARE_UNIT - self.bandwidth_in_use()) as u64;
+        (unclaimed * self.available_regions() as u64 / total) as u32
     }
 
     // ------------------------------------------------------------------
@@ -225,11 +338,12 @@ impl ElasticManager {
         Ok(())
     }
 
-    /// Program destinations **and WRR bandwidth weights** for an app
-    /// whose FPGA chain occupies `ports` in order (Table III destination
-    /// + package-number registers).  `packages` is the per-grant package
-    /// budget written for every hop of the chain (clamped to the 8-bit
-    /// field).  An empty `ports` detaches the app (destination = bridge).
+    /// Program destinations for an app whose FPGA chain occupies
+    /// `ports` in order (Table III destination registers), record the
+    /// chain's port ownership, and **recompile the bandwidth plan** so
+    /// the app's WRR budgets follow from its share contract rather than
+    /// a caller-picked weight.  An empty `ports` detaches the app
+    /// (destination = bridge, ownership cleared).
     ///
     /// This is the autoscaler's regfile-reprogram primitive: every
     /// grow/shrink transition re-runs it so traffic and bandwidth follow
@@ -239,7 +353,6 @@ impl ElasticManager {
         &mut self,
         app_id: u32,
         ports: &[usize],
-        packages: u32,
     ) -> Result<()> {
         let layout = *self.fabric.regfile.layout();
         if !layout.covers_app(app_id as usize) {
@@ -260,14 +373,15 @@ impl ElasticManager {
             }
         }
         self.program_chain(app_id, ports)?;
-        let w = packages.clamp(1, 0xFF);
-        let rf = &mut self.fabric.regfile;
-        let first = ports.first().copied().unwrap_or(0);
-        rf.set_allowed_packages(first, 0, w)?;
-        for (i, &p) in ports.iter().enumerate() {
-            let next = ports.get(i + 1).copied().unwrap_or(0);
-            rf.set_allowed_packages(next, p, w)?;
+        for owner in self.chain_owner.iter_mut() {
+            if *owner == Some(app_id) {
+                *owner = None;
+            }
         }
+        for &p in ports {
+            self.chain_owner[p] = Some(app_id);
+        }
+        self.apply_plan()?;
         Ok(())
     }
 
@@ -332,8 +446,11 @@ impl ElasticManager {
                 ports.push(region);
             }
         }
-        // Destinations first, so module install sees the right regfile.
+        // Destinations first, so module install sees the right regfile;
+        // then the plan, so the chain's masters carry the app's share
+        // (not power-on defaults) for the whole execution.
         self.program_chain(app_id, &ports)?;
+        self.apply_plan()?;
         for p in placement {
             if let StagePlacement::Fpga { kind, region } = *p {
                 if self.use_icap {
@@ -407,13 +524,20 @@ impl ElasticManager {
         Ok(spent)
     }
 
-    /// Release an app's regions.
+    /// Release an app's regions and drop its chain ownership.  Budget
+    /// registers keep the last compiled image; the next allocation
+    /// event recompiles the plan over the new ownership map.
     pub fn release_app(&mut self, app_id: u32) {
         for r in 1..self.regions.len() {
             if matches!(self.regions[r], RegionState::Allocated { app_id: a, .. } if a == app_id)
             {
                 self.fabric.clear_region(r);
                 self.regions[r] = RegionState::Available;
+            }
+        }
+        for owner in self.chain_owner.iter_mut() {
+            if *owner == Some(app_id) {
+                *owner = None;
             }
         }
     }

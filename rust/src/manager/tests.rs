@@ -228,24 +228,43 @@ fn sixteen_port_manager_programs_all_fifteen_regions() {
             .unwrap();
     }
     assert_eq!(m.available_regions(), 0);
+    // Contract each app 200/1000 of the bandwidth plane; the compiler —
+    // not the chain-programming call — decides every budget field.
+    let plan =
+        crate::qos::BandwidthPlan::with_shares(&[(0, 200), (1, 200), (2, 200), (3, 200)])
+            .unwrap();
+    m.set_bandwidth_plan(plan).unwrap();
     for app in 0..4u32 {
         let chain: Vec<usize> =
             (1..=15).filter(|r| r % 4 == app as usize).collect();
-        m.program_app_chain(app, &chain, 24).unwrap();
+        m.program_app_chain(app, &chain).unwrap();
     }
+    let prog = m.apply_plan().unwrap();
     let rf = &m.fabric().regfile;
     for r in 1..=15usize {
         assert_ne!(rf.pr_destination(r).unwrap(), 0, "region {r} dest");
         assert_ne!(rf.allowed_slaves(r).unwrap(), 0, "region {r} mask");
     }
-    // Every chain hop carries the programmed WRR budget.
-    assert_eq!(rf.allowed_packages(4, 0).unwrap(), 24, "bridge -> region 4");
-    assert_eq!(rf.allowed_packages(8, 4).unwrap(), 24);
-    assert_eq!(rf.allowed_packages(0, 12).unwrap(), 24, "tail -> bridge");
+    // The budget banks hold exactly the compiled plan: T=64 at 200/1000
+    // is 13 packages per app, largest-remainder over its masters.
+    assert_eq!(rf.master_budgets(), prog.budgets);
+    assert_eq!(rf.allowed_packages(1, 0).unwrap(), 64, "bridge quantum");
+    assert_eq!(rf.allowed_packages(0, 4).unwrap(), 5, "app 0 first master");
+    assert_eq!(rf.allowed_packages(0, 8).unwrap(), 4);
+    assert_eq!(rf.allowed_packages(0, 12).unwrap(), 4);
+    // Same-app masters sit adjacent in the arbiter rotation.
+    assert_eq!(&m.fabric().xbar.rotation_order()[..4], &[0, 4, 8, 12]);
+    // And the manager reports the allocation in share terms.
+    let shares = m.bandwidth_shares();
+    assert_eq!(shares.len(), 4);
+    for &(app, ppu) in &shares {
+        assert_eq!(ppu, 13 * 1000 / 64, "app {app} effective share");
+    }
     for app in 0..4u32 {
         m.release_app(app);
     }
     assert_eq!(m.available_regions(), 15);
+    assert_eq!(m.bandwidth_in_use(), 0, "released apps hold no share");
 
     // A 6-stage chain — impossible under Table III — now executes.
     let req = AppRequest {
@@ -258,11 +277,11 @@ fn sixteen_port_manager_programs_all_fifteen_regions() {
     assert!(rep.verified);
     // Beyond the configured 16 ports the typed refusal still applies.
     assert!(matches!(
-        m.program_app_chain(0, &[16], 8),
+        m.program_app_chain(0, &[16]),
         Err(crate::ElasticError::RegfileWindow(_))
     ));
     assert!(matches!(
-        m.program_app_chain(16, &[1], 8),
+        m.program_app_chain(16, &[1]),
         Err(crate::ElasticError::RegfileWindow(_))
     ));
 }
@@ -300,18 +319,27 @@ fn reserve_and_blank_regions_hold_allocations_through_icap() {
 }
 
 #[test]
-fn program_app_chain_writes_destinations_and_weights() {
+fn program_app_chain_writes_destinations_and_compiled_weights() {
     let mut m = mgr();
-    m.program_app_chain(2, &[1, 3], 32).unwrap();
+    let plan = crate::qos::BandwidthPlan::with_shares(&[(2, 500)]).unwrap();
+    m.set_bandwidth_plan(plan).unwrap();
+    m.program_app_chain(2, &[1, 3]).unwrap();
     let rf = &m.fabric().regfile;
     assert_eq!(rf.app_destination(2).unwrap(), 1 << 1);
     assert_eq!(rf.pr_destination(1).unwrap(), 1 << 3);
     assert_eq!(rf.pr_destination(3).unwrap(), 1 << 0);
-    assert_eq!(rf.allowed_packages(1, 0).unwrap(), 32, "bridge hop weight");
-    assert_eq!(rf.allowed_packages(3, 1).unwrap(), 32);
-    assert_eq!(rf.allowed_packages(0, 3).unwrap(), 32);
-    assert!(m.program_app_chain(4, &[1], 8).is_err(), "app beyond window");
-    assert!(m.program_app_chain(0, &[4], 8).is_err(), "region beyond window");
+    // T=64 at 500/1000 = 32 packages over masters {1, 3}: 16 each, at
+    // every slave bank; the bridge carries the full quantum.
+    assert_eq!(rf.allowed_packages(3, 1).unwrap(), 16);
+    assert_eq!(rf.allowed_packages(0, 3).unwrap(), 16);
+    assert_eq!(rf.allowed_packages(1, 0).unwrap(), 64, "bridge quantum");
+    // The unowned region keeps the default budget.
+    assert_eq!(rf.allowed_packages(0, 2).unwrap(), 8);
+    // App 2's masters are adjacent right after the bridge.
+    assert_eq!(m.fabric().xbar.rotation_order(), &[0, 1, 3, 2]);
+    assert_eq!(m.bandwidth_shares(), vec![(2, 500)]);
+    assert!(m.program_app_chain(4, &[1]).is_err(), "app beyond window");
+    assert!(m.program_app_chain(0, &[4]).is_err(), "region beyond window");
 }
 
 #[test]

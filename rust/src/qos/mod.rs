@@ -1,0 +1,398 @@
+//! The per-app bandwidth plane: §IV.E.1's package budgets lifted to
+//! application granularity.
+//!
+//! The paper guarantees that "the allocated bandwidth for the PR region
+//! is ensured by the weighted round-robin arbiter in the slave port of
+//! the crossbar" — a *per-master* knob.  An application, however, owns a
+//! *set* of masters (one per PR region of its chain), so its bandwidth
+//! share used to be an emergent accident of whichever ports the chain
+//! happened to occupy.  FOS and the multi-tenancy line of work
+//! (PAPERS.md) treat tenant-level guarantees as the unit the operator
+//! reasons about; this module makes bandwidth that kind of contract.
+//!
+//! * [`BandwidthPlan`] — the declarative contract: per-app shares in
+//!   parts-per-[`SHARE_UNIT`], with the unclaimed remainder forming the
+//!   **best-effort pool**.
+//! * [`BandwidthPlan::compile`] — the deterministic lowering to the
+//!   hardware knobs that exist: per-master WRR package budgets over the
+//!   full banked register-file width (2..=32 ports) plus an app-aware
+//!   arbiter rotation order.  See DESIGN.md §11 for the lowering rules.
+//! * [`PlanProgram`] — the compiled image the manager writes through
+//!   [`crate::regfile::RegisterFile::write_master_budgets`] and
+//!   [`crate::crossbar::Crossbar::set_rotation_order`].
+//!
+//! The compiler is a pure function of `(plan, port ownership, knobs)`,
+//! so the control plane can recompile on every allocation transition
+//! (the autoscaler does) and two boards with the same ownership map
+//! always carry byte-identical budget banks.
+
+use crate::{ElasticError, Result};
+
+/// Shares are expressed in parts-per-unit of this denominator (per
+/// mille: 1000 = the whole bandwidth plane).
+pub const SHARE_UNIT: u32 = 1000;
+
+/// A declarative per-app bandwidth contract.
+///
+/// Apps with an explicit share receive a guaranteed fraction of the WRR
+/// rotation quantum, proportional among themselves; every other app
+/// rides the **best-effort pool** (the unclaimed remainder) at the
+/// crossbar's default package budget.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BandwidthPlan {
+    /// `(app_id, share_ppu)`, kept sorted by app ID, shares all > 0.
+    shares: Vec<(u32, u32)>,
+}
+
+impl BandwidthPlan {
+    /// The empty (pure best-effort) plan: every master keeps the
+    /// crossbar's default package budget — byte-identical to the
+    /// pre-plan programming model.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a plan from explicit `(app_id, share_ppu)` pairs.
+    pub fn with_shares(shares: &[(u32, u32)]) -> Result<Self> {
+        let mut plan = Self::new();
+        for &(app, ppu) in shares {
+            plan.set_share(app, ppu)?;
+        }
+        Ok(plan)
+    }
+
+    /// Set (or, with `ppu == 0`, remove) `app`'s guaranteed share.
+    /// Fails when the explicit shares would exceed [`SHARE_UNIT`].
+    pub fn set_share(&mut self, app: u32, ppu: u32) -> Result<()> {
+        // Reject before summing: an arbitrary u32 from the CLI must not
+        // overflow the overcommit arithmetic below (stored shares each
+        // honor this bound, so `others + ppu` stays well within u32).
+        if ppu > SHARE_UNIT {
+            return Err(ElasticError::Config(format!(
+                "app {app} share {ppu} exceeds {SHARE_UNIT}"
+            )));
+        }
+        let others: u32 = self
+            .shares
+            .iter()
+            .filter(|&&(a, _)| a != app)
+            .map(|&(_, s)| s)
+            .sum();
+        if others + ppu > SHARE_UNIT {
+            return Err(ElasticError::Config(format!(
+                "bandwidth plan overcommitted: app {app} share {ppu} + \
+                 {others} already promised exceeds {SHARE_UNIT}"
+            )));
+        }
+        self.shares.retain(|&(a, _)| a != app);
+        if ppu > 0 {
+            self.shares.push((app, ppu));
+            self.shares.sort_unstable_by_key(|&(a, _)| a);
+        }
+        Ok(())
+    }
+
+    /// `app`'s explicit share, if it has one.
+    pub fn share_of(&self, app: u32) -> Option<u32> {
+        self.shares
+            .iter()
+            .find(|&&(a, _)| a == app)
+            .map(|&(_, s)| s)
+    }
+
+    /// The explicit `(app_id, share_ppu)` pairs, ascending by app ID.
+    pub fn shares(&self) -> &[(u32, u32)] {
+        &self.shares
+    }
+
+    /// The unclaimed remainder: the best-effort pool, in
+    /// parts-per-[`SHARE_UNIT`].
+    pub fn best_effort_share(&self) -> u32 {
+        SHARE_UNIT - self.shares.iter().map(|&(_, s)| s).sum::<u32>()
+    }
+
+    /// No explicit shares — everything is best-effort.
+    pub fn is_empty(&self) -> bool {
+        self.shares.is_empty()
+    }
+
+    /// Parse the CLI spelling: comma-separated `app=ppu` pairs, e.g.
+    /// `--plan 0=750,1=250`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = Self::new();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (app, ppu) = part.trim().split_once('=').ok_or_else(|| {
+                ElasticError::Config(format!(
+                    "plan entry '{part}' is not app=share (e.g. 0=750)"
+                ))
+            })?;
+            let app: u32 = app.trim().parse().map_err(|_| {
+                ElasticError::Config(format!("plan app ID '{app}' not a number"))
+            })?;
+            let ppu: u32 = ppu.trim().parse().map_err(|_| {
+                ElasticError::Config(format!("plan share '{ppu}' not a number"))
+            })?;
+            if plan.share_of(app).is_some() {
+                return Err(ElasticError::Config(format!(
+                    "plan names app {app} twice"
+                )));
+            }
+            plan.set_share(app, ppu)?;
+        }
+        Ok(plan)
+    }
+
+    /// Lower the plan to the knobs the shell actually has, for a board
+    /// whose master ports are owned per `port_app` (`port_app[p]` is the
+    /// app whose chain occupies port `p`'s master; `None` for the bridge
+    /// port 0 and for free regions).
+    ///
+    /// Deterministic lowering rules (DESIGN.md §11):
+    ///
+    /// 1. An app with explicit share `s` and `k ≥ 1` resident masters
+    ///    gets `B = max(k, round(T·s / SHARE_UNIT))` packages per full
+    ///    WRR rotation (`T = rotation_packages`), distributed over its
+    ///    masters by largest remainder in ascending port order — so
+    ///    per-app totals are proportional to shares and every master
+    ///    keeps a positive budget.
+    /// 2. Best-effort masters (owned by an app without a share) and
+    ///    unowned masters keep `default_packages` — the pre-plan image.
+    /// 3. The bridge master (port 0) multiplexes every app's inbound
+    ///    traffic: it gets `T` whenever the plan has explicit shares
+    ///    (one grant can deliver any app's full quantum), otherwise the
+    ///    default.
+    /// 4. Rotation order: bridge first, then explicit-share apps in
+    ///    ascending app ID (each app's masters ascending and therefore
+    ///    **adjacent** — a multi-region app's share is contiguous even
+    ///    past 4 masters), then best-effort masters, then free ports.
+    pub fn compile(
+        &self,
+        port_app: &[Option<u32>],
+        rotation_packages: u32,
+        default_packages: u32,
+    ) -> Result<PlanProgram> {
+        let n = port_app.len();
+        if !(2..=32).contains(&n) {
+            return Err(ElasticError::Config(format!(
+                "bandwidth plan targets {n} ports, expected 2..=32"
+            )));
+        }
+        if !(1..=255).contains(&rotation_packages) {
+            return Err(ElasticError::Config(format!(
+                "rotation quantum {rotation_packages} does not fit the \
+                 8-bit package field (1..=255)"
+            )));
+        }
+        if !(1..=255).contains(&default_packages) {
+            return Err(ElasticError::Config(format!(
+                "default package budget {default_packages} must be 1..=255"
+            )));
+        }
+
+        let mut budgets = vec![default_packages; n];
+        budgets[0] = if self.is_empty() {
+            default_packages
+        } else {
+            rotation_packages
+        };
+
+        // Masters of each explicit-share app, ascending port order.
+        let mut app_packages: Vec<(u32, u32)> = Vec::new();
+        for &(app, ppu) in &self.shares {
+            let masters: Vec<usize> = (1..n)
+                .filter(|&p| port_app[p] == Some(app))
+                .collect();
+            if masters.is_empty() {
+                continue; // share reserved, app not resident here
+            }
+            let k = masters.len() as u32;
+            let quantum = (rotation_packages as u64 * ppu as u64
+                + SHARE_UNIT as u64 / 2)
+                / SHARE_UNIT as u64;
+            let total = (quantum as u32).max(k).min(255 * k);
+            let base = total / k;
+            let extra = (total % k) as usize;
+            for (i, &p) in masters.iter().enumerate() {
+                budgets[p] = base + u32::from(i < extra);
+            }
+            app_packages.push((app, total));
+        }
+
+        // Rotation: bridge, contracted apps (masters adjacent), then
+        // best-effort owned ports, then free ports.
+        let mut rotation = Vec::with_capacity(n);
+        rotation.push(0);
+        for &(app, _) in &self.shares {
+            rotation.extend((1..n).filter(|&p| port_app[p] == Some(app)));
+        }
+        for p in 1..n {
+            let owned_contracted = port_app[p]
+                .map(|a| self.share_of(a).is_some())
+                .unwrap_or(false);
+            if port_app[p].is_some() && !owned_contracted {
+                rotation.push(p);
+            }
+        }
+        rotation.extend((1..n).filter(|&p| port_app[p].is_none()));
+        debug_assert_eq!(rotation.len(), n);
+
+        Ok(PlanProgram { budgets, rotation, app_packages })
+    }
+}
+
+/// A plan lowered for one concrete board: what the manager writes into
+/// the register file and the crossbar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanProgram {
+    /// Per-master package budget (index = crossbar port), each 1..=255,
+    /// written uniformly into every slave's budget bank.
+    pub budgets: Vec<u32>,
+    /// App-aware WRR rotation order: a permutation of `0..N` with every
+    /// contracted app's masters adjacent.
+    pub rotation: Vec<usize>,
+    /// Per contracted resident app: total packages per full rotation.
+    pub app_packages: Vec<(u32, u32)>,
+}
+
+impl PlanProgram {
+    /// The effective share (parts-per-[`SHARE_UNIT`]) `app` achieves
+    /// per rotation quantum `rotation_packages`.
+    pub fn effective_share(&self, app: u32, rotation_packages: u32) -> u32 {
+        self.app_packages
+            .iter()
+            .find(|&&(a, _)| a == app)
+            .map(|&(_, pk)| {
+                (pk as u64 * SHARE_UNIT as u64 / rotation_packages.max(1) as u64)
+                    as u32
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_compiles_to_the_default_image() {
+        let plan = BandwidthPlan::new();
+        let port_app = vec![None, Some(0), Some(1), None];
+        let prog = plan.compile(&port_app, 64, 8).unwrap();
+        assert_eq!(prog.budgets, vec![8, 8, 8, 8]);
+        assert_eq!(prog.rotation, vec![0, 1, 2, 3]);
+        assert!(prog.app_packages.is_empty());
+    }
+
+    #[test]
+    fn shares_lower_proportionally_with_largest_remainder() {
+        let plan = BandwidthPlan::with_shares(&[(0, 750), (1, 250)]).unwrap();
+        // App 0 on ports 1..=3, app 1 on port 4 (16-port board).
+        let mut port_app = vec![None; 16];
+        for p in 1..=3 {
+            port_app[p] = Some(0);
+        }
+        port_app[4] = Some(1);
+        let prog = plan.compile(&port_app, 64, 8).unwrap();
+        // T=64: app 0 gets 48 over 3 masters (16 each), app 1 gets 16.
+        assert_eq!(&prog.budgets[1..=4], &[16, 16, 16, 16]);
+        assert_eq!(prog.app_packages, vec![(0, 48), (1, 16)]);
+        assert_eq!(prog.effective_share(0, 64), 750);
+        assert_eq!(prog.effective_share(1, 64), 250);
+        // Bridge carries any app's full quantum; free ports stay default.
+        assert_eq!(prog.budgets[0], 64);
+        assert_eq!(prog.budgets[5], 8);
+        // Contracted masters adjacent, right after the bridge.
+        assert_eq!(&prog.rotation[..5], &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn uneven_split_spreads_the_remainder_deterministically() {
+        let plan = BandwidthPlan::with_shares(&[(7, 500)]).unwrap();
+        let mut port_app = vec![None; 8];
+        for p in [2usize, 5, 6] {
+            port_app[p] = Some(7);
+        }
+        let prog = plan.compile(&port_app, 100, 8).unwrap();
+        // 50 packages over 3 masters: 17, 17, 16 in ascending port order.
+        assert_eq!(prog.budgets[2], 17);
+        assert_eq!(prog.budgets[5], 17);
+        assert_eq!(prog.budgets[6], 16);
+        assert_eq!(prog.rotation[1..4], [2, 5, 6]);
+    }
+
+    #[test]
+    fn tiny_share_keeps_every_master_granted() {
+        let plan = BandwidthPlan::with_shares(&[(0, 10)]).unwrap();
+        let mut port_app = vec![None; 8];
+        for p in 1..=5 {
+            port_app[p] = Some(0);
+        }
+        let prog = plan.compile(&port_app, 16, 8).unwrap();
+        // round(16 * 10/1000) = 0 < 5 masters: floor at 1 package each.
+        for p in 1..=5 {
+            assert_eq!(prog.budgets[p], 1, "port {p}");
+        }
+    }
+
+    #[test]
+    fn rotation_groups_best_effort_after_contracted() {
+        let plan = BandwidthPlan::with_shares(&[(2, 400)]).unwrap();
+        let port_app =
+            vec![None, Some(9), Some(2), None, Some(2), Some(9), None, None];
+        let prog = plan.compile(&port_app, 64, 8).unwrap();
+        assert_eq!(prog.rotation, vec![0, 2, 4, 1, 5, 3, 6, 7]);
+    }
+
+    #[test]
+    fn overcommit_and_malformed_specs_are_refused() {
+        assert!(BandwidthPlan::with_shares(&[(0, 600), (1, 500)]).is_err());
+        let mut plan = BandwidthPlan::with_shares(&[(0, 600)]).unwrap();
+        assert!(plan.set_share(1, 500).is_err());
+        plan.set_share(0, 100).unwrap(); // re-set shrinks, never doubles
+        assert_eq!(plan.share_of(0), Some(100));
+        plan.set_share(0, 0).unwrap();
+        assert!(plan.is_empty());
+        assert!(BandwidthPlan::parse("0:700").is_err());
+        assert!(BandwidthPlan::parse("x=1").is_err());
+        assert!(BandwidthPlan::parse("0=700,0=100").is_err());
+        // A huge CLI share must fail cleanly, never overflow the
+        // overcommit sum (debug) or wrap past it (release).
+        assert!(BandwidthPlan::parse("0=500,1=4294967295").is_err());
+        let mut big = BandwidthPlan::new();
+        assert!(big.set_share(0, SHARE_UNIT + 1).is_err());
+        let p = BandwidthPlan::parse("0=700, 3=100").unwrap();
+        assert_eq!(p.share_of(0), Some(700));
+        assert_eq!(p.share_of(3), Some(100));
+        assert_eq!(p.best_effort_share(), 200);
+    }
+
+    #[test]
+    fn compile_validates_its_knobs() {
+        let plan = BandwidthPlan::new();
+        assert!(plan.compile(&[None; 1], 64, 8).is_err());
+        assert!(plan.compile(&[None; 33], 64, 8).is_err());
+        assert!(plan.compile(&[None; 4], 0, 8).is_err());
+        assert!(plan.compile(&[None; 4], 256, 8).is_err());
+        assert!(plan.compile(&[None; 4], 64, 0).is_err());
+    }
+
+    #[test]
+    fn compile_is_deterministic_at_any_width() {
+        for n in 2..=32usize {
+            let plan =
+                BandwidthPlan::with_shares(&[(0, 500), (1, 300)]).unwrap();
+            let mut port_app = vec![None; n];
+            for p in 1..n {
+                port_app[p] = Some((p % 3) as u32);
+            }
+            let a = plan.compile(&port_app, 64, 8).unwrap();
+            let b = plan.compile(&port_app, 64, 8).unwrap();
+            assert_eq!(a, b, "width {n}");
+            assert_eq!(a.budgets.len(), n);
+            assert!(a.budgets.iter().all(|&b| (1..=255).contains(&b)));
+            let mut sorted = a.rotation.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "width {n}");
+        }
+    }
+}

@@ -211,6 +211,45 @@ impl RegisterFile {
         }
     }
 
+    /// Byte-granular AXI-Lite read (the host model's narrow-access
+    /// path): any byte of any register in this layout's byte map
+    /// (`addr = 4·reg + lane`).  `None` past the configured layout.
+    pub fn read_byte(&self, addr: u32) -> Option<u8> {
+        let idx = (addr / 4) as usize;
+        if idx >= self.regs.len() {
+            return None;
+        }
+        Some((self.regs[idx] >> (8 * (addr % 4))) as u8)
+    }
+
+    /// Byte-granular AXI-Lite write: read-modify-write of the
+    /// containing 32-bit register, so a single-byte store into a packed
+    /// bank (e.g. one master's 8-bit WRR budget field) replaces exactly
+    /// that field and leaves its register neighbours untouched.
+    /// Out-of-layout addresses are refused, never panicking; refusals
+    /// do not bump the write generation.
+    ///
+    /// Precedence: on managed boards the bandwidth plan is the
+    /// authoritative writer of the budget banks — a byte patch to a
+    /// budget field takes effect immediately (generation-bumped) but
+    /// only lasts until the next allocation event whose compiled plan
+    /// differs from the last one applied
+    /// ([`crate::manager::ElasticManager::apply_plan`] rewrites the
+    /// banks then).  Patches to non-budget registers are not subject
+    /// to plan rewrites.
+    pub fn write_byte(&mut self, addr: u32, value: u8) -> bool {
+        let idx = (addr / 4) as usize;
+        if idx >= self.regs.len() {
+            return false;
+        }
+        let shift = 8 * (addr % 4);
+        let mut v = self.regs[idx];
+        v &= !(0xFFu32 << shift);
+        v |= (value as u32) << shift;
+        self.write(idx, v);
+        true
+    }
+
     /// Read by **Table III** byte address, translated through the v1
     /// compatibility window — host software written against the 4-port
     /// map keeps working on any layout width.
@@ -357,6 +396,46 @@ impl RegisterFile {
         v |= packages << shift;
         self.write(idx, v);
         Ok(())
+    }
+
+    /// Program a compiled bandwidth plan ([`crate::qos::PlanProgram`])
+    /// into the banked package-budget registers: `budgets[m]` becomes
+    /// master `m`'s per-grant budget at **every** slave port (bandwidth
+    /// is a property of the master plane).  `budgets` must cover the
+    /// whole layout width with values 1..=255.
+    pub fn write_master_budgets(&mut self, budgets: &[u32]) -> Result<()> {
+        if budgets.len() != self.layout.num_ports() {
+            return Err(ElasticError::Config(format!(
+                "plan programs {} masters, layout has {} ports",
+                budgets.len(),
+                self.layout.num_ports()
+            )));
+        }
+        for (m, &b) in budgets.iter().enumerate() {
+            if b == 0 {
+                return Err(ElasticError::Config(format!(
+                    "plan assigns master {m} a zero package budget"
+                )));
+            }
+        }
+        for s in 0..self.layout.num_ports() {
+            for (m, &b) in budgets.iter().enumerate() {
+                self.set_allowed_packages(s, m, b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-master budget image the last plan write left behind,
+    /// read back from the slave-0 budget bank (plan writes are uniform
+    /// across slaves; 0 means "unprogrammed, default applies").
+    pub fn master_budgets(&self) -> Vec<u32> {
+        (0..self.layout.num_ports())
+            .map(|m| {
+                self.allowed_packages(0, m)
+                    .expect("master within own layout")
+            })
+            .collect()
     }
 
     /// Application `id`'s destination address.
@@ -608,6 +687,63 @@ mod tests {
         ));
         let g = rf.generation();
         assert_eq!(g, 0, "refused writes must not bump the generation");
+    }
+
+    #[test]
+    fn byte_shim_rmw_preserves_packed_neighbours() {
+        // Table III reg 10 (byte base 0x28) packs four budget fields;
+        // a single-byte host store must replace exactly one field.
+        let mut rf = RegisterFile::new();
+        rf.set_allowed_packages(1, 0, 16).unwrap();
+        rf.set_allowed_packages(1, 3, 128).unwrap();
+        assert!(rf.write_byte(0x28 + 1, 77), "master 1's field, byte lane 1");
+        assert_eq!(rf.allowed_packages(1, 0).unwrap(), 16, "lane 0 untouched");
+        assert_eq!(rf.allowed_packages(1, 1).unwrap(), 77);
+        assert_eq!(rf.allowed_packages(1, 3).unwrap(), 128, "lane 3 untouched");
+        assert_eq!(rf.read_byte(0x28 + 1), Some(77));
+        assert_eq!(rf.read_byte(0x28 + 3), Some(128));
+        // Device-ID bytes read little-endian lane by lane.
+        assert_eq!(rf.read_byte(0x0), Some((DEVICE_ID_VALUE & 0xFF) as u8));
+        assert_eq!(rf.read_byte(0x3), Some((DEVICE_ID_VALUE >> 24) as u8));
+        // Past the layout: refused, no generation bump, no panic.
+        let g = rf.generation();
+        assert_eq!(rf.read_byte(4 * NUM_REGS as u32), None);
+        assert!(!rf.write_byte(4 * NUM_REGS as u32, 1));
+        assert_eq!(rf.generation(), g);
+    }
+
+    #[test]
+    fn byte_shim_reaches_spill_banks_on_wide_layouts() {
+        // Master 13's budget at slave 2 on a 16-port board lives in a
+        // spill register Table III never had (reg 44, lane 1).
+        let mut rf = RegisterFile::with_ports(16);
+        let l = *rf.layout();
+        let reg = l.packages_reg(2, 13);
+        let lane = RegfileLayout::packages_shift(13) / 8;
+        assert!(rf.write_byte(4 * reg as u32 + lane, 42));
+        assert_eq!(rf.allowed_packages(2, 13).unwrap(), 42);
+        assert_eq!(rf.read_byte(4 * reg as u32 + lane), Some(42));
+    }
+
+    #[test]
+    fn master_budget_plane_round_trips() {
+        let mut rf = RegisterFile::with_ports(8);
+        let budgets: Vec<u32> = (1..=8).collect();
+        rf.write_master_budgets(&budgets).unwrap();
+        assert_eq!(rf.master_budgets(), budgets);
+        // Uniform across every slave bank.
+        for s in 0..8 {
+            for m in 0..8 {
+                assert_eq!(
+                    rf.allowed_packages(s, m).unwrap(),
+                    budgets[m],
+                    "slave {s} master {m}"
+                );
+            }
+        }
+        // Wrong width and zero budgets are typed refusals.
+        assert!(rf.write_master_budgets(&[1; 4]).is_err());
+        assert!(rf.write_master_budgets(&[1, 1, 1, 0, 1, 1, 1, 1]).is_err());
     }
 
     #[test]

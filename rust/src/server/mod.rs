@@ -340,9 +340,7 @@ fn select_lane(
         }
         AdmissionPolicy::BandwidthAware => (0..lanes.len())
             .min_by_key(|&i| {
-                let m = &lanes[i].manager;
-                let spare =
-                    m.spare_bandwidth().saturating_sub(m.bandwidth_in_use());
+                let spare = lanes[i].manager.spare_share();
                 (std::cmp::Reverse(spare), lanes[i].clock, i)
             })
             .expect("server has lanes"),

@@ -30,9 +30,15 @@ pub fn lzc_select(requests: u32, width: u32, last: Option<u32>) -> Option<u32> {
         return None;
     }
     // Rotate so that position (last+1) maps to bit 0, emulating the
-    // barrel-shift in front of the LZC tree.
+    // barrel-shift in front of the LZC tree.  `start == 0` must not
+    // shift by `width`: at a full 32-bit vector that is `u32 << 32`,
+    // an overflow panic in debug builds.
     let start = last.map(|l| (l + 1) % width).unwrap_or(0);
-    let rotated = ((req >> start) | (req << (width - start))) & mask;
+    let rotated = if start == 0 {
+        req
+    } else {
+        ((req >> start) | (req << (width - start))) & mask
+    };
     // First set bit from the LSB end of the rotated vector = 31 - LZC of
     // the bit-reversed vector; equivalent to trailing_zeros here.
     let first = rotated.trailing_zeros();
@@ -92,5 +98,15 @@ mod tests {
     #[test]
     fn ignores_bits_beyond_width() {
         assert_eq!(lzc_select(0xFFF0, 4, None), None);
+    }
+
+    #[test]
+    fn full_width_vector_never_overflows_the_rotate() {
+        // width = 32 with start = 0 (reset, or last = 31) used to shift
+        // a u32 by 32 — a debug-build overflow panic.
+        assert_eq!(lzc_select(u32::MAX, 32, None), Some(0));
+        assert_eq!(lzc_select(u32::MAX, 32, Some(31)), Some(0));
+        assert_eq!(lzc_select(u32::MAX, 32, Some(0)), Some(1));
+        assert_eq!(lzc_select(1 << 31, 32, Some(31)), Some(31));
     }
 }

@@ -37,23 +37,38 @@ fn shipped_scale16_config_serves_chains_beyond_the_table3_window() {
     // configured layout.
     use elastic_fpga::manager::{AppRequest, ElasticManager};
     use elastic_fpga::modules::ModuleKind;
+    use elastic_fpga::qos::BandwidthPlan;
     let cfg = SystemConfig::load(&repo("configs/scale16.toml")).unwrap();
+    // The shipped [qos] table contracts app 2 (the scale-out example's
+    // tenant); everyone else rides best-effort.
+    assert_eq!(cfg.qos.shares, vec![(2, 600)]);
     let mut m = ElasticManager::new(cfg, None);
     let chain: Vec<usize> = (1..=15).collect();
-    m.program_app_chain(0, &chain, 17).unwrap();
+    m.program_app_chain(0, &chain).unwrap();
     let rf = &m.fabric().regfile;
     for r in 1..=15usize {
         assert_ne!(rf.pr_destination(r).unwrap(), 0, "region {r} dest");
         assert_ne!(rf.allowed_slaves(r).unwrap(), 0, "region {r} mask");
-        // Each region's master budget at its downstream slave hop.
+        // App 0 has no contract: its masters ride the best-effort pool
+        // at the default budget, at every slave bank.
         let next = if r == 15 { 0 } else { r + 1 };
         assert_eq!(
             rf.allowed_packages(next, r).unwrap(),
-            17,
+            8,
             "region {r} WRR budget"
         );
     }
-    assert_eq!(rf.allowed_packages(1, 0).unwrap(), 17, "bridge hop");
+    assert_eq!(rf.allowed_packages(1, 0).unwrap(), 64, "bridge quantum");
+    // Contract app 0 at 750/1000: the compiler re-lowers the whole
+    // budget plane — 48 packages spread 4/4/4/3/.../3 over 15 masters.
+    let plan = BandwidthPlan::with_shares(&[(0, 750)]).unwrap();
+    let prog = m.set_bandwidth_plan(plan).unwrap();
+    assert_eq!(m.fabric().regfile.master_budgets(), prog.budgets);
+    assert_eq!(prog.app_packages, vec![(0, 48)]);
+    let rf = &m.fabric().regfile;
+    assert_eq!(rf.allowed_packages(0, 1).unwrap(), 4);
+    assert_eq!(rf.allowed_packages(0, 15).unwrap(), 3);
+    assert_eq!(m.bandwidth_in_use(), 750);
     // A 9-stage chain executes fully on fabric (PR 2 capped at 3).
     let mut data = vec![0u32; 64];
     elastic_fpga::util::SplitMix64::new(42).fill_u32(&mut data);
@@ -137,4 +152,32 @@ fn cli_serve_small_run() {
         run_cli(&["serve", "--no-pjrt", "--requests", "8", "--words", "256"]);
     assert!(ok, "{text}");
     assert!(text.contains("8/8 ok"), "{text}");
+}
+
+#[test]
+fn cli_plan_flag_overlays_shares_and_rejects_garbage() {
+    let (ok, text) = run_cli(&[
+        "serve",
+        "--no-pjrt",
+        "--requests",
+        "4",
+        "--words",
+        "256",
+        "--plan",
+        "0=600,1=200",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("4/4 ok"), "{text}");
+    // Overcommitted and malformed specs fail with a config error.
+    let (ok, text) = run_cli(&["serve", "--plan", "0=800,1=300"]);
+    assert!(!ok);
+    assert!(text.contains("overcommitted"), "{text}");
+    let (ok, text) = run_cli(&["serve", "--plan", "0:800"]);
+    assert!(!ok);
+    assert!(text.contains("app=share"), "{text}");
+    // The autoscale engine owns the plane: --plan is refused loudly
+    // rather than silently discarded.
+    let (ok, text) = run_cli(&["autoscale", "--plan", "0=700"]);
+    assert!(!ok);
+    assert!(text.contains("--plan has no effect"), "{text}");
 }

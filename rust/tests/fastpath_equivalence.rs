@@ -82,7 +82,7 @@ fn draw_workload(g: &mut Gen) -> Workload {
 fn run(w: &Workload, fast: bool) -> (Harness, u64, Option<u64>) {
     let mut h = Harness::new(4, CrossbarConfig::default());
     for &(slave, master, packages) in &w.budgets {
-        h.xb.set_allowed_packages(slave, master, packages);
+        h.xb.set_allowed_packages(slave, master, packages).unwrap();
     }
     let mut sched: Schedule<Harness> = Schedule::new();
     for (cycle, src, dest, words, app) in w.jobs.iter().cloned() {

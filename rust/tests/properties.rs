@@ -156,8 +156,8 @@ fn prop_wrr_budgets_bound_burst_lengths() {
         let b0 = g.int("b0", 1, 64) as u32;
         let b1 = g.int("b1", 1, 64) as u32;
         let mut xb = open_xbar(4);
-        xb.set_allowed_packages(2, 0, b0);
-        xb.set_allowed_packages(2, 1, b1);
+        xb.set_allowed_packages(2, 0, b0).unwrap();
+        xb.set_allowed_packages(2, 1, b1).unwrap();
         xb.push_job(0, Job::new(encode_onehot(2), vec![0xA; 400], 0));
         xb.push_job(1, Job::new(encode_onehot(2), vec![0xB; 400], 1));
         let (events, delivered) = run_draining(&mut xb, 2_000_000);
@@ -278,8 +278,8 @@ fn prop_wrr_share_matches_package_weights_within_one_grant() {
         let rounds = 12u32;
         let mut xb = open_xbar(4);
         xb.set_record_grants(true);
-        xb.set_allowed_packages(2, 0, b0);
-        xb.set_allowed_packages(2, 1, b1);
+        xb.set_allowed_packages(2, 0, b0).unwrap();
+        xb.set_allowed_packages(2, 1, b1).unwrap();
         // Job lengths are exact multiples of the budgets, so both
         // masters stay saturated for `rounds` full grants each.
         xb.push_job(0, Job::new(encode_onehot(2), vec![0xA; (b0 * rounds) as usize], 0));
@@ -510,6 +510,162 @@ fn prop_banked_layout_round_trips_every_field() {
         }
         if rf.generation() != gen_before {
             return Err("refused write bumped the generation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_per_app_share_proportionality_within_one_grant() {
+    // The bandwidth plane's core guarantee, at 8 and 16 ports: two apps
+    // with random shares and random (multi-master) footprints under
+    // saturating load receive packages proportional to their shares
+    // within one grant at every prefix of the grant sequence.
+    check(0x905A, 24, |g: &mut Gen| {
+        use elastic_fpga::qos::BandwidthPlan;
+        let n = g.choose("ports", &[8usize, 16]);
+        let k0 = g.int("k0", 1, 3) as usize; // app 0 masters
+        let k1 = g.int("k1", 1, 3) as usize; // app 1 masters
+        let s0 = g.int("s0", 100, 600) as u32;
+        let s1 = g.int("s1", 100, 400) as u32;
+        let plan = BandwidthPlan::with_shares(&[(0, s0), (1, s1)])
+            .map_err(|e| e.to_string())?;
+        let mut port_app = vec![None; n];
+        for p in 1..=k0 {
+            port_app[p] = Some(0);
+        }
+        for p in k0 + 1..=k0 + k1 {
+            port_app[p] = Some(1);
+        }
+        let prog = plan
+            .compile(&port_app, 64, 8)
+            .map_err(|e| e.to_string())?;
+        let total0 = prog.app_packages[0].1;
+        let total1 = prog.app_packages[1].1;
+
+        let mut xb = open_xbar(n);
+        xb.set_record_grants(true);
+        xb.set_rotation_order(&prog.rotation).unwrap();
+        for (m, &b) in prog.budgets.iter().enumerate() {
+            for s in 0..n {
+                xb.set_allowed_packages(s, m, b).unwrap();
+            }
+        }
+        // Saturate: every owned master streams toward slave 0 with a
+        // job sized to `rounds` full grants of its budget.
+        let rounds = 8u32;
+        for p in 1..=k0 + k1 {
+            let app = port_app[p].unwrap();
+            let len = (prog.budgets[p] * rounds) as usize;
+            xb.push_job(p, Job::new(encode_onehot(0), vec![p as u32; len], app));
+        }
+        let (events, delivered) = run_draining(&mut xb, 4_000_000);
+        if events.iter().any(|e| e.result.is_err()) {
+            return Err("error event".into());
+        }
+        let want: usize = ((total0 + total1) * rounds) as usize;
+        if delivered[0].len() != want {
+            return Err(format!("lost words: {}", delivered[0].len()));
+        }
+        // Every grant delivers exactly its master's compiled budget
+        // (that is the ±1-grant guarantee: per-master grant counts can
+        // never skew by more than one within a rotation), and every
+        // full rotation hands each app exactly its per-rotation quota —
+        // package shares equal plan shares at rotation granularity.
+        let log = xb.grant_log();
+        if log.len() != (rounds as usize) * (k0 + k1) {
+            return Err(format!(
+                "{} grants for {} masters x {rounds} rounds",
+                log.len(),
+                k0 + k1
+            ));
+        }
+        for rec in log {
+            if rec.words != prog.budgets[rec.master] {
+                return Err(format!(
+                    "grant delivered {} words, master {}'s budget is {}",
+                    rec.words, rec.master, prog.budgets[rec.master]
+                ));
+            }
+        }
+        for (i, rotation) in log.chunks(k0 + k1).enumerate() {
+            let mut per_app = [0u32; 2];
+            for rec in rotation {
+                per_app[port_app[rec.master].unwrap() as usize] += rec.words;
+            }
+            if per_app != [total0, total1] {
+                return Err(format!(
+                    "rotation {i} at n={n}: apps got {per_app:?}, plan \
+                     says {total0}:{total1}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_compile_regfile_write_arbiter_round_trip() {
+    // At any width 2..=32: compiling a random plan, writing it through
+    // the banked register file, and mirroring the regfile into a
+    // crossbar (the fabric's sync path) yields arbiter budgets equal to
+    // the compiled program — the plan survives the full lowering chain.
+    check(0x9057, DEFAULT_CASES, |g: &mut Gen| {
+        use elastic_fpga::qos::BandwidthPlan;
+        use elastic_fpga::regfile::RegisterFile;
+        let n = g.int("ports", 2, 32) as usize;
+        let apps = g.int("apps", 1, 4) as u32;
+        let mut plan = BandwidthPlan::new();
+        for a in 0..apps {
+            // At most 4 x 200 = 800 of the 1000-ppu plane: never
+            // overcommits, whatever the draw.
+            let s = g.int("share", 10, 200) as u32;
+            plan.set_share(a, s).map_err(|e| e.to_string())?;
+        }
+        let mut port_app = vec![None; n];
+        for p in 1..n {
+            if g.int("owned", 0, 2) > 0 {
+                port_app[p] = Some(g.int("owner", 0, apps as u64) as u32);
+            }
+        }
+        let prog = plan
+            .compile(&port_app, 64, 8)
+            .map_err(|e| e.to_string())?;
+
+        let mut rf = RegisterFile::with_ports(n);
+        rf.write_master_budgets(&prog.budgets)
+            .map_err(|e| e.to_string())?;
+        if rf.master_budgets() != prog.budgets {
+            return Err("regfile round-trip diverged".into());
+        }
+        let mut xb = open_xbar(n);
+        xb.set_rotation_order(&prog.rotation).unwrap();
+        for s in 0..n {
+            for m in 0..n {
+                let b = rf.allowed_packages(s, m).unwrap();
+                let effective = if b == 0 { 8 } else { b };
+                xb.set_allowed_packages(s, m, effective).unwrap();
+            }
+        }
+        if xb.rotation_order() != prog.rotation.as_slice() {
+            return Err("rotation order diverged".into());
+        }
+        // Spot-check arbiter-visible budgets against the program via
+        // the public burst bound: run one saturated master and check
+        // its max burst equals its compiled budget.
+        let m = g.int("probe", 1, n as u64 - 1) as usize;
+        let len = (prog.budgets[m] * 3) as usize;
+        xb.push_job(m, Job::new(encode_onehot(0), vec![1; len], 0));
+        let (events, _) = run_draining(&mut xb, 2_000_000);
+        if events.iter().any(|e| e.result.is_err()) {
+            return Err("error event".into());
+        }
+        if xb.stats().port_max_burst[m] != prog.budgets[m] {
+            return Err(format!(
+                "master {m}: burst {} != compiled budget {}",
+                xb.stats().port_max_burst[m],
+                prog.budgets[m]
+            ));
         }
         Ok(())
     });
