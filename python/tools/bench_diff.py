@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Structural diff for the committed BENCH_*.json perf-trajectory files.
+
+The committed baselines at the repo root record the *shape* of the perf
+trajectory: which benches exist, which cases they measure, and which
+metrics each case reports.  The metric values themselves are wall-clock
+(machine-dependent) or evolve across PRs, so CI compares the committed
+file against a fresh smoke run **structurally**:
+
+  * objects must have the same key sets (recursively),
+  * arrays must have the same length and element structure,
+  * string leaves (bench/case names) must match exactly,
+  * numeric leaves must agree on kind (number) but not on value.
+
+A silent bench rename, a dropped case, or a removed metric — the
+"perf-format rot" that previously let the trajectory decay unnoticed —
+fails the build; a faster or slower machine does not.
+
+Usage: bench_diff.py COMMITTED_JSON FRESH_JSON
+"""
+
+import json
+import sys
+
+
+def diff(path, committed, fresh, problems):
+    # bool subclasses int in Python: without this check a numeric metric
+    # replaced by true/false would slip through the numeric escape below.
+    both_numbers = (
+        isinstance(committed, (int, float))
+        and isinstance(fresh, (int, float))
+        and not isinstance(committed, bool)
+        and not isinstance(fresh, bool)
+    )
+    if type(committed) is not type(fresh) and not both_numbers:
+        problems.append(
+            f"{path}: type changed "
+            f"({type(committed).__name__} -> {type(fresh).__name__})"
+        )
+        return
+    if isinstance(committed, dict):
+        missing = sorted(set(committed) - set(fresh))
+        added = sorted(set(fresh) - set(committed))
+        if missing:
+            problems.append(f"{path}: keys vanished from fresh run: {missing}")
+        if added:
+            problems.append(f"{path}: keys not in committed baseline: {added}")
+        for key in sorted(set(committed) & set(fresh)):
+            diff(f"{path}.{key}", committed[key], fresh[key], problems)
+    elif isinstance(committed, list):
+        if len(committed) != len(fresh):
+            problems.append(
+                f"{path}: length changed ({len(committed)} -> {len(fresh)})"
+            )
+        for i, (c, f) in enumerate(zip(committed, fresh)):
+            diff(f"{path}[{i}]", c, f, problems)
+    elif isinstance(committed, str):
+        if committed != fresh:
+            problems.append(f"{path}: '{committed}' != '{fresh}'")
+    # Numeric and boolean leaves: kind already matched above; values are
+    # allowed to move — that is the trajectory.
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    committed_path, fresh_path = sys.argv[1], sys.argv[2]
+    with open(committed_path) as fh:
+        committed = json.load(fh)
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+    problems = []
+    diff("$", committed, fresh, problems)
+    if problems:
+        print(f"perf-trajectory format rot: {committed_path} vs {fresh_path}")
+        for p in problems:
+            print(f"  {p}")
+        sys.exit(1)
+    print(f"ok: {fresh_path} matches the committed baseline structurally")
+
+
+if __name__ == "__main__":
+    main()

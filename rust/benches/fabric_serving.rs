@@ -1,0 +1,194 @@
+//! End-to-end fabric serving bench: the busy-period horizon fast-path
+//! (DESIGN.md §12) vs the cycle-by-cycle oracle on a diurnal serving
+//! trace, at 4 and 16 ports, with ICAP-timed installs on every request.
+//! Emits `BENCH_fabric.json` — executed-vs-skipped cycle accounting and
+//! requests/sec — so the perf trajectory has an end-to-end number next
+//! to `BENCH_crossbar.json`.
+//!
+//! The two modes are cycle-exact (pinned by
+//! `tests/fastpath_equivalence.rs`); this bench cross-checks that on
+//! its own trace — identical outputs, costs and total virtual cycles —
+//! and claims the fast path executes >= 5x fewer ticks than the oracle.
+//!
+//! ```bash
+//! cargo bench --bench fabric_serving            # full run
+//! cargo bench --bench fabric_serving -- --smoke # CI smoke mode
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::manager::ElasticManager;
+use elastic_fpga::workload::{diurnal_tenants, generate_profiled, TraceEvent};
+
+/// One mode's run over a trace: total wall seconds, executed/skipped
+/// fabric cycles, total virtual cycles, and the per-request service
+/// summaries used for the oracle cross-check.
+struct ModeRun {
+    wall_s: f64,
+    executed_cycles: u64,
+    skipped_cycles: u64,
+    virtual_cycles: u64,
+    /// `(app_id, fabric cycles, reconfig cycles, output checksum)`.
+    summaries: Vec<(u32, u64, u64, u32)>,
+}
+
+fn run_mode(cfg: &SystemConfig, trace: &[TraceEvent], fast: bool) -> ModeRun {
+    let mut mgr = ElasticManager::new(cfg.clone(), None);
+    mgr.use_icap = true;
+    mgr.fast_path = fast;
+    let mut summaries = Vec::with_capacity(trace.len());
+    let t0 = std::time::Instant::now();
+    for ev in trace {
+        let rep = mgr.execute(&ev.request).expect("request failed");
+        assert!(rep.verified, "fabric output failed golden verification");
+        let checksum = rep
+            .output
+            .iter()
+            .fold(0u32, |acc, &w| acc.rotate_left(1) ^ w);
+        summaries.push((
+            rep.app_id,
+            rep.timeline.fabric_cycles,
+            rep.timeline.reconfig_cycles,
+            checksum,
+        ));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let fabric = mgr.fabric();
+    ModeRun {
+        wall_s,
+        executed_cycles: fabric.executed_cycles,
+        skipped_cycles: fabric.skipped_cycles,
+        virtual_cycles: fabric.now(),
+        summaries,
+    }
+}
+
+struct CaseResult {
+    name: &'static str,
+    ports: usize,
+    requests: usize,
+    oracle_executed: u64,
+    fast_executed: u64,
+    fast_skipped: u64,
+    virtual_cycles: u64,
+    executed_ratio: f64,
+    oracle_req_per_s: f64,
+    fast_req_per_s: f64,
+}
+
+fn run_case(
+    name: &'static str,
+    ports: usize,
+    tenants: u32,
+    requests: usize,
+    claims: &mut harness::Claims,
+) -> CaseResult {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.fabric.num_ports = ports;
+    cfg.fabric.num_pr_regions = ports - 1;
+    // A realistic-but-benchable partial bitstream (64K words -> 128K
+    // cycles of ICAP streaming per region) keeps the oracle runnable
+    // while leaving the horizon plenty to skip.
+    cfg.manager.bitstream_bytes = 256 * 1024;
+    // Diurnal anti-phase tenants on the Fig-5 pipeline: the serving
+    // trace the autoscaler line of work uses.
+    let specs = diurnal_tenants(tenants, 40.0, 400.0, 60.0, 64);
+    let trace = generate_profiled(&specs, 0xD1_0B_5EED, requests);
+
+    let fast = run_mode(&cfg, &trace, true);
+    let oracle = run_mode(&cfg, &trace, false);
+
+    // Oracle cross-check: byte-identical service summaries (outputs,
+    // fabric cycles, reconfig cycles) and total virtual time.
+    claims.check(
+        fast.summaries == oracle.summaries,
+        &format!("{name}: fast-path summaries byte-identical to oracle"),
+    );
+    claims.check(
+        fast.virtual_cycles == oracle.virtual_cycles,
+        &format!("{name}: same virtual cycle count in both modes"),
+    );
+    claims.check(
+        fast.executed_cycles + fast.skipped_cycles == fast.virtual_cycles,
+        &format!("{name}: executed + skipped accounts every cycle"),
+    );
+    let ratio = oracle.executed_cycles as f64 / fast.executed_cycles.max(1) as f64;
+    claims.check(
+        ratio >= 5.0,
+        &format!("{name}: fast path executes >= 5x fewer cycles ({ratio:.1}x)"),
+    );
+
+    let result = CaseResult {
+        name,
+        ports,
+        requests,
+        oracle_executed: oracle.executed_cycles,
+        fast_executed: fast.executed_cycles,
+        fast_skipped: fast.skipped_cycles,
+        virtual_cycles: fast.virtual_cycles,
+        executed_ratio: ratio,
+        oracle_req_per_s: requests as f64 / oracle.wall_s.max(1e-9),
+        fast_req_per_s: requests as f64 / fast.wall_s.max(1e-9),
+    };
+    println!(
+        "  {:<10} oracle {:>12} cc executed | fast {:>9} cc executed + {:>12} skipped ({:>6.1}x) | {:>8.0} vs {:>8.0} req/s",
+        result.name,
+        result.oracle_executed,
+        result.fast_executed,
+        result.fast_skipped,
+        result.executed_ratio,
+        result.oracle_req_per_s,
+        result.fast_req_per_s,
+    );
+    result
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let requests = if smoke { 24 } else { 200 };
+    harness::section(if smoke {
+        "fabric serving: horizon fast-path vs oracle (smoke)"
+    } else {
+        "fabric serving: horizon fast-path vs oracle"
+    });
+
+    let mut claims = harness::Claims::new();
+    let cases = [
+        run_case("ports4", 4, 3, requests, &mut claims),
+        run_case("ports16", 16, 6, requests, &mut claims),
+    ];
+
+    // Machine-readable trajectory point.  Cycle counts are
+    // deterministic; the req/s rates are wall-clock and vary run to run
+    // (the committed baseline is compared structurally — see
+    // python/tools/bench_diff.py).
+    let mut json = String::from("{\n  \"bench\": \"fabric_serving\",\n");
+    json.push_str(&format!("  \"requests_per_case\": {requests},\n"));
+    json.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ports\": {}, \"requests\": {}, \
+             \"oracle_executed_cycles\": {}, \"fast_executed_cycles\": {}, \
+             \"fast_skipped_cycles\": {}, \"virtual_cycles\": {}, \
+             \"executed_ratio\": {:.2}, \"oracle_requests_per_s\": {:.1}, \
+             \"fast_requests_per_s\": {:.1}}}{}\n",
+            c.name,
+            c.ports,
+            c.requests,
+            c.oracle_executed,
+            c.fast_executed,
+            c.fast_skipped,
+            c.virtual_cycles,
+            c.executed_ratio,
+            c.oracle_req_per_s,
+            c.fast_req_per_s,
+            if i + 1 < cases.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_fabric.json", &json).expect("write BENCH_fabric.json");
+    println!("  wrote BENCH_fabric.json");
+    claims.finish();
+}

@@ -579,6 +579,24 @@ impl EventDriven for Crossbar {
         self.cycle = to_cycle;
         self.stats.cycles += skipped;
     }
+
+    /// The crossbar never advertises a busy-period horizon beyond the
+    /// next cycle (DESIGN.md §12): while any master is mid-transfer the
+    /// datapath is *consumer-coupled* — each word's delivery depends on
+    /// the receiving slave's buffer, which the attached module or bridge
+    /// drains outside the crossbar's view, and each WRR rotation
+    /// boundary re-enters the 2-cycle arbitration pipeline.  No
+    /// arithmetic replay can be sound without knowledge of the
+    /// consumers, so busy crossbar cycles always execute for real; the
+    /// composition layer ([`crate::fabric`]) only skips when the whole
+    /// crossbar sits at [`Crossbar::stable_point`].
+    fn next_interesting_cycle(&self, now: u64) -> u64 {
+        if self.stable_point() {
+            crate::sim::HORIZON_NONE
+        } else {
+            now + 1
+        }
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,13 @@ pub struct Fabric {
     synced_gen: u64,
     /// Last ICAP status mirrored into the regfile.
     mirrored_icap: crate::regfile::IcapStatus,
+    /// Cycles actually executed through [`Tick::tick`] (perf
+    /// observability — `benches/fabric_serving.rs` reports executed vs
+    /// skipped; excluded from oracle-equivalence comparisons by design).
+    pub executed_cycles: u64,
+    /// Cycles accounted arithmetically by the fast-path
+    /// ([`EventDriven::fast_forward`]) instead of executed.
+    pub skipped_cycles: u64,
     cycle: u64,
 }
 
@@ -95,6 +102,8 @@ impl Fabric {
             reconfig_log: Vec::new(),
             synced_gen: 0,
             mirrored_icap: crate::regfile::IcapStatus::Idle,
+            executed_cycles: 0,
+            skipped_cycles: 0,
             cfg,
             cycle: 0,
         }
@@ -222,19 +231,67 @@ impl Fabric {
             && self.rx_accum.iter().all(Vec::is_empty)
     }
 
-    /// Run until [`Fabric::idle`] or `max` cycles; returns cycles executed.
-    pub fn run_until_idle(&mut self, max: u64) -> Result<u64> {
-        let start = self.cycle;
-        for _ in 0..max {
+    /// The one fast/oracle drive loop (DESIGN.md §12): execute cycles
+    /// until `done(self)` holds after a tick or the clock reaches
+    /// `end`; returns whether `done` held.  With `fast` on,
+    /// deterministic busy stretches fast-forward through the
+    /// busy-period horizon instead of single-stepping.  `done` must be
+    /// invariant over skipped stretches — true for both current
+    /// predicates ([`Fabric::idle`] and module installation, which only
+    /// change at executed cycles) — so checking it only at executed
+    /// cycles observes the same stop cycle the oracle does.  Every
+    /// caller shares this loop so the skip contract lives in one place.
+    pub(crate) fn drive_until(
+        &mut self,
+        end: u64,
+        fast: bool,
+        done: impl Fn(&Fabric) -> bool,
+    ) -> bool {
+        while self.cycle < end {
+            if fast && !done(self) {
+                let target = self
+                    .next_interesting_cycle(self.cycle)
+                    .saturating_sub(1)
+                    .min(end.saturating_sub(1));
+                if target > self.cycle {
+                    self.fast_forward(target);
+                }
+            }
             let c = self.cycle + 1;
             self.tick(c);
-            if self.idle() {
-                return Ok(self.cycle - start);
+            if done(self) {
+                return true;
             }
         }
-        Err(ElasticError::Sim(format!(
-            "fabric did not quiesce within {max} cycles"
-        )))
+        false
+    }
+
+    fn run_until_idle_impl(&mut self, max: u64, fast: bool) -> Result<u64> {
+        let start = self.cycle;
+        let end = start.saturating_add(max);
+        if self.drive_until(end, fast, Fabric::idle) {
+            Ok(self.cycle - start)
+        } else {
+            Err(ElasticError::Sim(format!(
+                "fabric did not quiesce within {max} cycles"
+            )))
+        }
+    }
+
+    /// Run until [`Fabric::idle`] or `max` cycles; returns cycles executed.
+    /// This is the cycle-by-cycle **oracle** — every cycle ticks.
+    pub fn run_until_idle(&mut self, max: u64) -> Result<u64> {
+        self.run_until_idle_impl(max, false)
+    }
+
+    /// Horizon-skipping counterpart of [`Fabric::run_until_idle`]:
+    /// **cycle-exact** with it (same end state, same cycles charged, same
+    /// return) but only the interesting cycles execute — deterministic
+    /// busy stretches (ICAP word-streaming, module compute countdowns)
+    /// fast-forward arithmetically (DESIGN.md §12; equivalence pinned by
+    /// `tests/fastpath_equivalence.rs`).
+    pub fn run_until_idle_fast(&mut self, max: u64) -> Result<u64> {
+        self.run_until_idle_impl(max, true)
     }
 
     // ------------------------------------------------------------------
@@ -413,6 +470,7 @@ impl Fabric {
 impl Tick for Fabric {
     fn tick(&mut self, cycle: u64) {
         self.cycle = cycle;
+        self.executed_cycles += 1;
         self.sync_regfile();
         self.icap.tick(cycle);
         for done in self.icap.take_done() {
@@ -442,8 +500,60 @@ impl EventDriven for Fabric {
     }
 
     fn fast_forward(&mut self, to_cycle: u64) {
+        let delta = to_cycle.saturating_sub(self.cycle);
+        if delta == 0 {
+            return;
+        }
+        // Idle-cycle accounting plus the deterministic busy-period
+        // arithmetic each component owns (DESIGN.md §12): the crossbar
+        // accounts its cycle counter, the ICAP streams words in closed
+        // form, modules advance their compute countdowns.  Everything
+        // else is frozen over the skipped stretch — guaranteed by
+        // `next_interesting_cycle` below.
         self.xbar.fast_forward(to_cycle);
+        self.icap.fast_forward(to_cycle);
+        for slot in self.modules.iter_mut() {
+            if let Some(m) = slot.as_mut() {
+                m.fast_forward(delta);
+            }
+        }
+        self.skipped_cycles += delta;
         self.cycle = to_cycle;
+    }
+
+    /// Compose the busy-period horizon over every ticking component.
+    ///
+    /// The gate: any coupled-datapath activity — crossbar words or
+    /// arbitration, words buffered at a draining slave port, pending
+    /// register-file sync or ICAP mirroring, a filling bridge, an H2C
+    /// backlog awaiting pickup — forces `now + 1` (every cycle
+    /// interesting).  Past the gate, the only self-scheduled events left
+    /// are pure countdowns, and the fabric's horizon is their minimum:
+    /// module compute expiries, the ICAP's completion pop, bridge
+    /// passivity.  A component with no self-scheduled event reports
+    /// [`HORIZON_NONE`](crate::sim::HORIZON_NONE).
+    fn next_interesting_cycle(&self, now: u64) -> u64 {
+        if !self.xbar.stable_point()
+            || self.regfile.generation() != self.synced_gen
+            || self.icap.status != self.mirrored_icap
+            || self.icap.done_pending()
+            || self.xbar.rx_len(0) > 0
+        {
+            return now + 1;
+        }
+        let mut horizon = crate::sim::HORIZON_NONE;
+        for p in 1..self.xbar.ports() {
+            if let Some(m) = &self.modules[p] {
+                if self.xbar.rx_len(p) > 0 && m.absorb_capacity() > 0 {
+                    // The module drains its slave buffer next tick.
+                    return now + 1;
+                }
+                horizon = horizon.min(m.next_interesting_cycle(now));
+            }
+        }
+        horizon
+            .min(self.icap.next_interesting_cycle(now))
+            .min(self.axi2wb.next_interesting_cycle(&self.xdma, now))
     }
 }
 

@@ -162,8 +162,11 @@ pub struct Fleet {
 
 impl Fleet {
     /// Launch `n` fabric nodes under `policy`.  `fast_path` enables the
-    /// shape-memoized event-driven mode; with it off every request runs
-    /// on the cycle-by-cycle oracle.
+    /// shape-memoized event-driven mode *and* busy-period horizon
+    /// skipping on every node's fabric drive (DESIGN.md §12), so the
+    /// first-of-shape service-cost measurement rides the horizon too;
+    /// with it off every request runs on the cycle-by-cycle oracle,
+    /// every cycle ticked.
     pub fn launch(
         n: usize,
         cfg: &SystemConfig,
@@ -174,8 +177,11 @@ impl Fleet {
         // The cluster's own per-request policy is irrelevant here (the
         // fleet always routes explicitly via execute_on), but
         // MostAvailable is the sane default for direct cluster use.
-        let cluster =
+        let mut cluster =
             Cluster::launch(n, cfg, runtime, PlacementPolicy::MostAvailable);
+        for i in 0..n {
+            cluster.node_mut(i).manager_mut().fast_path = fast_path;
+        }
         Self {
             busy_until: vec![0; n],
             pins: HashMap::new(),

@@ -13,7 +13,7 @@
 
 use crate::modules::ModuleKind;
 use crate::regfile::IcapStatus;
-use crate::sim::Tick;
+use crate::sim::{EventDriven, Tick, HORIZON_NONE};
 use std::collections::VecDeque;
 
 /// ICAP word width is 32 bits on UltraScale devices.
@@ -62,8 +62,12 @@ enum IcapState {
 pub struct Icap {
     state: IcapState,
     /// CDC FIFO (§IV.B: "FIFO is added before the ICAP to prevent data
-    /// loss due to a mismatch in the clock frequency").
-    fifo: VecDeque<u32>,
+    /// loss due to a mismatch in the clock frequency").  Word values are
+    /// the bitstream word *index* (`stream_remaining` at push time) — a
+    /// `u64`, because bitstream lengths are 64-bit: the former `u32`
+    /// FIFO silently truncated indices past 2^32 words (pinned by
+    /// `no_truncation_past_u32_max_words`).
+    fifo: VecDeque<u64>,
     fifo_capacity: usize,
     /// Streaming source: words of the bitstream not yet pushed into the
     /// FIFO (models the dedicated XDMA channel's outstanding data).
@@ -123,9 +127,30 @@ impl Icap {
         std::mem::take(&mut self.done)
     }
 
+    /// Completions awaiting collection?
+    pub fn done_pending(&self) -> bool {
+        !self.done.is_empty()
+    }
+
     /// FIFO occupancy (test observability).
     pub fn fifo_len(&self) -> usize {
         self.fifo.len()
+    }
+
+    /// Oldest queued bitstream word index (test observability — the
+    /// truncation regression reads this).
+    pub fn fifo_peek(&self) -> Option<u64> {
+        self.fifo.front().copied()
+    }
+
+    /// The consumed-word count at which `request` completes: the word
+    /// whose pop fires Done (clean end of the bitstream) or Error
+    /// (injected CRC failure), whichever comes first.
+    fn completion_target(request: &ReconfigRequest) -> u64 {
+        match request.fail_after {
+            Some(f) => f.max(1).min(request.bitstream_words),
+            None => request.bitstream_words,
+        }
     }
 }
 
@@ -135,8 +160,10 @@ impl Tick for Icap {
         // Producer half (250 MHz): one bitstream word per fabric cycle
         // into the FIFO, as long as there is space.
         if self.stream_remaining > 0 && self.fifo.len() < self.fifo_capacity {
-            // Bitstream content is irrelevant to the model; use the index.
-            self.fifo.push_back(self.stream_remaining as u32);
+            // Bitstream content is irrelevant to the model; use the
+            // full-width index (no u64 -> u32 truncation — bitstreams
+            // past 2^32 words must keep distinct word indices).
+            self.fifo.push_back(self.stream_remaining);
             self.stream_remaining -= 1;
         }
         // Consumer half (125 MHz): one word every 2 fabric cycles.
@@ -167,6 +194,86 @@ impl Tick for Icap {
                 self.state = IcapState::Idle;
             }
         }
+    }
+}
+
+impl EventDriven for Icap {
+    fn stable(&self) -> bool {
+        !self.busy()
+    }
+
+    /// Replay the skipped word-streaming arithmetically (DESIGN.md §12).
+    ///
+    /// The producer/consumer dynamics are deterministic: one push per
+    /// fabric cycle while the FIFO has space, one pop per even cycle.
+    /// Short transients (FIFO fill, tail drain — O(capacity) cycles) are
+    /// replayed tick-by-tick; the long saturated steady state (FIFO full
+    /// at odd boundaries, one word consumed per two cycles) advances in
+    /// closed form, so skipping a multi-billion-word bitstream costs
+    /// O(capacity) work.  `to_cycle` must lie strictly before
+    /// [`next_interesting_cycle`](EventDriven::next_interesting_cycle) —
+    /// the completion pop itself always executes for real.
+    fn fast_forward(&mut self, to_cycle: u64) {
+        debug_assert!(to_cycle >= self.cycle, "ICAP cannot run backwards");
+        if !self.busy() {
+            self.cycle = to_cycle;
+            return;
+        }
+        debug_assert!(
+            to_cycle < self.next_interesting_cycle(self.cycle),
+            "skip crossed the ICAP completion"
+        );
+        while self.cycle < to_cycle {
+            let gap = to_cycle - self.cycle;
+            // Saturated steady-state invariant at an even boundary: the
+            // pop just happened (len == capacity - 1) and the stream
+            // still feeds the FIFO.  Each 2-cycle block then pushes one
+            // word (odd cycle) and pops one word (even cycle).
+            let steady = self.cycle % FABRIC_CYCLES_PER_ICAP_CYCLE == 0
+                && self.stream_remaining > 0
+                && self.fifo.len() + 1 == self.fifo_capacity
+                && gap >= FABRIC_CYCLES_PER_ICAP_CYCLE;
+            if steady {
+                let whole_blocks = gap / FABRIC_CYCLES_PER_ICAP_CYCLE;
+                let blocks = whole_blocks.min(self.stream_remaining);
+                self.stream_remaining -= blocks;
+                self.words_programmed += blocks;
+                if let IcapState::Programming { consumed, .. } = &mut self.state {
+                    *consumed += blocks;
+                }
+                self.cycle += blocks * FABRIC_CYCLES_PER_ICAP_CYCLE;
+                // FIFO contents are always the contiguous descending run
+                // of indices `stream_remaining + len ..= stream_remaining
+                // + 1` (oldest = largest at the front); rebuild it.
+                let len = self.fifo.len() as u64;
+                self.fifo.clear();
+                let lo = self.stream_remaining + 1;
+                for v in (lo..lo + len).rev() {
+                    self.fifo.push_back(v);
+                }
+            } else {
+                // Transient (fill / drain / parity alignment): replay the
+                // real tick — bounded by O(fifo_capacity) iterations.
+                let c = self.cycle + 1;
+                self.tick(c);
+            }
+        }
+    }
+
+    /// The completion cycle: the ICAP pops one word per even fabric
+    /// cycle without ever starving (the producer is twice as fast), so
+    /// the pop that reaches the completion target (bitstream end or the
+    /// injected failure word) lands a fixed number of even cycles from
+    /// `now`.
+    fn next_interesting_cycle(&self, now: u64) -> u64 {
+        let IcapState::Programming { request, consumed } = &self.state else {
+            return HORIZON_NONE;
+        };
+        let target = Self::completion_target(request);
+        debug_assert!(*consumed < target, "completed but still Programming");
+        let remaining_pops = target - *consumed;
+        let first_even = (now / FABRIC_CYCLES_PER_ICAP_CYCLE + 1) * FABRIC_CYCLES_PER_ICAP_CYCLE;
+        first_even + (remaining_pops - 1) * FABRIC_CYCLES_PER_ICAP_CYCLE
     }
 }
 
@@ -235,6 +342,126 @@ mod tests {
         assert!(!done[0].ok);
         assert_eq!(icap.status, IcapStatus::Error);
         assert!(!icap.busy(), "ICAP recovers after a failed bitstream");
+    }
+
+    #[test]
+    fn no_truncation_past_u32_max_words() {
+        // Regression: the FIFO used to hold `stream_remaining as u32`,
+        // silently truncating word indices of bitstreams past 2^32
+        // words.  The first pushed index *is* the full length.
+        let words = u32::MAX as u64 + 9;
+        let mut icap = Icap::new(16);
+        assert!(icap.start(ReconfigRequest {
+            region: 1,
+            kind: ModuleKind::Multiplier,
+            app_id: 0,
+            bitstream_words: words,
+            fail_after: None,
+        }));
+        icap.tick(1);
+        assert_eq!(
+            icap.fifo_peek(),
+            Some(words),
+            "u64 word index must survive the CDC FIFO untruncated"
+        );
+        // Stream across the u32 boundary: every queued index stays
+        // distinct and descending through 2^32.
+        let to_boundary = words - u32::MAX as u64; // 9 pushes to reach 2^32
+        for c in 2..=to_boundary + 8 {
+            icap.tick(c);
+        }
+        let front = icap.fifo_peek().unwrap();
+        assert!(front > u32::MAX as u64 - 20, "boundary window: {front}");
+    }
+
+    #[test]
+    fn u32_boundary_bitstream_completes_via_busy_period_skipping() {
+        // A >2^32-word bitstream is intractable cycle-by-cycle; the
+        // busy-period horizon must stream it in O(fifo) executed ticks
+        // and land on the exact oracle completion cycle.
+        let words = u32::MAX as u64 + 5;
+        let mut icap = Icap::new(64);
+        assert!(icap.start(ReconfigRequest {
+            region: 2,
+            kind: ModuleKind::HammingEncoder,
+            app_id: 1,
+            bitstream_words: words,
+            fail_after: None,
+        }));
+        let mut clk = Clock::new();
+        let settled = clk.run_scheduled(
+            &mut icap,
+            crate::sim::Schedule::new(),
+            Icap::expected_cycles(words) + 16,
+            true,
+        );
+        assert_eq!(settled, Some(Icap::expected_cycles(words)));
+        assert_eq!(icap.words_programmed, words);
+        assert_eq!(icap.status, IcapStatus::Done);
+        assert!(!icap.busy());
+        let done = icap.take_done();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].ok);
+        assert_eq!(done[0].cycle, Icap::expected_cycles(words));
+    }
+
+    #[test]
+    fn fast_forward_matches_tick_by_tick_state_exactly() {
+        // Jump an ICAP to an arbitrary mid-stream cycle and compare the
+        // full observable state against a tick-by-tick twin — fill
+        // phase, steady state, and tail drain, odd and even landings.
+        for &(words, cap, stop) in &[
+            (100u64, 16usize, 7u64),   // mid-fill
+            (100, 16, 40),             // steady, even landing
+            (100, 16, 41),             // steady, odd landing
+            (1000, 8, 1995),           // deep steady
+            (50, 64, 99),              // one cycle before completion
+            (30, 4, 55),               // tail drain (stream exhausted)
+        ] {
+            let req = ReconfigRequest {
+                region: 1,
+                kind: ModuleKind::Multiplier,
+                app_id: 0,
+                bitstream_words: words,
+                fail_after: None,
+            };
+            let mut fast = Icap::new(cap);
+            let mut slow = Icap::new(cap);
+            assert!(fast.start(req.clone()));
+            assert!(slow.start(req));
+            assert!(
+                stop < fast.next_interesting_cycle(0),
+                "case ({words},{cap},{stop}) crosses completion"
+            );
+            fast.fast_forward(stop);
+            for c in 1..=stop {
+                slow.tick(c);
+            }
+            assert_eq!(fast.busy(), slow.busy(), "({words},{cap},{stop})");
+            assert_eq!(
+                fast.words_programmed, slow.words_programmed,
+                "({words},{cap},{stop})"
+            );
+            assert_eq!(fast.fifo_len(), slow.fifo_len(), "({words},{cap},{stop})");
+            assert_eq!(
+                fast.fifo.iter().copied().collect::<Vec<u64>>(),
+                slow.fifo.iter().copied().collect::<Vec<u64>>(),
+                "({words},{cap},{stop})"
+            );
+            assert_eq!(fast.state, slow.state, "({words},{cap},{stop})");
+            // Both twins must then finish on the same cycle.
+            let mut c = stop;
+            loop {
+                c += 1;
+                fast.tick(c);
+                slow.tick(c);
+                if !fast.busy() || c > stop + 4 * words + 8 {
+                    break;
+                }
+            }
+            assert_eq!(fast.busy(), slow.busy());
+            assert_eq!(fast.take_done(), slow.take_done());
+        }
     }
 
     #[test]

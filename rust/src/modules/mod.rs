@@ -15,6 +15,7 @@
 //! on-server stages and for cross-verification.
 
 use crate::hamming;
+use crate::sim::HORIZON_NONE;
 use crate::wishbone::{Job, WbError};
 
 /// Which accelerator a PR region hosts.
@@ -197,6 +198,36 @@ impl ComputationModule {
         }
     }
 
+    /// Busy-period horizon of the module FSM (DESIGN.md §12): the next
+    /// cycle whose tick does anything beyond decrementing the compute
+    /// countdown.  `Computing { remaining }` fires its master-interface
+    /// request on the tick `remaining` cycles out; a full input batch
+    /// transitions next tick; every other state is passive — it changes
+    /// only on external stimulus (crossbar words or send completion).
+    pub fn next_interesting_cycle(&self, now: u64) -> u64 {
+        match self.state {
+            ModuleState::Computing { remaining } => now + (remaining as u64).max(1),
+            ModuleState::Ready if self.input.len() == self.batch_words => now + 1,
+            _ => HORIZON_NONE,
+        }
+    }
+
+    /// Account `cycles` skipped fast-path cycles: the compute countdown
+    /// advances arithmetically; every other state is a fixed point over
+    /// the skipped stretch.  Callers must keep the skip strictly below
+    /// [`ComputationModule::next_interesting_cycle`].
+    pub fn fast_forward(&mut self, cycles: u64) {
+        if let ModuleState::Computing { remaining } = self.state {
+            debug_assert!(
+                (remaining as u64) > cycles,
+                "skip crossed the compute countdown"
+            );
+            self.state = ModuleState::Computing {
+                remaining: remaining - cycles as u32,
+            };
+        }
+    }
+
     /// The fabric reports the outcome of the requested send.
     pub fn on_send_complete(&mut self, result: Result<(), WbError>) {
         debug_assert_eq!(self.state, ModuleState::SendWait);
@@ -296,5 +327,30 @@ mod tests {
         assert!(m.tick().is_none()); // 3 -> 2
         assert!(m.tick().is_none()); // 2 -> 1
         assert!(m.tick().is_some()); // fires
+    }
+
+    #[test]
+    fn horizon_tracks_the_compute_countdown() {
+        let mut m = ComputationModule::new(ModuleKind::Multiplier, 1, 0);
+        m.compute_latency = 10;
+        m.dest_onehot = 0b0001;
+        // Passive states report no self-scheduled event.
+        assert_eq!(m.next_interesting_cycle(5), HORIZON_NONE, "empty Ready");
+        m.absorb(&[1, 2, 3]);
+        assert_eq!(m.next_interesting_cycle(5), HORIZON_NONE, "partial batch");
+        m.absorb(&[4, 5, 6, 7, 8]);
+        assert_eq!(m.next_interesting_cycle(5), 6, "full batch fires next");
+        m.tick(); // Ready -> Computing{10}
+        assert_eq!(m.next_interesting_cycle(100), 110);
+        // Fast-forward 9 of the 10 countdown cycles, then fire on the
+        // horizon tick — exactly what 9 ticks would have produced.
+        m.fast_forward(9);
+        assert_eq!(m.state, ModuleState::Computing { remaining: 1 });
+        assert_eq!(m.next_interesting_cycle(109), 110);
+        assert!(m.tick().is_some(), "fires on the horizon cycle");
+        assert_eq!(m.next_interesting_cycle(110), HORIZON_NONE, "SendWait passive");
+        m.fast_forward(1000); // no-op in SendWait
+        m.on_send_complete(Ok(()));
+        assert_eq!(m.state, ModuleState::Ready);
     }
 }

@@ -28,6 +28,13 @@
 //! parallelism across requests.  The bounded queue provides
 //! backpressure: `submit` blocks when `queue_depth` requests are in
 //! flight.
+//!
+//! Every lane's fabric drive rides the busy-period horizon fast-path
+//! (`ElasticManager.fast_path`, on by default — DESIGN.md §12): FPGA
+//! prefixes and the lane autoscaler's ICAP reconfigurations execute
+//! only their interesting cycles while staying cycle-exact with the
+//! oracle, so wall-clock serving throughput scales with *work*, not
+//! with modeled ICAP latency.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};

@@ -16,11 +16,22 @@
 //! point ([`EventDriven::stable`]) and the next scheduled stimulus is
 //! k > 1 cycles away, the run jumps straight to the stimulus cycle
 //! (accounting the skipped cycles via [`EventDriven::fast_forward`]).
-//! Busy cycles are still executed one by one, so the fast-path is
+//!
+//! # Busy-period skipping (the horizon contract, DESIGN.md §12)
+//!
+//! Even *inside* a busy period many cycles are deterministic counter
+//! arithmetic: a module compute countdown, the ICAP's word-streaming
+//! cadence.  A component may advertise this through
+//! [`EventDriven::next_interesting_cycle`]: the earliest future cycle
+//! whose tick does anything beyond arithmetic that
+//! [`EventDriven::fast_forward`] can replay exactly.  The fast-path
+//! jumps to the cycle before that horizon (bounded by the next
+//! stimulus) instead of single-stepping.  Either way the fast-path is
 //! **cycle-exact**: the same schedule replayed in oracle mode (`fast =
 //! false`, every cycle ticked) produces identical component state,
 //! events, and statistics — pinned by `tests/fastpath_equivalence.rs`
-//! over randomized crossbar workloads.
+//! over randomized crossbar *and* full-fabric workloads (long compute
+//! chains, mid-trace ICAP churn, saturated crossbars).
 
 mod trace;
 
@@ -33,6 +44,10 @@ pub trait Tick {
     fn tick(&mut self, cycle: u64);
 }
 
+/// Horizon sentinel: the component will do nothing observable without
+/// new external stimulus ([`EventDriven::next_interesting_cycle`]).
+pub const HORIZON_NONE: u64 = u64::MAX;
+
 /// A component the event-driven scheduler can fast-forward.
 pub trait EventDriven: Tick {
     /// True when the component sits at a fixed point: ticking it cannot
@@ -41,11 +56,31 @@ pub trait EventDriven: Tick {
     /// costs cycles, returning `true` spuriously breaks cycle-exactness.
     fn stable(&self) -> bool;
 
-    /// Account a jump to `to_cycle` (cycle counters, statistics) without
-    /// executing the skipped cycles.  Only called while [`stable`] holds.
+    /// Account a jump to `to_cycle` (cycle counters, statistics, and any
+    /// deterministic busy-period arithmetic — compute countdowns, word
+    /// stream positions) without executing the skipped cycles.  Called
+    /// either while [`stable`] holds, or with `to_cycle` strictly below
+    /// [`next_interesting_cycle`]; in both cases the implementation must
+    /// land on *exactly* the state the skipped ticks would have produced.
     ///
     /// [`stable`]: EventDriven::stable
+    /// [`next_interesting_cycle`]: EventDriven::next_interesting_cycle
     fn fast_forward(&mut self, to_cycle: u64);
+
+    /// Busy-period horizon (DESIGN.md §12): the earliest cycle strictly
+    /// after `now` whose tick may do anything beyond the deterministic
+    /// counter arithmetic [`fast_forward`] replays.  `now + 1` (the
+    /// default) means every cycle is interesting — never skip;
+    /// [`HORIZON_NONE`] means nothing will happen without external
+    /// stimulus.  Implementations must be conservative: a horizon that
+    /// is too near only costs cycles, one that is too far breaks
+    /// cycle-exactness, and every implementation owes the oracle an
+    /// equivalence test (`tests/fastpath_equivalence.rs`).
+    ///
+    /// [`fast_forward`]: EventDriven::fast_forward
+    fn next_interesting_cycle(&self, now: u64) -> u64 {
+        now + 1
+    }
 }
 
 /// External stimulus applied at scheduled cycles during a
@@ -151,7 +186,14 @@ impl Clock {
     /// ticked, including idle gaps between scheduled events.  `fast =
     /// true` is the event-driven **fast-path**: while the component is
     /// [`stable`](EventDriven::stable), idle gaps are skipped in one
-    /// jump.  Both modes are cycle-exact and produce identical runs.
+    /// jump, and inside busy periods the component's
+    /// [`next_interesting_cycle`](EventDriven::next_interesting_cycle)
+    /// horizon is skipped to the same way.  Both modes are cycle-exact
+    /// and produce identical runs.
+    ///
+    /// Same-cycle stimuli are delivered in **insertion order** (the sort
+    /// below is stable) — load-bearing for multi-source schedules and
+    /// pinned by `same_cycle_stimuli_apply_in_insertion_order`.
     pub fn run_scheduled<T: EventDriven>(
         &mut self,
         component: &mut T,
@@ -179,6 +221,26 @@ impl Clock {
                         }
                     }
                     _ => {}
+                }
+            } else if fast {
+                // Busy-period skipping: jump to the cycle before the
+                // component's next interesting cycle, bounded by the next
+                // stimulus and the budget.  The skipped ticks are
+                // deterministic counter arithmetic that `fast_forward`
+                // replays exactly (DESIGN.md §12).
+                let mut target = component
+                    .next_interesting_cycle(self.cycle)
+                    .saturating_sub(1)
+                    .min(end);
+                if let Some(t) = it.peek().map(|(cycle, _)| *cycle) {
+                    target = target.min(t.saturating_sub(1));
+                }
+                if target > self.cycle {
+                    component.fast_forward(target);
+                    self.jump_to(target);
+                    if self.cycle >= end {
+                        break;
+                    }
                 }
             }
             let c = self.advance();
@@ -328,5 +390,107 @@ mod tests {
         assert_eq!(clk.run_scheduled(&mut w, Schedule::new(), 10, true), Some(0));
         assert_eq!(clk.run_scheduled(&mut w, Schedule::new(), 10, false), Some(0));
         assert_eq!(clk.now(), 0);
+    }
+
+    /// Like [`Worker`], but it advertises its countdown as a busy-period
+    /// horizon and fast-forwards it arithmetically (DESIGN.md §12).
+    struct HorizonWorker {
+        inner: Worker,
+    }
+
+    impl Tick for HorizonWorker {
+        fn tick(&mut self, cycle: u64) {
+            self.inner.tick(cycle);
+        }
+    }
+
+    impl EventDriven for HorizonWorker {
+        fn stable(&self) -> bool {
+            self.inner.stable()
+        }
+
+        fn fast_forward(&mut self, to_cycle: u64) {
+            // Reached via idle-gap skips (work == 0) and busy-period
+            // skips (work > 0) alike.
+            let delta = to_cycle - self.inner.cycle;
+            if self.inner.work > 0 {
+                debug_assert!(delta < self.inner.work, "skip crossed the countdown");
+                self.inner.work -= delta;
+            }
+            self.inner.fast_forward(to_cycle);
+        }
+
+        fn next_interesting_cycle(&self, now: u64) -> u64 {
+            if self.inner.work == 0 {
+                HORIZON_NONE
+            } else {
+                // The tick that drains the countdown to zero is the next
+                // observable event; everything before it only decrements.
+                now + self.inner.work
+            }
+        }
+    }
+
+    #[test]
+    fn busy_period_horizon_skips_countdowns_exactly() {
+        let mut sched_fast = Schedule::new();
+        let mut sched_oracle = Schedule::new();
+        for s in [&mut sched_fast, &mut sched_oracle] {
+            s.at(3, |w: &mut HorizonWorker| w.inner.kick(1000));
+            s.at(2000, |w: &mut HorizonWorker| w.inner.kick(4));
+        }
+        let mut clk_f = Clock::new();
+        let mut f = HorizonWorker { inner: Worker::new() };
+        let settled_f = clk_f.run_scheduled(&mut f, sched_fast, 10_000, true);
+        let mut clk_o = Clock::new();
+        let mut o = HorizonWorker { inner: Worker::new() };
+        let settled_o = clk_o.run_scheduled(&mut o, sched_oracle, 10_000, false);
+        // Identical settle cycle, clock, and accounted-cycle totals.
+        assert_eq!(settled_f, settled_o);
+        assert_eq!(settled_f, Some(2003));
+        assert_eq!(clk_f.now(), clk_o.now());
+        assert_eq!(f.inner.accounted, o.inner.accounted);
+        // The oracle executed every cycle; the fast path executed only
+        // the interesting ones: the kick at 3, the countdown expiry at
+        // 1002, the kick at 2000, and the second expiry at 2003.
+        assert_eq!(o.inner.ticked, (1..=2003).collect::<Vec<u64>>());
+        assert_eq!(f.inner.ticked, vec![3, 1002, 2000, 2003]);
+        assert_eq!(f.inner.skipped_to, vec![2, 1001, 1999, 2002]);
+    }
+
+    /// Same-cycle stimuli must apply in insertion order in both modes —
+    /// `run_scheduled`'s stable `sort_by_key` is load-bearing.
+    struct StimLog {
+        applied: Vec<u32>,
+    }
+
+    impl Tick for StimLog {
+        fn tick(&mut self, _cycle: u64) {}
+    }
+
+    impl EventDriven for StimLog {
+        fn stable(&self) -> bool {
+            true
+        }
+
+        fn fast_forward(&mut self, _to_cycle: u64) {}
+    }
+
+    #[test]
+    fn same_cycle_stimuli_apply_in_insertion_order() {
+        for fast in [false, true] {
+            let mut clk = Clock::new();
+            let mut s = StimLog { applied: vec![] };
+            let mut sched: Schedule<StimLog> = Schedule::new();
+            // Inserted out of cycle order on purpose; the three entries
+            // at cycle 7 must still run in insertion order (1, 2, 3).
+            sched.at(7, |s: &mut StimLog| s.applied.push(1));
+            sched.at(3, |s: &mut StimLog| s.applied.push(0));
+            sched.at(7, |s: &mut StimLog| s.applied.push(2));
+            sched.at(7, |s: &mut StimLog| s.applied.push(3));
+            let settled = clk.run_scheduled(&mut s, sched, 100, fast);
+            assert_eq!(settled, Some(7), "fast={fast}");
+            assert_eq!(s.applied, vec![0, 1, 2, 3], "fast={fast}");
+        }
     }
 }

@@ -210,6 +210,25 @@ impl AxiToWb {
         self.incoming.clear();
         self.requested = false;
     }
+
+    /// Busy-period horizon of the bridge (DESIGN.md §12).  The bridge
+    /// tick is a pure no-op exactly when it waits for the crossbar to
+    /// finish an issued burst whose AXI-side fill has completed, or
+    /// idles over empty H2C FIFOs; any other state (filling, trigger
+    /// evaluation, burst pickup) mutates per cycle.
+    pub fn next_interesting_cycle(&self, xdma: &Xdma, now: u64) -> u64 {
+        if self.busy() {
+            if self.requested && self.incoming.is_empty() {
+                crate::sim::HORIZON_NONE
+            } else {
+                now + 1
+            }
+        } else if xdma.h2c_pending() > 0 {
+            now + 1
+        } else {
+            crate::sim::HORIZON_NONE
+        }
+    }
 }
 
 impl Default for AxiToWb {
@@ -244,9 +263,22 @@ impl WbToAxi {
     }
 
     /// Rotate the shift register to the next channel (per §IV.G, "each
-    /// channel is targeted in a round-robin fashion").
+    /// channel is targeted in a round-robin fashion").  A corrupted
+    /// (non-one-hot or out-of-width) select would silently starve
+    /// channels forever, so the invariant is asserted on both sides of
+    /// the rotation.
     pub fn rotate(&mut self) {
+        debug_assert!(
+            self.select.count_ones() == 1 && self.select < (1u32 << C2H_CHANNELS),
+            "C2H channel select corrupted before rotation: {:#05b}",
+            self.select
+        );
         self.select = crate::util::bits::rotate_onehot_left(self.select, C2H_CHANNELS as u32);
+        debug_assert!(
+            self.select.count_ones() == 1 && self.select < (1u32 << C2H_CHANNELS),
+            "C2H channel rotation produced a corrupt select: {:#05b}",
+            self.select
+        );
     }
 
     /// Forward up to `words` (tagged with `app_id`) to the current C2H
@@ -305,6 +337,44 @@ mod tests {
         assert_eq!(b.channel(), 0);
         b.forward(&mut x, 0, &[]);
         assert_eq!(b.channel(), 0);
+    }
+
+    #[test]
+    fn rotation_visits_every_channel_once_per_period_from_any_select() {
+        // Fairness property: from *any* valid one-hot select, every
+        // window of C2H_CHANNELS consecutive rotations visits each
+        // channel exactly once — no channel is ever starved.
+        for start in 0..C2H_CHANNELS {
+            let mut b = WbToAxi::new();
+            for _ in 0..start {
+                b.rotate();
+            }
+            let mut sequence = Vec::new();
+            for _ in 0..40 * C2H_CHANNELS {
+                sequence.push(b.channel());
+                b.rotate();
+            }
+            for window in sequence.chunks(C2H_CHANNELS) {
+                let mut seen = [0u32; C2H_CHANNELS];
+                for &ch in window {
+                    assert!(ch < C2H_CHANNELS, "select left the channel width");
+                    seen[ch] += 1;
+                }
+                assert!(
+                    seen.iter().all(|&n| n == 1),
+                    "start {start}: window {window:?} skipped a channel"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "C2H channel select corrupted")]
+    #[cfg(debug_assertions)]
+    fn corrupted_select_is_caught_not_silently_starving() {
+        let mut b = WbToAxi::new();
+        b.select = 0b101; // two bits set: not one-hot
+        b.rotate();
     }
 
     #[test]

@@ -3,13 +3,23 @@
 //! **cycle-identical** — same per-job request/grant/completion cycles,
 //! same delivered words, same statistics (including total cycles: the
 //! fast-path accounts every skipped idle cycle), same settle cycle.
+//!
+//! The second half extends the gate to **busy-period skipping** on the
+//! full fabric (DESIGN.md §12): randomized traces with long compute
+//! chains, mid-trace ICAP churn and saturated crossbars, where the
+//! fast-path jumps module countdowns and ICAP word-streaming stretches.
+//! Oracle and fast runs must produce byte-identical reports.
 
-use elastic_fpga::config::CrossbarConfig;
+use elastic_fpga::config::{CrossbarConfig, SystemConfig};
 use elastic_fpga::crossbar::{Crossbar, XbarEvent};
+use elastic_fpga::fabric::Fabric;
+use elastic_fpga::icap::ReconfigRequest;
+use elastic_fpga::modules::ModuleKind;
 use elastic_fpga::prop::{check, Gen};
 use elastic_fpga::sim::{Clock, EventDriven, Schedule, Tick};
 use elastic_fpga::util::onehot::encode_onehot;
 use elastic_fpga::wishbone::Job;
+use elastic_fpga::xdma::{H2cBurst, H2C_CHANNELS};
 
 /// Crossbar plus an always-draining consumer at every slave port (so
 /// multi-burst workloads never wedge on full rx buffers), recording
@@ -142,6 +152,261 @@ fn fastpath_equals_oracle_for_100_randomized_workloads() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// Full-fabric busy-period equivalence (DESIGN.md §12)
+// ---------------------------------------------------------------------
+
+/// One randomized fabric trace: installed chains with slow compute
+/// units, scheduled H2C bursts, and optional mid-trace ICAP churn.
+struct FabricPlan {
+    ports: usize,
+    /// `(app_id, [(region, kind, compute_latency)])` — regions disjoint.
+    apps: Vec<(u32, Vec<(usize, ModuleKind, u32)>)>,
+    /// `(cycle, app_id, words)` — burst lengths are 8-word multiples so
+    /// traces settle (no partial module batches linger).
+    bursts: Vec<(u64, u32, Vec<u32>)>,
+    /// `(cycle, region, bitstream_words, fail_after)` — targets a spare
+    /// region outside every chain, so the churn cannot orphan in-flight
+    /// chain traffic into a non-settling partial batch.
+    churn: Option<(u64, usize, u64, Option<u64>)>,
+}
+
+fn draw_plan(g: &mut Gen) -> FabricPlan {
+    // ~30% of traces run the 16-port scale-out shell, the rest the
+    // 4-port prototype; half carry ICAP churn; ~30% saturate the
+    // crossbar with same-cycle arrivals on every tenant.
+    let ports = if g.int("wide", 0, 9) < 3 { 16 } else { 4 };
+    let with_churn = g.int("churn", 0, 9) < 5;
+    let saturate = g.int("saturate", 0, 9) < 3;
+    let regions = ports - 1;
+    let chainable = if with_churn { regions - 1 } else { regions };
+    let kinds = [
+        ModuleKind::Multiplier,
+        ModuleKind::HammingEncoder,
+        ModuleKind::HammingDecoder,
+    ];
+    let mut apps = Vec::new();
+    let mut next_region = 1usize;
+    let mut app_id = 0u32;
+    while next_region <= chainable && apps.len() < 6 {
+        let max_len = (chainable - next_region + 1).min(3) as u64;
+        let len = g.int("chain_len", 1, max_len) as usize;
+        let chain: Vec<(usize, ModuleKind, u32)> = (0..len)
+            .map(|i| {
+                (
+                    next_region + i,
+                    g.choose("kind", &kinds),
+                    g.int("latency", 1, 24) as u32,
+                )
+            })
+            .collect();
+        apps.push((app_id, chain));
+        next_region += len;
+        app_id += 1;
+    }
+    let window = if saturate { 4 } else { g.int("window", 50, 2500) };
+    let n_bursts = g.int("bursts", 2, if saturate { 24 } else { 10 }) as usize;
+    let mut bursts = Vec::new();
+    for _ in 0..n_bursts {
+        let cycle = g.int("arrival", 1, window);
+        let which = g.int("which_app", 0, apps.len() as u64 - 1) as usize;
+        let len = 8 * g.int("burst_len", 1, 4) as usize;
+        bursts.push((cycle, apps[which].0, g.buffer(len)));
+    }
+    let churn = if with_churn {
+        let cycle = g.int("churn_at", 1, window.max(100));
+        let words = g.int("bitstream_words", 64, 2500);
+        let fail = if g.int("bitstream_fails", 0, 9) < 2 {
+            Some(g.int("fail_after", 1, words))
+        } else {
+            None
+        };
+        Some((cycle, regions, words, fail))
+    } else {
+        None
+    };
+    FabricPlan { ports, apps, bursts, churn }
+}
+
+fn build_fabric(plan: &FabricPlan) -> Fabric {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.fabric.num_ports = plan.ports;
+    cfg.fabric.num_pr_regions = plan.ports - 1;
+    // Saturated traces rotate long WRR queues; generous watchdogs keep
+    // every burst deliverable so the trace settles (timeout *behavior*
+    // is pinned by the crossbar's own tests).
+    cfg.crossbar.grant_timeout = 1_000_000;
+    cfg.crossbar.ack_timeout = 1_000_000;
+    let mut f = Fabric::new(cfg);
+    let mut port0_mask = 0u32;
+    for (app, chain) in &plan.apps {
+        let first = chain[0].0;
+        port0_mask |= 1 << first;
+        f.regfile
+            .set_app_destination(*app as usize, 1 << first)
+            .unwrap();
+        for (i, &(region, kind, latency)) in chain.iter().enumerate() {
+            let next = chain.get(i + 1).map(|c| c.0).unwrap_or(0);
+            f.regfile.set_pr_destination(region, 1 << next).unwrap();
+            f.regfile.set_allowed_slaves(region, 1 << next).unwrap();
+            f.install_static_module(region, kind, *app);
+            f.modules[region].as_mut().unwrap().compute_latency = latency;
+        }
+    }
+    f.regfile.set_allowed_slaves(0, port0_mask).unwrap();
+    f
+}
+
+fn schedule_of(plan: &FabricPlan) -> Schedule<Fabric> {
+    let mut sched: Schedule<Fabric> = Schedule::new();
+    for (cycle, app, words) in plan.bursts.iter().cloned() {
+        sched.at(cycle, move |f: &mut Fabric| {
+            let channel = app as usize % H2C_CHANNELS;
+            f.h2c_push(channel, H2cBurst { app_id: app, words });
+        });
+    }
+    if let Some((cycle, region, words, fail_after)) = plan.churn {
+        sched.at(cycle, move |f: &mut Fabric| {
+            // The spare region is reprogrammed mid-trace; a busy ICAP
+            // would refuse (deterministically in both modes).
+            let _ = f.reconfigure_with(ReconfigRequest {
+                region,
+                kind: ModuleKind::Multiplier,
+                app_id: 31,
+                bitstream_words: words,
+                fail_after,
+            });
+        });
+    }
+    sched
+}
+
+fn run_fabric(plan: &FabricPlan, fast: bool) -> (Fabric, u64, Option<u64>) {
+    let mut f = build_fabric(plan);
+    let sched = schedule_of(plan);
+    let mut clk = Clock::new();
+    let settled = clk.run_scheduled(&mut f, sched, 400_000, fast);
+    (f, clk.now(), settled)
+}
+
+/// Every observable the shell exposes, rendered deterministically.
+/// `executed_cycles`/`skipped_cycles` are excluded by design — they are
+/// *supposed* to differ between the modes; everything else must not.
+fn fabric_report(f: &Fabric, plan: &FabricPlan) -> String {
+    let mut s = String::new();
+    for (app, _) in &plan.apps {
+        s.push_str(&format!("app{app}={:?};", f.app_output(*app)));
+    }
+    s.push_str(&format!("reconfig={:?};", f.reconfig_log()));
+    s.push_str(&format!("xbar={:?};", f.xbar.stats()));
+    for p in 1..f.xbar.ports() {
+        match &f.modules[p] {
+            Some(m) => s.push_str(&format!(
+                "m{p}=({:?},{:?},{},{},{},{:?});",
+                m.kind,
+                m.state,
+                m.batches_done,
+                m.words_done,
+                m.input_fill(),
+                m.error_status
+            )),
+            None => s.push_str(&format!("m{p}=none;")),
+        }
+    }
+    s.push_str(&format!(
+        "icap=({:?},{},{});",
+        f.icap.status,
+        f.icap.words_programmed,
+        f.icap.fifo_len()
+    ));
+    s.push_str(&format!(
+        "xdma=({},{},{});",
+        f.xdma.h2c_words,
+        f.xdma.c2h_words,
+        f.xdma.c2h_pending()
+    ));
+    s.push_str(&format!(
+        "bridge=({},{:?});",
+        f.axi2wb.words_forwarded, f.axi2wb.completions
+    ));
+    s.push_str(&format!("regfile_gen={};", f.regfile.generation()));
+    s
+}
+
+#[test]
+fn fabric_busy_period_fastpath_equals_oracle_for_100_randomized_traces() {
+    check(0xB057_FA57, 100, |g| {
+        let plan = draw_plan(g);
+        let (fast, fast_now, fast_settled) = run_fabric(&plan, true);
+        let (oracle, oracle_now, oracle_settled) = run_fabric(&plan, false);
+        if fast_settled != oracle_settled {
+            return Err(format!(
+                "settle diverged: fast {fast_settled:?} vs oracle {oracle_settled:?}"
+            ));
+        }
+        if fast_now != oracle_now {
+            return Err(format!(
+                "clock diverged: fast {fast_now} vs oracle {oracle_now}"
+            ));
+        }
+        let fr = fabric_report(&fast, &plan);
+        let or = fabric_report(&oracle, &plan);
+        if fr != or {
+            return Err(format!("reports diverged:\nfast   {fr}\noracle {or}"));
+        }
+        if fast_settled.is_none() {
+            return Err("trace did not settle within budget".into());
+        }
+        // Cycle conservation: executed + skipped must account for every
+        // cycle of virtual time, in both modes.
+        if fast.executed_cycles + fast.skipped_cycles != fast_now {
+            return Err(format!(
+                "fast path lost cycles: {} executed + {} skipped != {fast_now}",
+                fast.executed_cycles, fast.skipped_cycles
+            ));
+        }
+        if oracle.executed_cycles != oracle_now {
+            return Err("oracle skipped cycles".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fabric_busy_period_skips_are_observable_but_invisible() {
+    // Deterministic spot-check that busy-period skipping actually
+    // engages (the equivalence above would pass trivially if the
+    // horizon never exceeded now + 1): one slow module, a mid-trace
+    // ICAP churn in a quiet stretch, and a late second burst.
+    let plan = FabricPlan {
+        ports: 4,
+        apps: vec![(0, vec![(1, ModuleKind::Multiplier, 40)])],
+        bursts: vec![
+            (1, 0, (1..=8u32).collect()),
+            (9000, 0, (9..=16u32).collect()),
+        ],
+        churn: Some((3000, 3, 1500, None)),
+    };
+    let (fast, fast_now, fast_settled) = run_fabric(&plan, true);
+    let (oracle, oracle_now, oracle_settled) = run_fabric(&plan, false);
+    assert_eq!(fast_settled, oracle_settled);
+    assert!(fast_settled.is_some());
+    assert_eq!(fast_now, oracle_now);
+    assert_eq!(fabric_report(&fast, &plan), fabric_report(&oracle, &plan));
+    // The oracle executed every cycle; the fast path skipped the idle
+    // gaps *and* the busy stretches (ICAP streaming, the 40-cycle
+    // compute countdowns) — well over a 5x reduction here.
+    assert_eq!(oracle.executed_cycles, oracle_now);
+    assert_eq!(fast.executed_cycles + fast.skipped_cycles, fast_now);
+    assert!(
+        fast.executed_cycles * 5 < oracle.executed_cycles,
+        "busy-period skipping did not engage: {} executed of {}",
+        fast.executed_cycles,
+        oracle.executed_cycles
+    );
+    assert!(fast.skipped_cycles > 3000, "ICAP stretch not skipped");
 }
 
 #[test]
