@@ -1,0 +1,180 @@
+//! Fleet sharded-execution bench: the trace-driven fleet simulator at
+//! 1/2/4/8 execution threads over 8 fabrics (DESIGN.md §13).  Emits
+//! `BENCH_fleet.json` — requests/sec and virtual makespan per thread
+//! count — so the scaling trajectory has a committed number next to
+//! `BENCH_fabric.json`.
+//!
+//! The workload is deliberately shape-heavy (32 payload sizes x 4 stage
+//! chains ≈ 128 distinct request shapes): the first-of-shape
+//! cycle-accurate oracle measurements are the expensive part of a fleet
+//! run, and they are exactly what the sharded executor fans out across
+//! the boards.  Every thread count must reproduce the single-threaded
+//! schedule byte for byte, and the all-oracle mode (every request
+//! cycle-by-cycle) is cross-checked at 1 vs 4 threads.
+//!
+//! ```bash
+//! cargo bench --bench fleet_serving            # full run
+//! cargo bench --bench fleet_serving -- --smoke # CI smoke mode
+//! ```
+
+#[path = "harness.rs"]
+mod harness;
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::fleet::{AdmissionPolicy, Fleet, FleetReport};
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::workload::{generate_count, TraceEvent, WorkloadSpec};
+
+const FABRICS: usize = 8;
+
+/// High-cardinality serving mix: many distinct shapes, so oracle
+/// measurements dominate and shard.
+fn high_cardinality_spec() -> WorkloadSpec {
+    WorkloadSpec {
+        rate_per_s: 800.0,
+        duration_s: 3600.0,
+        size_mix: (1..=32usize).map(|i| (8 * i, 1.0)).collect(),
+        stage_mix: vec![
+            (ModuleKind::pipeline().to_vec(), 0.4),
+            (vec![ModuleKind::Multiplier], 0.25),
+            (vec![ModuleKind::HammingEncoder], 0.2),
+            (
+                vec![ModuleKind::HammingEncoder, ModuleKind::HammingDecoder],
+                0.15,
+            ),
+        ],
+        tenants: 4,
+    }
+}
+
+struct Run {
+    wall_s: f64,
+    report: FleetReport,
+}
+
+fn run_fleet(
+    cfg: &SystemConfig,
+    trace: &[TraceEvent],
+    threads: usize,
+    fast: bool,
+) -> Run {
+    let mut fleet =
+        Fleet::launch(FABRICS, cfg, None, AdmissionPolicy::LeastLoaded, fast);
+    fleet.execution_threads = threads;
+    let t0 = std::time::Instant::now();
+    let report = fleet.run_trace(trace).expect("fleet run failed");
+    Run { wall_s: t0.elapsed().as_secs_f64(), report }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
+    let requests = if smoke { 160 } else { 4000 };
+    let oracle_requests = if smoke { 60 } else { 300 };
+    harness::section(if smoke {
+        "fleet serving: sharded execution scaling (smoke)"
+    } else {
+        "fleet serving: sharded execution scaling"
+    });
+
+    let mut claims = harness::Claims::new();
+    let cfg = SystemConfig::paper_defaults();
+    let spec = high_cardinality_spec();
+    let trace = generate_count(&spec, 0xF1EE7, requests);
+
+    let thread_counts = [1usize, 2, 4, 8];
+    let mut runs: Vec<(usize, Run)> = Vec::new();
+    for &t in &thread_counts {
+        let r = run_fleet(&cfg, &trace, t, true);
+        println!(
+            "  threads {t}: {} requests in {:.3}s ({:>8.0} req/s) | \
+             makespan {:.1} ms | {} oracle runs, {} cache hits",
+            requests,
+            r.wall_s,
+            requests as f64 / r.wall_s.max(1e-9),
+            cfg.cycles_to_ms(r.report.makespan_cycles),
+            r.report.oracle_runs,
+            r.report.fast_path_hits,
+        );
+        runs.push((t, r));
+    }
+
+    // Determinism-merge contract: every thread count reproduces the
+    // single-threaded schedule exactly.
+    let base = &runs[0].1;
+    for (t, r) in &runs[1..] {
+        claims.check(
+            r.report.outcomes == base.report.outcomes,
+            &format!("threads {t}: outcomes byte-identical to serial"),
+        );
+        claims.check(
+            r.report.makespan_cycles == base.report.makespan_cycles
+                && r.report.oracle_runs == base.report.oracle_runs
+                && r.report.fast_path_hits == base.report.fast_path_hits,
+            &format!("threads {t}: makespan and counters match serial"),
+        );
+    }
+
+    // Oracle cross-check: with the fast-path off every request runs
+    // cycle-by-cycle; 1 vs 4 threads must still agree exactly.
+    let otrace = generate_count(&spec, 0xF1EE7, oracle_requests);
+    let o1 = run_fleet(&cfg, &otrace, 1, false);
+    let o4 = run_fleet(&cfg, &otrace, 4, false);
+    claims.check(
+        o1.report.outcomes == o4.report.outcomes
+            && o1.report.makespan_cycles == o4.report.makespan_cycles,
+        "oracle mode byte-identical at 1 vs 4 threads",
+    );
+    println!(
+        "  oracle cross-check: {} requests, 1 vs 4 threads ({:.3}s vs {:.3}s)",
+        oracle_requests, o1.wall_s, o4.wall_s
+    );
+
+    if !smoke {
+        // Wall-clock scaling claim only in the full run: CI smoke boxes
+        // are too small/noisy to pin a speedup.
+        let wall_1 = base.wall_s;
+        let wall_4 = runs.iter().find(|(t, _)| *t == 4).expect("4-thread run").1.wall_s;
+        let speedup = wall_1 / wall_4.max(1e-9);
+        claims.check(
+            speedup >= 1.5,
+            &format!("4 threads >= 1.5x faster than 1 ({speedup:.2}x)"),
+        );
+    }
+
+    // Machine-readable trajectory point.  The req/s rates are wall-clock
+    // and vary run to run (the committed baseline is compared
+    // structurally — see python/tools/bench_diff.py).
+    let mut json = String::from("{\n  \"bench\": \"fleet_serving\",\n");
+    json.push_str(&format!("  \"fabrics\": {FABRICS},\n"));
+    json.push_str(&format!("  \"requests\": {requests},\n"));
+    json.push_str(&format!(
+        "  \"distinct_shapes_measured\": {},\n",
+        base.report.oracle_runs
+    ));
+    json.push_str(&format!(
+        "  \"oracle_crosscheck_requests\": {oracle_requests},\n"
+    ));
+    json.push_str("  \"cases\": [\n");
+    let wall_1 = base.wall_s;
+    for (i, (t, r)) in runs.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"threads{}\", \"threads\": {}, \
+             \"requests_per_s\": {:.1}, \"wall_s\": {:.4}, \
+             \"speedup_vs_serial\": {:.2}, \"makespan_ms\": {:.2}, \
+             \"oracle_runs\": {}, \"fast_path_hits\": {}}}{}\n",
+            t,
+            t,
+            requests as f64 / r.wall_s.max(1e-9),
+            r.wall_s,
+            wall_1 / r.wall_s.max(1e-9),
+            cfg.cycles_to_ms(r.report.makespan_cycles),
+            r.report.oracle_runs,
+            r.report.fast_path_hits,
+            if i + 1 < runs.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_fleet.json", &json).expect("write BENCH_fleet.json");
+    println!("  wrote BENCH_fleet.json");
+    claims.finish();
+}

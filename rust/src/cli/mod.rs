@@ -131,6 +131,8 @@ fleet flags:
   --policy P         least | sticky | bandwidth (default: least)
   --seed N           workload seed (default: 1)
   --oracle           disable the fast-path; run every request cycle-by-cycle
+  --threads N        shard oracle runs across N scoped threads; results are
+                     byte-identical to --threads 1 (default: 1)
 
 autoscale flags:
   --fabrics N        simulated boards (default: 5)

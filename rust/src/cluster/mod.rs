@@ -106,6 +106,14 @@ impl Cluster {
         &mut self.nodes[i]
     }
 
+    /// All nodes, mutably, as one slice.  The fleet's sharded executor
+    /// splits this across scoped threads — each thread gets a disjoint
+    /// `&mut BoardNode`, so per-board fabric drives run in parallel
+    /// without any locking.
+    pub fn nodes_mut(&mut self) -> &mut [BoardNode] {
+        &mut self.nodes
+    }
+
     /// Pick a node for a request under the current policy; returns its
     /// index.  Pure function of cluster state (no side effects).
     pub fn select_node(&self, req: &AppRequest) -> usize {

@@ -28,10 +28,21 @@
 //! request of the same shape.  With the fast-path off every request runs
 //! on the oracle; `fast_path_equivalence` in this module's tests pins
 //! that both modes produce identical schedules.
+//!
+//! # Sharded execution (DESIGN.md §13)
+//!
+//! With `execution_threads > 1` the trace still *admits* sequentially —
+//! `select_node`, the pins, `busy_until` and all counters evolve in
+//! arrival order exactly as in the serial path — but the expensive part,
+//! the cycle-accurate cost measurements, fans out across the boards on
+//! scoped threads.  Each board's fabric is driven by at most one thread
+//! at a time, and because service cost is a pure function of the request
+//! shape, the merged cost cache (folded back in a deterministic order at
+//! each quiesce point) reproduces the serial schedule byte for byte.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use crate::cluster::{Cluster, PlacementPolicy};
+use crate::cluster::{BoardNode, Cluster, PlacementPolicy};
 use crate::config::SystemConfig;
 use crate::manager::AppRequest;
 use crate::metrics::CycleRecorder;
@@ -39,7 +50,7 @@ use crate::modules::ModuleKind;
 use crate::runtime::RuntimeHandle;
 use crate::timing::CostBreakdown;
 use crate::workload::TraceEvent;
-use crate::Result;
+use crate::{ElasticError, Result};
 
 /// Admission-control policy: which fabric serves an incoming request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,6 +164,11 @@ pub struct Fleet {
     /// Move overflow chains to a board that fits them fully (on by
     /// default; the CPU-suffix fallback still applies when no board can).
     pub migrate_overflow: bool,
+    /// Fan oracle cost measurements out across up to this many scoped
+    /// worker threads (`1`, the default, keeps the fully serial path).
+    /// Admission stays sequential either way, so reports are
+    /// byte-identical across thread counts (`tests/fleet_threads.rs`).
+    pub execution_threads: usize,
     fast_path: bool,
     shape_cache: HashMap<ShapeKey, u64>,
     migrated: u64,
@@ -186,6 +202,7 @@ impl Fleet {
             busy_until: vec![0; n],
             pins: HashMap::new(),
             migrate_overflow: true,
+            execution_threads: 1,
             fast_path,
             shape_cache: HashMap::new(),
             migrated: 0,
@@ -324,7 +341,27 @@ impl Fleet {
     }
 
     /// Run an arrival-ordered trace to completion.
+    ///
+    /// The report's `migrated` / `fast_path_hits` / `oracle_runs` are
+    /// **per-trace deltas**, consistent with the per-trace `outcomes` /
+    /// `per_node_served` (the cumulative fleet totals used to leak into
+    /// every report, so a second `run_trace` on the same fleet claimed
+    /// the first trace's counts too).
     pub fn run_trace(&mut self, trace: &[TraceEvent]) -> Result<FleetReport> {
+        let at_entry = (self.migrated, self.fast_path_hits, self.oracle_runs);
+        let mut report = if self.execution_threads > 1 {
+            self.run_trace_sharded(trace)?
+        } else {
+            self.run_trace_serial(trace)?
+        };
+        report.migrated = self.migrated - at_entry.0;
+        report.fast_path_hits = self.fast_path_hits - at_entry.1;
+        report.oracle_runs = self.oracle_runs - at_entry.2;
+        Ok(report)
+    }
+
+    /// The single-threaded executor: admit and measure in one pass.
+    fn run_trace_serial(&mut self, trace: &[TraceEvent]) -> Result<FleetReport> {
         let cycles_per_ms = self.cfg.fabric.clock_mhz * 1000.0;
         let mut outcomes = Vec::with_capacity(trace.len());
         let mut queue_wait = CycleRecorder::new();
@@ -366,6 +403,297 @@ impl Fleet {
             oracle_runs: self.oracle_runs,
         })
     }
+
+    /// The sharded executor (DESIGN.md §13).  Admission runs
+    /// sequentially at quiesce points; only the cycle-accurate cost
+    /// measurements — the expensive part — fan out across the boards on
+    /// scoped threads.  Fabric timing is data-independent, so a
+    /// request's service cost is a pure function of its [`ShapeKey`]
+    /// (pinned by `fast_path_equivalence_with_oracle`): measuring a
+    /// shape on any board of the right free-region count, in any round,
+    /// yields exactly the value the serial path measures in place.
+    fn run_trace_sharded(&mut self, trace: &[TraceEvent]) -> Result<FleetReport> {
+        let threads = self.execution_threads;
+        let cycles_per_ms = self.cfg.fabric.clock_mhz * 1000.0;
+        let n_nodes = self.cluster.node_count();
+        let mut outcomes: Vec<RequestOutcome> = Vec::with_capacity(trace.len());
+        let mut queue_wait = CycleRecorder::new();
+        let mut latency = CycleRecorder::new();
+        let mut per_node_served = vec![0u64; n_nodes];
+        // Shape -> service cycles, local to this run.  Fast-path mode
+        // seeds it from the persistent cache; oracle mode starts cold so
+        // every shape is re-measured (and every request replayed)
+        // cycle-by-cycle.
+        let mut costs: HashMap<ShapeKey, u64> = if self.fast_path {
+            self.shape_cache.clone()
+        } else {
+            HashMap::new()
+        };
+        // Speculative measurements that failed, surfaced only if
+        // admission actually reaches a request of that shape — the
+        // serial path would fail at that exact request, and a shape that
+        // never commits must not fail the run.
+        let mut failed: HashMap<ShapeKey, ElasticError> = HashMap::new();
+        let mut cursor = 0usize;
+        loop {
+            // Quiesce point: commit every event whose cost is known.
+            // select_node runs here, sequentially and in arrival order,
+            // so pins, busy_until, node stats and the counters evolve
+            // exactly as in the serial path.
+            let round_start = cursor;
+            while cursor < trace.len() {
+                let ev = &trace[cursor];
+                let arrival = (ev.arrival_ms * cycles_per_ms).round() as u64;
+                let (node, migrated) = self.select_node(&ev.request, arrival);
+                let fpga_stages = ev
+                    .request
+                    .stages
+                    .len()
+                    .min(self.cluster.nodes()[node].available_regions());
+                let key = ShapeKey {
+                    stages: ev.request.stages.clone(),
+                    words: ev.request.data.len(),
+                    fpga_stages,
+                };
+                let service = match costs.get(&key) {
+                    Some(&c) => c,
+                    None => {
+                        if let Some(e) = failed.remove(&key) {
+                            return Err(e);
+                        }
+                        break; // measure this shape, then resume here
+                    }
+                };
+                if migrated {
+                    self.migrated += 1;
+                }
+                if self.fast_path {
+                    // Commit-time bookkeeping mirrors the serial path:
+                    // the first committed use of a shape is the oracle
+                    // run that filled the cache; every later one is a
+                    // hit.  Speculative measurements count for nothing.
+                    if self.shape_cache.contains_key(&key) {
+                        self.fast_path_hits += 1;
+                    } else {
+                        self.shape_cache.insert(key, service);
+                        self.oracle_runs += 1;
+                    }
+                } else {
+                    self.oracle_runs += 1;
+                }
+                let start = arrival.max(self.busy_until[node]);
+                let completion = start + service;
+                self.busy_until[node] = completion;
+                {
+                    let n = self.cluster.node_mut(node);
+                    n.served += 1;
+                    n.fpga_stages_hosted += fpga_stages as u64;
+                }
+                per_node_served[node] += 1;
+                queue_wait.record(start - arrival);
+                latency.record(completion - arrival);
+                outcomes.push(RequestOutcome {
+                    app_id: ev.request.app_id,
+                    node,
+                    arrival_cycle: arrival,
+                    start_cycle: start,
+                    completion_cycle: completion,
+                    service_cycles: service,
+                    fpga_stages,
+                    migrated,
+                });
+                cursor += 1;
+            }
+
+            // Oracle fidelity: with the fast-path off, every committed
+            // request still executes cycle-by-cycle on its admitted node
+            // — per-node arrival order, nodes in parallel — and must
+            // measure exactly the cost admission charged.
+            if !self.fast_path && cursor > round_start {
+                let mut per_node: Vec<Vec<FabricJob<'_>>> =
+                    (0..n_nodes).map(|_| Vec::new()).collect();
+                for (i, o) in outcomes.iter().enumerate().skip(round_start) {
+                    per_node[o.node].push(FabricJob {
+                        tag: i,
+                        req: &trace[i].request,
+                        fpga_stages: o.fpga_stages,
+                    });
+                }
+                let results = execute_on_nodes(
+                    self.cluster.nodes_mut(),
+                    per_node,
+                    threads,
+                    &self.cfg,
+                );
+                for (tag, r) in results {
+                    let measured = r?;
+                    debug_assert_eq!(
+                        measured, outcomes[tag].service_cycles,
+                        "oracle replay diverged from admission-time cost"
+                    );
+                }
+            }
+
+            if cursor >= trace.len() {
+                break;
+            }
+
+            // Harvest: every unmeasured shape the remaining trace could
+            // need, under every node-capacity class (which node admits a
+            // request is unknown until its turn, but fpga_stages depends
+            // on the node only through its free-region count).
+            // First-appearance order keeps the merge deterministic.
+            let avails: Vec<usize> = self
+                .cluster
+                .nodes()
+                .iter()
+                .map(BoardNode::available_regions)
+                .collect();
+            let mut classes = avails.clone();
+            classes.sort_unstable();
+            classes.dedup();
+            let mut seen: HashSet<ShapeKey> = HashSet::new();
+            let mut work: Vec<(ShapeKey, &AppRequest)> = Vec::new();
+            for ev in &trace[cursor..] {
+                for &avail in &classes {
+                    let fpga_stages = ev.request.stages.len().min(avail);
+                    let key = ShapeKey {
+                        stages: ev.request.stages.clone(),
+                        words: ev.request.data.len(),
+                        fpga_stages,
+                    };
+                    if costs.contains_key(&key)
+                        || failed.contains_key(&key)
+                        || !seen.insert(key.clone())
+                    {
+                        continue;
+                    }
+                    work.push((key, &ev.request));
+                }
+            }
+            assert!(
+                !work.is_empty(),
+                "sharded fleet stalled: blocked shape neither measured nor failed"
+            );
+            // Spread shapes over the boards able to measure them (a
+            // board measures a shape exactly when its free-region count
+            // maps the chain onto the shape's fpga_stages); round-robin
+            // by shape index keeps the assignment deterministic.
+            let mut per_node: Vec<Vec<FabricJob<'_>>> =
+                (0..n_nodes).map(|_| Vec::new()).collect();
+            for (widx, (key, req)) in work.iter().enumerate() {
+                let eligible: Vec<usize> = (0..n_nodes)
+                    .filter(|&i| {
+                        key.stages.len().min(avails[i]) == key.fpga_stages
+                    })
+                    .collect();
+                let node = eligible[widx % eligible.len()];
+                per_node[node].push(FabricJob {
+                    tag: widx,
+                    req: *req,
+                    fpga_stages: key.fpga_stages,
+                });
+            }
+            let results = execute_on_nodes(
+                self.cluster.nodes_mut(),
+                per_node,
+                threads,
+                &self.cfg,
+            );
+            // Quiesce merge, in harvest order.
+            for (tag, r) in results {
+                let key = work[tag].0.clone();
+                match r {
+                    Ok(c) => {
+                        costs.insert(key, c);
+                    }
+                    Err(e) => {
+                        failed.insert(key, e);
+                    }
+                }
+            }
+        }
+        Ok(FleetReport {
+            completed: outcomes.len() as u64,
+            makespan_cycles: self.busy_until.iter().copied().max().unwrap_or(0),
+            outcomes,
+            queue_wait,
+            latency,
+            per_node_served,
+            // Overwritten with per-trace deltas by run_trace.
+            migrated: self.migrated,
+            fast_path_hits: self.fast_path_hits,
+            oracle_runs: self.oracle_runs,
+        })
+    }
+}
+
+/// One unit of parallel fabric work: execute `req` on a board and return
+/// its measured service cost, tagged for a deterministic merge.
+struct FabricJob<'a> {
+    tag: usize,
+    req: &'a AppRequest,
+    fpga_stages: usize,
+}
+
+/// Execute per-node job lists on at most `threads` scoped OS threads.
+/// Nodes are dealt round-robin across the threads, so each thread owns a
+/// disjoint set of `&mut BoardNode` — no board is ever driven from two
+/// threads, and within a board jobs run in the order given.  Results
+/// come back sorted by tag, making the caller's merge independent of
+/// thread interleaving.
+fn execute_on_nodes(
+    nodes: &mut [BoardNode],
+    mut per_node: Vec<Vec<FabricJob<'_>>>,
+    threads: usize,
+    cfg: &SystemConfig,
+) -> Vec<(usize, Result<u64>)> {
+    debug_assert_eq!(per_node.len(), nodes.len());
+    let node_jobs: Vec<_> = nodes
+        .iter_mut()
+        .zip(per_node.drain(..))
+        .filter(|(_, jobs)| !jobs.is_empty())
+        .collect();
+    let lanes = threads.min(node_jobs.len()).max(1);
+    let mut groups: Vec<Vec<_>> = (0..lanes).map(|_| Vec::new()).collect();
+    for (i, nj) in node_jobs.into_iter().enumerate() {
+        groups[i % lanes].push(nj);
+    }
+    let mut out: Vec<(usize, Result<u64>)> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .map(|group| {
+                s.spawn(move || {
+                    let mut res = Vec::new();
+                    for (node, jobs) in group {
+                        for job in jobs {
+                            let r = node.manager_mut().execute(job.req).map(
+                                |rep| {
+                                    debug_assert!(
+                                        rep.verified,
+                                        "oracle run failed golden verification"
+                                    );
+                                    debug_assert_eq!(
+                                        rep.fpga_stages,
+                                        job.fpga_stages
+                                    );
+                                    service_cycles(cfg, &rep.cost)
+                                },
+                            );
+                            res.push((job.tag, r));
+                        }
+                    }
+                    res
+                })
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("fleet execution thread panicked"));
+        }
+    });
+    out.sort_unstable_by_key(|&(tag, _)| tag);
+    out
 }
 
 #[cfg(test)]
@@ -404,6 +732,45 @@ mod tests {
                 b.oracle_runs < a.oracle_runs,
                 "fast path did not reduce oracle executions"
             );
+        }
+    }
+
+    #[test]
+    fn sharded_execution_matches_serial_byte_for_byte() {
+        // Same trace, same policy, both path modes: the sharded executor
+        // must reproduce the serial schedule, recorder sample streams,
+        // per-node stats and per-trace counters exactly, at every thread
+        // count (the heavier cross-policy suite lives in
+        // tests/fleet_threads.rs).
+        let trace = small_trace(140, 29);
+        for fast in [true, false] {
+            let mut serial =
+                Fleet::launch(3, &cfg(), None, AdmissionPolicy::StickyByApp, fast);
+            serial.fence_node(0, 2);
+            let want = serial.run_trace(&trace).unwrap();
+            for threads in [2usize, 4, 8] {
+                let mut sharded = Fleet::launch(
+                    3,
+                    &cfg(),
+                    None,
+                    AdmissionPolicy::StickyByApp,
+                    fast,
+                );
+                sharded.fence_node(0, 2);
+                sharded.execution_threads = threads;
+                let got = sharded.run_trace(&trace).unwrap();
+                assert_eq!(
+                    want.outcomes, got.outcomes,
+                    "fast={fast} threads={threads}"
+                );
+                assert_eq!(want.queue_wait.samples(), got.queue_wait.samples());
+                assert_eq!(want.latency.samples(), got.latency.samples());
+                assert_eq!(want.per_node_served, got.per_node_served);
+                assert_eq!(want.migrated, got.migrated);
+                assert_eq!(want.fast_path_hits, got.fast_path_hits);
+                assert_eq!(want.oracle_runs, got.oracle_runs);
+                assert_eq!(want.makespan_cycles, got.makespan_cycles);
+            }
         }
     }
 

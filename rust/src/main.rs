@@ -130,6 +130,7 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let requests = cli.usize_or("requests", 10_000)?;
     let seed = cli.usize_or("seed", 1)? as u64;
     let oracle = cli.bool_or("oracle", false)?;
+    let threads = cli.usize_or("threads", 1)?.max(1);
     let policy_name = cli.str_or("policy", "least");
     let policy = AdmissionPolicy::parse(&policy_name).ok_or_else(|| {
         elastic_fpga::ElasticError::Config(format!(
@@ -138,11 +139,12 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     })?;
     println!(
         "fleet: {requests} requests over {fabrics} fabrics, policy {policy:?}, \
-         {}",
+         {}, {threads} execution thread(s)",
         if oracle { "cycle-by-cycle oracle" } else { "event-driven fast-path" }
     );
     let trace = generate_count(&WorkloadSpec::fleet_mix(), seed, requests);
     let mut fleet = Fleet::launch(fabrics, cfg, None, policy, !oracle);
+    fleet.execution_threads = threads;
     let t0 = std::time::Instant::now();
     let mut report = fleet.run_trace(&trace)?;
     let wall = t0.elapsed();

@@ -201,6 +201,14 @@ impl CycleRecorder {
         self.samples.iter().copied().max().unwrap_or(0)
     }
 
+    /// The raw samples as currently stored: record order until the
+    /// first percentile query sorts them in place.  The threaded-fleet
+    /// determinism tests compare recorders byte-for-byte through this —
+    /// two runs must agree on *order*, not just on the histogram.
+    pub fn samples(&self) -> &[u64] {
+        &self.samples
+    }
+
     /// Merge another recorder's samples (EWMA folds them in stored
     /// order, as in [`LatencyRecorder::merge`]).
     pub fn merge(&mut self, other: &CycleRecorder) {
@@ -303,6 +311,7 @@ mod tests {
             r.record(c);
         }
         assert_eq!(r.count(), 4);
+        assert_eq!(r.samples(), &[5, 10, 15, 20], "record order before sort");
         assert_eq!(r.percentile(0.5), 10);
         assert_eq!(r.percentile(1.0), 20);
         assert_eq!(r.max(), 20);

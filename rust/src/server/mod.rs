@@ -8,26 +8,32 @@
 //! DESIGN.md §7):
 //!
 //! ```text
-//!   clients --submit--> [bounded queue] --> scheduler thread
-//!                                            | admission policy picks a
-//!                                            | fabric lane; FPGA prefix
-//!                                            | runs on that lane's
-//!                                            v cycle simulator
-//!                                      [worker pool] -- on-server
-//!                                            |            suffix stages
-//!                                            v
-//!                                       response channels
+//!   clients --submit--> [bounded queue] --> admission thread
+//!                                            | policy picks a lane from
+//!                                            | shared per-lane counters
+//!                mpsc per lane               v
+//!          [lane executor 0] [lane executor 1] ... one thread per fabric;
+//!                  \              |              FPGA prefix + per-lane
+//!                   \             |              autoscale tick run here
+//!                    v            v
+//!                      [worker pool] -- on-server suffix stages
+//!                            |
+//!                            v
+//!                      response channels
 //! ```
 //!
-//! The scheduler owns every fabric (each a single synchronous design, as
-//! in hardware) and tracks a per-lane virtual clock of fabric cycles
-//! consumed; the admission policy ([`AdmissionPolicy`], shared with the
-//! [`crate::fleet`] trace simulator) routes each request to a lane.
-//! CPU-suffix work is fanned out to workers so a fabric can start the
-//! next request while earlier requests finish on the host — pipeline
-//! parallelism across requests.  The bounded queue provides
-//! backpressure: `submit` blocks when `queue_depth` requests are in
-//! flight.
+//! Each fabric lane is an independent synchronous design (as in
+//! hardware), so each gets its own executor thread: the FPGA prefix of
+//! lane 0 no longer blocks admission to lane 1.  The admission thread
+//! only routes — the policy ([`AdmissionPolicy`], shared with the
+//! [`crate::fleet`] trace simulator) reads shared per-lane counters
+//! ([`LaneStatus`]: admitted/completed depth, published spare bandwidth)
+//! plus its own deterministic forwarded counts, so sticky pinning stays
+//! run-to-run deterministic (pinned by `tests/fleet_server.rs`).
+//! CPU-suffix work still fans out to a shared worker pool — pipeline
+//! parallelism across requests on top of lane parallelism across
+//! fabrics.  The bounded queue provides backpressure: `submit` blocks
+//! when `queue_depth` requests are in flight.
 //!
 //! Every lane's fabric drive rides the busy-period horizon fast-path
 //! (`ElasticManager.fast_path`, on by default — DESIGN.md §12): FPGA
@@ -48,6 +54,7 @@ use crate::fleet::AdmissionPolicy;
 use crate::manager::{golden_chain, AppReport, AppRequest, ElasticManager, StagePlacement};
 use crate::modules::ModuleKind;
 use crate::runtime::RuntimeHandle;
+use crate::sim::ControlCadence;
 use crate::timing::{evaluate, ExecutionTimeline};
 use crate::{ElasticError, Result};
 
@@ -79,21 +86,29 @@ impl Default for FleetOptions {
     }
 }
 
-/// On-line lane elasticity: every `every` admissions the scheduler runs
-/// a control tick — the serving-loop counterpart of the trace-driven
-/// [`crate::autoscale::Engine`].  The demand signal is the server's
-/// bounded-queue depth; actuation fences/unfences PR regions on every
-/// lane, so subsequent placements shift between fabric and the server
-/// CPU (per-app region *reservations* live in the autoscale engine; the
-/// threaded server scales the fabric footprint as a whole).
+/// On-line lane elasticity — the serving-loop counterpart of the
+/// trace-driven [`crate::autoscale::Engine`].  Each lane executor runs
+/// its own control tick against its own demand (that lane's
+/// admitted-minus-completed depth, [`LaneStatus`]), so one hot lane no
+/// longer drags every cold lane through lockstep grow/shrink.  Ticks
+/// fire on two cadences: every `every` admissions *to that lane*, and —
+/// through a [`crate::sim::ControlCadence`] horizon on the lane's
+/// virtual clock — every `every_cycles` fabric cycles, so a pending
+/// control tick bounds the lane's jump instead of dragging it back to
+/// cycle-stepping (DESIGN.md §13).  A shrink tick reserves one region
+/// per app with work in flight on the lane (the cheap per-app
+/// reservation floor), on top of `min_regions`.
 #[derive(Debug, Clone, Copy)]
 pub struct LaneAutoscale {
-    /// Admissions between control ticks (0 disables).
+    /// Admissions to a lane between its control ticks (0 disables).
     pub every: usize,
-    /// Unfence one region per lane when in-flight depth exceeds this.
+    /// Fabric cycles of a lane's virtual clock between its control
+    /// ticks (0 disables the cycle cadence).
+    pub every_cycles: u64,
+    /// Unfence one region when the lane's depth exceeds this.
     pub grow_above: usize,
-    /// Fence one region per lane when in-flight depth is at or below
-    /// this (hysteresis: keep `grow_above > shrink_below`).
+    /// Fence one region when the lane's depth is at or below this
+    /// (hysteresis: keep `grow_above > shrink_below`).
     pub shrink_below: usize,
     /// Regions each lane always keeps available.
     pub min_regions: usize,
@@ -101,7 +116,13 @@ pub struct LaneAutoscale {
 
 impl Default for LaneAutoscale {
     fn default() -> Self {
-        Self { every: 8, grow_above: 8, shrink_below: 1, min_regions: 1 }
+        Self {
+            every: 8,
+            every_cycles: 0,
+            grow_above: 8,
+            shrink_below: 1,
+            min_regions: 1,
+        }
     }
 }
 
@@ -133,10 +154,11 @@ pub struct Response {
     /// Fabric lane that served the request.
     pub fabric: usize,
     /// The lane's cumulative virtual clock (total fabric cycles it has
-    /// ever consumed) at admission — deterministic, unlike `wall`.  It
-    /// never drains, so it is a backlog *proxy* for ordering requests
-    /// admitted to the same lane, not a latency: use the fleet
-    /// simulator's `start - arrival` queue wait for that.
+    /// ever consumed) when its executor picked the request up —
+    /// deterministic, unlike `wall`.  It never drains, so it is a
+    /// backlog *proxy* for ordering requests admitted to the same lane,
+    /// not a latency: use the fleet simulator's `start - arrival` queue
+    /// wait for that.
     pub queue_wait_cycles: u64,
 }
 
@@ -151,6 +173,7 @@ enum WorkerMsg {
         submitted: Instant,
         fabric: usize,
         queue_wait_cycles: u64,
+        lane: Arc<LaneStatus>,
         respond: Sender<Response>,
     },
     Stop,
@@ -220,8 +243,9 @@ impl ElasticServer {
         let slots = Arc::new(Semaphore::new(cfg.server.queue_depth));
         let in_flight = Arc::new(AtomicUsize::new(0));
 
+        let worker_count = cfg.server.workers.max(1);
         let mut workers = Vec::new();
-        for w in 0..cfg.server.workers.max(1) {
+        for w in 0..worker_count {
             let rx = Arc::clone(&work_rx);
             let rt = runtime.clone();
             let cfg_w = cfg.clone();
@@ -252,6 +276,7 @@ impl ElasticServer {
                     sched_cfg,
                     opts,
                     sched_rt,
+                    worker_count,
                     slots_s,
                     in_flight_s,
                     scale_stats_s,
@@ -315,45 +340,115 @@ impl Drop for ElasticServer {
     }
 }
 
-/// One fabric lane owned by the scheduler.
-struct Lane {
-    manager: ElasticManager,
-    /// Cumulative fabric cycles consumed on this lane (virtual clock;
-    /// the admission policy's load signal).
-    clock: u64,
+/// Shared per-lane state: written by the admission thread, the lane's
+/// executor and the worker pool; read by the placement policies and the
+/// lane's autoscale control tick.  This is the *per-lane* demand signal
+/// — admitted-minus-completed depth and the apps with work in flight on
+/// this lane — replacing the old global in-flight gauge that made one
+/// hot lane drag every cold lane through the same grow/shrink decision.
+#[derive(Debug, Default)]
+pub struct LaneStatus {
+    /// Requests the admission thread has routed to this lane.
+    admitted: AtomicU64,
+    /// Requests whose responses have been delivered.
+    completed: AtomicU64,
+    /// The lane executor's published virtual clock (cumulative fabric
+    /// cycles consumed on this lane).
+    clock: AtomicU64,
+    /// The lane manager's published spare crossbar share (refreshed at
+    /// startup and after each control tick).
+    spare_share: AtomicU64,
+    /// App id -> outstanding requests on this lane; the shrink tick's
+    /// per-app reservation floor counts this map's keys.
+    apps: Mutex<HashMap<u32, usize>>,
+}
+
+impl LaneStatus {
+    /// Requests admitted to this lane whose responses have not been
+    /// delivered yet.
+    pub fn depth(&self) -> usize {
+        let admitted = self.admitted.load(Ordering::SeqCst);
+        let completed = self.completed.load(Ordering::SeqCst);
+        admitted.saturating_sub(completed) as usize
+    }
+
+    /// Distinct apps with work in flight on this lane.
+    pub fn active_apps(&self) -> usize {
+        self.apps.lock().unwrap().len()
+    }
+
+    fn note_app(&self, app_id: u32) {
+        *self.apps.lock().unwrap().entry(app_id).or_insert(0) += 1;
+    }
+
+    fn clear_app(&self, app_id: u32) {
+        let mut apps = self.apps.lock().unwrap();
+        if let Some(n) = apps.get_mut(&app_id) {
+            *n -= 1;
+            if *n == 0 {
+                apps.remove(&app_id);
+            }
+        }
+    }
+}
+
+/// Terminal bookkeeping for one request.  Every response path — worker
+/// completion, lane-executor error, dead-channel recovery — must run
+/// this exactly once, after `respond.send`: lane completion counter,
+/// per-app in-flight map, global in-flight gauge, queue slot.
+fn finish_request(
+    lane: &LaneStatus,
+    app_id: u32,
+    in_flight: &AtomicUsize,
+    slots: &Semaphore,
+) {
+    lane.completed.fetch_add(1, Ordering::SeqCst);
+    lane.clear_app(app_id);
+    in_flight.fetch_sub(1, Ordering::SeqCst);
+    slots.release();
 }
 
 fn select_lane(
-    lanes: &[Lane],
+    statuses: &[Arc<LaneStatus>],
+    forwarded: &[u64],
     pins: &mut HashMap<u32, usize>,
     policy: AdmissionPolicy,
     req: &AppRequest,
 ) -> usize {
-    let least_loaded = |lanes: &[Lane]| {
-        (0..lanes.len())
-            .min_by_key(|&i| (lanes[i].clock, i))
+    let least_loaded = || {
+        (0..statuses.len())
+            .min_by_key(|&i| (statuses[i].depth(), forwarded[i], i))
             .expect("server has lanes")
     };
     match policy {
-        AdmissionPolicy::LeastLoaded => least_loaded(lanes),
+        AdmissionPolicy::LeastLoaded => least_loaded(),
         AdmissionPolicy::StickyByApp => {
             if let Some(&pinned) = pins.get(&req.app_id) {
                 pinned
             } else {
-                let chosen = least_loaded(lanes);
+                // First placement keys on the admission thread's own
+                // deterministic forwarded counts, not on racy depths:
+                // sticky pinning must be run-to-run reproducible
+                // (pinned by tests/fleet_server.rs).
+                let chosen = (0..statuses.len())
+                    .min_by_key(|&i| (forwarded[i], i))
+                    .expect("server has lanes");
                 pins.insert(req.app_id, chosen);
                 chosen
             }
         }
-        AdmissionPolicy::BandwidthAware => (0..lanes.len())
+        AdmissionPolicy::BandwidthAware => (0..statuses.len())
             .min_by_key(|&i| {
-                let spare = lanes[i].manager.spare_share();
-                (std::cmp::Reverse(spare), lanes[i].clock, i)
+                let spare = statuses[i].spare_share.load(Ordering::SeqCst);
+                (std::cmp::Reverse(spare), statuses[i].depth(), forwarded[i], i)
             })
             .expect("server has lanes"),
     }
 }
 
+/// The admission thread: routes each submission to a lane executor and
+/// never touches a fabric itself, so the FPGA prefix of lane 0 cannot
+/// block admission to lane 1.
 #[allow(clippy::too_many_arguments)]
 fn scheduler_loop(
     submit_rx: Receiver<Submission>,
@@ -361,36 +456,135 @@ fn scheduler_loop(
     cfg: SystemConfig,
     opts: FleetOptions,
     runtime: Option<RuntimeHandle>,
+    worker_count: usize,
     slots: Arc<Semaphore>,
     in_flight: Arc<AtomicUsize>,
     scale_stats: Arc<ScaleStats>,
 ) {
-    let mut lanes: Vec<Lane> = (0..opts.fabrics.max(1))
-        .map(|_| Lane {
-            manager: ElasticManager::new(cfg.clone(), runtime.clone()),
-            clock: 0,
-        })
-        .collect();
+    let fabrics = opts.fabrics.max(1);
+    let statuses: Vec<Arc<LaneStatus>> =
+        (0..fabrics).map(|_| Arc::new(LaneStatus::default())).collect();
+    let mut lane_txs = Vec::new();
+    let mut lane_handles = Vec::new();
+    for lane_idx in 0..fabrics {
+        let (tx, rx) = channel::<Submission>();
+        lane_txs.push(tx);
+        let cfg_l = cfg.clone();
+        let rt = runtime.clone();
+        let status = Arc::clone(&statuses[lane_idx]);
+        let work = work_tx.clone();
+        let slots_l = Arc::clone(&slots);
+        let in_flight_l = Arc::clone(&in_flight);
+        let stats = Arc::clone(&scale_stats);
+        let autoscale = opts.autoscale;
+        lane_handles.push(
+            std::thread::Builder::new()
+                .name(format!("efpga-lane-{lane_idx}"))
+                .spawn(move || {
+                    lane_loop(
+                        rx,
+                        work,
+                        cfg_l,
+                        rt,
+                        autoscale,
+                        lane_idx,
+                        status,
+                        slots_l,
+                        in_flight_l,
+                        stats,
+                    )
+                })
+                .expect("spawn lane executor"),
+        );
+    }
+
     let mut pins: HashMap<u32, usize> = HashMap::new();
-    let mut admitted: usize = 0;
+    let mut forwarded = vec![0u64; fabrics];
     while let Ok(sub) = submit_rx.recv() {
-        admitted += 1;
-        // Control-loop tick interleaved with serving: scale every lane's
-        // fabric footprint against the queue's demand signal.
-        if let Some(scale) = opts.autoscale {
-            if scale.every > 0 && admitted % scale.every == 0 {
-                autoscale_tick(&mut lanes, &scale, &in_flight, &scale_stats);
+        let lane =
+            select_lane(&statuses, &forwarded, &mut pins, opts.policy, &sub.req);
+        forwarded[lane] += 1;
+        let status = &statuses[lane];
+        status.admitted.fetch_add(1, Ordering::SeqCst);
+        status.note_app(sub.req.app_id);
+        if let Err(send_err) = lane_txs[lane].send(sub) {
+            // Lane executor died: fail the request without leaking its
+            // queue slot or its lane bookkeeping.
+            let sub = send_err.0;
+            let app_id = sub.req.app_id;
+            let _ = sub.respond.send(Response {
+                report: Err(ElasticError::Server("lane executor gone".into())),
+                wall: sub.submitted.elapsed(),
+                fabric: lane,
+                queue_wait_cycles: status.clock.load(Ordering::SeqCst),
+            });
+            finish_request(status, app_id, &in_flight, &slots);
+        }
+    }
+    // Drain: close the lane queues, wait for every executor to flush
+    // its backlog into the shared worker FIFO, then stop each worker
+    // with exactly one Stop — FIFO order guarantees all lane work
+    // precedes the stops.
+    drop(lane_txs);
+    for h in lane_handles {
+        let _ = h.join();
+    }
+    for _ in 0..worker_count {
+        let _ = work_tx.send(WorkerMsg::Stop);
+    }
+}
+
+/// One fabric lane's executor: owns the lane's [`ElasticManager`] and
+/// virtual clock, serves FPGA prefixes in admission order, fans CPU
+/// suffixes out to the shared worker pool, and runs this lane's
+/// autoscale control ticks against this lane's own demand.
+#[allow(clippy::too_many_arguments)]
+fn lane_loop(
+    rx: Receiver<Submission>,
+    work_tx: Sender<WorkerMsg>,
+    cfg: SystemConfig,
+    runtime: Option<RuntimeHandle>,
+    autoscale: Option<LaneAutoscale>,
+    lane_idx: usize,
+    status: Arc<LaneStatus>,
+    slots: Arc<Semaphore>,
+    in_flight: Arc<AtomicUsize>,
+    stats: Arc<ScaleStats>,
+) {
+    let mut manager = ElasticManager::new(cfg, runtime);
+    let mut clock: u64 = 0;
+    let mut cadence = ControlCadence::new(autoscale.map_or(0, |s| s.every_cycles));
+    let mut admissions: usize = 0;
+    status.spare_share.store(manager.spare_share() as u64, Ordering::SeqCst);
+    while let Ok(sub) = rx.recv() {
+        admissions += 1;
+        if let Some(scale) = autoscale {
+            let mut tick = scale.every > 0 && admissions % scale.every == 0;
+            // The cycle cadence is an EventDriven horizon on the lane's
+            // virtual clock: between boundaries it contributes
+            // `next_interesting_cycle`, so a pending control tick
+            // bounds the fast-path's jump instead of dragging the lane
+            // back to cycle-stepping (DESIGN.md §13).  Crossing several
+            // boundaries in one long prefix still costs one tick here —
+            // `due` consumes them all.
+            while cadence.due(clock) {
+                tick = true;
+            }
+            if tick {
+                autoscale_tick(&mut manager, &scale, &status, &stats);
+                status
+                    .spare_share
+                    .store(manager.spare_share() as u64, Ordering::SeqCst);
             }
         }
-        let lane_idx = select_lane(&lanes, &mut pins, opts.policy, &sub.req);
-        let queue_wait_cycles = lanes[lane_idx].clock;
-        let lane = &mut lanes[lane_idx];
-        let placement = lane.manager.plan(&sub.req.stages);
-        // Run the FPGA prefix synchronously on the lane's fabric; hand
+        let queue_wait_cycles = clock;
+        let placement = manager.plan(&sub.req.stages);
+        // Run the FPGA prefix synchronously on this lane's fabric; hand
         // the CPU suffix to the worker pool.
-        match run_fpga_prefix(&mut lane.manager, &sub.req, &placement) {
+        match run_fpga_prefix(&mut manager, &sub.req, &placement) {
             Ok((partial, tl, fpga_stages)) => {
-                lane.clock += tl.fabric_cycles + tl.reconfig_cycles;
+                clock += tl.fabric_cycles + tl.reconfig_cycles;
+                status.clock.store(clock, Ordering::SeqCst);
                 let remaining: Vec<ModuleKind> = placement
                     .iter()
                     .filter(|p| !p.is_fpga())
@@ -406,10 +600,25 @@ fn scheduler_loop(
                     submitted: sub.submitted,
                     fabric: lane_idx,
                     queue_wait_cycles,
+                    lane: Arc::clone(&status),
                     respond: sub.respond,
                 };
-                if work_tx.send(msg).is_err() {
-                    break;
+                if let Err(send_err) = work_tx.send(msg) {
+                    // Worker pool gone: fail the request here rather
+                    // than leak its queue slot.
+                    if let WorkerMsg::CpuSuffix { req, submitted, respond, lane, .. } =
+                        send_err.0
+                    {
+                        let _ = respond.send(Response {
+                            report: Err(ElasticError::Server(
+                                "worker pool gone".into(),
+                            )),
+                            wall: submitted.elapsed(),
+                            fabric: lane_idx,
+                            queue_wait_cycles,
+                        });
+                        finish_request(&lane, req.app_id, &in_flight, &slots);
+                    }
                 }
             }
             Err(e) => {
@@ -419,47 +628,30 @@ fn scheduler_loop(
                     fabric: lane_idx,
                     queue_wait_cycles,
                 });
-                in_flight.fetch_sub(1, Ordering::SeqCst);
-                slots.release();
+                finish_request(&status, sub.req.app_id, &in_flight, &slots);
             }
         }
-    }
-    // Drain: tell workers to stop once the queue is empty.
-    for _ in 0..64 {
-        let _ = work_tx.send(WorkerMsg::Stop);
     }
 }
 
-/// One lane-autoscale control tick: grow (unfence a region per lane)
-/// when the queue is deep, shrink (fence one per lane, keeping
-/// `min_regions`) when it is drained.
+/// One per-lane control tick: grow (unfence a region) when this lane's
+/// depth is deep, shrink (fence one) when it has drained — never below
+/// `min_regions`, and never below one region per app with work in
+/// flight on the lane (the per-app reservation floor).
 fn autoscale_tick(
-    lanes: &mut [Lane],
+    manager: &mut ElasticManager,
     scale: &LaneAutoscale,
-    in_flight: &AtomicUsize,
+    status: &LaneStatus,
     stats: &ScaleStats,
 ) {
-    let depth = in_flight.load(Ordering::SeqCst);
+    let depth = status.depth();
     if depth > scale.grow_above {
-        let mut grew = false;
-        for lane in lanes.iter_mut() {
-            if lane.manager.unfence_regions(1) > 0 {
-                grew = true;
-            }
-        }
-        if grew {
+        if manager.unfence_regions(1) > 0 {
             stats.grows.fetch_add(1, Ordering::Relaxed);
         }
     } else if depth <= scale.shrink_below {
-        let mut shrank = false;
-        for lane in lanes.iter_mut() {
-            if lane.manager.available_regions() > scale.min_regions
-                && lane.manager.fence_regions(1) > 0
-            {
-                shrank = true;
-            }
-        }
-        if shrank {
+        let reserved = scale.min_regions.max(status.active_apps());
+        if manager.available_regions() > reserved && manager.fence_regions(1) > 0 {
             stats.shrinks.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -534,8 +726,10 @@ fn worker_loop(
                 submitted,
                 fabric,
                 queue_wait_cycles,
+                lane,
                 respond,
             } => {
+                let app_id = req.app_id;
                 let mut failed: Option<ElasticError> = None;
                 for kind in &remaining {
                     let t0 = Instant::now();
@@ -583,8 +777,7 @@ fn worker_loop(
                     fabric,
                     queue_wait_cycles,
                 });
-                in_flight.fetch_sub(1, Ordering::SeqCst);
-                slots.release();
+                finish_request(&lane, app_id, &in_flight, &slots);
             }
         }
     }
@@ -733,6 +926,7 @@ mod tests {
                 policy: AdmissionPolicy::LeastLoaded,
                 autoscale: Some(LaneAutoscale {
                     every: 1,
+                    every_cycles: 0,
                     grow_above: 8,
                     // Depth reads 1 (or briefly 2) between sequential
                     // calls; 2 keeps the shrink phase race-free.
@@ -762,5 +956,101 @@ mod tests {
         }
         assert!(server.scale_stats().grows() > 0, "burst never grew lanes");
         server.shutdown();
+    }
+
+    #[test]
+    fn cycle_cadence_ticks_shrink_on_virtual_clock() {
+        // Admission cadence off (`every: 0`); ticks fire only when the
+        // lane's virtual clock crosses an `every_cycles` boundary.  One
+        // 3-stage 64-word prefix consumes far more than 128 fabric
+        // cycles (ICAP programming alone dwarfs it), so every call
+        // after the first crosses at least one boundary — and each
+        // sequential call sees depth 1 <= shrink_below, shrinking the
+        // lane toward the floor.
+        let server = ElasticServer::start_fleet(
+            SystemConfig::paper_defaults(),
+            FleetOptions {
+                fabrics: 1,
+                policy: AdmissionPolicy::LeastLoaded,
+                autoscale: Some(LaneAutoscale {
+                    every: 0,
+                    every_cycles: 128,
+                    grow_above: 8,
+                    shrink_below: 2,
+                    min_regions: 1,
+                }),
+            },
+            None,
+        );
+        for i in 0..6u64 {
+            let rep = call(&server, AppRequest::pipeline(0, data(64, 900 + i))).unwrap();
+            assert!(rep.verified);
+        }
+        assert!(
+            server.scale_stats().shrinks() > 0,
+            "virtual-clock cadence never ticked"
+        );
+        assert_eq!(server.scale_stats().grows(), 0, "no burst, no grows");
+        server.shutdown();
+    }
+
+    #[test]
+    fn autoscale_tick_scales_per_lane_demand() {
+        // The demand signal is per lane: a deep lane grows while a
+        // drained lane shrinks in the same control round — impossible
+        // with the old global in-flight gauge, which fed every lane the
+        // same depth.
+        let cfg = SystemConfig::paper_defaults();
+        let mut hot = ElasticManager::new(cfg.clone(), None);
+        let mut cold = ElasticManager::new(cfg, None);
+        hot.fence_regions(2);
+        let scale = LaneAutoscale {
+            every: 1,
+            every_cycles: 0,
+            grow_above: 2,
+            shrink_below: 1,
+            min_regions: 1,
+        };
+        let stats = ScaleStats::default();
+        let hot_status = LaneStatus::default();
+        hot_status.admitted.store(10, Ordering::SeqCst);
+        let cold_status = LaneStatus::default();
+        cold_status.admitted.store(4, Ordering::SeqCst);
+        cold_status.completed.store(4, Ordering::SeqCst);
+        let hot_avail = hot.available_regions();
+        let cold_avail = cold.available_regions();
+        autoscale_tick(&mut hot, &scale, &hot_status, &stats);
+        autoscale_tick(&mut cold, &scale, &cold_status, &stats);
+        assert_eq!(hot.available_regions(), hot_avail + 1, "deep lane grew");
+        assert_eq!(cold.available_regions(), cold_avail - 1, "drained lane shrank");
+        assert_eq!(stats.grows(), 1);
+        assert_eq!(stats.shrinks(), 1);
+    }
+
+    #[test]
+    fn shrink_respects_per_app_reservations() {
+        let mut m = ElasticManager::new(SystemConfig::paper_defaults(), None);
+        let scale = LaneAutoscale {
+            every: 1,
+            every_cycles: 0,
+            grow_above: 8,
+            shrink_below: 4,
+            min_regions: 1,
+        };
+        let stats = ScaleStats::default();
+        let status = LaneStatus::default();
+        // Three distinct apps in flight reserve all three regions.
+        for app in 0..3u32 {
+            status.note_app(app);
+        }
+        status.admitted.store(3, Ordering::SeqCst);
+        autoscale_tick(&mut m, &scale, &status, &stats);
+        assert_eq!(stats.shrinks(), 0, "3 apps reserve all 3 regions");
+        // One app drains; one region becomes reclaimable.
+        status.clear_app(2);
+        status.completed.store(1, Ordering::SeqCst);
+        autoscale_tick(&mut m, &scale, &status, &stats);
+        assert_eq!(stats.shrinks(), 1, "floor follows active apps down");
+        assert_eq!(m.available_regions(), 2);
     }
 }

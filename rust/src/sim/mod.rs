@@ -119,6 +119,81 @@ impl<T> Default for Schedule<T> {
     }
 }
 
+/// A periodic control-tick cadence on a virtual clock, with its own
+/// busy-period horizon.  The serving loop's lane executors use one per
+/// lane for the autoscale tick: between period boundaries the cadence is
+/// pure counter arithmetic, so its [`EventDriven::next_interesting_cycle`]
+/// is the next boundary — a pending control tick never drags a lane back
+/// to cycle-stepping, it just bounds the lane's jump (DESIGN.md §13).
+///
+/// Driven either tick-by-tick ([`Tick::tick`]) or by a jumping virtual
+/// clock through [`due`](ControlCadence::due); both fire exactly once
+/// per crossed boundary.
+#[derive(Debug, Clone)]
+pub struct ControlCadence {
+    period: u64,
+    next: u64,
+    fired: u64,
+}
+
+impl ControlCadence {
+    /// A cadence firing every `period` cycles (`0` disables it).
+    pub fn new(period: u64) -> Self {
+        Self {
+            period,
+            next: if period == 0 { HORIZON_NONE } else { period },
+            fired: 0,
+        }
+    }
+
+    /// Has the clock reached the next boundary?  Consumes one boundary
+    /// per call, so a clock that jumped several periods in one request
+    /// fires once per crossed boundary: `while cadence.due(now) { .. }`.
+    pub fn due(&mut self, now: u64) -> bool {
+        if self.period == 0 || now < self.next {
+            return false;
+        }
+        self.fired += 1;
+        self.next += self.period;
+        true
+    }
+
+    /// Control ticks fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+}
+
+impl Tick for ControlCadence {
+    fn tick(&mut self, cycle: u64) {
+        let _ = self.due(cycle);
+    }
+}
+
+impl EventDriven for ControlCadence {
+    fn stable(&self) -> bool {
+        // An enabled cadence always has a boundary pending — it will
+        // fire without any external stimulus.
+        self.period == 0
+    }
+
+    fn fast_forward(&mut self, to_cycle: u64) {
+        // Nothing to replay: between boundaries the cadence only waits.
+        debug_assert!(
+            self.period == 0 || to_cycle < self.next,
+            "fast-forward crossed a control-tick boundary"
+        );
+    }
+
+    fn next_interesting_cycle(&self, now: u64) -> u64 {
+        if self.period == 0 {
+            HORIZON_NONE
+        } else {
+            self.next.max(now + 1)
+        }
+    }
+}
+
 /// The fabric clock: a monotonically increasing cycle counter with
 /// helpers for running components in lock-step.
 #[derive(Debug, Default, Clone)]
@@ -456,6 +531,45 @@ mod tests {
         assert_eq!(o.inner.ticked, (1..=2003).collect::<Vec<u64>>());
         assert_eq!(f.inner.ticked, vec![3, 1002, 2000, 2003]);
         assert_eq!(f.inner.skipped_to, vec![2, 1001, 1999, 2002]);
+    }
+
+    #[test]
+    fn control_cadence_fires_once_per_crossed_boundary() {
+        let mut c = ControlCadence::new(10);
+        assert!(!c.due(9));
+        assert!(c.due(10), "first boundary");
+        assert!(!c.due(10), "consumed");
+        // A jump across several periods fires once per boundary.
+        assert!(c.due(45));
+        assert!(c.due(45));
+        assert!(c.due(45), "boundaries 20, 30, 40");
+        assert!(!c.due(45));
+        assert_eq!(c.fired(), 4);
+        // Disabled cadence never fires and has no horizon.
+        let mut off = ControlCadence::new(0);
+        assert!(!off.due(1_000_000));
+        assert!(off.stable());
+        assert_eq!(off.next_interesting_cycle(7), HORIZON_NONE);
+    }
+
+    #[test]
+    fn control_cadence_horizon_matches_oracle_drive() {
+        // Tick-by-tick (oracle) and horizon-jump (fast) drives agree on
+        // the fire count — the §12 horizon contract for the control tick.
+        let mut oracle = ControlCadence::new(8);
+        for cycle in 1..=50 {
+            oracle.tick(cycle);
+        }
+        let mut fast = ControlCadence::new(8);
+        let mut now = 0;
+        while now < 50 {
+            let target = fast.next_interesting_cycle(now).min(50);
+            fast.fast_forward(target - 1);
+            now = target;
+            fast.tick(now);
+        }
+        assert_eq!(oracle.fired(), fast.fired());
+        assert_eq!(oracle.fired(), 6, "boundaries 8..=48");
     }
 
     /// Same-cycle stimuli must apply in insertion order in both modes —

@@ -1,0 +1,178 @@
+//! Threaded-determinism suite (DESIGN.md §13): the fleet's sharded
+//! executor must be bit-for-bit indistinguishable from the serial path
+//! at every thread count and under every admission policy, and the
+//! threaded server must lose no responses under a concurrent burst.
+//!
+//! Also pins the per-trace counter contract: `FleetReport.migrated` /
+//! `fast_path_hits` / `oracle_runs` are deltas for the trace just run,
+//! never cumulative fleet totals (the regression that motivated it:
+//! a second `run_trace` on a warm fleet used to claim the first trace's
+//! counts too).
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::fleet::{AdmissionPolicy, Fleet};
+use elastic_fpga::manager::AppRequest;
+use elastic_fpga::server::{ElasticServer, FleetOptions, LaneAutoscale};
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::workload::{generate_count, TraceEvent, WorkloadSpec};
+
+fn cfg() -> SystemConfig {
+    SystemConfig::paper_defaults()
+}
+
+fn trace(n: usize, seed: u64) -> Vec<TraceEvent> {
+    generate_count(&WorkloadSpec::fleet_mix(), seed, n)
+}
+
+fn launch(policy: AdmissionPolicy, fast: bool, threads: usize) -> Fleet {
+    let mut fleet = Fleet::launch(3, &cfg(), None, policy, fast);
+    fleet.fence_node(0, 2); // heterogeneous capacity: exercises migration
+    fleet.execution_threads = threads;
+    fleet
+}
+
+#[test]
+fn one_vs_n_threads_is_byte_identical_across_policies() {
+    let events = trace(160, 0x7EAD);
+    for policy in [
+        AdmissionPolicy::LeastLoaded,
+        AdmissionPolicy::StickyByApp,
+        AdmissionPolicy::BandwidthAware,
+    ] {
+        let want = launch(policy, true, 1).run_trace(&events).unwrap();
+        for threads in [2usize, 8] {
+            let got = launch(policy, true, threads).run_trace(&events).unwrap();
+            assert_eq!(want.outcomes, got.outcomes, "{policy:?} x{threads}");
+            assert_eq!(
+                want.queue_wait.samples(),
+                got.queue_wait.samples(),
+                "{policy:?} x{threads}: queue-wait sample stream"
+            );
+            assert_eq!(
+                want.latency.samples(),
+                got.latency.samples(),
+                "{policy:?} x{threads}: latency sample stream"
+            );
+            assert_eq!(want.per_node_served, got.per_node_served);
+            assert_eq!(want.makespan_cycles, got.makespan_cycles);
+            assert_eq!(want.migrated, got.migrated);
+            assert_eq!(want.fast_path_hits, got.fast_path_hits);
+            assert_eq!(want.oracle_runs, got.oracle_runs);
+        }
+    }
+}
+
+#[test]
+fn oracle_mode_is_byte_identical_across_thread_counts() {
+    // Fast-path off: every request runs cycle-by-cycle, and the sharded
+    // path additionally replays each committed request on its admitted
+    // node — the schedule must still match the serial one exactly.
+    let events = trace(90, 0x0AC1E);
+    let want =
+        launch(AdmissionPolicy::LeastLoaded, false, 1).run_trace(&events).unwrap();
+    for threads in [2usize, 4] {
+        let got = launch(AdmissionPolicy::LeastLoaded, false, threads)
+            .run_trace(&events)
+            .unwrap();
+        assert_eq!(want.outcomes, got.outcomes, "oracle x{threads}");
+        assert_eq!(want.queue_wait.samples(), got.queue_wait.samples());
+        assert_eq!(want.latency.samples(), got.latency.samples());
+        assert_eq!(want.oracle_runs, got.oracle_runs);
+        assert_eq!(want.makespan_cycles, got.makespan_cycles);
+    }
+}
+
+#[test]
+fn counters_are_per_trace_deltas_across_two_traces() {
+    // Two traces back to back on one warm fleet: each report accounts
+    // for exactly its own trace.  Before the snapshot-and-delta fix the
+    // second report's fast_path_hits + oracle_runs summed to BOTH trace
+    // lengths.
+    let first = trace(120, 0xAAA);
+    let second = trace(80, 0xBBB);
+    let mut fleet = launch(AdmissionPolicy::StickyByApp, true, 2);
+    let a = fleet.run_trace(&first).unwrap();
+    assert_eq!(
+        a.fast_path_hits + a.oracle_runs,
+        first.len() as u64,
+        "first trace: every request is a hit or an oracle run"
+    );
+    let b = fleet.run_trace(&second).unwrap();
+    assert_eq!(
+        b.fast_path_hits + b.oracle_runs,
+        second.len() as u64,
+        "second trace must not inherit the first trace's counts"
+    );
+    assert_eq!(b.outcomes.len(), second.len());
+    assert_eq!(b.per_node_served.iter().sum::<u64>(), second.len() as u64);
+    assert!(
+        b.migrated <= second.len() as u64,
+        "migrated must be a per-trace count, got {}",
+        b.migrated
+    );
+    // The warm cache carries over even though the counters reset: the
+    // second trace re-measures only shapes the first never saw.
+    assert!(
+        b.oracle_runs < a.oracle_runs,
+        "warm cache ignored ({} vs {})",
+        b.oracle_runs,
+        a.oracle_runs
+    );
+}
+
+#[test]
+fn concurrent_burst_loses_no_responses_and_drains() {
+    // 8 submitter threads x 12 requests against a 2-lane server with
+    // both autoscale cadences live: every request gets exactly one
+    // response, every response verifies, and after the burst drains the
+    // global in-flight gauge returns to zero (the slot-leak regression:
+    // a leaked queue slot or in-flight count would survive the drain).
+    let server = ElasticServer::start_fleet(
+        cfg(),
+        FleetOptions {
+            fabrics: 2,
+            policy: AdmissionPolicy::LeastLoaded,
+            autoscale: Some(LaneAutoscale {
+                every: 4,
+                every_cycles: 256,
+                grow_above: 6,
+                shrink_below: 2,
+                min_regions: 1,
+            }),
+        },
+        None,
+    );
+    std::thread::scope(|s| {
+        for submitter in 0..8u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = SplitMix64::new(0x5EED ^ submitter);
+                for i in 0..12u64 {
+                    let mut data = vec![0u32; 64];
+                    rng.fill_u32(&mut data);
+                    let app_id = ((submitter + i) % 4) as u32;
+                    let rx = server
+                        .submit(AppRequest::pipeline(app_id, data))
+                        .expect("submit failed");
+                    let resp = rx.recv().expect("response lost");
+                    assert!(rx.try_recv().is_err(), "duplicate response");
+                    assert!(resp.fabric < 2);
+                    let report = resp.report.expect("request failed");
+                    assert!(report.verified);
+                }
+            });
+        }
+    });
+    // Responses are sent before the terminal bookkeeping runs; give the
+    // workers a bounded moment to finish it.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while server.in_flight() != 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "in-flight never drained: {}",
+            server.in_flight()
+        );
+        std::thread::yield_now();
+    }
+    server.shutdown();
+}
