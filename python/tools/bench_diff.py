@@ -16,7 +16,15 @@ A silent bench rename, a dropped case, or a removed metric — the
 "perf-format rot" that previously let the trajectory decay unnoticed —
 fails the build; a faster or slower machine does not.
 
+`--validate` checks schema-versioned telemetry exports (the
+`--metrics-out` / `--trace-out` snapshots and the `BENCH_*_metrics.json`
+companions, DESIGN.md §14) instead of diffing against a baseline: the
+file must parse, carry an integer top-level `schema_version`, and hold
+no boolean leaves outside the known flag keys — a metric silently
+exported as true/false is format rot, not a value change.
+
 Usage: bench_diff.py COMMITTED_JSON FRESH_JSON
+       bench_diff.py --validate FILE [FILE ...]
 """
 
 import json
@@ -61,7 +69,58 @@ def diff(path, committed, fresh, problems):
     # allowed to move — that is the trajectory.
 
 
+# Keys whose boolean values are intentional (claim results and per-event
+# flags), not a numeric metric that decayed into true/false.
+BOOL_KEYS = {"ok", "migrated"}
+
+
+def validate_leaves(path, node, key, problems):
+    if isinstance(node, dict):
+        for k in sorted(node):
+            validate_leaves(f"{path}.{k}", node[k], k, problems)
+    elif isinstance(node, list):
+        for i, item in enumerate(node):
+            validate_leaves(f"{path}[{i}]", item, key, problems)
+    elif isinstance(node, bool) and key not in BOOL_KEYS:
+        problems.append(f"{path}: boolean leaf under key '{key}'")
+
+
+def validate(paths):
+    failed = False
+    for p in paths:
+        problems = []
+        try:
+            with open(p) as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError) as e:
+            problems.append(f"$: {e}")
+            doc = None
+        if isinstance(doc, dict):
+            version = doc.get("schema_version")
+            if version is None:
+                problems.append("$: missing top-level schema_version")
+            elif isinstance(version, bool) or not isinstance(version, int):
+                problems.append(
+                    f"$.schema_version: expected an integer, got {version!r}"
+                )
+            validate_leaves("$", doc, "", problems)
+        elif doc is not None:
+            problems.append(f"$: expected a JSON object, got {type(doc).__name__}")
+        if problems:
+            failed = True
+            print(f"invalid telemetry snapshot: {p}")
+            for problem in problems:
+                print(f"  {problem}")
+        else:
+            print(f"ok: {p} is a well-formed schema_version {doc['schema_version']} snapshot")
+    if failed:
+        sys.exit(1)
+
+
 def main():
+    if len(sys.argv) >= 3 and sys.argv[1] == "--validate":
+        validate(sys.argv[2:])
+        return
     if len(sys.argv) != 3:
         sys.exit(__doc__)
     committed_path, fresh_path = sys.argv[1], sys.argv[2]

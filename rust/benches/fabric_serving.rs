@@ -3,7 +3,8 @@
 //! trace, at 4 and 16 ports, with ICAP-timed installs on every request.
 //! Emits `BENCH_fabric.json` — executed-vs-skipped cycle accounting and
 //! requests/sec — so the perf trajectory has an end-to-end number next
-//! to `BENCH_crossbar.json`.
+//! to `BENCH_crossbar.json`, plus `BENCH_fabric_metrics.json`, the same
+//! accounting as a schema-versioned metrics snapshot (DESIGN.md §14).
 //!
 //! The two modes are cycle-exact (pinned by
 //! `tests/fastpath_equivalence.rs`); this bench cross-checks that on
@@ -20,6 +21,8 @@ mod harness;
 
 use elastic_fpga::config::SystemConfig;
 use elastic_fpga::manager::ElasticManager;
+use elastic_fpga::metrics::CycleThroughput;
+use elastic_fpga::telemetry::MetricsRegistry;
 use elastic_fpga::workload::{diurnal_tenants, generate_profiled, TraceEvent};
 
 /// One mode's run over a trace: total wall seconds, executed/skipped
@@ -74,6 +77,9 @@ struct CaseResult {
     fast_skipped: u64,
     virtual_cycles: u64,
     executed_ratio: f64,
+    /// Wall-clock-independent throughput: requests per million virtual
+    /// cycles, identical in both modes (they share the virtual clock).
+    virtual_req_per_mcycle: f64,
     oracle_req_per_s: f64,
     fast_req_per_s: f64,
 }
@@ -120,6 +126,9 @@ fn run_case(
         &format!("{name}: fast path executes >= 5x fewer cycles ({ratio:.1}x)"),
     );
 
+    let mut tp = CycleThroughput::new();
+    tp.record_items(requests as u64, 0);
+    tp.set_cycles(fast.virtual_cycles);
     let result = CaseResult {
         name,
         ports,
@@ -129,6 +138,7 @@ fn run_case(
         fast_skipped: fast.skipped_cycles,
         virtual_cycles: fast.virtual_cycles,
         executed_ratio: ratio,
+        virtual_req_per_mcycle: tp.items_per_mcycle(),
         oracle_req_per_s: requests as f64 / oracle.wall_s.max(1e-9),
         fast_req_per_s: requests as f64 / fast.wall_s.max(1e-9),
     };
@@ -172,7 +182,8 @@ fn main() {
             "    {{\"name\": \"{}\", \"ports\": {}, \"requests\": {}, \
              \"oracle_executed_cycles\": {}, \"fast_executed_cycles\": {}, \
              \"fast_skipped_cycles\": {}, \"virtual_cycles\": {}, \
-             \"executed_ratio\": {:.2}, \"oracle_requests_per_s\": {:.1}, \
+             \"executed_ratio\": {:.2}, \"virtual_req_per_mcycle\": {:.3}, \
+             \"oracle_requests_per_s\": {:.1}, \
              \"fast_requests_per_s\": {:.1}}}{}\n",
             c.name,
             c.ports,
@@ -182,6 +193,7 @@ fn main() {
             c.fast_skipped,
             c.virtual_cycles,
             c.executed_ratio,
+            c.virtual_req_per_mcycle,
             c.oracle_req_per_s,
             c.fast_req_per_s,
             if i + 1 < cases.len() { "," } else { "" }
@@ -190,5 +202,27 @@ fn main() {
     json.push_str("  ]\n}\n");
     std::fs::write("BENCH_fabric.json", &json).expect("write BENCH_fabric.json");
     println!("  wrote BENCH_fabric.json");
+
+    // Companion metrics snapshot (DESIGN.md §14): the deterministic
+    // cycle accounting as a schema-versioned labeled registry, so the
+    // export path is exercised by CI on every bench run.
+    let mut metrics = MetricsRegistry::new();
+    for c in &cases {
+        let labels: &[(&str, &str)] = &[("case", c.name)];
+        metrics.inc("fabric_requests_total", labels, c.requests as u64);
+        metrics.inc("fabric_oracle_executed_cycles_total", labels, c.oracle_executed);
+        metrics.inc("fabric_fast_executed_cycles_total", labels, c.fast_executed);
+        metrics.inc("fabric_fast_skipped_cycles_total", labels, c.fast_skipped);
+        metrics.set_gauge("fabric_virtual_cycles", labels, c.virtual_cycles as f64);
+        metrics.set_gauge("fabric_executed_ratio", labels, c.executed_ratio);
+        metrics.set_gauge(
+            "fabric_virtual_req_per_mcycle",
+            labels,
+            c.virtual_req_per_mcycle,
+        );
+    }
+    std::fs::write("BENCH_fabric_metrics.json", metrics.to_json())
+        .expect("write BENCH_fabric_metrics.json");
+    println!("  wrote BENCH_fabric_metrics.json");
     claims.finish();
 }

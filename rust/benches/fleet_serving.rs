@@ -2,7 +2,8 @@
 //! 1/2/4/8 execution threads over 8 fabrics (DESIGN.md §13).  Emits
 //! `BENCH_fleet.json` — requests/sec and virtual makespan per thread
 //! count — so the scaling trajectory has a committed number next to
-//! `BENCH_fabric.json`.
+//! `BENCH_fabric.json`, plus `BENCH_fleet_metrics.json`, the serial
+//! run's schema-versioned metrics snapshot (DESIGN.md §14).
 //!
 //! The workload is deliberately shape-heavy (32 payload sizes x 4 stage
 //! chains ≈ 128 distinct request shapes): the first-of-shape
@@ -22,6 +23,7 @@ mod harness;
 
 use elastic_fpga::config::SystemConfig;
 use elastic_fpga::fleet::{AdmissionPolicy, Fleet, FleetReport};
+use elastic_fpga::metrics::CycleThroughput;
 use elastic_fpga::modules::ModuleKind;
 use elastic_fpga::workload::{generate_count, TraceEvent, WorkloadSpec};
 
@@ -157,10 +159,17 @@ fn main() {
     json.push_str("  \"cases\": [\n");
     let wall_1 = base.wall_s;
     for (i, (t, r)) in runs.iter().enumerate() {
+        // Virtual throughput (requests per million fabric cycles) is
+        // wall-clock-independent: identical at every thread count, so it
+        // is the number a baseline diff can actually pin.
+        let mut tp = CycleThroughput::new();
+        tp.record_items(r.report.completed, 0);
+        tp.set_cycles(r.report.makespan_cycles);
         json.push_str(&format!(
             "    {{\"name\": \"threads{}\", \"threads\": {}, \
              \"requests_per_s\": {:.1}, \"wall_s\": {:.4}, \
              \"speedup_vs_serial\": {:.2}, \"makespan_ms\": {:.2}, \
+             \"virtual_req_per_mcycle\": {:.3}, \
              \"oracle_runs\": {}, \"fast_path_hits\": {}}}{}\n",
             t,
             t,
@@ -168,6 +177,7 @@ fn main() {
             r.wall_s,
             wall_1 / r.wall_s.max(1e-9),
             cfg.cycles_to_ms(r.report.makespan_cycles),
+            tp.items_per_mcycle(),
             r.report.oracle_runs,
             r.report.fast_path_hits,
             if i + 1 < runs.len() { "," } else { "" }
@@ -176,5 +186,12 @@ fn main() {
     json.push_str("  ]\n}\n");
     std::fs::write("BENCH_fleet.json", &json).expect("write BENCH_fleet.json");
     println!("  wrote BENCH_fleet.json");
+
+    // Companion metrics snapshot (DESIGN.md §14): the serial run's full
+    // per-tenant registry, schema-versioned for bench_diff --validate.
+    let mut metrics = base.report.metrics(&cfg);
+    std::fs::write("BENCH_fleet_metrics.json", metrics.to_json())
+        .expect("write BENCH_fleet_metrics.json");
+    println!("  wrote BENCH_fleet_metrics.json");
     claims.finish();
 }

@@ -63,6 +63,7 @@ use crate::config::SystemConfig;
 use crate::manager::{AppRequest, RegionState};
 use crate::metrics::CycleRecorder;
 use crate::modules::ModuleKind;
+use crate::telemetry::{TraceEvent as TelemetryEvent, Tracer};
 use crate::workload::{self, TraceEvent};
 use crate::Result;
 
@@ -257,6 +258,10 @@ pub struct Engine {
     slo_cycles: u64,
     tick_index: u64,
     ran: bool,
+    /// Structured scale-event sink (DESIGN.md §14): every grow/shrink
+    /// transition emits a [`TelemetryEvent::ScaleUp`]/`ScaleDown`
+    /// stamped with its virtual transition cycle.  `Off` by default.
+    pub tracer: Tracer,
 }
 
 impl Engine {
@@ -328,6 +333,7 @@ impl Engine {
             slo_cycles: 0,
             tick_index: 0,
             ran: false,
+            tracer: Tracer::default(),
             cfg: cfg.clone(),
         }
     }
@@ -710,6 +716,11 @@ impl Engine {
             regfile_before: rf_before,
             regfile_after: rf_after,
         });
+        self.tracer.emit_with(|| TelemetryEvent::ScaleUp {
+            cycle: t,
+            node,
+            regions: added,
+        });
         Ok(added)
     }
 
@@ -786,6 +797,7 @@ impl Engine {
             self.apps[app as usize].slices.remove(slice_idx);
         }
         let rf_after = self.node_regfile_generation(node);
+        let retired = removed.len();
         self.transitions.push(Transition {
             at_cycle: t,
             app_id: app,
@@ -795,6 +807,11 @@ impl Engine {
             icap_events: ev_idx,
             regfile_before: rf_before,
             regfile_after: rf_after,
+        });
+        self.tracer.emit_with(|| TelemetryEvent::ScaleDown {
+            cycle: t,
+            node,
+            regions: retired,
         });
         Ok(())
     }

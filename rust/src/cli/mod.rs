@@ -125,6 +125,8 @@ common flags:
   --requests N       request count for `serve`/`fleet`/`autoscale`
                      (default: 64/10000/20000)
   --no-pjrt          skip PJRT; use the golden model for CPU stages
+  --metrics-out F    write a schema-versioned JSON metrics snapshot
+                     (`serve`/`fleet`, DESIGN.md §14)
 
 fleet flags:
   --fabrics N        simulated boards (default: 8)
@@ -133,6 +135,8 @@ fleet flags:
   --oracle           disable the fast-path; run every request cycle-by-cycle
   --threads N        shard oracle runs across N scoped threads; results are
                      byte-identical to --threads 1 (default: 1)
+  --trace            capture the cycle-stamped telemetry event stream
+  --trace-out F      write the event stream as JSON (implies --trace)
 
 autoscale flags:
   --fabrics N        simulated boards (default: 5)

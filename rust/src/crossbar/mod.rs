@@ -50,6 +50,10 @@ use crate::Result;
 /// finished.  The WRR fairness properties are stated over this log.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GrantRecord {
+    /// Fabric cycle the grant was accounted (bus release / rotation).
+    pub cycle: u64,
+    /// App that held the bus (per-tenant attribution for telemetry).
+    pub app_id: u32,
     /// Slave port whose bus was held.
     pub slave: usize,
     /// Master port that held it.
@@ -551,7 +555,13 @@ impl Crossbar {
             .unwrap_or(0);
         self.stats.account_app_grant(app_id, words);
         if self.record_grants {
-            self.grant_log.push(GrantRecord { slave, master, words });
+            self.grant_log.push(GrantRecord {
+                cycle: self.cycle,
+                app_id,
+                slave,
+                master,
+                words,
+            });
         }
     }
 }

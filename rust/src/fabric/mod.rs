@@ -26,6 +26,7 @@ use crate::icap::{Icap, ReconfigDone, ReconfigRequest};
 use crate::modules::{ComputationModule, ModuleKind};
 use crate::regfile::RegisterFile;
 use crate::sim::{EventDriven, Tick};
+use crate::telemetry::{wb_error_name, TraceEvent, Tracer};
 use crate::wishbone::WbError;
 use crate::xdma::{AxiToWb, H2cBurst, WbToAxi, Xdma, BRIDGE_BUFFER_WORDS};
 use crate::{ElasticError, Result};
@@ -70,6 +71,12 @@ pub struct Fabric {
     /// Cycles accounted arithmetically by the fast-path
     /// ([`EventDriven::fast_forward`]) instead of executed.
     pub skipped_cycles: u64,
+    /// Cycle-stamped telemetry sink (DESIGN.md §14).  Off by default:
+    /// every emission site is a single discriminant branch.  Enable via
+    /// [`Fabric::set_tracing`], which also turns on crossbar grant
+    /// recording so arbitration grants surface as
+    /// [`TraceEvent::GrantIssued`].
+    pub telemetry: Tracer,
     cycle: u64,
 }
 
@@ -104,9 +111,18 @@ impl Fabric {
             mirrored_icap: crate::regfile::IcapStatus::Idle,
             executed_cycles: 0,
             skipped_cycles: 0,
+            telemetry: Tracer::Off,
             cfg,
             cycle: 0,
         }
+    }
+
+    /// Install a telemetry sink.  An enabled sink also switches on
+    /// crossbar grant recording (drained into the sink every tick);
+    /// installing [`Tracer::Off`] switches it back off.
+    pub fn set_tracing(&mut self, tracer: Tracer) {
+        self.xbar.set_record_grants(tracer.enabled());
+        self.telemetry = tracer;
     }
 
     /// System configuration.
@@ -146,11 +162,20 @@ impl Fabric {
     /// Reconfigure with an explicit descriptor (failure injection etc.).
     pub fn reconfigure_with(&mut self, req: ReconfigRequest) -> Result<()> {
         let region = req.region;
+        let app_id = req.app_id;
+        let words = req.bitstream_words;
         if !self.icap.start(req) {
             return Err(ElasticError::Allocation(
                 "ICAP busy: reconfigurations are serialized".into(),
             ));
         }
+        let cycle = self.cycle;
+        self.telemetry.emit_with(|| TraceEvent::IcapStart {
+            cycle,
+            app: app_id,
+            region,
+            words,
+        });
         // Old module (if any) is torn out; port isolated during PR.
         self.modules[region] = None;
         self.regfile
@@ -352,6 +377,12 @@ impl Fabric {
     }
 
     fn handle_reconfig_done(&mut self, done: ReconfigDone) {
+        self.telemetry.emit_with(|| TraceEvent::IcapDone {
+            cycle: done.cycle,
+            app: done.app_id,
+            region: done.region,
+            ok: done.ok,
+        });
         if done.ok {
             let mut m = ComputationModule::new(done.kind, done.region, done.app_id);
             m.batch_words = BRIDGE_BUFFER_WORDS;
@@ -368,10 +399,36 @@ impl Fabric {
         self.reconfig_log.push(done);
     }
 
+    /// Move recorded crossbar grants into the telemetry sink.  Guarded
+    /// so the disabled path is a branch plus an `is_empty` check.
+    fn drain_grant_telemetry(&mut self) {
+        if !self.telemetry.enabled() || self.xbar.grant_log().is_empty() {
+            return;
+        }
+        for g in self.xbar.take_grant_log() {
+            self.telemetry.emit(TraceEvent::GrantIssued {
+                cycle: g.cycle,
+                app: g.app_id,
+                slave: g.slave,
+                master: g.master,
+                words: g.words,
+            });
+        }
+    }
+
     fn route_events(&mut self) {
         for ev in self.xbar.take_events() {
             let app_covered =
                 self.regfile.layout().covers_app(ev.app_id as usize);
+            if let Err(err) = ev.result {
+                let cycle = self.cycle;
+                self.telemetry.emit_with(|| TraceEvent::ViolationMasked {
+                    cycle,
+                    app: ev.app_id,
+                    port: ev.port,
+                    err: wb_error_name(err),
+                });
+            }
             if ev.port == 0 {
                 self.axi2wb.on_send_complete(ev.result);
                 if app_covered {
@@ -479,6 +536,7 @@ impl Tick for Fabric {
         self.mirror_icap_status();
         self.sync_regfile(); // reconfig completion may have touched resets
         self.xbar.tick(cycle);
+        self.drain_grant_telemetry();
         self.route_events();
         self.tick_modules();
         self.tick_port0_slave();

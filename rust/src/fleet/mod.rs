@@ -45,9 +45,10 @@ use std::collections::{HashMap, HashSet};
 use crate::cluster::{BoardNode, Cluster, PlacementPolicy};
 use crate::config::SystemConfig;
 use crate::manager::AppRequest;
-use crate::metrics::CycleRecorder;
+use crate::metrics::{CycleRecorder, CycleThroughput};
 use crate::modules::ModuleKind;
 use crate::runtime::RuntimeHandle;
+use crate::telemetry::{MetricsRegistry, RequestSpan, TraceEvent as TelemetryEvent, Tracer};
 use crate::timing::CostBreakdown;
 use crate::workload::TraceEvent;
 use crate::{ElasticError, Result};
@@ -116,6 +117,11 @@ pub struct RequestOutcome {
     /// Was the request moved off its policy-chosen node to a board that
     /// could host the whole chain on fabric?
     pub migrated: bool,
+    /// Cycle-exact latency decomposition (DESIGN.md §14):
+    /// `span.total_cycles() == service_cycles` and
+    /// `span.end_to_end_cycles() == completion_cycle - arrival_cycle`,
+    /// exactly, for every outcome.
+    pub span: RequestSpan,
 }
 
 /// Aggregate result of a fleet run.
@@ -139,6 +145,11 @@ pub struct FleetReport {
     /// Fast-path cache hits vs cycle-accurate oracle executions.
     pub fast_path_hits: u64,
     pub oracle_runs: u64,
+    /// The trace's telemetry event stream (empty unless the fleet's
+    /// [`Fleet::tracer`] is [`Tracer::Full`]).  Emitted only at the
+    /// sequential admission/commit points, so it is byte-identical at
+    /// every `execution_threads` count (`tests/fleet_threads.rs`).
+    pub events: Vec<TelemetryEvent>,
 }
 
 impl FleetReport {
@@ -149,6 +160,46 @@ impl FleetReport {
         }
         let secs = cfg.cycles_to_ms(self.makespan_cycles) / 1e3;
         self.completed as f64 / secs
+    }
+
+    /// Build a per-app / per-node metrics registry from this report.
+    /// Everything is derived from virtual-clock quantities, so the
+    /// snapshot is deterministic across runs, hosts and thread counts.
+    pub fn metrics(&self, cfg: &SystemConfig) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("fleet_requests_total", &[], self.completed);
+        reg.inc("fleet_migrated_total", &[], self.migrated);
+        reg.inc("fleet_fast_path_hits_total", &[], self.fast_path_hits);
+        reg.inc("fleet_oracle_runs_total", &[], self.oracle_runs);
+        reg.set_gauge("fleet_makespan_cycles", &[], self.makespan_cycles as f64);
+        reg.set_gauge(
+            "fleet_requests_per_vs",
+            &[],
+            self.throughput_per_s(cfg),
+        );
+        let mut tp = CycleThroughput::new();
+        tp.record_items(self.completed, 0);
+        tp.set_cycles(self.makespan_cycles);
+        reg.set_gauge("fleet_requests_per_mcycle", &[], tp.items_per_mcycle());
+        for (i, &served) in self.per_node_served.iter().enumerate() {
+            let node = i.to_string();
+            reg.inc("node_requests_total", &[("node", &node)], served);
+        }
+        for o in &self.outcomes {
+            let app = o.app_id.to_string();
+            let labels = [("app", app.as_str())];
+            reg.inc("app_requests_total", &labels, 1);
+            if o.migrated {
+                reg.inc("app_migrated_total", &labels, 1);
+            }
+            reg.observe("app_service_cycles", &labels, o.service_cycles);
+            reg.observe("app_queue_wait_cycles", &labels, o.span.queue_wait_cycles);
+            reg.observe("app_bridge_cycles", &labels, o.span.bridge_cycles);
+            reg.observe("app_icap_cycles", &labels, o.span.icap_cycles);
+            reg.observe("app_fabric_cycles", &labels, o.span.fabric_cycles);
+            reg.observe("app_cpu_cycles", &labels, o.span.cpu_cycles);
+        }
+        reg
     }
 }
 
@@ -169,8 +220,14 @@ pub struct Fleet {
     /// Admission stays sequential either way, so reports are
     /// byte-identical across thread counts (`tests/fleet_threads.rs`).
     pub execution_threads: usize,
+    /// Telemetry sink (DESIGN.md §14).  Off by default; set to
+    /// [`Tracer::full`] to collect the per-trace event stream surfaced
+    /// in [`FleetReport::events`].  Events are emitted only at the
+    /// sequential admission/commit points, never from worker threads,
+    /// so the stream is byte-identical at every thread count.
+    pub tracer: Tracer,
     fast_path: bool,
-    shape_cache: HashMap<ShapeKey, u64>,
+    shape_cache: HashMap<ShapeKey, CostBreakdown>,
     migrated: u64,
     fast_path_hits: u64,
     oracle_runs: u64,
@@ -203,6 +260,7 @@ impl Fleet {
             pins: HashMap::new(),
             migrate_overflow: true,
             execution_threads: 1,
+            tracer: Tracer::Off,
             fast_path,
             shape_cache: HashMap::new(),
             migrated: 0,
@@ -236,8 +294,13 @@ impl Fleet {
 
     /// Pick the node for `req` (arriving at `arrival`, in fabric
     /// cycles) under the admission policy, then apply overflow
-    /// migration.  Returns `(node, migrated)`.
-    fn select_node(&mut self, req: &AppRequest, arrival: u64) -> (usize, bool) {
+    /// migration.  Returns `(node, migrated_from)`: `migrated_from` is
+    /// the policy-chosen node the request was moved off, if any.
+    fn select_node(
+        &mut self,
+        req: &AppRequest,
+        arrival: u64,
+    ) -> (usize, Option<usize>) {
         let base = match self.policy {
             AdmissionPolicy::LeastLoaded => self.least_loaded(),
             AdmissionPolicy::StickyByApp => {
@@ -252,11 +315,11 @@ impl Fleet {
             AdmissionPolicy::BandwidthAware => self.most_spare_bandwidth(),
         };
         if !self.migrate_overflow {
-            return (base, false);
+            return (base, None);
         }
         let need = req.stages.len();
         if self.cluster.nodes()[base].available_regions() >= need {
-            return (base, false);
+            return (base, None);
         }
         // Overflow: the policy-chosen board would run part of the chain
         // on the server CPU.  Migrate to the board that can start this
@@ -279,9 +342,9 @@ impl Fleet {
             Some(i)
                 if start(i) <= start(base).saturating_add(cpu_suffix_cycles) =>
             {
-                (i, true)
+                (i, Some(base))
             }
-            _ => (base, false),
+            _ => (base, None),
         }
     }
 
@@ -302,13 +365,15 @@ impl Fleet {
             .expect("fleet has nodes")
     }
 
-    /// Execute one request on `node`, returning `(service_cycles,
-    /// fpga_stages)`.  Fast-path: memoized by shape after one oracle run.
+    /// Execute one request on `node`, returning its cost breakdown and
+    /// `fpga_stages`.  Fast-path: memoized by shape after one oracle
+    /// run.  The breakdown (not just its cycle total) is cached so
+    /// committed outcomes carry an exact [`RequestSpan`] in both modes.
     fn execute_one(
         &mut self,
         node: usize,
         req: &AppRequest,
-    ) -> Result<(u64, usize)> {
+    ) -> Result<(CostBreakdown, usize)> {
         let fpga_stages = req
             .stages
             .len()
@@ -319,25 +384,24 @@ impl Fleet {
             fpga_stages,
         };
         if self.fast_path {
-            if let Some(&cycles) = self.shape_cache.get(&key) {
+            if let Some(&cost) = self.shape_cache.get(&key) {
                 self.fast_path_hits += 1;
                 // Keep the cluster's per-node stats in step with the
                 // oracle mode even though the fabric never runs.
                 let n = self.cluster.node_mut(node);
                 n.served += 1;
                 n.fpga_stages_hosted += fpga_stages as u64;
-                return Ok((cycles, fpga_stages));
+                return Ok((cost, fpga_stages));
             }
         }
         let report = self.cluster.execute_on(node, req)?;
         self.oracle_runs += 1;
         debug_assert!(report.verified, "oracle run failed golden verification");
         debug_assert_eq!(report.fpga_stages, fpga_stages);
-        let cycles = service_cycles(&self.cfg, &report.cost);
         if self.fast_path {
-            self.shape_cache.insert(key, cycles);
+            self.shape_cache.insert(key, report.cost);
         }
-        Ok((cycles, fpga_stages))
+        Ok((report.cost, fpga_stages))
     }
 
     /// Run an arrival-ordered trace to completion.
@@ -357,7 +421,56 @@ impl Fleet {
         report.migrated = self.migrated - at_entry.0;
         report.fast_path_hits = self.fast_path_hits - at_entry.1;
         report.oracle_runs = self.oracle_runs - at_entry.2;
+        // Per-trace event stream, like the counters above.
+        report.events = self.tracer.take_events();
         Ok(report)
+    }
+
+    /// Emit the lifecycle events for one committed outcome.  Called
+    /// only from the sequential admission/commit points, in arrival
+    /// order — never from worker threads — so the serial and sharded
+    /// executors produce identical streams.
+    fn emit_request_events(
+        &mut self,
+        o: &RequestOutcome,
+        migrated_from: Option<usize>,
+    ) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        let (app, node) = (o.app_id, o.node);
+        self.tracer.emit(TelemetryEvent::RequestAdmitted {
+            cycle: o.arrival_cycle,
+            app,
+            node,
+        });
+        if let Some(from) = migrated_from {
+            self.tracer.emit(TelemetryEvent::Migration {
+                cycle: o.arrival_cycle,
+                app,
+                from,
+                to: node,
+            });
+        }
+        if o.start_cycle > o.arrival_cycle {
+            self.tracer.emit(TelemetryEvent::RequestQueued {
+                cycle: o.arrival_cycle,
+                app,
+                node,
+                wait_cycles: o.start_cycle - o.arrival_cycle,
+            });
+        }
+        self.tracer.emit(TelemetryEvent::RequestDispatched {
+            cycle: o.start_cycle,
+            app,
+            node,
+        });
+        self.tracer.emit(TelemetryEvent::RequestCompleted {
+            cycle: o.completion_cycle,
+            app,
+            node,
+            service_cycles: o.service_cycles,
+        });
     }
 
     /// The single-threaded executor: admit and measure in one pass.
@@ -369,18 +482,21 @@ impl Fleet {
         let mut per_node_served = vec![0u64; self.cluster.node_count()];
         for ev in trace {
             let arrival = (ev.arrival_ms * cycles_per_ms).round() as u64;
-            let (node, migrated) = self.select_node(&ev.request, arrival);
+            let (node, migrated_from) = self.select_node(&ev.request, arrival);
+            let migrated = migrated_from.is_some();
             if migrated {
                 self.migrated += 1;
             }
             let start = arrival.max(self.busy_until[node]);
-            let (service, fpga_stages) = self.execute_one(node, &ev.request)?;
+            let (cost, fpga_stages) = self.execute_one(node, &ev.request)?;
+            let service = service_cycles(&self.cfg, &cost);
+            let span = RequestSpan::decompose(&self.cfg, &cost, start - arrival);
             let completion = start + service;
             self.busy_until[node] = completion;
             per_node_served[node] += 1;
             queue_wait.record(start - arrival);
             latency.record(completion - arrival);
-            outcomes.push(RequestOutcome {
+            let outcome = RequestOutcome {
                 app_id: ev.request.app_id,
                 node,
                 arrival_cycle: arrival,
@@ -389,7 +505,10 @@ impl Fleet {
                 service_cycles: service,
                 fpga_stages,
                 migrated,
-            });
+                span,
+            };
+            self.emit_request_events(&outcome, migrated_from);
+            outcomes.push(outcome);
         }
         Ok(FleetReport {
             completed: outcomes.len() as u64,
@@ -401,6 +520,7 @@ impl Fleet {
             migrated: self.migrated,
             fast_path_hits: self.fast_path_hits,
             oracle_runs: self.oracle_runs,
+            events: Vec::new(),
         })
     }
 
@@ -420,11 +540,11 @@ impl Fleet {
         let mut queue_wait = CycleRecorder::new();
         let mut latency = CycleRecorder::new();
         let mut per_node_served = vec![0u64; n_nodes];
-        // Shape -> service cycles, local to this run.  Fast-path mode
+        // Shape -> cost breakdown, local to this run.  Fast-path mode
         // seeds it from the persistent cache; oracle mode starts cold so
         // every shape is re-measured (and every request replayed)
         // cycle-by-cycle.
-        let mut costs: HashMap<ShapeKey, u64> = if self.fast_path {
+        let mut costs: HashMap<ShapeKey, CostBreakdown> = if self.fast_path {
             self.shape_cache.clone()
         } else {
             HashMap::new()
@@ -444,7 +564,8 @@ impl Fleet {
             while cursor < trace.len() {
                 let ev = &trace[cursor];
                 let arrival = (ev.arrival_ms * cycles_per_ms).round() as u64;
-                let (node, migrated) = self.select_node(&ev.request, arrival);
+                let (node, migrated_from) = self.select_node(&ev.request, arrival);
+                let migrated = migrated_from.is_some();
                 let fpga_stages = ev
                     .request
                     .stages
@@ -455,7 +576,7 @@ impl Fleet {
                     words: ev.request.data.len(),
                     fpga_stages,
                 };
-                let service = match costs.get(&key) {
+                let cost = match costs.get(&key) {
                     Some(&c) => c,
                     None => {
                         if let Some(e) = failed.remove(&key) {
@@ -475,13 +596,16 @@ impl Fleet {
                     if self.shape_cache.contains_key(&key) {
                         self.fast_path_hits += 1;
                     } else {
-                        self.shape_cache.insert(key, service);
+                        self.shape_cache.insert(key, cost);
                         self.oracle_runs += 1;
                     }
                 } else {
                     self.oracle_runs += 1;
                 }
+                let service = service_cycles(&self.cfg, &cost);
                 let start = arrival.max(self.busy_until[node]);
+                let span =
+                    RequestSpan::decompose(&self.cfg, &cost, start - arrival);
                 let completion = start + service;
                 self.busy_until[node] = completion;
                 {
@@ -492,7 +616,7 @@ impl Fleet {
                 per_node_served[node] += 1;
                 queue_wait.record(start - arrival);
                 latency.record(completion - arrival);
-                outcomes.push(RequestOutcome {
+                let outcome = RequestOutcome {
                     app_id: ev.request.app_id,
                     node,
                     arrival_cycle: arrival,
@@ -501,7 +625,10 @@ impl Fleet {
                     service_cycles: service,
                     fpga_stages,
                     migrated,
-                });
+                    span,
+                };
+                self.emit_request_events(&outcome, migrated_from);
+                outcomes.push(outcome);
                 cursor += 1;
             }
 
@@ -519,16 +646,13 @@ impl Fleet {
                         fpga_stages: o.fpga_stages,
                     });
                 }
-                let results = execute_on_nodes(
-                    self.cluster.nodes_mut(),
-                    per_node,
-                    threads,
-                    &self.cfg,
-                );
+                let results =
+                    execute_on_nodes(self.cluster.nodes_mut(), per_node, threads);
                 for (tag, r) in results {
                     let measured = r?;
                     debug_assert_eq!(
-                        measured, outcomes[tag].service_cycles,
+                        service_cycles(&self.cfg, &measured),
+                        outcomes[tag].service_cycles,
                         "oracle replay diverged from admission-time cost"
                     );
                 }
@@ -594,12 +718,8 @@ impl Fleet {
                     fpga_stages: key.fpga_stages,
                 });
             }
-            let results = execute_on_nodes(
-                self.cluster.nodes_mut(),
-                per_node,
-                threads,
-                &self.cfg,
-            );
+            let results =
+                execute_on_nodes(self.cluster.nodes_mut(), per_node, threads);
             // Quiesce merge, in harvest order.
             for (tag, r) in results {
                 let key = work[tag].0.clone();
@@ -624,6 +744,7 @@ impl Fleet {
             migrated: self.migrated,
             fast_path_hits: self.fast_path_hits,
             oracle_runs: self.oracle_runs,
+            events: Vec::new(),
         })
     }
 }
@@ -646,8 +767,7 @@ fn execute_on_nodes(
     nodes: &mut [BoardNode],
     mut per_node: Vec<Vec<FabricJob<'_>>>,
     threads: usize,
-    cfg: &SystemConfig,
-) -> Vec<(usize, Result<u64>)> {
+) -> Vec<(usize, Result<CostBreakdown>)> {
     debug_assert_eq!(per_node.len(), nodes.len());
     let node_jobs: Vec<_> = nodes
         .iter_mut()
@@ -659,7 +779,7 @@ fn execute_on_nodes(
     for (i, nj) in node_jobs.into_iter().enumerate() {
         groups[i % lanes].push(nj);
     }
-    let mut out: Vec<(usize, Result<u64>)> = Vec::new();
+    let mut out: Vec<(usize, Result<CostBreakdown>)> = Vec::new();
     std::thread::scope(|s| {
         let handles: Vec<_> = groups
             .into_iter()
@@ -678,7 +798,7 @@ fn execute_on_nodes(
                                         rep.fpga_stages,
                                         job.fpga_stages
                                     );
-                                    service_cycles(cfg, &rep.cost)
+                                    rep.cost
                                 },
                             );
                             res.push((job.tag, r));

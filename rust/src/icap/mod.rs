@@ -10,6 +10,12 @@
 //! On completion the reconfigured region's status ("successful or
 //! failed") is stored in the register file (§IV.D), and the fabric
 //! instantiates the new computation module and releases the port reset.
+//!
+//! Reconfigurations are observable through the telemetry plane: the
+//! fabric stamps [`crate::telemetry::TraceEvent::IcapStart`] when a
+//! request is accepted and
+//! [`crate::telemetry::TraceEvent::IcapDone`] from
+//! [`ReconfigDone::cycle`] when programming finishes (DESIGN.md §14).
 
 use crate::modules::ModuleKind;
 use crate::regfile::IcapStatus;

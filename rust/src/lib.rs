@@ -91,6 +91,19 @@
 //! shares from footprints on every transition, the fleet admits on
 //! spare share, and `[qos]` config tables / the `--plan` flag make the
 //! contract operator-visible (DESIGN.md §11).
+//!
+//! # The telemetry plane
+//!
+//! [`telemetry`] is the cycle-stamped observability plane (DESIGN.md
+//! §14): a shell-wide [`telemetry::Tracer`] with structured
+//! [`telemetry::TraceEvent`]s stamped from virtual clocks (so traces
+//! are byte-identical across `--threads` counts), per-request
+//! [`telemetry::RequestSpan`] latency decompositions that sum exactly
+//! to [`fleet::service_cycles`], a labeled per-app/per-lane
+//! [`telemetry::MetricsRegistry`] exported as Prometheus-style text or
+//! schema-versioned JSON (`--metrics-out` / `--trace-out`), and a
+//! bounded flight recorder that dumps each lane's last-N events on
+//! request errors.
 
 pub mod area;
 pub mod autoscale;
@@ -113,6 +126,7 @@ pub mod regfile;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod timing;
 pub mod util;
 pub mod wishbone;

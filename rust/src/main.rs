@@ -137,6 +137,9 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
             "--policy expects least|sticky|bandwidth, got '{policy_name}'"
         ))
     })?;
+    let trace_out = cli.flags.get("trace-out").cloned();
+    let metrics_out = cli.flags.get("metrics-out").cloned();
+    let tracing = cli.bool_or("trace", false)? || trace_out.is_some();
     println!(
         "fleet: {requests} requests over {fabrics} fabrics, policy {policy:?}, \
          {}, {threads} execution thread(s)",
@@ -145,6 +148,9 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let trace = generate_count(&WorkloadSpec::fleet_mix(), seed, requests);
     let mut fleet = Fleet::launch(fabrics, cfg, None, policy, !oracle);
     fleet.execution_threads = threads;
+    if tracing {
+        fleet.tracer = elastic_fpga::telemetry::Tracer::full();
+    }
     let t0 = std::time::Instant::now();
     let mut report = fleet.run_trace(&trace)?;
     let wall = t0.elapsed();
@@ -172,6 +178,18 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
         report.oracle_runs,
         report.fast_path_hits
     );
+    if tracing {
+        println!("captured {} trace events", report.events.len());
+    }
+    if let Some(path) = &trace_out {
+        std::fs::write(path, elastic_fpga::telemetry::trace_to_json(&report.events))?;
+        println!("wrote trace to {path}");
+    }
+    if let Some(path) = &metrics_out {
+        let mut metrics = report.metrics(cfg);
+        std::fs::write(path, metrics.to_json())?;
+        println!("wrote metrics snapshot to {path}");
+    }
     Ok(())
 }
 
@@ -284,6 +302,18 @@ fn serve(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
         thr.items_per_sec(),
         thr.mbytes_per_sec()
     );
+    if let Some(path) = cli.flags.get("metrics-out") {
+        let mut metrics = server.metrics_snapshot();
+        std::fs::write(path, metrics.to_json())?;
+        println!("wrote metrics snapshot to {path}");
+    }
+    let dumps = server.flight_dumps();
+    if !dumps.is_empty() {
+        eprintln!("{} flight-recorder dump(s) collected:", dumps.len());
+        for d in &dumps {
+            eprint!("{}", d.render());
+        }
+    }
     server.shutdown();
     Ok(())
 }

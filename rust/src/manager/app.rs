@@ -1,6 +1,7 @@
 //! Application request/report types.
 
 use crate::modules::ModuleKind;
+use crate::telemetry::RequestSpan;
 use crate::timing::{CostBreakdown, ExecutionTimeline};
 
 /// Where one stage of an application runs.
@@ -59,6 +60,10 @@ pub struct AppReport {
     pub fpga_stages: usize,
     /// Timing-model cost breakdown.
     pub cost: CostBreakdown,
+    /// Cycle-exact latency decomposition of `cost` (DESIGN.md §14):
+    /// the service components sum to
+    /// [`crate::fleet::service_cycles`]`(cfg, &cost)` exactly.
+    pub span: RequestSpan,
     /// Raw timed events.
     pub timeline: ExecutionTimeline,
     /// Output matched the golden model?

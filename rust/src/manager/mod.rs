@@ -239,6 +239,11 @@ impl ElasticManager {
         }
         self.fabric.regfile.write_master_budgets(&prog.budgets)?;
         self.fabric.xbar.set_rotation_order(&prog.rotation)?;
+        let cycle = self.fabric.now();
+        let masters = prog.budgets.len();
+        self.fabric
+            .telemetry
+            .emit_with(|| crate::telemetry::TraceEvent::PlanApplied { cycle, masters });
         self.applied_program = Some(prog.clone());
         Ok(prog)
     }
@@ -627,6 +632,13 @@ impl ElasticManager {
             intermediate = self.fabric.take_app_output(req.app_id);
             tl.c2h(bytes);
             if let Some(err) = crate::fabric::app_error(&self.fabric, req.app_id) {
+                // App-error spill: capture the preceding event window so
+                // the masked violation arrives with its context.
+                self.fabric.telemetry.dump(&format!(
+                    "app {} spilled {}",
+                    req.app_id,
+                    crate::telemetry::wb_error_name(err)
+                ));
                 self.release_app(req.app_id);
                 return Err(ElasticError::Wishbone(err));
             }
@@ -656,6 +668,9 @@ impl ElasticManager {
         let expected = golden_chain(&req.stages, &req.data);
         let verified = intermediate == expected;
         if self.cfg.manager.verify_results && !verified {
+            self.fabric
+                .telemetry
+                .dump(&format!("app {} output mismatch vs golden model", req.app_id));
             self.release_app(req.app_id);
             return Err(ElasticError::Verify(format!(
                 "app {} output mismatch vs golden model",
@@ -664,6 +679,7 @@ impl ElasticManager {
         }
 
         let cost: CostBreakdown = evaluate(&self.cfg, &tl);
+        let span = crate::telemetry::RequestSpan::decompose(&self.cfg, &cost, 0);
         self.release_app(req.app_id);
         Ok(AppReport {
             app_id: req.app_id,
@@ -671,6 +687,7 @@ impl ElasticManager {
             placement: placement.to_vec(),
             fpga_stages,
             cost,
+            span,
             timeline: tl,
             verified,
         })

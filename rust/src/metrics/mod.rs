@@ -48,6 +48,9 @@ impl Ewma {
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples_us: Vec<u64>,
+    /// Sorted scratch copy for percentile queries; rebuilt lazily so
+    /// `samples_us` keeps record order (see [`CycleRecorder::samples`]).
+    sorted_cache: Vec<u64>,
     sorted: bool,
     ewma: Option<Ewma>,
 }
@@ -98,18 +101,22 @@ impl LatencyRecorder {
         self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
     }
 
-    /// Percentile (0.0..=1.0) in microseconds, nearest-rank.
+    /// Percentile (0.0..=1.0) in microseconds, nearest-rank.  Queries
+    /// go through a cached sorted copy — the stored record order is
+    /// never perturbed.
     pub fn percentile_us(&mut self, q: f64) -> u64 {
         if self.samples_us.is_empty() {
             return 0;
         }
         if !self.sorted {
-            self.samples_us.sort_unstable();
+            self.sorted_cache.clear();
+            self.sorted_cache.extend_from_slice(&self.samples_us);
+            self.sorted_cache.sort_unstable();
             self.sorted = true;
         }
-        let rank = ((q * self.samples_us.len() as f64).ceil() as usize)
-            .clamp(1, self.samples_us.len());
-        self.samples_us[rank - 1]
+        let rank = ((q * self.sorted_cache.len() as f64).ceil() as usize)
+            .clamp(1, self.sorted_cache.len());
+        self.sorted_cache[rank - 1]
     }
 
     /// Max sample.
@@ -138,6 +145,9 @@ impl LatencyRecorder {
 #[derive(Debug, Default, Clone)]
 pub struct CycleRecorder {
     samples: Vec<u64>,
+    /// Sorted scratch copy for percentile queries; `samples` itself is
+    /// never reordered (the determinism suites compare it byte-for-byte).
+    sorted_cache: Vec<u64>,
     sorted: bool,
     ewma: Option<Ewma>,
 }
@@ -182,18 +192,23 @@ impl CycleRecorder {
         self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
     }
 
-    /// Percentile (0.0..=1.0) in cycles, nearest-rank.
+    /// Percentile (0.0..=1.0) in cycles, nearest-rank.  Queries go
+    /// through a cached sorted copy: they never reorder the stored
+    /// samples, so [`samples`](Self::samples) stays byte-comparable
+    /// before and after any percentile query.
     pub fn percentile(&mut self, q: f64) -> u64 {
         if self.samples.is_empty() {
             return 0;
         }
         if !self.sorted {
-            self.samples.sort_unstable();
+            self.sorted_cache.clear();
+            self.sorted_cache.extend_from_slice(&self.samples);
+            self.sorted_cache.sort_unstable();
             self.sorted = true;
         }
-        let rank = ((q * self.samples.len() as f64).ceil() as usize)
-            .clamp(1, self.samples.len());
-        self.samples[rank - 1]
+        let rank = ((q * self.sorted_cache.len() as f64).ceil() as usize)
+            .clamp(1, self.sorted_cache.len());
+        self.sorted_cache[rank - 1]
     }
 
     /// Max sample.
@@ -201,8 +216,8 @@ impl CycleRecorder {
         self.samples.iter().copied().max().unwrap_or(0)
     }
 
-    /// The raw samples as currently stored: record order until the
-    /// first percentile query sorts them in place.  The threaded-fleet
+    /// The raw samples in **record order**, always.  Percentile queries
+    /// sort a scratch copy, never this vec.  The threaded-fleet
     /// determinism tests compare recorders byte-for-byte through this —
     /// two runs must agree on *order*, not just on the histogram.
     pub fn samples(&self) -> &[u64] {
@@ -268,6 +283,76 @@ impl Throughput {
     }
 }
 
+/// Throughput over **virtual time**: items and bytes per million fabric
+/// cycles.  Unlike [`Throughput`] (wall-clock `Instant`), this is
+/// deterministic across hosts and runs — the fabric/fleet benches use
+/// it so committed `BENCH_*.json` values stop depending on host speed.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct CycleThroughput {
+    cycles: u64,
+    items: u64,
+    bytes: u64,
+}
+
+impl CycleThroughput {
+    /// Empty window.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count one item of `bytes` size.
+    pub fn record(&mut self, bytes: u64) {
+        self.items += 1;
+        self.bytes += bytes;
+    }
+
+    /// Count `items` items totalling `bytes` in one go (bulk form of
+    /// [`record`](Self::record), for report-level aggregation).
+    pub fn record_items(&mut self, items: u64, bytes: u64) {
+        self.items += items;
+        self.bytes += bytes;
+    }
+
+    /// Set the virtual window the counts happened in (e.g. a run's
+    /// makespan or executed-cycle total).
+    pub fn set_cycles(&mut self, cycles: u64) {
+        self.cycles = cycles;
+    }
+
+    /// Items per million cycles (0 while the window is empty).
+    pub fn items_per_mcycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.items as f64 * 1e6 / self.cycles as f64
+        }
+    }
+
+    /// Megabytes per million cycles (0 while the window is empty).
+    pub fn mbytes_per_mcycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.cycles as f64
+        }
+    }
+
+    /// Items counted.
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    /// Bytes counted.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// The virtual window in cycles.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,9 +396,10 @@ mod tests {
             r.record(c);
         }
         assert_eq!(r.count(), 4);
-        assert_eq!(r.samples(), &[5, 10, 15, 20], "record order before sort");
+        assert_eq!(r.samples(), &[5, 10, 15, 20], "record order");
         assert_eq!(r.percentile(0.5), 10);
         assert_eq!(r.percentile(1.0), 20);
+        assert_eq!(r.samples(), &[5, 10, 15, 20], "record order survives queries");
         assert_eq!(r.max(), 20);
         assert!((r.mean() - 12.5).abs() < 1e-12);
         let mut other = CycleRecorder::new();
@@ -371,5 +457,48 @@ mod tests {
         t.record(1000);
         assert_eq!(t.items(), 2);
         assert!(t.items_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn percentile_query_does_not_perturb_samples() {
+        // Regression: percentile() used to sort the sample vec in
+        // place, silently destroying the record order that samples()
+        // exposes for byte-identical threaded-determinism comparison.
+        let recorded = [40u64, 10, 30, 20];
+        let mut r = CycleRecorder::new();
+        for c in recorded {
+            r.record(c);
+        }
+        assert_eq!(r.percentile(0.5), 20);
+        assert_eq!(r.percentile(0.99), 40);
+        assert_eq!(r.samples(), &recorded, "queries must not reorder");
+        // New samples after a query are appended in order and visible
+        // to subsequent queries.
+        r.record(5);
+        assert_eq!(r.samples(), &[40, 10, 30, 20, 5]);
+        assert_eq!(r.percentile(0.0), 5, "cache refreshes after record");
+        assert_eq!(r.samples(), &[40, 10, 30, 20, 5]);
+
+        let mut l = LatencyRecorder::new();
+        l.record_us(9);
+        l.record_us(3);
+        assert_eq!(l.percentile_us(1.0), 9);
+        assert_eq!(l.percentile_us(0.1), 3);
+        l.record_us(1);
+        assert_eq!(l.percentile_us(0.1), 1);
+    }
+
+    #[test]
+    fn cycle_throughput_is_virtual_time() {
+        let mut t = CycleThroughput::new();
+        assert_eq!(t.items_per_mcycle(), 0.0, "empty window divides to 0");
+        t.record(500_000);
+        t.record(500_000);
+        t.set_cycles(2_000_000);
+        assert_eq!(t.items(), 2);
+        assert_eq!(t.bytes(), 1_000_000);
+        assert_eq!(t.cycles(), 2_000_000);
+        assert!((t.items_per_mcycle() - 1.0).abs() < 1e-12);
+        assert!((t.mbytes_per_mcycle() - 0.5).abs() < 1e-12);
     }
 }

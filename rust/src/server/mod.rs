@@ -55,6 +55,9 @@ use crate::manager::{golden_chain, AppReport, AppRequest, ElasticManager, StageP
 use crate::modules::ModuleKind;
 use crate::runtime::RuntimeHandle;
 use crate::sim::ControlCadence;
+use crate::telemetry::{
+    FlightDump, MetricsRegistry, RequestSpan, TraceEvent, Tracer, DEFAULT_FLIGHT_CAPACITY,
+};
 use crate::timing::{evaluate, ExecutionTimeline};
 use crate::{ElasticError, Result};
 
@@ -218,6 +221,8 @@ pub struct ElasticServer {
     slots: Arc<Semaphore>,
     in_flight: Arc<AtomicUsize>,
     scale_stats: Arc<ScaleStats>,
+    statuses: Vec<Arc<LaneStatus>>,
+    flight_dumps: Arc<Mutex<Vec<FlightDump>>>,
 }
 
 /// Legacy name for the single-fabric shape.
@@ -267,6 +272,13 @@ impl ElasticServer {
         let in_flight_s = Arc::clone(&in_flight);
         let scale_stats = Arc::new(ScaleStats::default());
         let scale_stats_s = Arc::clone(&scale_stats);
+        let statuses: Vec<Arc<LaneStatus>> = (0..opts.fabrics.max(1))
+            .map(|_| Arc::new(LaneStatus::default()))
+            .collect();
+        let statuses_s = statuses.clone();
+        let flight_dumps: Arc<Mutex<Vec<FlightDump>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let flight_dumps_s = Arc::clone(&flight_dumps);
         let scheduler = std::thread::Builder::new()
             .name("efpga-scheduler".into())
             .spawn(move || {
@@ -280,6 +292,8 @@ impl ElasticServer {
                     slots_s,
                     in_flight_s,
                     scale_stats_s,
+                    statuses_s,
+                    flight_dumps_s,
                 )
             })
             .expect("spawn scheduler");
@@ -291,6 +305,8 @@ impl ElasticServer {
             slots,
             in_flight,
             scale_stats,
+            statuses,
+            flight_dumps,
         }
     }
 
@@ -316,6 +332,60 @@ impl ElasticServer {
     /// Lane-autoscaler counters (all zero when autoscale is off).
     pub fn scale_stats(&self) -> &ScaleStats {
         &self.scale_stats
+    }
+
+    /// Shared per-lane counters, one [`LaneStatus`] per fabric lane.
+    pub fn lane_statuses(&self) -> &[Arc<LaneStatus>] {
+        &self.statuses
+    }
+
+    /// Point-in-time metrics snapshot (DESIGN.md §14): per-lane
+    /// admitted/completed counters, depth/clock/spare-share gauges from
+    /// the shared [`LaneStatus`] blocks, plus the autoscaler's
+    /// grow/shrink totals.  Safe to call while the server is serving —
+    /// the counters are the same atomics the admission policies read.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        m.set_gauge("server_in_flight", &[], self.in_flight() as f64);
+        m.inc("server_scale_grows_total", &[], self.scale_stats.grows());
+        m.inc("server_scale_shrinks_total", &[], self.scale_stats.shrinks());
+        m.set_gauge(
+            "server_flight_dumps",
+            &[],
+            self.flight_dumps.lock().unwrap().len() as f64,
+        );
+        for (i, lane) in self.statuses.iter().enumerate() {
+            let l = i.to_string();
+            let labels: [(&str, &str); 1] = [("lane", l.as_str())];
+            m.inc(
+                "lane_admitted_total",
+                &labels,
+                lane.admitted.load(Ordering::SeqCst),
+            );
+            m.inc(
+                "lane_completed_total",
+                &labels,
+                lane.completed.load(Ordering::SeqCst),
+            );
+            m.set_gauge("lane_depth", &labels, lane.depth() as f64);
+            m.set_gauge(
+                "lane_clock_cycles",
+                &labels,
+                lane.clock.load(Ordering::SeqCst) as f64,
+            );
+            m.set_gauge(
+                "lane_spare_share",
+                &labels,
+                lane.spare_share.load(Ordering::SeqCst) as f64,
+            );
+        }
+        m
+    }
+
+    /// Flight-recorder dumps the lane executors collected on request
+    /// errors (each carries the lane's last-N-events window).
+    pub fn flight_dumps(&self) -> Vec<FlightDump> {
+        self.flight_dumps.lock().unwrap().clone()
     }
 
     /// Stop accepting requests, drain, and join all threads.
@@ -460,10 +530,10 @@ fn scheduler_loop(
     slots: Arc<Semaphore>,
     in_flight: Arc<AtomicUsize>,
     scale_stats: Arc<ScaleStats>,
+    statuses: Vec<Arc<LaneStatus>>,
+    flight_dumps: Arc<Mutex<Vec<FlightDump>>>,
 ) {
-    let fabrics = opts.fabrics.max(1);
-    let statuses: Vec<Arc<LaneStatus>> =
-        (0..fabrics).map(|_| Arc::new(LaneStatus::default())).collect();
+    let fabrics = statuses.len();
     let mut lane_txs = Vec::new();
     let mut lane_handles = Vec::new();
     for lane_idx in 0..fabrics {
@@ -476,6 +546,7 @@ fn scheduler_loop(
         let slots_l = Arc::clone(&slots);
         let in_flight_l = Arc::clone(&in_flight);
         let stats = Arc::clone(&scale_stats);
+        let dumps = Arc::clone(&flight_dumps);
         let autoscale = opts.autoscale;
         lane_handles.push(
             std::thread::Builder::new()
@@ -492,6 +563,7 @@ fn scheduler_loop(
                         slots_l,
                         in_flight_l,
                         stats,
+                        dumps,
                     )
                 })
                 .expect("spawn lane executor"),
@@ -538,6 +610,13 @@ fn scheduler_loop(
 /// virtual clock, serves FPGA prefixes in admission order, fans CPU
 /// suffixes out to the shared worker pool, and runs this lane's
 /// autoscale control ticks against this lane's own demand.
+///
+/// Each lane's fabric runs a flight-recorder tracer (always on — a
+/// bounded ring, DESIGN.md §14): lifecycle and scale events stamped
+/// from the lane's cumulative virtual clock interleave with the
+/// fabric's own ICAP/grant events.  When a request errors, the lane
+/// dumps its window (plus any spill dumps the manager took) into the
+/// server-wide `flight_dumps` sink.
 #[allow(clippy::too_many_arguments)]
 fn lane_loop(
     rx: Receiver<Submission>,
@@ -550,14 +629,22 @@ fn lane_loop(
     slots: Arc<Semaphore>,
     in_flight: Arc<AtomicUsize>,
     stats: Arc<ScaleStats>,
+    dumps: Arc<Mutex<Vec<FlightDump>>>,
 ) {
     let mut manager = ElasticManager::new(cfg, runtime);
+    manager.fabric_mut().set_tracing(Tracer::flight(DEFAULT_FLIGHT_CAPACITY));
     let mut clock: u64 = 0;
     let mut cadence = ControlCadence::new(autoscale.map_or(0, |s| s.every_cycles));
     let mut admissions: usize = 0;
     status.spare_share.store(manager.spare_share() as u64, Ordering::SeqCst);
     while let Ok(sub) = rx.recv() {
         admissions += 1;
+        let app = sub.req.app_id;
+        manager.fabric_mut().telemetry.emit_with(|| TraceEvent::RequestAdmitted {
+            cycle: clock,
+            app,
+            node: lane_idx,
+        });
         if let Some(scale) = autoscale {
             let mut tick = scale.every > 0 && admissions % scale.every == 0;
             // The cycle cadence is an EventDriven horizon on the lane's
@@ -571,7 +658,7 @@ fn lane_loop(
                 tick = true;
             }
             if tick {
-                autoscale_tick(&mut manager, &scale, &status, &stats);
+                autoscale_tick(&mut manager, &scale, &status, &stats, clock, lane_idx);
                 status
                     .spare_share
                     .store(manager.spare_share() as u64, Ordering::SeqCst);
@@ -579,12 +666,26 @@ fn lane_loop(
         }
         let queue_wait_cycles = clock;
         let placement = manager.plan(&sub.req.stages);
+        manager.fabric_mut().telemetry.emit_with(|| TraceEvent::RequestDispatched {
+            cycle: clock,
+            app,
+            node: lane_idx,
+        });
         // Run the FPGA prefix synchronously on this lane's fabric; hand
         // the CPU suffix to the worker pool.
         match run_fpga_prefix(&mut manager, &sub.req, &placement) {
             Ok((partial, tl, fpga_stages)) => {
-                clock += tl.fabric_cycles + tl.reconfig_cycles;
+                let service = tl.fabric_cycles + tl.reconfig_cycles;
+                clock += service;
                 status.clock.store(clock, Ordering::SeqCst);
+                manager.fabric_mut().telemetry.emit_with(|| {
+                    TraceEvent::RequestCompleted {
+                        cycle: clock,
+                        app,
+                        node: lane_idx,
+                        service_cycles: service,
+                    }
+                });
                 let remaining: Vec<ModuleKind> = placement
                     .iter()
                     .filter(|p| !p.is_fpga())
@@ -622,13 +723,19 @@ fn lane_loop(
                 }
             }
             Err(e) => {
+                // Dump this lane's flight window (the manager already
+                // dumped at the spill site for app errors) and publish
+                // everything collected to the server-wide sink.
+                let fab = manager.fabric_mut();
+                fab.telemetry.dump(&format!("lane {lane_idx}: app {app} failed: {e}"));
+                dumps.lock().unwrap().extend(fab.telemetry.take_dumps());
                 let _ = sub.respond.send(Response {
                     report: Err(e),
                     wall: sub.submitted.elapsed(),
                     fabric: lane_idx,
                     queue_wait_cycles,
                 });
-                finish_request(&status, sub.req.app_id, &in_flight, &slots);
+                finish_request(&status, app, &in_flight, &slots);
             }
         }
     }
@@ -637,22 +744,36 @@ fn lane_loop(
 /// One per-lane control tick: grow (unfence a region) when this lane's
 /// depth is deep, shrink (fence one) when it has drained — never below
 /// `min_regions`, and never below one region per app with work in
-/// flight on the lane (the per-app reservation floor).
+/// flight on the lane (the per-app reservation floor).  Footprint
+/// changes emit [`TraceEvent::ScaleUp`]/[`TraceEvent::ScaleDown`]
+/// stamped with the lane's virtual `clock`.
 fn autoscale_tick(
     manager: &mut ElasticManager,
     scale: &LaneAutoscale,
     status: &LaneStatus,
     stats: &ScaleStats,
+    clock: u64,
+    lane_idx: usize,
 ) {
     let depth = status.depth();
     if depth > scale.grow_above {
         if manager.unfence_regions(1) > 0 {
             stats.grows.fetch_add(1, Ordering::Relaxed);
+            manager.fabric_mut().telemetry.emit_with(|| TraceEvent::ScaleUp {
+                cycle: clock,
+                node: lane_idx,
+                regions: 1,
+            });
         }
     } else if depth <= scale.shrink_below {
         let reserved = scale.min_regions.max(status.active_apps());
         if manager.available_regions() > reserved && manager.fence_regions(1) > 0 {
             stats.shrinks.fetch_add(1, Ordering::Relaxed);
+            manager.fabric_mut().telemetry.emit_with(|| TraceEvent::ScaleDown {
+                cycle: clock,
+                node: lane_idx,
+                regions: 1,
+            });
         }
     }
 }
@@ -759,12 +880,14 @@ fn worker_loop(
                                 req.app_id
                             )))
                         } else {
+                            let cost = evaluate(&cfg, &tl);
                             Ok(AppReport {
                                 app_id: req.app_id,
                                 output: partial,
                                 placement,
                                 fpga_stages,
-                                cost: evaluate(&cfg, &tl),
+                                cost,
+                                span: RequestSpan::decompose(&cfg, &cost, 0),
                                 timeline: tl,
                                 verified,
                             })
@@ -1019,8 +1142,8 @@ mod tests {
         cold_status.completed.store(4, Ordering::SeqCst);
         let hot_avail = hot.available_regions();
         let cold_avail = cold.available_regions();
-        autoscale_tick(&mut hot, &scale, &hot_status, &stats);
-        autoscale_tick(&mut cold, &scale, &cold_status, &stats);
+        autoscale_tick(&mut hot, &scale, &hot_status, &stats, 0, 0);
+        autoscale_tick(&mut cold, &scale, &cold_status, &stats, 0, 1);
         assert_eq!(hot.available_regions(), hot_avail + 1, "deep lane grew");
         assert_eq!(cold.available_regions(), cold_avail - 1, "drained lane shrank");
         assert_eq!(stats.grows(), 1);
@@ -1044,12 +1167,12 @@ mod tests {
             status.note_app(app);
         }
         status.admitted.store(3, Ordering::SeqCst);
-        autoscale_tick(&mut m, &scale, &status, &stats);
+        autoscale_tick(&mut m, &scale, &status, &stats, 0, 0);
         assert_eq!(stats.shrinks(), 0, "3 apps reserve all 3 regions");
         // One app drains; one region becomes reclaimable.
         status.clear_app(2);
         status.completed.store(1, Ordering::SeqCst);
-        autoscale_tick(&mut m, &scale, &status, &stats);
+        autoscale_tick(&mut m, &scale, &status, &stats, 0, 0);
         assert_eq!(stats.shrinks(), 1, "floor follows active apps down");
         assert_eq!(m.available_regions(), 2);
     }

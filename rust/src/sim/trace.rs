@@ -1,6 +1,11 @@
 //! Bounded cycle-stamped trace ring, used for debugging waveform-level
 //! behaviour without unbounded memory growth (the hardware analogue is an
 //! on-chip ILA capture buffer).
+//!
+//! This is the free-form, string-payload debug ring.  The structured,
+//! schema-versioned observability plane — typed events, per-tenant
+//! metrics, flight-recorder dumps — lives in [`crate::telemetry`]
+//! (DESIGN.md §14); prefer it for anything programmatic.
 
 use std::collections::VecDeque;
 

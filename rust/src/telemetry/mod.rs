@@ -1,0 +1,732 @@
+//! Cycle-stamped telemetry plane (DESIGN.md §14): shell-wide tracing,
+//! per-tenant metrics export, and a bounded flight recorder.
+//!
+//! Everything here is stamped from **virtual clocks** (fabric cycles,
+//! lane clocks, fleet admission cycles), never from wall time, so a
+//! trace captured at `--threads 8` is byte-identical to the serial one
+//! (`tests/fleet_threads.rs` pins this).  The three pieces:
+//!
+//! * [`Tracer`] — an `Option`-free enum-dispatch sink.  Disabled mode
+//!   is a single discriminant branch per emission site; event
+//!   construction goes through [`Tracer::emit_with`] so the disabled
+//!   path never even builds the event.
+//! * [`FlightRecorder`] — a bounded ring that always keeps the last N
+//!   events; [`Tracer::dump`] snapshots the window into a
+//!   [`FlightDump`] when an [`crate::ElasticError`] or app-error spill
+//!   needs its preceding context.
+//! * [`MetricsRegistry`] — labeled counters / gauges / cycle
+//!   histograms, snapshotted to Prometheus-style text and JSON (both
+//!   carry [`SCHEMA_VERSION`]).
+//!
+//! [`RequestSpan`] decomposes one request's latency into queue-wait /
+//! bridge / ICAP / fabric / CPU cycles such that the components sum
+//! *exactly* to [`crate::fleet::service_cycles`] — the cuts are
+//! differences of monotone rounded cumulative sums, so no cycle is
+//! ever lost to independent rounding.
+
+use std::collections::BTreeMap;
+
+use crate::config::SystemConfig;
+use crate::metrics::CycleRecorder;
+use crate::timing::CostBreakdown;
+use crate::wishbone::WbError;
+
+/// Version stamped into every metric / trace JSON snapshot.  Bump when
+/// the snapshot shape changes; `python/tools/bench_diff.py --validate`
+/// rejects snapshots without it.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Default per-lane flight-recorder window (events kept per lane).
+pub const DEFAULT_FLIGHT_CAPACITY: usize = 64;
+
+/// Stable snake_case name for a Wishbone error, for trace labels.
+pub fn wb_error_name(err: WbError) -> &'static str {
+    match err {
+        WbError::InvalidDestination => "invalid_destination",
+        WbError::GrantTimeout => "grant_timeout",
+        WbError::AckTimeout => "ack_timeout",
+        WbError::PortInReset => "port_in_reset",
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One structured, cycle-stamped event.  Every variant's `cycle` comes
+/// from the emitter's virtual clock — fabric cycle, lane clock, or
+/// fleet admission cycle — never wall time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// Fleet/server admitted a request onto a node.
+    RequestAdmitted { cycle: u64, app: u32, node: usize },
+    /// Request had to wait behind the node's busy horizon.
+    RequestQueued { cycle: u64, app: u32, node: usize, wait_cycles: u64 },
+    /// Service started.
+    RequestDispatched { cycle: u64, app: u32, node: usize },
+    /// Service finished.
+    RequestCompleted { cycle: u64, app: u32, node: usize, service_cycles: u64 },
+    /// ICAP began streaming a partial bitstream into a region.
+    IcapStart { cycle: u64, app: u32, region: usize, words: u64 },
+    /// ICAP finished (ok or aborted).
+    IcapDone { cycle: u64, app: u32, region: usize, ok: bool },
+    /// Crossbar arbiter granted a master to a slave port.
+    GrantIssued { cycle: u64, app: u32, slave: usize, master: usize, words: u32 },
+    /// Isolation mask converted a stray access into a typed error.
+    ViolationMasked { cycle: u64, app: u32, port: usize, err: &'static str },
+    /// Fleet moved a request off its preferred node.
+    Migration { cycle: u64, app: u32, from: usize, to: usize },
+    /// Autoscaler grew an app by `regions` regions on `node`.
+    ScaleUp { cycle: u64, node: usize, regions: usize },
+    /// Autoscaler retired `regions` regions on `node`.
+    ScaleDown { cycle: u64, node: usize, regions: usize },
+    /// A bandwidth plan was lowered onto the arbiter.
+    PlanApplied { cycle: u64, masters: usize },
+}
+
+impl TraceEvent {
+    /// The virtual-clock stamp.
+    pub fn cycle(&self) -> u64 {
+        match *self {
+            TraceEvent::RequestAdmitted { cycle, .. }
+            | TraceEvent::RequestQueued { cycle, .. }
+            | TraceEvent::RequestDispatched { cycle, .. }
+            | TraceEvent::RequestCompleted { cycle, .. }
+            | TraceEvent::IcapStart { cycle, .. }
+            | TraceEvent::IcapDone { cycle, .. }
+            | TraceEvent::GrantIssued { cycle, .. }
+            | TraceEvent::ViolationMasked { cycle, .. }
+            | TraceEvent::Migration { cycle, .. }
+            | TraceEvent::ScaleUp { cycle, .. }
+            | TraceEvent::ScaleDown { cycle, .. }
+            | TraceEvent::PlanApplied { cycle, .. } => cycle,
+        }
+    }
+
+    /// Stable kind tag for JSON / labels.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::RequestAdmitted { .. } => "request_admitted",
+            TraceEvent::RequestQueued { .. } => "request_queued",
+            TraceEvent::RequestDispatched { .. } => "request_dispatched",
+            TraceEvent::RequestCompleted { .. } => "request_completed",
+            TraceEvent::IcapStart { .. } => "icap_start",
+            TraceEvent::IcapDone { .. } => "icap_done",
+            TraceEvent::GrantIssued { .. } => "grant_issued",
+            TraceEvent::ViolationMasked { .. } => "violation_masked",
+            TraceEvent::Migration { .. } => "migration",
+            TraceEvent::ScaleUp { .. } => "scale_up",
+            TraceEvent::ScaleDown { .. } => "scale_down",
+            TraceEvent::PlanApplied { .. } => "plan_applied",
+        }
+    }
+
+    /// One-line JSON object for this event.
+    pub fn to_json(&self) -> String {
+        let head = |cycle: u64| format!("{{\"kind\": \"{}\", \"cycle\": {cycle}", self.kind());
+        match *self {
+            TraceEvent::RequestAdmitted { cycle, app, node } => {
+                format!("{}, \"app\": {app}, \"node\": {node}}}", head(cycle))
+            }
+            TraceEvent::RequestQueued { cycle, app, node, wait_cycles } => format!(
+                "{}, \"app\": {app}, \"node\": {node}, \"wait_cycles\": {wait_cycles}}}",
+                head(cycle)
+            ),
+            TraceEvent::RequestDispatched { cycle, app, node } => {
+                format!("{}, \"app\": {app}, \"node\": {node}}}", head(cycle))
+            }
+            TraceEvent::RequestCompleted { cycle, app, node, service_cycles } => format!(
+                "{}, \"app\": {app}, \"node\": {node}, \"service_cycles\": {service_cycles}}}",
+                head(cycle)
+            ),
+            TraceEvent::IcapStart { cycle, app, region, words } => format!(
+                "{}, \"app\": {app}, \"region\": {region}, \"words\": {words}}}",
+                head(cycle)
+            ),
+            TraceEvent::IcapDone { cycle, app, region, ok } => format!(
+                "{}, \"app\": {app}, \"region\": {region}, \"ok\": {ok}}}",
+                head(cycle)
+            ),
+            TraceEvent::GrantIssued { cycle, app, slave, master, words } => format!(
+                "{}, \"app\": {app}, \"slave\": {slave}, \"master\": {master}, \
+                 \"words\": {words}}}",
+                head(cycle)
+            ),
+            TraceEvent::ViolationMasked { cycle, app, port, err } => format!(
+                "{}, \"app\": {app}, \"port\": {port}, \"err\": \"{err}\"}}",
+                head(cycle)
+            ),
+            TraceEvent::Migration { cycle, app, from, to } => format!(
+                "{}, \"app\": {app}, \"from\": {from}, \"to\": {to}}}",
+                head(cycle)
+            ),
+            TraceEvent::ScaleUp { cycle, node, regions } => format!(
+                "{}, \"node\": {node}, \"regions\": {regions}}}",
+                head(cycle)
+            ),
+            TraceEvent::ScaleDown { cycle, node, regions } => format!(
+                "{}, \"node\": {node}, \"regions\": {regions}}}",
+                head(cycle)
+            ),
+            TraceEvent::PlanApplied { cycle, masters } => {
+                format!("{}, \"masters\": {masters}}}", head(cycle))
+            }
+        }
+    }
+}
+
+/// Serialize an event stream to a JSON document with a schema version.
+pub fn trace_to_json(events: &[TraceEvent]) -> String {
+    let mut out = format!(
+        "{{\n  \"schema_version\": {SCHEMA_VERSION},\n  \"events\": [\n"
+    );
+    for (i, ev) in events.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(&ev.to_json());
+        out.push_str(if i + 1 < events.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// A dump of the flight-recorder window, taken at an error site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlightDump {
+    /// Why the dump was taken (error text, spill context).
+    pub context: String,
+    /// The window at dump time, oldest event first.
+    pub window: Vec<TraceEvent>,
+}
+
+impl FlightDump {
+    /// Human-readable rendering (one event per line).
+    pub fn render(&self) -> String {
+        let mut out = format!("flight dump ({}): {} events\n", self.context, self.window.len());
+        for ev in &self.window {
+            out.push_str(&format!("  [{:>10}] {}\n", ev.cycle(), ev.to_json()));
+        }
+        out
+    }
+
+    /// JSON object with the context and window.
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"context\": \"{}\", \"window\": [",
+            json_escape(&self.context)
+        );
+        for (i, ev) in self.window.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&ev.to_json());
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Bounded ring that always keeps the last `capacity` events pushed.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    buf: Vec<TraceEvent>,
+    head: usize,
+    capacity: usize,
+    dumps: Vec<FlightDump>,
+}
+
+impl FlightRecorder {
+    /// A recorder keeping the last `capacity` events (min 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self { buf: Vec::with_capacity(capacity), head: 0, capacity, dumps: Vec::new() }
+    }
+
+    /// Window size.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Push one event, evicting the oldest once full.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Current window, oldest event first.
+    pub fn window(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    /// Snapshot the window into a [`FlightDump`] tagged with `context`.
+    pub fn dump(&mut self, context: &str) {
+        let dump = FlightDump { context: context.to_string(), window: self.window() };
+        self.dumps.push(dump);
+    }
+
+    /// Dumps taken so far, in order.
+    pub fn dumps(&self) -> &[FlightDump] {
+        &self.dumps
+    }
+
+    /// Drain the collected dumps.
+    pub fn take_dumps(&mut self) -> Vec<FlightDump> {
+        std::mem::take(&mut self.dumps)
+    }
+}
+
+/// Full in-order event log plus a trailing flight window.
+#[derive(Debug, Clone)]
+pub struct TraceLog {
+    events: Vec<TraceEvent>,
+    flight: FlightRecorder,
+}
+
+/// `Option`-free enum-dispatch trace sink.  [`Tracer::Off`] costs one
+/// discriminant branch per emission site; there is no `dyn` call and
+/// (via [`Tracer::emit_with`]) no event construction on the disabled
+/// path.
+#[derive(Debug, Clone, Default)]
+pub enum Tracer {
+    /// Disabled: every emission is a single branch, nothing is stored.
+    #[default]
+    Off,
+    /// Flight-recorder only: keeps the last N events, no full log.
+    Flight(FlightRecorder),
+    /// Full log (plus a flight window for dumps).
+    Full(Box<TraceLog>),
+}
+
+impl Tracer {
+    /// Disabled sink.
+    pub fn off() -> Self {
+        Tracer::Off
+    }
+
+    /// Flight-recorder-only sink keeping the last `capacity` events.
+    pub fn flight(capacity: usize) -> Self {
+        Tracer::Flight(FlightRecorder::new(capacity))
+    }
+
+    /// Full event log (flight window sized [`DEFAULT_FLIGHT_CAPACITY`]).
+    pub fn full() -> Self {
+        Tracer::Full(Box::new(TraceLog {
+            events: Vec::new(),
+            flight: FlightRecorder::new(DEFAULT_FLIGHT_CAPACITY),
+        }))
+    }
+
+    /// Whether emissions are recorded at all.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        !matches!(self, Tracer::Off)
+    }
+
+    /// Emit an already-built event.
+    #[inline]
+    pub fn emit(&mut self, ev: TraceEvent) {
+        match self {
+            Tracer::Off => {}
+            Tracer::Flight(ring) => ring.push(ev),
+            Tracer::Full(log) => {
+                log.flight.push(ev.clone());
+                log.events.push(ev);
+            }
+        }
+    }
+
+    /// Emit lazily: `build` only runs when the sink is enabled, so the
+    /// disabled path never constructs the event.
+    #[inline]
+    pub fn emit_with(&mut self, build: impl FnOnce() -> TraceEvent) {
+        if self.enabled() {
+            self.emit(build());
+        }
+    }
+
+    /// The full event log (empty unless [`Tracer::Full`]).
+    pub fn events(&self) -> &[TraceEvent] {
+        match self {
+            Tracer::Full(log) => &log.events,
+            _ => &[],
+        }
+    }
+
+    /// Drain the full event log (empty unless [`Tracer::Full`]).
+    pub fn take_events(&mut self) -> Vec<TraceEvent> {
+        match self {
+            Tracer::Full(log) => std::mem::take(&mut log.events),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Snapshot the current flight window into a dump (no-op when off).
+    pub fn dump(&mut self, context: &str) {
+        match self {
+            Tracer::Off => {}
+            Tracer::Flight(ring) => ring.dump(context),
+            Tracer::Full(log) => log.flight.dump(context),
+        }
+    }
+
+    /// Dumps taken so far.
+    pub fn dumps(&self) -> &[FlightDump] {
+        match self {
+            Tracer::Off => &[],
+            Tracer::Flight(ring) => ring.dumps(),
+            Tracer::Full(log) => log.flight.dumps(),
+        }
+    }
+
+    /// Drain the collected dumps.
+    pub fn take_dumps(&mut self) -> Vec<FlightDump> {
+        match self {
+            Tracer::Off => Vec::new(),
+            Tracer::Flight(ring) => ring.take_dumps(),
+            Tracer::Full(log) => log.flight.take_dumps(),
+        }
+    }
+}
+
+/// Per-request latency decomposition in fabric cycles.
+///
+/// The service components (`bridge + icap + fabric + cpu`) sum
+/// *exactly* to [`crate::fleet::service_cycles`] for the same cost:
+/// each cut point is an independently rounded cumulative sum clamped
+/// monotone, and the components are differences of those cuts, so the
+/// total is the final cut by construction — the same float expression
+/// `service_cycles` evaluates.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequestSpan {
+    /// Cycles spent queued behind the node's busy horizon.
+    pub queue_wait_cycles: u64,
+    /// PCIe bridge crossings (descriptor rounds + bandwidth).
+    pub bridge_cycles: u64,
+    /// ICAP partial-reconfiguration streaming.
+    pub icap_cycles: u64,
+    /// Fabric streaming/compute.
+    pub fabric_cycles: u64,
+    /// On-server CPU stages.
+    pub cpu_cycles: u64,
+}
+
+impl RequestSpan {
+    /// Decompose a timing-model cost (plus a known queue wait) into a
+    /// span whose service components sum exactly to
+    /// [`crate::fleet::service_cycles`]`(cfg, cost)`.
+    pub fn decompose(
+        cfg: &SystemConfig,
+        cost: &CostBreakdown,
+        queue_wait_cycles: u64,
+    ) -> Self {
+        let rate = cfg.fabric.clock_mhz * 1000.0;
+        // Bit-identical to fleet::service_cycles: same expression.
+        let total = ((cost.total_ms() + cost.reconfig_ms) * rate).round() as u64;
+        let cut = |ms: f64| (ms * rate).round() as u64;
+        let c_bridge = cut(cost.pcie_ms).min(total);
+        let c_icap = cut(cost.pcie_ms + cost.reconfig_ms).clamp(c_bridge, total);
+        let c_fabric =
+            cut(cost.pcie_ms + cost.reconfig_ms + cost.fabric_ms).clamp(c_icap, total);
+        Self {
+            queue_wait_cycles,
+            bridge_cycles: c_bridge,
+            icap_cycles: c_icap - c_bridge,
+            fabric_cycles: c_fabric - c_icap,
+            cpu_cycles: total - c_fabric,
+        }
+    }
+
+    /// Service cycles: bridge + ICAP + fabric + CPU.
+    pub fn total_cycles(&self) -> u64 {
+        self.bridge_cycles + self.icap_cycles + self.fabric_cycles + self.cpu_cycles
+    }
+
+    /// End-to-end cycles including queue wait.
+    pub fn end_to_end_cycles(&self) -> u64 {
+        self.queue_wait_cycles + self.total_cycles()
+    }
+}
+
+/// A metric identity: name + sorted label set.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    /// Metric name (without the `efpga_` export prefix).
+    pub name: String,
+    /// Label pairs, as given.
+    pub labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        Self {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        }
+    }
+
+    fn label_suffix(&self) -> String {
+        if self.labels.is_empty() {
+            return String::new();
+        }
+        let body: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", json_escape(v)))
+            .collect();
+        format!("{{{}}}", body.join(","))
+    }
+
+    fn labels_json(&self) -> String {
+        let body: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)))
+            .collect();
+        format!("{{{}}}", body.join(", "))
+    }
+}
+
+/// Labeled counters, gauges, and cycle histograms with deterministic
+/// (BTreeMap-ordered) Prometheus-style and JSON snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<MetricKey, u64>,
+    gauges: BTreeMap<MetricKey, f64>,
+    histograms: BTreeMap<MetricKey, CycleRecorder>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to a labeled counter.
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)], by: u64) {
+        *self.counters.entry(MetricKey::new(name, labels)).or_insert(0) += by;
+    }
+
+    /// Set a labeled gauge.
+    pub fn set_gauge(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.gauges.insert(MetricKey::new(name, labels), value);
+    }
+
+    /// Record one sample into a labeled cycle histogram.
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], cycles: u64) {
+        self.histograms
+            .entry(MetricKey::new(name, labels))
+            .or_insert_with(CycleRecorder::new)
+            .record(cycles);
+    }
+
+    /// Read a counter back (0 if absent) — mainly for tests.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.counters.get(&MetricKey::new(name, labels)).copied().unwrap_or(0)
+    }
+
+    /// Prometheus-style text exposition.  All metric names get an
+    /// `efpga_` prefix.  Takes `&mut self` because histogram
+    /// percentiles maintain an internal sorted cache.
+    pub fn to_prometheus(&mut self) -> String {
+        let mut out = String::new();
+        for (key, value) in &self.counters {
+            out.push_str(&format!(
+                "# TYPE efpga_{} counter\nefpga_{}{} {}\n",
+                key.name,
+                key.name,
+                key.label_suffix(),
+                value
+            ));
+        }
+        for (key, value) in &self.gauges {
+            out.push_str(&format!(
+                "# TYPE efpga_{} gauge\nefpga_{}{} {}\n",
+                key.name,
+                key.name,
+                key.label_suffix(),
+                value
+            ));
+        }
+        for (key, rec) in self.histograms.iter_mut() {
+            let base = format!("efpga_{}", key.name);
+            out.push_str(&format!("# TYPE {base} summary\n"));
+            for (q, v) in [(0.5, rec.percentile(0.5)), (0.99, rec.percentile(0.99))] {
+                let mut labels = key.labels.clone();
+                labels.push(("quantile".to_string(), format!("{q}")));
+                let qkey = MetricKey { name: key.name.clone(), labels };
+                out.push_str(&format!("{base}{} {}\n", qkey.label_suffix(), v));
+            }
+            out.push_str(&format!(
+                "{base}_count{} {}\n",
+                key.label_suffix(),
+                rec.count()
+            ));
+        }
+        out
+    }
+
+    /// JSON snapshot carrying [`SCHEMA_VERSION`].  Takes `&mut self`
+    /// for the same histogram-percentile reason as
+    /// [`MetricsRegistry::to_prometheus`].
+    pub fn to_json(&mut self) -> String {
+        let mut out = format!("{{\n  \"schema_version\": {SCHEMA_VERSION},\n");
+        out.push_str("  \"counters\": [\n");
+        let n = self.counters.len();
+        for (i, (key, value)) in self.counters.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"labels\": {}, \"value\": {}}}{}\n",
+                json_escape(&key.name),
+                key.labels_json(),
+                value,
+                if i + 1 < n { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"gauges\": [\n");
+        let n = self.gauges.len();
+        for (i, (key, value)) in self.gauges.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"labels\": {}, \"value\": {}}}{}\n",
+                json_escape(&key.name),
+                key.labels_json(),
+                value,
+                if i + 1 < n { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"histograms\": [\n");
+        let n = self.histograms.len();
+        for (i, (key, rec)) in self.histograms.iter_mut().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"labels\": {}, \"count\": {}, \
+                 \"mean\": {}, \"p50\": {}, \"p99\": {}, \"max\": {}}}{}\n",
+                json_escape(&key.name),
+                key.labels_json(),
+                rec.count(),
+                rec.mean(),
+                rec.percentile(0.5),
+                rec.percentile(0.99),
+                rec.max(),
+                if i + 1 < n { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64) -> TraceEvent {
+        TraceEvent::RequestAdmitted { cycle, app: 1, node: 0 }
+    }
+
+    #[test]
+    fn flight_ring_keeps_last_n_in_order() {
+        let mut ring = FlightRecorder::new(4);
+        for c in 0..10 {
+            ring.push(ev(c));
+        }
+        let window = ring.window();
+        assert_eq!(window.len(), 4);
+        let cycles: Vec<u64> = window.iter().map(|e| e.cycle()).collect();
+        assert_eq!(cycles, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn flight_ring_partial_fill_is_record_order() {
+        let mut ring = FlightRecorder::new(8);
+        for c in [3u64, 1, 4] {
+            ring.push(ev(c));
+        }
+        let cycles: Vec<u64> = ring.window().iter().map(|e| e.cycle()).collect();
+        assert_eq!(cycles, vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn disabled_tracer_never_builds_events() {
+        let mut t = Tracer::off();
+        let mut built = false;
+        t.emit_with(|| {
+            built = true;
+            ev(0)
+        });
+        assert!(!built, "disabled tracer must not construct events");
+        assert!(t.events().is_empty());
+        assert!(t.dumps().is_empty());
+    }
+
+    #[test]
+    fn full_tracer_logs_and_dumps() {
+        let mut t = Tracer::full();
+        for c in 0..3 {
+            t.emit(ev(c));
+        }
+        assert_eq!(t.events().len(), 3);
+        t.dump("unit test");
+        assert_eq!(t.dumps().len(), 1);
+        assert_eq!(t.dumps()[0].window.len(), 3);
+        assert_eq!(t.dumps()[0].context, "unit test");
+        let drained = t.take_events();
+        assert_eq!(drained.len(), 3);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn span_components_sum_to_service_cycles() {
+        let cfg = SystemConfig::paper_defaults();
+        let cost = CostBreakdown {
+            pcie_ms: 0.777,
+            fabric_ms: 1.333,
+            cpu_ms: 2.111,
+            reconfig_ms: 0.499,
+        };
+        let span = RequestSpan::decompose(&cfg, &cost, 17);
+        assert_eq!(span.total_cycles(), crate::fleet::service_cycles(&cfg, &cost));
+        assert_eq!(span.end_to_end_cycles(), span.total_cycles() + 17);
+    }
+
+    #[test]
+    fn registry_snapshots_are_deterministic_and_versioned() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("requests_total", &[("app", "1")], 3);
+        reg.inc("requests_total", &[("app", "0")], 1);
+        reg.set_gauge("queue_depth", &[("lane", "0")], 2.0);
+        reg.observe("service_cycles", &[("app", "1")], 100);
+        reg.observe("service_cycles", &[("app", "1")], 300);
+        let text = reg.to_prometheus();
+        // BTreeMap ordering: app="0" before app="1".
+        let p0 = text.find("efpga_requests_total{app=\"0\"} 1").unwrap();
+        let p1 = text.find("efpga_requests_total{app=\"1\"} 3").unwrap();
+        assert!(p0 < p1);
+        assert!(text.contains("efpga_queue_depth{lane=\"0\"} 2"));
+        assert!(text.contains("efpga_service_cycles_count{app=\"1\"} 2"));
+        let json = reg.to_json();
+        assert!(json.contains(&format!("\"schema_version\": {SCHEMA_VERSION}")));
+        assert_eq!(json, reg.to_json(), "snapshot must be reproducible");
+        assert_eq!(reg.counter("requests_total", &[("app", "1")]), 3);
+    }
+
+    #[test]
+    fn trace_json_has_schema_version() {
+        let doc = trace_to_json(&[ev(5)]);
+        assert!(doc.contains(&format!("\"schema_version\": {SCHEMA_VERSION}")));
+        assert!(doc.contains("\"kind\": \"request_admitted\""));
+    }
+}

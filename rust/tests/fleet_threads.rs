@@ -13,6 +13,7 @@ use elastic_fpga::config::SystemConfig;
 use elastic_fpga::fleet::{AdmissionPolicy, Fleet};
 use elastic_fpga::manager::AppRequest;
 use elastic_fpga::server::{ElasticServer, FleetOptions, LaneAutoscale};
+use elastic_fpga::telemetry::{trace_to_json, Tracer};
 use elastic_fpga::util::SplitMix64;
 use elastic_fpga::workload::{generate_count, TraceEvent, WorkloadSpec};
 
@@ -28,6 +29,9 @@ fn launch(policy: AdmissionPolicy, fast: bool, threads: usize) -> Fleet {
     let mut fleet = Fleet::launch(3, &cfg(), None, policy, fast);
     fleet.fence_node(0, 2); // heterogeneous capacity: exercises migration
     fleet.execution_threads = threads;
+    // Tracing on everywhere: the event stream is part of the
+    // byte-identical contract (DESIGN.md §14).
+    fleet.tracer = Tracer::full();
     fleet
 }
 
@@ -58,6 +62,22 @@ fn one_vs_n_threads_is_byte_identical_across_policies() {
             assert_eq!(want.migrated, got.migrated);
             assert_eq!(want.fast_path_hits, got.fast_path_hits);
             assert_eq!(want.oracle_runs, got.oracle_runs);
+            // The telemetry plane is part of the contract: the event
+            // stream and metric snapshots must be byte-identical too.
+            assert_eq!(
+                want.events, got.events,
+                "{policy:?} x{threads}: telemetry event stream"
+            );
+            assert_eq!(
+                trace_to_json(&want.events),
+                trace_to_json(&got.events),
+                "{policy:?} x{threads}: serialized trace"
+            );
+            assert_eq!(
+                want.metrics(&cfg()).to_json(),
+                got.metrics(&cfg()).to_json(),
+                "{policy:?} x{threads}: metrics snapshot"
+            );
         }
     }
 }

@@ -1,0 +1,225 @@
+//! Telemetry-plane suite (DESIGN.md §14): flight-recorder ring
+//! properties (exactly the last N events, push order preserved across
+//! wrap-around), deterministic dump-on-error windows from the threaded
+//! server, per-request span decompositions that sum *exactly* to the
+//! reported service cycles, and schema-versioned trace/metric JSON that
+//! round-trips through the in-tree parser.
+
+use elastic_fpga::config::json::Json;
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::fleet::{service_cycles, AdmissionPolicy, Fleet};
+use elastic_fpga::manager::{AppRequest, ElasticManager};
+use elastic_fpga::server::{call, Server};
+use elastic_fpga::telemetry::{
+    trace_to_json, FlightDump, FlightRecorder, TraceEvent, Tracer, SCHEMA_VERSION,
+};
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::workload::{generate_count, WorkloadSpec};
+
+fn cfg() -> SystemConfig {
+    SystemConfig::paper_defaults()
+}
+
+fn admitted(cycle: u64) -> TraceEvent {
+    TraceEvent::RequestAdmitted { cycle, app: 0, node: 0 }
+}
+
+#[test]
+fn flight_ring_keeps_exactly_last_n_across_wraparound() {
+    let mut rng = SplitMix64::new(0xF11E);
+    for cap in [1usize, 2, 3, 7, 33, 64] {
+        let mut ring = FlightRecorder::new(cap);
+        let mut model: Vec<u64> = Vec::new();
+        let pushes = 3 * cap + rng.below_usize(2 * cap + 5) + 1;
+        for _ in 0..pushes {
+            // Arbitrary (non-monotone) stamps: the ring must preserve
+            // push order, not stamp order.
+            let stamp = rng.next_u64() % 1_000_000;
+            ring.push(admitted(stamp));
+            model.push(stamp);
+        }
+        let got: Vec<u64> = ring.window().iter().map(TraceEvent::cycle).collect();
+        assert_eq!(
+            got,
+            model[model.len() - cap..].to_vec(),
+            "cap {cap}: window must be exactly the last {cap} pushes, in order"
+        );
+    }
+}
+
+#[test]
+fn flight_ring_monotone_stamps_stay_monotone_after_wrap() {
+    let mut ring = FlightRecorder::new(5);
+    for i in 0..23u64 {
+        ring.push(admitted(i));
+    }
+    let cycles: Vec<u64> = ring.window().iter().map(TraceEvent::cycle).collect();
+    assert_eq!(cycles, vec![18, 19, 20, 21, 22]);
+}
+
+#[test]
+fn flight_dump_snapshots_the_window_and_drains() {
+    let mut t = Tracer::flight(5);
+    for i in 0..23u64 {
+        t.emit(admitted(i));
+    }
+    t.dump("ctx");
+    let dumps = t.take_dumps();
+    assert_eq!(dumps.len(), 1);
+    assert_eq!(dumps[0].context, "ctx");
+    let cycles: Vec<u64> = dumps[0].window.iter().map(TraceEvent::cycle).collect();
+    assert_eq!(cycles, vec![18, 19, 20, 21, 22]);
+    assert!(t.dumps().is_empty(), "take_dumps drains");
+}
+
+/// One ok request, then one mis-aligned payload the lane rejects: the
+/// server must collect a flight dump whose window holds the events
+/// leading up to the failure.  Everything in the window is stamped from
+/// virtual clocks, so two identical runs dump identical windows.
+fn dumps_for_failing_run() -> Vec<FlightDump> {
+    let server = Server::start(cfg(), None);
+    let mut data = vec![0u32; 64];
+    SplitMix64::new(9).fill_u32(&mut data);
+    call(&server, AppRequest::pipeline(0, data)).expect("aligned request serves");
+    assert!(
+        call(&server, AppRequest::pipeline(1, vec![1; 7])).is_err(),
+        "7-word payload must be rejected"
+    );
+    let dumps = server.flight_dumps();
+    server.shutdown();
+    dumps
+}
+
+#[test]
+fn dump_on_error_contains_the_triggering_window_deterministically() {
+    let a = dumps_for_failing_run();
+    let b = dumps_for_failing_run();
+    assert!(!a.is_empty(), "a failing request must produce a dump");
+    assert_eq!(a, b, "dump windows are virtual-clock deterministic");
+    let last = a.last().unwrap();
+    assert!(last.context.contains("lane 0"), "context: {}", last.context);
+    assert!(last.context.contains("app 1"), "context: {}", last.context);
+    assert!(
+        last.window
+            .iter()
+            .any(|e| matches!(e, TraceEvent::RequestAdmitted { app: 1, .. })),
+        "window must include the failing request's admission"
+    );
+    assert!(
+        last.window
+            .iter()
+            .any(|e| matches!(e, TraceEvent::RequestCompleted { app: 0, .. })),
+        "window must include the preceding request's completion"
+    );
+}
+
+#[test]
+fn fleet_spans_sum_exactly_and_json_round_trips() {
+    let c = cfg();
+    let trace = generate_count(&WorkloadSpec::fleet_mix(), 0x5EED, 120);
+    let mut fleet = Fleet::launch(3, &c, None, AdmissionPolicy::LeastLoaded, true);
+    fleet.fence_node(0, 2); // heterogeneous capacity: exercises migration
+    fleet.tracer = Tracer::full();
+    let report = fleet.run_trace(&trace).unwrap();
+    assert_eq!(report.completed as usize, trace.len());
+
+    // The acceptance contract: every outcome's span decomposition sums
+    // exactly to its reported cycles — no cycle lost to rounding.
+    for o in &report.outcomes {
+        assert_eq!(o.span.total_cycles(), o.service_cycles, "app {}", o.app_id);
+        assert_eq!(o.span.queue_wait_cycles, o.start_cycle - o.arrival_cycle);
+        assert_eq!(
+            o.span.end_to_end_cycles(),
+            o.completion_cycle - o.arrival_cycle
+        );
+    }
+
+    let admitted_n = report
+        .events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::RequestAdmitted { .. }))
+        .count();
+    let completed_n = report
+        .events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::RequestCompleted { .. }))
+        .count();
+    assert_eq!(admitted_n, trace.len());
+    assert_eq!(completed_n, trace.len());
+
+    let doc = Json::parse(&trace_to_json(&report.events)).unwrap();
+    assert_eq!(
+        doc.get("schema_version").and_then(Json::as_usize),
+        Some(SCHEMA_VERSION as usize)
+    );
+    assert_eq!(
+        doc.get("events").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(report.events.len())
+    );
+
+    let mut metrics = report.metrics(&c);
+    assert_eq!(metrics.counter("fleet_requests_total", &[]), trace.len() as u64);
+    let mdoc = Json::parse(&metrics.to_json()).unwrap();
+    assert_eq!(
+        mdoc.get("schema_version").and_then(Json::as_usize),
+        Some(SCHEMA_VERSION as usize)
+    );
+    let text = metrics.to_prometheus();
+    assert!(text.contains("efpga_fleet_requests_total 120"));
+}
+
+#[test]
+fn manager_report_span_sums_to_service_cycles() {
+    let c = cfg();
+    let mut m = ElasticManager::new(c.clone(), None);
+    let mut data = vec![0u32; 256];
+    SplitMix64::new(3).fill_u32(&mut data);
+    let rep = m.execute(&AppRequest::pipeline(0, data)).unwrap();
+    assert!(rep.verified);
+    assert_eq!(rep.span.total_cycles(), service_cycles(&c, &rep.cost));
+    assert_eq!(rep.span.queue_wait_cycles, 0);
+}
+
+#[test]
+fn fabric_trace_captures_icap_grant_and_plan_events() {
+    let mut c = cfg();
+    // Small bitstreams keep the cycle-by-cycle oracle quick while still
+    // exercising the timed ICAP stream (1024 words per region).
+    c.manager.bitstream_bytes = 4096;
+    let mut m = ElasticManager::new(c, None);
+    m.use_icap = true; // route installs through the timed ICAP model
+    m.fast_path = false; // oracle mode: every cycle ticks, all grants log
+    m.fabric_mut().set_tracing(Tracer::full());
+    let mut data = vec![0u32; 64];
+    SplitMix64::new(4).fill_u32(&mut data);
+    let rep = m.execute(&AppRequest::pipeline(0, data)).unwrap();
+    assert!(rep.verified);
+    let events = m.fabric().telemetry.events();
+    let starts = events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::IcapStart { .. }))
+        .count();
+    let dones = events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::IcapDone { .. }))
+        .count();
+    assert!(starts > 0, "a 3-stage pipeline must reconfigure regions");
+    assert_eq!(starts, dones, "every ICAP start completes");
+    assert!(
+        events.iter().any(|e| matches!(e, TraceEvent::GrantIssued { .. })),
+        "streaming must arbitrate at least one grant"
+    );
+    assert!(
+        events.iter().any(|e| matches!(e, TraceEvent::PlanApplied { .. })),
+        "installing a chain recompiles the bandwidth plan"
+    );
+    // The single serialized ICAP port finishes programs in order.
+    let done_cycles: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::IcapDone { cycle, .. } => Some(*cycle),
+            _ => None,
+        })
+        .collect();
+    assert!(done_cycles.windows(2).all(|w| w[0] <= w[1]));
+}
