@@ -16,6 +16,12 @@ A silent bench rename, a dropped case, or a removed metric — the
 "perf-format rot" that previously let the trajectory decay unnoticed —
 fails the build; a faster or slower machine does not.
 
+A small set of *bounded-contract* keys is the exception to value
+freedom: `batch_efficiency` is a fraction and `h2c_share_error` carries
+the DESIGN.md §15 ±5% plan-fidelity contract, so the fresh run's value
+must stay inside the contracted range even though the baseline's exact
+number is free to move.
+
 `--validate` checks schema-versioned telemetry exports (the
 `--metrics-out` / `--trace-out` snapshots and the `BENCH_*_metrics.json`
 companions, DESIGN.md §14) instead of diffing against a baseline: the
@@ -31,7 +37,16 @@ import json
 import sys
 
 
-def diff(path, committed, fresh, problems):
+# Bounded-contract keys: metrics that carry a correctness contract, not
+# just a trajectory value.  The fresh run must stay inside the range
+# (DESIGN.md §15); the committed baseline's exact number is still free.
+RANGE_KEYS = {
+    "batch_efficiency": (0.0, 1.0),
+    "h2c_share_error": (0.0, 0.05),
+}
+
+
+def diff(path, committed, fresh, problems, key=""):
     # bool subclasses int in Python: without this check a numeric metric
     # replaced by true/false would slip through the numeric escape below.
     both_numbers = (
@@ -53,20 +68,27 @@ def diff(path, committed, fresh, problems):
             problems.append(f"{path}: keys vanished from fresh run: {missing}")
         if added:
             problems.append(f"{path}: keys not in committed baseline: {added}")
-        for key in sorted(set(committed) & set(fresh)):
-            diff(f"{path}.{key}", committed[key], fresh[key], problems)
+        for k in sorted(set(committed) & set(fresh)):
+            diff(f"{path}.{k}", committed[k], fresh[k], problems, k)
     elif isinstance(committed, list):
         if len(committed) != len(fresh):
             problems.append(
                 f"{path}: length changed ({len(committed)} -> {len(fresh)})"
             )
         for i, (c, f) in enumerate(zip(committed, fresh)):
-            diff(f"{path}[{i}]", c, f, problems)
+            diff(f"{path}[{i}]", c, f, problems, key)
     elif isinstance(committed, str):
         if committed != fresh:
             problems.append(f"{path}: '{committed}' != '{fresh}'")
-    # Numeric and boolean leaves: kind already matched above; values are
-    # allowed to move — that is the trajectory.
+    elif both_numbers and key in RANGE_KEYS:
+        lo, hi = RANGE_KEYS[key]
+        if not lo <= fresh <= hi:
+            problems.append(
+                f"{path}: fresh value {fresh} breaks the "
+                f"[{lo}, {hi}] contract"
+            )
+    # Other numeric and boolean leaves: kind already matched above;
+    # values are allowed to move — that is the trajectory.
 
 
 # Keys whose boolean values are intentional (claim results and per-event
@@ -83,6 +105,12 @@ def validate_leaves(path, node, key, problems):
             validate_leaves(f"{path}[{i}]", item, key, problems)
     elif isinstance(node, bool) and key not in BOOL_KEYS:
         problems.append(f"{path}: boolean leaf under key '{key}'")
+    elif isinstance(node, (int, float)) and key in RANGE_KEYS:
+        lo, hi = RANGE_KEYS[key]
+        if not lo <= node <= hi:
+            problems.append(
+                f"{path}: {node} breaks the [{lo}, {hi}] contract"
+            )
 
 
 def validate(paths):

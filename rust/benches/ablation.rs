@@ -92,7 +92,8 @@ fn bridge_policy_cycles(policy: RequestPolicy) -> u64 {
     let mut data = vec![0u32; 4096];
     rng.fill_u32(&mut data);
     for chunk in data.chunks(8) {
-        f.h2c_push(0, H2cBurst { app_id: 0, words: chunk.to_vec() });
+        f.h2c_push(0, H2cBurst { app_id: 0, words: chunk.to_vec() })
+            .expect("channel 0 in range");
     }
     f.run_until_idle(10_000_000).unwrap()
 }

@@ -10,6 +10,10 @@
 //! `tests/fastpath_equivalence.rs`); this bench cross-checks that on
 //! its own trace — identical outputs, costs and total virtual cycles —
 //! and claims the fast path executes >= 5x fewer ticks than the oracle.
+//! Each case also runs a plan-fidelity mini-measurement (DESIGN.md §15)
+//! and reports `h2c_share_error`: the relative error between a 2-tenant
+//! bandwidth plan's contracted completion ratio and the ratio measured
+//! at the C2H FIFOs under bridge saturation (claimed <= 5%).
 //!
 //! ```bash
 //! cargo bench --bench fabric_serving            # full run
@@ -22,8 +26,12 @@ mod harness;
 use elastic_fpga::config::SystemConfig;
 use elastic_fpga::manager::ElasticManager;
 use elastic_fpga::metrics::CycleThroughput;
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::qos::BandwidthPlan;
+use elastic_fpga::sim::Tick;
 use elastic_fpga::telemetry::MetricsRegistry;
 use elastic_fpga::workload::{diurnal_tenants, generate_profiled, TraceEvent};
+use elastic_fpga::xdma::{H2cBurst, C2H_CHANNELS, H2C_CHANNELS};
 
 /// One mode's run over a trace: total wall seconds, executed/skipped
 /// fabric cycles, total virtual cycles, and the per-request service
@@ -68,6 +76,69 @@ fn run_mode(cfg: &SystemConfig, trace: &[TraceEvent], fast: bool) -> ModeRun {
     }
 }
 
+/// Plan-fidelity mini-run (DESIGN.md §15): two tenants with exact
+/// integer-ratio shares saturate the bridge; returns the relative error
+/// between the completed-words ratio measured at the C2H FIFOs and the
+/// contracted ratio.  Mirrors `tests/qos_e2e.rs` at bench scale.
+fn h2c_share_error(ports: usize) -> f64 {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.fabric.num_ports = ports;
+    cfg.fabric.num_pr_regions = ports - 1;
+    cfg.manager.bitstream_bytes = 4096;
+    cfg.crossbar.grant_timeout = 1_000_000;
+    let (chain1, chain2, shares, expect): (&[usize], &[usize], _, f64) =
+        if ports >= 16 {
+            (&[1, 2, 3], &[4], [(1u32, 750u32), (2, 250)], 3.0)
+        } else {
+            (&[1, 2], &[3], [(1u32, 600u32), (2, 300)], 2.0)
+        };
+    let mut m = ElasticManager::new(cfg, None);
+    for &r in chain1 {
+        m.reserve_region(1, ModuleKind::Multiplier, r).unwrap();
+    }
+    for &r in chain2 {
+        m.reserve_region(2, ModuleKind::Multiplier, r).unwrap();
+    }
+    m.program_app_chain(1, chain1).unwrap();
+    m.program_app_chain(2, chain2).unwrap();
+    let plan = BandwidthPlan::with_shares(&shares).unwrap();
+    m.set_bandwidth_plan(plan).unwrap();
+    // `program_app_chain` narrows bridge port 0 to its own chain head;
+    // concurrent tenants need the union.
+    let heads = (1u32 << chain1[0]) | (1u32 << chain2[0]);
+    m.fabric_mut().regfile.set_allowed_slaves(0, heads).unwrap();
+    let fabric = m.fabric_mut();
+    const BURSTS: usize = 600;
+    for i in 0..BURSTS {
+        for app in [1u32, 2] {
+            fabric
+                .h2c_push(
+                    app as usize % H2C_CHANNELS,
+                    H2cBurst { app_id: app, words: vec![i as u32; 8] },
+                )
+                .unwrap();
+        }
+    }
+    let mut cycle = fabric.now();
+    for _ in 0..8_000 {
+        cycle += 1;
+        Tick::tick(&mut *fabric, cycle);
+    }
+    // Saturation must hold for the whole window, or the measured ratio
+    // is the workload's rather than the scheduler's.
+    let granted = fabric.xdma.h2c_app_words();
+    assert!(granted[&1] < (BURSTS * 8) as u64, "app 1 backlog ran dry");
+    assert!(granted[&2] < (BURSTS * 8) as u64, "app 2 backlog ran dry");
+    let mut per_app = [0u64; 2];
+    for ch in 0..C2H_CHANNELS {
+        for (app, _word) in fabric.xdma.c2h_drain(ch).unwrap() {
+            per_app[(app - 1) as usize] += 1;
+        }
+    }
+    let ratio = per_app[0] as f64 / per_app[1].max(1) as f64;
+    (ratio - expect).abs() / expect
+}
+
 struct CaseResult {
     name: &'static str,
     ports: usize,
@@ -82,6 +153,8 @@ struct CaseResult {
     virtual_req_per_mcycle: f64,
     oracle_req_per_s: f64,
     fast_req_per_s: f64,
+    /// Relative error of the plan-fidelity mini-run (DESIGN.md §15).
+    h2c_share_error: f64,
 }
 
 fn run_case(
@@ -126,6 +199,14 @@ fn run_case(
         &format!("{name}: fast path executes >= 5x fewer cycles ({ratio:.1}x)"),
     );
 
+    // Plan fidelity at this port count: the compiled bandwidth plan must
+    // hold host-to-completion within 5% (DESIGN.md §15).
+    let share_err = h2c_share_error(ports);
+    claims.check(
+        share_err <= 0.05,
+        &format!("{name}: H2C share error within 5% ({share_err:.4})"),
+    );
+
     let mut tp = CycleThroughput::new();
     tp.record_items(requests as u64, 0);
     tp.set_cycles(fast.virtual_cycles);
@@ -141,6 +222,7 @@ fn run_case(
         virtual_req_per_mcycle: tp.items_per_mcycle(),
         oracle_req_per_s: requests as f64 / oracle.wall_s.max(1e-9),
         fast_req_per_s: requests as f64 / fast.wall_s.max(1e-9),
+        h2c_share_error: share_err,
     };
     println!(
         "  {:<10} oracle {:>12} cc executed | fast {:>9} cc executed + {:>12} skipped ({:>6.1}x) | {:>8.0} vs {:>8.0} req/s",
@@ -184,7 +266,8 @@ fn main() {
              \"fast_skipped_cycles\": {}, \"virtual_cycles\": {}, \
              \"executed_ratio\": {:.2}, \"virtual_req_per_mcycle\": {:.3}, \
              \"oracle_requests_per_s\": {:.1}, \
-             \"fast_requests_per_s\": {:.1}}}{}\n",
+             \"fast_requests_per_s\": {:.1}, \
+             \"h2c_share_error\": {:.4}}}{}\n",
             c.name,
             c.ports,
             c.requests,
@@ -196,6 +279,7 @@ fn main() {
             c.virtual_req_per_mcycle,
             c.oracle_req_per_s,
             c.fast_req_per_s,
+            c.h2c_share_error,
             if i + 1 < cases.len() { "," } else { "" }
         ));
     }
@@ -220,6 +304,7 @@ fn main() {
             labels,
             c.virtual_req_per_mcycle,
         );
+        metrics.set_gauge("fabric_h2c_share_error", labels, c.h2c_share_error);
     }
     std::fs::write("BENCH_fabric_metrics.json", metrics.to_json())
         .expect("write BENCH_fabric_metrics.json");

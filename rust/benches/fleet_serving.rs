@@ -59,10 +59,12 @@ fn run_fleet(
     trace: &[TraceEvent],
     threads: usize,
     fast: bool,
+    batch_window: usize,
 ) -> Run {
     let mut fleet =
         Fleet::launch(FABRICS, cfg, None, AdmissionPolicy::LeastLoaded, fast);
     fleet.execution_threads = threads;
+    fleet.batch_window = batch_window;
     let t0 = std::time::Instant::now();
     let report = fleet.run_trace(trace).expect("fleet run failed");
     Run { wall_s: t0.elapsed().as_secs_f64(), report }
@@ -86,7 +88,7 @@ fn main() {
     let thread_counts = [1usize, 2, 4, 8];
     let mut runs: Vec<(usize, Run)> = Vec::new();
     for &t in &thread_counts {
-        let r = run_fleet(&cfg, &trace, t, true);
+        let r = run_fleet(&cfg, &trace, t, true, 1);
         println!(
             "  threads {t}: {} requests in {:.3}s ({:>8.0} req/s) | \
              makespan {:.1} ms | {} oracle runs, {} cache hits",
@@ -119,8 +121,8 @@ fn main() {
     // Oracle cross-check: with the fast-path off every request runs
     // cycle-by-cycle; 1 vs 4 threads must still agree exactly.
     let otrace = generate_count(&spec, 0xF1EE7, oracle_requests);
-    let o1 = run_fleet(&cfg, &otrace, 1, false);
-    let o4 = run_fleet(&cfg, &otrace, 4, false);
+    let o1 = run_fleet(&cfg, &otrace, 1, false, 1);
+    let o4 = run_fleet(&cfg, &otrace, 4, false, 1);
     claims.check(
         o1.report.outcomes == o4.report.outcomes
             && o1.report.makespan_cycles == o4.report.makespan_cycles,
@@ -130,6 +132,47 @@ fn main() {
         "  oracle cross-check: {} requests, 1 vs 4 threads ({:.3}s vs {:.3}s)",
         oracle_requests, o1.wall_s, o4.wall_s
     );
+
+    // Same-app coalescing (DESIGN.md §15): a bursty trace (each arrival
+    // duplicated 3x) under batch windows 1 and 4.  Followers skip the
+    // per-request reconfiguration round, so the batched run's virtual
+    // makespan can only improve while the schedule stays deterministic
+    // and thread-identical.
+    let bursty: Vec<TraceEvent> = trace
+        .iter()
+        .flat_map(|e| std::iter::repeat(e.clone()).take(3))
+        .collect();
+    let b1 = run_fleet(&cfg, &bursty, 1, true, 1);
+    let b4 = run_fleet(&cfg, &bursty, 1, true, 4);
+    let b4_threads = run_fleet(&cfg, &bursty, 4, true, 4);
+    claims.check(
+        b1.report.batches_formed == 0,
+        "window 1 never coalesces (legacy schedule)",
+    );
+    claims.check(
+        b4.report.batched_requests > 0,
+        "window 4 coalesces followers on a bursty trace",
+    );
+    claims.check(
+        b4.report.outcomes == b4_threads.report.outcomes
+            && b4.report.batches_formed == b4_threads.report.batches_formed,
+        "batched schedule byte-identical at 1 vs 4 threads",
+    );
+    claims.check(
+        b4.report.makespan_cycles <= b1.report.makespan_cycles,
+        "coalescing never stretches the virtual makespan",
+    );
+    let batch_runs = [(1usize, &b1), (4usize, &b4)];
+    for (w, r) in &batch_runs {
+        println!(
+            "  batch window {w}: {} requests | makespan {:.1} ms | \
+             {} batches, {} coalesced",
+            bursty.len(),
+            cfg.cycles_to_ms(r.report.makespan_cycles),
+            r.report.batches_formed,
+            r.report.batched_requests,
+        );
+    }
 
     if !smoke {
         // Wall-clock scaling claim only in the full run: CI smoke boxes
@@ -181,6 +224,31 @@ fn main() {
             r.report.oracle_runs,
             r.report.fast_path_hits,
             if i + 1 < runs.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"batching\": [\n");
+    for (i, (w, r)) in batch_runs.iter().enumerate() {
+        let mut tp = CycleThroughput::new();
+        tp.record_items(r.report.completed, 0);
+        tp.set_cycles(r.report.makespan_cycles);
+        let efficiency = r.report.batched_requests as f64
+            / (r.report.completed.max(1)) as f64;
+        json.push_str(&format!(
+            "    {{\"name\": \"window{}\", \"batch_window\": {}, \
+             \"requests\": {}, \"requests_per_s\": {:.1}, \
+             \"makespan_ms\": {:.2}, \"virtual_req_per_mcycle\": {:.3}, \
+             \"batches\": {}, \"batched_requests\": {}, \
+             \"batch_efficiency\": {:.4}}}{}\n",
+            w,
+            w,
+            bursty.len(),
+            bursty.len() as f64 / r.wall_s.max(1e-9),
+            cfg.cycles_to_ms(r.report.makespan_cycles),
+            tp.items_per_mcycle(),
+            r.report.batches_formed,
+            r.report.batched_requests,
+            efficiency,
+            if i + 1 < batch_runs.len() { "," } else { "" }
         ));
     }
     json.push_str("  ]\n}\n");

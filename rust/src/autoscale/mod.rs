@@ -821,6 +821,10 @@ impl Engine {
     /// (`SHARE_UNIT · regions / ports`), and the plan compiler — not an
     /// ad-hoc weight — lowers it to per-master budgets and an app-aware
     /// rotation order.  Budgets are never reset to defaults mid-flight.
+    /// The same recompilation installs the plan's per-app package counts
+    /// as the bridge's H2C descriptor-scheduler weights (DESIGN.md §15),
+    /// so the host-side hop tracks every footprint change with no extra
+    /// actuator step — pinned by `bridge_weights_follow_scale_events`.
     fn program_slice_chain(
         &mut self,
         app: u32,
@@ -1258,6 +1262,57 @@ mod tests {
         // Only the t=0 installs appear; nothing after.
         assert!(report.transitions.iter().all(|t| t.at_cycle == 0));
         assert_eq!(report.shrinks, 0);
+    }
+
+    #[test]
+    fn bridge_weights_follow_scale_events() {
+        // Every grow/shrink recompiles the board plan, and apply_plan
+        // lowers the plan's package counts into the bridge's H2C
+        // scheduler — so after a run with real transitions, each board's
+        // installed weights must list exactly the apps still holding
+        // regions there (DESIGN.md §15).
+        let cfg = fast_cfg();
+        let specs = workload::diurnal_tenants(2, 20.0, 300.0, 2.0, 64);
+        let trace = workload::generate_profiled(&specs, 9, 800);
+        let mut engine = Engine::new(
+            &cfg,
+            2,
+            2,
+            PolicyKind::TargetQueueDepth.build(),
+            EngineOptions::default(),
+        );
+        let report = engine.run(&trace, &ChurnTrace::none()).unwrap();
+        assert_eq!(report.completed, 800);
+        assert!(report.grows > 0, "no transitions to propagate");
+        let mut any_weights = false;
+        for node in 0..engine.cluster().node_count() {
+            let mut expect: Vec<u32> = Vec::new();
+            for (a, app) in engine.apps.iter().enumerate() {
+                let held: usize = app
+                    .slices
+                    .iter()
+                    .filter(|s| s.node == node)
+                    .map(|s| s.regions.len())
+                    .sum();
+                if held > 0 {
+                    expect.push(a as u32);
+                }
+            }
+            let weights = engine.cluster().nodes()[node]
+                .manager()
+                .fabric()
+                .xdma
+                .h2c_weights()
+                .to_vec();
+            let apps: Vec<u32> = weights.iter().map(|&(a, _)| a).collect();
+            assert_eq!(
+                apps, expect,
+                "node {node}: bridge weights out of sync with footprints"
+            );
+            assert!(weights.iter().all(|&(_, w)| w > 0));
+            any_weights = any_weights || !weights.is_empty();
+        }
+        assert!(any_weights, "no board ended with an installed plan");
     }
 
     #[test]

@@ -125,12 +125,18 @@ common flags:
   --requests N       request count for `serve`/`fleet`/`autoscale`
                      (default: 64/10000/20000)
   --no-pjrt          skip PJRT; use the golden model for CPU stages
+  --batch-window N   same-app coalescing window per lane/stream for
+                     `serve`/`fleet` (1..=64; 1 = off, the default;
+                     DESIGN.md §15)
   --metrics-out F    write a schema-versioned JSON metrics snapshot
                      (`serve`/`fleet`, DESIGN.md §14)
 
 fleet flags:
   --fabrics N        simulated boards (default: 8)
-  --policy P         least | sticky | bandwidth (default: least)
+  --policy P         least | sticky | bandwidth | weighted (default: least)
+  --batch-cycles N   batch followers must arrive within N virtual cycles
+                     of their leader (0 = bounded only by the leader's
+                     start instant, the default)
   --seed N           workload seed (default: 1)
   --oracle           disable the fast-path; run every request cycle-by-cycle
   --threads N        shard oracle runs across N scoped threads; results are

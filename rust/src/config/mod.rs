@@ -160,11 +160,20 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Bounded request-queue depth (backpressure threshold).
     pub queue_depth: usize,
+    /// Same-app coalescing window (DESIGN.md §15): maximum requests a
+    /// lane executor or fleet stream serves per batch.  `1` (the
+    /// default) disables coalescing — scheduling is byte-identical to
+    /// the pre-batching server.  Valid range 1..=64.
+    pub batch_window: usize,
+    /// Optional fleet-side bound: a batch follower must arrive within
+    /// this many fabric cycles of its leader (`0` = bounded only by
+    /// the leader's start instant).
+    pub batch_cycles: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { workers: 2, queue_depth: 64 }
+        Self { workers: 2, queue_depth: 64, batch_window: 1, batch_cycles: 0 }
     }
 }
 
@@ -262,6 +271,15 @@ impl SystemConfig {
                 "crossbar.default_packages {default_packages} must be 1..=255"
             )));
         }
+        // The batch window bounds per-stream look-ahead; cap it so a
+        // typo cannot turn the coalescer into head-of-line blocking.
+        let batch_window =
+            doc.usize_or("server.batch_window", d.server.batch_window);
+        if !(1..=64).contains(&batch_window) {
+            return Err(crate::ElasticError::Config(format!(
+                "server.batch_window {batch_window} must be 1..=64"
+            )));
+        }
         Ok(Self {
             fabric: FabricConfig {
                 num_ports: doc.usize_or("fabric.num_ports", d.fabric.num_ports),
@@ -313,6 +331,11 @@ impl SystemConfig {
                 workers: doc.usize_or("server.workers", d.server.workers),
                 queue_depth: doc
                     .usize_or("server.queue_depth", d.server.queue_depth),
+                batch_window,
+                batch_cycles: doc.usize_or(
+                    "server.batch_cycles",
+                    d.server.batch_cycles as usize,
+                ) as u64,
             },
             qos,
             artifact_dir: doc.str_or("artifact_dir", &d.artifact_dir),
@@ -402,6 +425,24 @@ mod tests {
         assert!(
             SystemConfig::parse("[qos.shares]\napp0 = 4294968296\n").is_err()
         );
+    }
+
+    #[test]
+    fn batch_window_parses_and_validates() {
+        let c = SystemConfig::parse(
+            "[server]\nbatch_window = 8\nbatch_cycles = 4096\n",
+        )
+        .unwrap();
+        assert_eq!(c.server.batch_window, 8);
+        assert_eq!(c.server.batch_cycles, 4096);
+        // Unconfigured: window 1 — coalescing off, legacy scheduling.
+        let d = SystemConfig::paper_defaults();
+        assert_eq!(d.server.batch_window, 1);
+        assert_eq!(d.server.batch_cycles, 0);
+        // A window of 0 would stall every stream; huge windows are
+        // head-of-line blocking.  Both fail at parse time.
+        assert!(SystemConfig::parse("[server]\nbatch_window = 0\n").is_err());
+        assert!(SystemConfig::parse("[server]\nbatch_window = 65\n").is_err());
     }
 
     #[test]

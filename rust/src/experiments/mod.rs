@@ -142,7 +142,7 @@ pub fn bandwidth_case(accs: usize, packages: u32, words: usize) -> Result<Bandwi
         let mut rng = SplitMix64::new(i as u64);
         let mut burst = vec![0u32; chunk.len()];
         rng.fill_u32(&mut burst);
-        fabric.h2c_push(0, H2cBurst { app_id: 0, words: burst });
+        fabric.h2c_push(0, H2cBurst { app_id: 0, words: burst })?;
     }
     let cycles = fabric.run_until_idle(1_000_000_000)?;
     fabric.flush_c2h();

@@ -222,9 +222,18 @@ impl Fabric {
         self.modules.get(region).and_then(Option::as_ref)
     }
 
-    /// Host driver: queue an app-tagged burst on an H2C channel.
-    pub fn h2c_push(&mut self, channel: usize, burst: H2cBurst) {
-        self.xdma.h2c_push(channel, burst);
+    /// Host driver: queue an app-tagged burst on an H2C channel.  An
+    /// out-of-range channel is refused with a typed error.
+    pub fn h2c_push(&mut self, channel: usize, burst: H2cBurst) -> Result<()> {
+        self.xdma.h2c_push(channel, burst)
+    }
+
+    /// Install per-app H2C descriptor-scheduler weights on the bridge
+    /// (DESIGN.md §15).  The manager lowers these from the compiled
+    /// bandwidth plan in `apply_plan`, alongside the crossbar budgets,
+    /// so end-to-end shares compose bridge-DRR × crossbar-WRR.
+    pub fn set_h2c_weights(&mut self, weights: &[(u32, u32)]) {
+        self.xdma.set_h2c_weights(weights);
     }
 
     /// Ordered output words collected for `app_id` so far.
@@ -519,6 +528,16 @@ impl Fabric {
         if let Some(job) = self.axi2wb.tick(&mut self.xdma, |app| {
             regfile.app_destination(app as usize).unwrap_or(0)
         }) {
+            let cycle = self.cycle;
+            let app = job.app_id;
+            let words = job.words.len();
+            let channel = self.axi2wb.last_channel;
+            self.telemetry.emit_with(|| TraceEvent::H2cScheduled {
+                cycle,
+                app,
+                channel,
+                words,
+            });
             self.xbar.push_job(0, job);
         }
     }

@@ -46,7 +46,8 @@ fn stream_app(f: &mut Fabric, app: u32, data: &[u32]) {
     // burst order is only guaranteed within one H2C channel.
     let channel = app as usize % crate::xdma::H2C_CHANNELS;
     for chunk in data.chunks(8) {
-        f.h2c_push(channel, H2cBurst { app_id: app, words: chunk.to_vec() });
+        f.h2c_push(channel, H2cBurst { app_id: app, words: chunk.to_vec() })
+            .expect("affinity channel in range");
     }
 }
 
@@ -102,7 +103,7 @@ fn bridge_half_full_delivers_user_data_in_15_cc() {
     // module is reduced to 15 clock cycles".
     let mut f = fabric();
     install_chain(&mut f, 0, &[ModuleKind::Multiplier]);
-    f.h2c_push(0, H2cBurst { app_id: 0, words: (1..=8).collect() });
+    f.h2c_push(0, H2cBurst { app_id: 0, words: (1..=8).collect() }).unwrap();
     let mut left_ready_at = None;
     for _ in 0..100 {
         let c = f.now() + 1;
@@ -125,7 +126,7 @@ fn bridge_full_policy_delivers_user_data_in_19_cc() {
     let mut f = fabric();
     install_chain(&mut f, 0, &[ModuleKind::Multiplier]);
     f.axi2wb.policy = RequestPolicy::Full;
-    f.h2c_push(0, H2cBurst { app_id: 0, words: (1..=8).collect() });
+    f.h2c_push(0, H2cBurst { app_id: 0, words: (1..=8).collect() }).unwrap();
     let mut left_ready_at = None;
     for _ in 0..100 {
         let c = f.now() + 1;
@@ -266,8 +267,8 @@ fn two_apps_share_the_fabric_in_isolation() {
     let b = rand_words(64, 8);
     // Two apps on their affinity channels; the bridge interleaves them.
     for (ca, cb) in a.chunks(8).zip(b.chunks(8)) {
-        f.h2c_push(0, H2cBurst { app_id: 0, words: ca.to_vec() });
-        f.h2c_push(1, H2cBurst { app_id: 1, words: cb.to_vec() });
+        f.h2c_push(0, H2cBurst { app_id: 0, words: ca.to_vec() }).unwrap();
+        f.h2c_push(1, H2cBurst { app_id: 1, words: cb.to_vec() }).unwrap();
     }
     f.run_until_idle(1_000_000).unwrap();
     assert_eq!(
@@ -329,7 +330,7 @@ fn c2h_channels_rotate_round_robin() {
     stream_app(&mut f, 0, &data);
     f.run_until_idle(100_000).unwrap();
     for ch in 0..3 {
-        let got = f.xdma.c2h_drain(ch);
+        let got = f.xdma.c2h_drain(ch).unwrap();
         assert_eq!(got.len(), 8, "channel {ch} got {}", got.len());
     }
 }
@@ -342,7 +343,7 @@ fn fabric_starts_isolated_until_programmed() {
     f.install_static_module(1, ModuleKind::Multiplier, 0);
     // NOTE: no allowed_slaves programming for port 0.
     f.regfile.set_app_destination(0, 0b0010).unwrap();
-    f.h2c_push(0, H2cBurst { app_id: 0, words: vec![1; 8] });
+    f.h2c_push(0, H2cBurst { app_id: 0, words: vec![1; 8] }).unwrap();
     for _ in 0..100 {
         let c = f.now() + 1;
         f.tick(c);

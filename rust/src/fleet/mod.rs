@@ -67,6 +67,12 @@ pub enum AdmissionPolicy {
     /// the register-file budget banks and the plan in force); ties
     /// broken least-loaded.
     BandwidthAware,
+    /// Weighted admission over plan headroom (DESIGN.md §15): each
+    /// board's backlog at arrival is scaled by the inverse of its spare
+    /// bandwidth share, so a board whose plan is nearly fully promised
+    /// must be proportionally *more* idle than an uncontracted one to
+    /// win the request; ties broken least-loaded.
+    PlanWeighted,
 }
 
 impl AdmissionPolicy {
@@ -76,6 +82,7 @@ impl AdmissionPolicy {
             "least" | "least-loaded" => Some(AdmissionPolicy::LeastLoaded),
             "sticky" | "sticky-by-app" => Some(AdmissionPolicy::StickyByApp),
             "bandwidth" | "bandwidth-aware" => Some(AdmissionPolicy::BandwidthAware),
+            "weighted" | "plan-weighted" => Some(AdmissionPolicy::PlanWeighted),
             _ => None,
         }
     }
@@ -117,6 +124,12 @@ pub struct RequestOutcome {
     /// Was the request moved off its policy-chosen node to a board that
     /// could host the whole chain on fabric?
     pub migrated: bool,
+    /// Did the request ride another request's fabric stream as a batch
+    /// follower (DESIGN.md §15)?  Followers skip the reconfiguration
+    /// round — the leader already programmed the chain — so their
+    /// service excludes `reconfig_ms`; everything else about the
+    /// outcome is demuxed per request exactly as when unbatched.
+    pub coalesced: bool,
     /// Cycle-exact latency decomposition (DESIGN.md §14):
     /// `span.total_cycles() == service_cycles` and
     /// `span.end_to_end_cycles() == completion_cycle - arrival_cycle`,
@@ -145,6 +158,10 @@ pub struct FleetReport {
     /// Fast-path cache hits vs cycle-accurate oracle executions.
     pub fast_path_hits: u64,
     pub oracle_runs: u64,
+    /// Same-app coalescing (DESIGN.md §15): batches of size ≥ 2 formed,
+    /// and the number of follower requests that rode a leader's stream.
+    pub batches_formed: u64,
+    pub batched_requests: u64,
     /// The trace's telemetry event stream (empty unless the fleet's
     /// [`Fleet::tracer`] is [`Tracer::Full`]).  Emitted only at the
     /// sequential admission/commit points, so it is byte-identical at
@@ -171,6 +188,8 @@ impl FleetReport {
         reg.inc("fleet_migrated_total", &[], self.migrated);
         reg.inc("fleet_fast_path_hits_total", &[], self.fast_path_hits);
         reg.inc("fleet_oracle_runs_total", &[], self.oracle_runs);
+        reg.inc("fleet_batches_total", &[], self.batches_formed);
+        reg.inc("fleet_batched_requests_total", &[], self.batched_requests);
         reg.set_gauge("fleet_makespan_cycles", &[], self.makespan_cycles as f64);
         reg.set_gauge(
             "fleet_requests_per_vs",
@@ -226,11 +245,25 @@ pub struct Fleet {
     /// sequential admission/commit points, never from worker threads,
     /// so the stream is byte-identical at every thread count.
     pub tracer: Tracer,
+    /// Same-app coalescing window (DESIGN.md §15): the maximum number
+    /// of requests one fabric stream carries.  `1` (the default)
+    /// disables look-ahead entirely — the executors are byte-identical
+    /// to the pre-batching scheduler.  A follower joins the leader's
+    /// batch only if it is the *next* trace event, targets the same app
+    /// and stage chain, and has already arrived by the leader's start
+    /// instant, so batching never delays any request.
+    pub batch_window: usize,
+    /// Optional extra bound on the window: a follower must arrive
+    /// within this many cycles of the leader's arrival (`0`, the
+    /// default, bounds followers only by the leader's start instant).
+    pub batch_cycles: u64,
     fast_path: bool,
     shape_cache: HashMap<ShapeKey, CostBreakdown>,
     migrated: u64,
     fast_path_hits: u64,
     oracle_runs: u64,
+    batches_formed: u64,
+    batched_requests: u64,
 }
 
 impl Fleet {
@@ -261,11 +294,15 @@ impl Fleet {
             migrate_overflow: true,
             execution_threads: 1,
             tracer: Tracer::Off,
+            batch_window: 1,
+            batch_cycles: 0,
             fast_path,
             shape_cache: HashMap::new(),
             migrated: 0,
             fast_path_hits: 0,
             oracle_runs: 0,
+            batches_formed: 0,
+            batched_requests: 0,
             cluster,
             policy,
             cfg: cfg.clone(),
@@ -313,6 +350,7 @@ impl Fleet {
                 }
             }
             AdmissionPolicy::BandwidthAware => self.most_spare_bandwidth(),
+            AdmissionPolicy::PlanWeighted => self.plan_weighted(arrival),
         };
         if !self.migrate_overflow {
             return (base, None);
@@ -351,6 +389,26 @@ impl Fleet {
     fn least_loaded(&self) -> usize {
         (0..self.busy_until.len())
             .min_by_key(|&i| (self.busy_until[i], i))
+            .expect("fleet has nodes")
+    }
+
+    fn plan_weighted(&self, arrival: u64) -> usize {
+        // Backlog the request would wait behind, inflated by how little
+        // of the board's bandwidth plane is still unpromised: a board
+        // with spare share `s` (parts-per-SHARE_UNIT) weighs its
+        // backlog by `SHARE_UNIT / max(s, 1)`.  Integer arithmetic in
+        // u128 keeps the score exact and overflow-free.
+        (0..self.cluster.node_count())
+            .min_by_key(|&i| {
+                let backlog =
+                    self.busy_until[i].saturating_sub(arrival) as u128;
+                let spare = self.cluster.nodes()[i]
+                    .manager()
+                    .spare_share()
+                    .max(1) as u128;
+                let score = backlog * crate::qos::SHARE_UNIT as u128 / spare;
+                (score, self.busy_until[i], i)
+            })
             .expect("fleet has nodes")
     }
 
@@ -412,7 +470,13 @@ impl Fleet {
     /// every report, so a second `run_trace` on the same fleet claimed
     /// the first trace's counts too).
     pub fn run_trace(&mut self, trace: &[TraceEvent]) -> Result<FleetReport> {
-        let at_entry = (self.migrated, self.fast_path_hits, self.oracle_runs);
+        let at_entry = (
+            self.migrated,
+            self.fast_path_hits,
+            self.oracle_runs,
+            self.batches_formed,
+            self.batched_requests,
+        );
         let mut report = if self.execution_threads > 1 {
             self.run_trace_sharded(trace)?
         } else {
@@ -421,6 +485,8 @@ impl Fleet {
         report.migrated = self.migrated - at_entry.0;
         report.fast_path_hits = self.fast_path_hits - at_entry.1;
         report.oracle_runs = self.oracle_runs - at_entry.2;
+        report.batches_formed = self.batches_formed - at_entry.3;
+        report.batched_requests = self.batched_requests - at_entry.4;
         // Per-trace event stream, like the counters above.
         report.events = self.tracer.take_events();
         Ok(report)
@@ -473,6 +539,41 @@ impl Fleet {
         });
     }
 
+    /// How many consecutive trace events starting at `cursor` ride one
+    /// fabric stream under the batch-window contract (DESIGN.md §15):
+    /// the leader plus every immediately-following request of the same
+    /// app and stage chain that has already arrived by the leader's
+    /// start instant (and, with `batch_cycles > 0`, within that many
+    /// cycles of the leader's arrival).  Always ≥ 1; exactly 1 when
+    /// `batch_window` is 1, so the legacy schedule is reproduced
+    /// byte for byte.
+    fn batch_len(
+        &self,
+        trace: &[TraceEvent],
+        cursor: usize,
+        leader_arrival: u64,
+        leader_start: u64,
+    ) -> usize {
+        let cycles_per_ms = self.cfg.fabric.clock_mhz * 1000.0;
+        let leader = &trace[cursor].request;
+        let mut len = 1;
+        while len < self.batch_window.max(1) && cursor + len < trace.len() {
+            let ev = &trace[cursor + len];
+            let arrival = (ev.arrival_ms * cycles_per_ms).round() as u64;
+            let eligible = ev.request.app_id == leader.app_id
+                && ev.request.stages == leader.stages
+                && arrival <= leader_start
+                && (self.batch_cycles == 0
+                    || arrival.saturating_sub(leader_arrival)
+                        <= self.batch_cycles);
+            if !eligible {
+                break;
+            }
+            len += 1;
+        }
+        len
+    }
+
     /// The single-threaded executor: admit and measure in one pass.
     fn run_trace_serial(&mut self, trace: &[TraceEvent]) -> Result<FleetReport> {
         let cycles_per_ms = self.cfg.fabric.clock_mhz * 1000.0;
@@ -480,7 +581,9 @@ impl Fleet {
         let mut queue_wait = CycleRecorder::new();
         let mut latency = CycleRecorder::new();
         let mut per_node_served = vec![0u64; self.cluster.node_count()];
-        for ev in trace {
+        let mut cursor = 0usize;
+        while cursor < trace.len() {
+            let ev = &trace[cursor];
             let arrival = (ev.arrival_ms * cycles_per_ms).round() as u64;
             let (node, migrated_from) = self.select_node(&ev.request, arrival);
             let migrated = migrated_from.is_some();
@@ -488,27 +591,62 @@ impl Fleet {
                 self.migrated += 1;
             }
             let start = arrival.max(self.busy_until[node]);
-            let (cost, fpga_stages) = self.execute_one(node, &ev.request)?;
-            let service = service_cycles(&self.cfg, &cost);
-            let span = RequestSpan::decompose(&self.cfg, &cost, start - arrival);
-            let completion = start + service;
-            self.busy_until[node] = completion;
-            per_node_served[node] += 1;
-            queue_wait.record(start - arrival);
-            latency.record(completion - arrival);
-            let outcome = RequestOutcome {
-                app_id: ev.request.app_id,
-                node,
-                arrival_cycle: arrival,
-                start_cycle: start,
-                completion_cycle: completion,
-                service_cycles: service,
-                fpga_stages,
-                migrated,
-                span,
-            };
-            self.emit_request_events(&outcome, migrated_from);
-            outcomes.push(outcome);
+            let size = self.batch_len(trace, cursor, arrival, start);
+            if size >= 2 {
+                self.batches_formed += 1;
+                self.batched_requests += (size - 1) as u64;
+                if self.tracer.enabled() {
+                    self.tracer.emit(TelemetryEvent::BatchFormed {
+                        cycle: start,
+                        app: ev.request.app_id,
+                        node,
+                        size,
+                    });
+                }
+            }
+            // Batch members run back-to-back on the leader's stream;
+            // followers skip reconfiguration (the leader programmed the
+            // chain) and are demuxed into per-request outcomes.
+            let mut member_start = start;
+            for m in 0..size {
+                let ev_m = &trace[cursor + m];
+                let arrival_m = (ev_m.arrival_ms * cycles_per_ms).round() as u64;
+                let (mut cost, fpga_stages) =
+                    self.execute_one(node, &ev_m.request)?;
+                if m > 0 {
+                    cost.reconfig_ms = 0.0;
+                }
+                let service = service_cycles(&self.cfg, &cost);
+                let span = RequestSpan::decompose(
+                    &self.cfg,
+                    &cost,
+                    member_start - arrival_m,
+                );
+                let completion = member_start + service;
+                self.busy_until[node] = completion;
+                per_node_served[node] += 1;
+                queue_wait.record(member_start - arrival_m);
+                latency.record(completion - arrival_m);
+                let outcome = RequestOutcome {
+                    app_id: ev_m.request.app_id,
+                    node,
+                    arrival_cycle: arrival_m,
+                    start_cycle: member_start,
+                    completion_cycle: completion,
+                    service_cycles: service,
+                    fpga_stages,
+                    migrated: migrated && m == 0,
+                    coalesced: m > 0,
+                    span,
+                };
+                self.emit_request_events(
+                    &outcome,
+                    if m == 0 { migrated_from } else { None },
+                );
+                outcomes.push(outcome);
+                member_start = completion;
+            }
+            cursor += size;
         }
         Ok(FleetReport {
             completed: outcomes.len() as u64,
@@ -520,6 +658,8 @@ impl Fleet {
             migrated: self.migrated,
             fast_path_hits: self.fast_path_hits,
             oracle_runs: self.oracle_runs,
+            batches_formed: self.batches_formed,
+            batched_requests: self.batched_requests,
             events: Vec::new(),
         })
     }
@@ -561,7 +701,7 @@ impl Fleet {
             // so pins, busy_until, node stats and the counters evolve
             // exactly as in the serial path.
             let round_start = cursor;
-            while cursor < trace.len() {
+            'commit: while cursor < trace.len() {
                 let ev = &trace[cursor];
                 let arrival = (ev.arrival_ms * cycles_per_ms).round() as u64;
                 let (node, migrated_from) = self.select_node(&ev.request, arrival);
@@ -571,65 +711,107 @@ impl Fleet {
                     .stages
                     .len()
                     .min(self.cluster.nodes()[node].available_regions());
-                let key = ShapeKey {
-                    stages: ev.request.stages.clone(),
-                    words: ev.request.data.len(),
-                    fpga_stages,
-                };
-                let cost = match costs.get(&key) {
-                    Some(&c) => c,
-                    None => {
-                        if let Some(e) = failed.remove(&key) {
-                            return Err(e);
+                let start = arrival.max(self.busy_until[node]);
+                // Batch membership is a pure function of the trace and
+                // the leader's start instant, so it matches the serial
+                // path exactly; a batch commits only when every
+                // member's cost is known, keeping the commit order (and
+                // all bookkeeping) identical to serial.
+                let size = self.batch_len(trace, cursor, arrival, start);
+                let mut member_costs = Vec::with_capacity(size);
+                for m in 0..size {
+                    let req_m = &trace[cursor + m].request;
+                    let key = ShapeKey {
+                        stages: req_m.stages.clone(),
+                        words: req_m.data.len(),
+                        fpga_stages,
+                    };
+                    match costs.get(&key) {
+                        Some(&c) => member_costs.push((key, c)),
+                        None => {
+                            if let Some(e) = failed.remove(&key) {
+                                return Err(e);
+                            }
+                            // Measure this shape, then resume here.
+                            break 'commit;
                         }
-                        break; // measure this shape, then resume here
                     }
-                };
+                }
                 if migrated {
                     self.migrated += 1;
                 }
-                if self.fast_path {
-                    // Commit-time bookkeeping mirrors the serial path:
-                    // the first committed use of a shape is the oracle
-                    // run that filled the cache; every later one is a
-                    // hit.  Speculative measurements count for nothing.
-                    if self.shape_cache.contains_key(&key) {
-                        self.fast_path_hits += 1;
+                if size >= 2 {
+                    self.batches_formed += 1;
+                    self.batched_requests += (size - 1) as u64;
+                    if self.tracer.enabled() {
+                        self.tracer.emit(TelemetryEvent::BatchFormed {
+                            cycle: start,
+                            app: ev.request.app_id,
+                            node,
+                            size,
+                        });
+                    }
+                }
+                let mut member_start = start;
+                for (m, (key, raw)) in member_costs.into_iter().enumerate() {
+                    if self.fast_path {
+                        // Commit-time bookkeeping mirrors the serial
+                        // path: the first committed use of a shape is
+                        // the oracle run that filled the cache; every
+                        // later one is a hit.  Speculative measurements
+                        // count for nothing.
+                        if self.shape_cache.contains_key(&key) {
+                            self.fast_path_hits += 1;
+                        } else {
+                            self.shape_cache.insert(key, raw);
+                            self.oracle_runs += 1;
+                        }
                     } else {
-                        self.shape_cache.insert(key, cost);
                         self.oracle_runs += 1;
                     }
-                } else {
-                    self.oracle_runs += 1;
+                    let mut cost = raw;
+                    if m > 0 {
+                        cost.reconfig_ms = 0.0;
+                    }
+                    let ev_m = &trace[cursor + m];
+                    let arrival_m =
+                        (ev_m.arrival_ms * cycles_per_ms).round() as u64;
+                    let service = service_cycles(&self.cfg, &cost);
+                    let span = RequestSpan::decompose(
+                        &self.cfg,
+                        &cost,
+                        member_start - arrival_m,
+                    );
+                    let completion = member_start + service;
+                    self.busy_until[node] = completion;
+                    {
+                        let n = self.cluster.node_mut(node);
+                        n.served += 1;
+                        n.fpga_stages_hosted += fpga_stages as u64;
+                    }
+                    per_node_served[node] += 1;
+                    queue_wait.record(member_start - arrival_m);
+                    latency.record(completion - arrival_m);
+                    let outcome = RequestOutcome {
+                        app_id: ev_m.request.app_id,
+                        node,
+                        arrival_cycle: arrival_m,
+                        start_cycle: member_start,
+                        completion_cycle: completion,
+                        service_cycles: service,
+                        fpga_stages,
+                        migrated: migrated && m == 0,
+                        coalesced: m > 0,
+                        span,
+                    };
+                    self.emit_request_events(
+                        &outcome,
+                        if m == 0 { migrated_from } else { None },
+                    );
+                    outcomes.push(outcome);
+                    member_start = completion;
                 }
-                let service = service_cycles(&self.cfg, &cost);
-                let start = arrival.max(self.busy_until[node]);
-                let span =
-                    RequestSpan::decompose(&self.cfg, &cost, start - arrival);
-                let completion = start + service;
-                self.busy_until[node] = completion;
-                {
-                    let n = self.cluster.node_mut(node);
-                    n.served += 1;
-                    n.fpga_stages_hosted += fpga_stages as u64;
-                }
-                per_node_served[node] += 1;
-                queue_wait.record(start - arrival);
-                latency.record(completion - arrival);
-                let outcome = RequestOutcome {
-                    app_id: ev.request.app_id,
-                    node,
-                    arrival_cycle: arrival,
-                    start_cycle: start,
-                    completion_cycle: completion,
-                    service_cycles: service,
-                    fpga_stages,
-                    migrated,
-                    span,
-                };
-                self.emit_request_events(&outcome, migrated_from);
-                outcomes.push(outcome);
-                cursor += 1;
+                cursor += size;
             }
 
             // Oracle fidelity: with the fast-path off, every committed
@@ -649,7 +831,12 @@ impl Fleet {
                 let results =
                     execute_on_nodes(self.cluster.nodes_mut(), per_node, threads);
                 for (tag, r) in results {
-                    let measured = r?;
+                    let mut measured = r?;
+                    // A standalone replay pays the reconfiguration a
+                    // batch follower skipped; compare like with like.
+                    if outcomes[tag].coalesced {
+                        measured.reconfig_ms = 0.0;
+                    }
                     debug_assert_eq!(
                         service_cycles(&self.cfg, &measured),
                         outcomes[tag].service_cycles,
@@ -744,6 +931,8 @@ impl Fleet {
             migrated: self.migrated,
             fast_path_hits: self.fast_path_hits,
             oracle_runs: self.oracle_runs,
+            batches_formed: self.batches_formed,
+            batched_requests: self.batched_requests,
             events: Vec::new(),
         })
     }
@@ -829,6 +1018,19 @@ mod tests {
         generate_count(&WorkloadSpec::fleet_mix(), seed, n)
     }
 
+    /// Each base event duplicated `dup` times at the same arrival
+    /// instant: consecutive same-app, same-chain requests that the
+    /// batch window is allowed to coalesce.
+    fn bursty_trace(n: usize, dup: usize, seed: u64) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for ev in small_trace(n, seed) {
+            for _ in 0..dup {
+                out.push(ev.clone());
+            }
+        }
+        out
+    }
+
     #[test]
     fn fast_path_equivalence_with_oracle() {
         // Same trace, same policy: the shape-memoized fast-path must
@@ -892,6 +1094,151 @@ mod tests {
                 assert_eq!(want.makespan_cycles, got.makespan_cycles);
             }
         }
+    }
+
+    #[test]
+    fn batch_window_one_reproduces_the_legacy_schedule() {
+        // Bursty same-app duplicates would coalesce at W > 1; at W = 1
+        // (whatever batch_cycles says) the executor must reproduce the
+        // unbatched schedule byte for byte, with zero batches formed.
+        let trace = bursty_trace(40, 3, 11);
+        let mut base =
+            Fleet::launch(3, &cfg(), None, AdmissionPolicy::StickyByApp, true);
+        base.tracer = Tracer::full();
+        let want = base.run_trace(&trace).unwrap();
+        let mut w1 =
+            Fleet::launch(3, &cfg(), None, AdmissionPolicy::StickyByApp, true);
+        w1.batch_window = 1;
+        w1.batch_cycles = 10_000;
+        w1.tracer = Tracer::full();
+        let got = w1.run_trace(&trace).unwrap();
+        assert_eq!(want.outcomes, got.outcomes);
+        assert_eq!(want.events, got.events);
+        assert_eq!(got.batches_formed, 0);
+        assert_eq!(got.batched_requests, 0);
+        assert!(got.outcomes.iter().all(|o| !o.coalesced));
+    }
+
+    #[test]
+    fn batching_coalesces_followers_and_never_delays_a_request() {
+        // Sticky pins with migration off make the unbatched follower
+        // land on the leader's node anyway, so coalescing — which only
+        // removes the follower's reconfiguration round — must finish
+        // every request no later, request by request.
+        let trace = bursty_trace(40, 3, 11);
+        let run = |window: usize| {
+            let mut fleet = Fleet::launch(
+                3,
+                &cfg(),
+                None,
+                AdmissionPolicy::StickyByApp,
+                true,
+            );
+            fleet.migrate_overflow = false;
+            fleet.batch_window = window;
+            fleet.run_trace(&trace).unwrap()
+        };
+        let plain = run(1);
+        let batched = run(3);
+        assert!(batched.batches_formed > 0, "no batches formed");
+        assert_eq!(
+            batched.batched_requests,
+            batched.outcomes.iter().filter(|o| o.coalesced).count() as u64
+        );
+        assert_eq!(plain.completed, batched.completed);
+        for (p, b) in plain.outcomes.iter().zip(&batched.outcomes) {
+            assert_eq!(p.app_id, b.app_id);
+            assert!(
+                b.completion_cycle <= p.completion_cycle,
+                "batching delayed app {} ({} > {})",
+                b.app_id,
+                b.completion_cycle,
+                p.completion_cycle
+            );
+            // Demux exactness: every outcome — follower or not —
+            // carries a span that sums to its service and end-to-end
+            // latency (DESIGN.md §14 invariants survive batching).
+            assert_eq!(b.span.total_cycles(), b.service_cycles);
+            assert_eq!(
+                b.span.end_to_end_cycles(),
+                b.completion_cycle - b.arrival_cycle
+            );
+            if b.coalesced {
+                assert_eq!(b.span.icap_cycles, 0, "follower paid reconfig");
+            }
+        }
+        assert!(batched.makespan_cycles <= plain.makespan_cycles);
+    }
+
+    #[test]
+    fn batched_sharded_execution_matches_serial_at_every_thread_count() {
+        // The batch demux property (ISSUE 8): with a window W ≥ 1 the
+        // sharded executor must reproduce the serial batched schedule —
+        // outcomes, spans, events, batch counters — at every thread
+        // count, in both path modes.
+        let trace = bursty_trace(30, 3, 29);
+        for fast in [true, false] {
+            let mut serial =
+                Fleet::launch(3, &cfg(), None, AdmissionPolicy::StickyByApp, fast);
+            serial.batch_window = 4;
+            serial.tracer = Tracer::full();
+            let want = serial.run_trace(&trace).unwrap();
+            assert!(want.batches_formed > 0, "fast={fast}: no batches");
+            for threads in [2usize, 4, 8] {
+                let mut sharded = Fleet::launch(
+                    3,
+                    &cfg(),
+                    None,
+                    AdmissionPolicy::StickyByApp,
+                    fast,
+                );
+                sharded.batch_window = 4;
+                sharded.execution_threads = threads;
+                sharded.tracer = Tracer::full();
+                let got = sharded.run_trace(&trace).unwrap();
+                assert_eq!(
+                    want.outcomes, got.outcomes,
+                    "fast={fast} threads={threads}"
+                );
+                assert_eq!(want.events, got.events);
+                assert_eq!(want.queue_wait.samples(), got.queue_wait.samples());
+                assert_eq!(want.latency.samples(), got.latency.samples());
+                assert_eq!(want.per_node_served, got.per_node_served);
+                assert_eq!(want.batches_formed, got.batches_formed);
+                assert_eq!(want.batched_requests, got.batched_requests);
+                assert_eq!(want.fast_path_hits, got.fast_path_hits);
+                assert_eq!(want.oracle_runs, got.oracle_runs);
+                assert_eq!(want.makespan_cycles, got.makespan_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_weighted_admission_shifts_load_toward_headroom() {
+        // Fence two of node 0's regions: its spare share — headroom ×
+        // free-region fraction — drops to a third of the others'.  Under
+        // a standing burst the weighted policy inflates its backlog 3×,
+        // so it must end up serving the least.
+        let mut trace = small_trace(90, 23);
+        for ev in trace.iter_mut() {
+            ev.arrival_ms = 0.0;
+        }
+        let mut fleet = Fleet::launch(
+            3,
+            &cfg(),
+            None,
+            AdmissionPolicy::PlanWeighted,
+            true,
+        );
+        fleet.fence_node(0, 2);
+        let report = fleet.run_trace(&trace).unwrap();
+        assert_eq!(report.completed, 90);
+        assert!(
+            report.per_node_served[0] < report.per_node_served[1]
+                && report.per_node_served[0] < report.per_node_served[2],
+            "low-headroom board won the load: {:?}",
+            report.per_node_served
+        );
     }
 
     #[test]

@@ -102,6 +102,18 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
+/// Parse `--batch-window`, holding the CLI to the same 1..=64 bound the
+/// config loader enforces (`server.batch_window`, DESIGN.md §15).
+fn batch_window_flag(cli: &Cli, default: usize) -> Result<usize> {
+    let w = cli.usize_or("batch-window", default)?;
+    if !(1..=64).contains(&w) {
+        return Err(elastic_fpga::ElasticError::Config(format!(
+            "--batch-window {w} must be 1..=64"
+        )));
+    }
+    Ok(w)
+}
+
 fn quickstart(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let runtime = load_runtime(cli)?;
     println!("elastic-fpga quickstart — 16 KB through mult->enc->dec");
@@ -134,9 +146,12 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let policy_name = cli.str_or("policy", "least");
     let policy = AdmissionPolicy::parse(&policy_name).ok_or_else(|| {
         elastic_fpga::ElasticError::Config(format!(
-            "--policy expects least|sticky|bandwidth, got '{policy_name}'"
+            "--policy expects least|sticky|bandwidth|weighted, \
+             got '{policy_name}'"
         ))
     })?;
+    let batch_window = batch_window_flag(cli, 1)?;
+    let batch_cycles = cli.usize_or("batch-cycles", 0)? as u64;
     let trace_out = cli.flags.get("trace-out").cloned();
     let metrics_out = cli.flags.get("metrics-out").cloned();
     let tracing = cli.bool_or("trace", false)? || trace_out.is_some();
@@ -148,6 +163,8 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let trace = generate_count(&WorkloadSpec::fleet_mix(), seed, requests);
     let mut fleet = Fleet::launch(fabrics, cfg, None, policy, !oracle);
     fleet.execution_threads = threads;
+    fleet.batch_window = batch_window;
+    fleet.batch_cycles = batch_cycles;
     if tracing {
         fleet.tracer = elastic_fpga::telemetry::Tracer::full();
     }
@@ -178,6 +195,13 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
         report.oracle_runs,
         report.fast_path_hits
     );
+    if report.batches_formed > 0 {
+        println!(
+            "coalesced {} requests into {} batches (reconfig round skipped \
+             for each follower)",
+            report.batched_requests, report.batches_formed
+        );
+    }
     if tracing {
         println!("captured {} trace events", report.events.len());
     }
@@ -271,8 +295,10 @@ fn serve(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let runtime = load_runtime(cli)?;
     let requests = cli.usize_or("requests", 64)?;
     let words = cli.usize_or("words", 4096)?;
+    let mut cfg = cfg.clone();
+    cfg.server.batch_window = batch_window_flag(cli, cfg.server.batch_window)?;
     println!("serving {requests} requests of {words} words each...");
-    let server = Server::start(cfg.clone(), runtime.as_ref().map(|t| t.handle()));
+    let server = Server::start(cfg, runtime.as_ref().map(|t| t.handle()));
     let mut lat = LatencyRecorder::new();
     let mut thr = Throughput::start();
     let mut rng = SplitMix64::new(7);

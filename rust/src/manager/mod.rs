@@ -239,6 +239,11 @@ impl ElasticManager {
         }
         self.fabric.regfile.write_master_budgets(&prog.budgets)?;
         self.fabric.xbar.set_rotation_order(&prog.rotation)?;
+        // Lower the same per-app shares into the bridge hop: the H2C
+        // descriptor scheduler (DESIGN.md §15) serves per-app submit
+        // queues in deficit-round-robin with these weights, so the
+        // contract holds host-to-completion, not just past the crossbar.
+        self.fabric.set_h2c_weights(&prog.app_packages);
         let cycle = self.fabric.now();
         let masters = prog.budgets.len();
         self.fabric
@@ -613,10 +618,13 @@ impl ElasticManager {
             // pinning a stream to a descriptor ring.
             let channel = req.app_id as usize % crate::xdma::H2C_CHANNELS;
             for chunk in req.data.chunks(crate::xdma::BRIDGE_BUFFER_WORDS) {
-                self.fabric.h2c_push(
+                if let Err(e) = self.fabric.h2c_push(
                     channel,
                     H2cBurst { app_id: req.app_id, words: chunk.to_vec() },
-                );
+                ) {
+                    self.release_app(req.app_id);
+                    return Err(e);
+                }
             }
             let before = self.fabric.now();
             // Horizon fast-path and oracle are cycle-exact, so the

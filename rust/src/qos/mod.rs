@@ -251,6 +251,10 @@ pub struct PlanProgram {
     /// contracted app's masters adjacent.
     pub rotation: Vec<usize>,
     /// Per contracted resident app: total packages per full rotation.
+    /// Doubles as the weight vector for the bridge's per-app H2C
+    /// descriptor scheduler ([`crate::xdma::Xdma::set_h2c_weights`],
+    /// DESIGN.md §15) so host-side and fabric-side arbitration enforce
+    /// the same ratios.
     pub app_packages: Vec<(u32, u32)>,
 }
 

@@ -42,7 +42,7 @@
 //! oracle, so wall-clock serving throughput scales with *work*, not
 //! with modeled ICAP latency.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -378,6 +378,8 @@ impl ElasticServer {
                 &labels,
                 lane.spare_share.load(Ordering::SeqCst) as f64,
             );
+            m.inc("lane_batches_total", &labels, lane.batches());
+            m.inc("lane_coalesced_total", &labels, lane.coalesced());
         }
         m
     }
@@ -431,6 +433,12 @@ pub struct LaneStatus {
     /// App id -> outstanding requests on this lane; the shrink tick's
     /// per-app reservation floor counts this map's keys.
     apps: Mutex<HashMap<u32, usize>>,
+    /// Coalescing counters (DESIGN.md §15): batches of size ≥ 2 the
+    /// lane executor formed, and the follower submissions that rode
+    /// a leader's stream (skipping admission-cadence work and the
+    /// per-request placement plan).
+    batches: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl LaneStatus {
@@ -445,6 +453,16 @@ impl LaneStatus {
     /// Distinct apps with work in flight on this lane.
     pub fn active_apps(&self) -> usize {
         self.apps.lock().unwrap().len()
+    }
+
+    /// Batches of size ≥ 2 this lane's executor has formed.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::SeqCst)
+    }
+
+    /// Submissions served as batch followers on this lane.
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::SeqCst)
     }
 
     fn note_app(&self, app_id: u32) {
@@ -631,111 +649,161 @@ fn lane_loop(
     stats: Arc<ScaleStats>,
     dumps: Arc<Mutex<Vec<FlightDump>>>,
 ) {
+    let batch_window = cfg.server.batch_window.max(1);
     let mut manager = ElasticManager::new(cfg, runtime);
     manager.fabric_mut().set_tracing(Tracer::flight(DEFAULT_FLIGHT_CAPACITY));
     let mut clock: u64 = 0;
     let mut cadence = ControlCadence::new(autoscale.map_or(0, |s| s.every_cycles));
     let mut admissions: usize = 0;
     status.spare_share.store(manager.spare_share() as u64, Ordering::SeqCst);
-    while let Ok(sub) = rx.recv() {
-        admissions += 1;
-        let app = sub.req.app_id;
-        manager.fabric_mut().telemetry.emit_with(|| TraceEvent::RequestAdmitted {
-            cycle: clock,
-            app,
-            node: lane_idx,
-        });
-        if let Some(scale) = autoscale {
-            let mut tick = scale.every > 0 && admissions % scale.every == 0;
-            // The cycle cadence is an EventDriven horizon on the lane's
-            // virtual clock: between boundaries it contributes
-            // `next_interesting_cycle`, so a pending control tick
-            // bounds the fast-path's jump instead of dragging the lane
-            // back to cycle-stepping (DESIGN.md §13).  Crossing several
-            // boundaries in one long prefix still costs one tick here —
-            // `due` consumes them all.
-            while cadence.due(clock) {
-                tick = true;
-            }
-            if tick {
-                autoscale_tick(&mut manager, &scale, &status, &stats, clock, lane_idx);
-                status
-                    .spare_share
-                    .store(manager.spare_share() as u64, Ordering::SeqCst);
+    // Submissions pulled off the lane channel but not yet served; the
+    // coalescer's look-ahead window (DESIGN.md §15).
+    let mut pending: VecDeque<Submission> = VecDeque::new();
+    loop {
+        let leader = match pending.pop_front() {
+            Some(s) => s,
+            None => match rx.recv() {
+                Ok(s) => s,
+                Err(_) => break,
+            },
+        };
+        // Make everything already queued on this lane visible to the
+        // coalescer; never blocks once a leader is in hand.
+        while let Ok(next) = rx.try_recv() {
+            pending.push_back(next);
+        }
+        // Batch: the contiguous prefix of pending submissions for the
+        // leader's app and stage chain, up to the window.  A batch is
+        // one admission event for control purposes — followers skip
+        // the cadence tick and the placement plan — but every member
+        // keeps its own response, events and terminal bookkeeping.
+        let mut batch = vec![leader];
+        while batch.len() < batch_window {
+            match pending.front() {
+                Some(n)
+                    if n.req.app_id == batch[0].req.app_id
+                        && n.req.stages == batch[0].req.stages =>
+                {
+                    let follower = pending.pop_front().expect("front just checked");
+                    batch.push(follower);
+                }
+                _ => break,
             }
         }
-        let queue_wait_cycles = clock;
-        let placement = manager.plan(&sub.req.stages);
-        manager.fabric_mut().telemetry.emit_with(|| TraceEvent::RequestDispatched {
-            cycle: clock,
-            app,
-            node: lane_idx,
-        });
-        // Run the FPGA prefix synchronously on this lane's fabric; hand
-        // the CPU suffix to the worker pool.
-        match run_fpga_prefix(&mut manager, &sub.req, &placement) {
-            Ok((partial, tl, fpga_stages)) => {
-                let service = tl.fabric_cycles + tl.reconfig_cycles;
-                clock += service;
-                status.clock.store(clock, Ordering::SeqCst);
-                manager.fabric_mut().telemetry.emit_with(|| {
-                    TraceEvent::RequestCompleted {
-                        cycle: clock,
-                        app,
-                        node: lane_idx,
-                        service_cycles: service,
+        if batch.len() >= 2 {
+            status.batches.fetch_add(1, Ordering::SeqCst);
+            status
+                .coalesced
+                .fetch_add(batch.len() as u64 - 1, Ordering::SeqCst);
+            let (app, size) = (batch[0].req.app_id, batch.len());
+            manager.fabric_mut().telemetry.emit_with(|| {
+                TraceEvent::BatchFormed { cycle: clock, app, node: lane_idx, size }
+            });
+        }
+        let mut placement: Option<Vec<StagePlacement>> = None;
+        for (member, sub) in batch.into_iter().enumerate() {
+            let app = sub.req.app_id;
+            manager.fabric_mut().telemetry.emit_with(|| TraceEvent::RequestAdmitted {
+                cycle: clock,
+                app,
+                node: lane_idx,
+            });
+            if member == 0 {
+                admissions += 1;
+                if let Some(scale) = autoscale {
+                    let mut tick = scale.every > 0 && admissions % scale.every == 0;
+                    // The cycle cadence is an EventDriven horizon on the
+                    // lane's virtual clock: between boundaries it
+                    // contributes `next_interesting_cycle`, so a pending
+                    // control tick bounds the fast-path's jump instead of
+                    // dragging the lane back to cycle-stepping (DESIGN.md
+                    // §13).  Crossing several boundaries in one long prefix
+                    // still costs one tick here — `due` consumes them all.
+                    while cadence.due(clock) {
+                        tick = true;
                     }
-                });
-                let remaining: Vec<ModuleKind> = placement
-                    .iter()
-                    .filter(|p| !p.is_fpga())
-                    .map(StagePlacement::kind)
-                    .collect();
-                let msg = WorkerMsg::CpuSuffix {
-                    req: sub.req,
-                    partial,
-                    remaining,
-                    tl,
-                    fpga_stages,
-                    placement,
-                    submitted: sub.submitted,
-                    fabric: lane_idx,
-                    queue_wait_cycles,
-                    lane: Arc::clone(&status),
-                    respond: sub.respond,
-                };
-                if let Err(send_err) = work_tx.send(msg) {
-                    // Worker pool gone: fail the request here rather
-                    // than leak its queue slot.
-                    if let WorkerMsg::CpuSuffix { req, submitted, respond, lane, .. } =
-                        send_err.0
-                    {
-                        let _ = respond.send(Response {
-                            report: Err(ElasticError::Server(
-                                "worker pool gone".into(),
-                            )),
-                            wall: submitted.elapsed(),
-                            fabric: lane_idx,
-                            queue_wait_cycles,
-                        });
-                        finish_request(&lane, req.app_id, &in_flight, &slots);
+                    if tick {
+                        autoscale_tick(&mut manager, &scale, &status, &stats, clock, lane_idx);
+                        status
+                            .spare_share
+                            .store(manager.spare_share() as u64, Ordering::SeqCst);
                     }
                 }
+                placement = Some(manager.plan(&sub.req.stages));
             }
-            Err(e) => {
-                // Dump this lane's flight window (the manager already
-                // dumped at the spill site for app errors) and publish
-                // everything collected to the server-wide sink.
-                let fab = manager.fabric_mut();
-                fab.telemetry.dump(&format!("lane {lane_idx}: app {app} failed: {e}"));
-                dumps.lock().unwrap().extend(fab.telemetry.take_dumps());
-                let _ = sub.respond.send(Response {
-                    report: Err(e),
-                    wall: sub.submitted.elapsed(),
-                    fabric: lane_idx,
-                    queue_wait_cycles,
-                });
-                finish_request(&status, app, &in_flight, &slots);
+            let queue_wait_cycles = clock;
+            let placement = placement.as_ref().expect("leader planned").clone();
+            manager.fabric_mut().telemetry.emit_with(|| TraceEvent::RequestDispatched {
+                cycle: clock,
+                app,
+                node: lane_idx,
+            });
+            // Run the FPGA prefix synchronously on this lane's fabric; hand
+            // the CPU suffix to the worker pool.
+            match run_fpga_prefix(&mut manager, &sub.req, &placement) {
+                Ok((partial, tl, fpga_stages)) => {
+                    let service = tl.fabric_cycles + tl.reconfig_cycles;
+                    clock += service;
+                    status.clock.store(clock, Ordering::SeqCst);
+                    manager.fabric_mut().telemetry.emit_with(|| {
+                        TraceEvent::RequestCompleted {
+                            cycle: clock,
+                            app,
+                            node: lane_idx,
+                            service_cycles: service,
+                        }
+                    });
+                    let remaining: Vec<ModuleKind> = placement
+                        .iter()
+                        .filter(|p| !p.is_fpga())
+                        .map(StagePlacement::kind)
+                        .collect();
+                    let msg = WorkerMsg::CpuSuffix {
+                        req: sub.req,
+                        partial,
+                        remaining,
+                        tl,
+                        fpga_stages,
+                        placement,
+                        submitted: sub.submitted,
+                        fabric: lane_idx,
+                        queue_wait_cycles,
+                        lane: Arc::clone(&status),
+                        respond: sub.respond,
+                    };
+                    if let Err(send_err) = work_tx.send(msg) {
+                        // Worker pool gone: fail the request here rather
+                        // than leak its queue slot.
+                        if let WorkerMsg::CpuSuffix { req, submitted, respond, lane, .. } =
+                            send_err.0
+                        {
+                            let _ = respond.send(Response {
+                                report: Err(ElasticError::Server(
+                                    "worker pool gone".into(),
+                                )),
+                                wall: submitted.elapsed(),
+                                fabric: lane_idx,
+                                queue_wait_cycles,
+                            });
+                            finish_request(&lane, req.app_id, &in_flight, &slots);
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Dump this lane's flight window (the manager already
+                    // dumped at the spill site for app errors) and publish
+                    // everything collected to the server-wide sink.
+                    let fab = manager.fabric_mut();
+                    fab.telemetry.dump(&format!("lane {lane_idx}: app {app} failed: {e}"));
+                    dumps.lock().unwrap().extend(fab.telemetry.take_dumps());
+                    let _ = sub.respond.send(Response {
+                        report: Err(e),
+                        wall: sub.submitted.elapsed(),
+                        fabric: lane_idx,
+                        queue_wait_cycles,
+                    });
+                    finish_request(&status, app, &in_flight, &slots);
+                }
             }
         }
     }
@@ -967,6 +1035,46 @@ mod tests {
             assert!(rep.verified);
             assert_eq!(&rep.output, &golden_pipeline(d));
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn coalesces_same_app_submissions_into_batches() {
+        // One lane, one app, a rapid stream of identical chains: while
+        // the executor serves a leader the rest pile up on the lane
+        // queue, so batches must form — and every member still gets
+        // its own verified, demuxed response.
+        let mut cfg = SystemConfig::paper_defaults();
+        cfg.server.batch_window = 8;
+        let server = ElasticServer::start_fleet(
+            cfg,
+            FleetOptions {
+                fabrics: 1,
+                policy: AdmissionPolicy::LeastLoaded,
+                autoscale: None,
+            },
+            None,
+        );
+        let mut rxs = Vec::new();
+        let mut inputs = Vec::new();
+        for i in 0..64u64 {
+            let d = data(64, 500 + i);
+            inputs.push(d.clone());
+            rxs.push(server.submit(AppRequest::pipeline(0, d)).unwrap());
+        }
+        for (rx, d) in rxs.into_iter().zip(&inputs) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.fabric, 0);
+            let rep = resp.report.unwrap();
+            assert!(rep.verified);
+            assert_eq!(&rep.output, &golden_pipeline(d));
+        }
+        let lane = &server.lane_statuses()[0];
+        assert!(
+            lane.coalesced() > 0,
+            "64 rapid same-app submissions never coalesced"
+        );
+        assert!(lane.coalesced() >= lane.batches());
         server.shutdown();
     }
 

@@ -92,6 +92,12 @@ pub enum TraceEvent {
     ScaleDown { cycle: u64, node: usize, regions: usize },
     /// A bandwidth plan was lowered onto the arbiter.
     PlanApplied { cycle: u64, masters: usize },
+    /// Fleet/server coalesced `size` same-app requests into one fabric
+    /// stream (DESIGN.md §15); emitted only for batches of 2+.
+    BatchFormed { cycle: u64, app: u32, node: usize, size: usize },
+    /// The bridge's plan-weighted H2C descriptor scheduler granted an
+    /// app's burst onto the crossbar (DESIGN.md §15).
+    H2cScheduled { cycle: u64, app: u32, channel: usize, words: usize },
 }
 
 impl TraceEvent {
@@ -109,7 +115,9 @@ impl TraceEvent {
             | TraceEvent::Migration { cycle, .. }
             | TraceEvent::ScaleUp { cycle, .. }
             | TraceEvent::ScaleDown { cycle, .. }
-            | TraceEvent::PlanApplied { cycle, .. } => cycle,
+            | TraceEvent::PlanApplied { cycle, .. }
+            | TraceEvent::BatchFormed { cycle, .. }
+            | TraceEvent::H2cScheduled { cycle, .. } => cycle,
         }
     }
 
@@ -128,6 +136,8 @@ impl TraceEvent {
             TraceEvent::ScaleUp { .. } => "scale_up",
             TraceEvent::ScaleDown { .. } => "scale_down",
             TraceEvent::PlanApplied { .. } => "plan_applied",
+            TraceEvent::BatchFormed { .. } => "batch_formed",
+            TraceEvent::H2cScheduled { .. } => "h2c_scheduled",
         }
     }
 
@@ -181,6 +191,14 @@ impl TraceEvent {
             TraceEvent::PlanApplied { cycle, masters } => {
                 format!("{}, \"masters\": {masters}}}", head(cycle))
             }
+            TraceEvent::BatchFormed { cycle, app, node, size } => format!(
+                "{}, \"app\": {app}, \"node\": {node}, \"size\": {size}}}",
+                head(cycle)
+            ),
+            TraceEvent::H2cScheduled { cycle, app, channel, words } => format!(
+                "{}, \"app\": {app}, \"channel\": {channel}, \"words\": {words}}}",
+                head(cycle)
+            ),
         }
     }
 }

@@ -16,10 +16,25 @@
 //! cycle) and first-word cycle with the second half of the fill — 8-word
 //! user data reaches the module in **15 cc** instead of **19 cc** for the
 //! request-when-full policy (pinned in `fabric::tests`).
+//!
+//! **Plan-driven descriptor scheduling (DESIGN.md §15).**  Plain
+//! round-robin pickup makes the host→fabric hop first-come-first-served:
+//! a chatty tenant saturates its H2C FIFO and takes an equal share of the
+//! bridge regardless of its `qos::BandwidthPlan`, starving other tenants
+//! *before* the crossbar's WRR arbiter ever sees them.  When the manager
+//! installs per-app weights ([`Xdma::set_h2c_weights`], lowered from the
+//! compiled [`PlanProgram`](crate::qos::PlanProgram) by
+//! `ElasticManager::apply_plan`), burst pickup switches to a
+//! deficit-round-robin credit scheduler over the per-channel FIFO heads:
+//! under saturation each app's granted H2C words converge to its plan
+//! share, so end-to-end bandwidth composes bridge-DRR × crossbar-WRR.
+//! With no weights installed the pickup is byte-identical to the legacy
+//! round-robin scan.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::wishbone::{Job, WbError};
+use crate::{ElasticError, Result};
 
 /// Number of host-to-card AXI-ST channels.
 pub const H2C_CHANNELS: usize = 3;
@@ -45,13 +60,24 @@ pub struct H2cBurst {
     pub words: Vec<u32>,
 }
 
-/// The XDMA channel fabric: per-channel word FIFOs.
+/// The XDMA channel fabric: per-channel word FIFOs plus the plan-driven
+/// descriptor scheduler state (DESIGN.md §15).
 #[derive(Debug)]
 pub struct Xdma {
     /// H2C FIFOs: app-tagged bursts queued by the host driver.
     h2c: [VecDeque<H2cBurst>; H2C_CHANNELS],
     /// C2H FIFOs: words (with app tag) awaiting host readout.
     c2h: [VecDeque<(u32, u32)>; C2H_CHANNELS],
+    /// Per-app H2C scheduler weights (sorted by app).  Empty — the
+    /// power-on state — selects the legacy round-robin pickup.
+    weights: Vec<(u32, u32)>,
+    /// Per-app signed word credit for the DRR scheduler.  Refills are
+    /// weight-proportional over the backlogged candidate set and the
+    /// served app is debited the set's total weight, so the sum is
+    /// invariant (zero) and credits stay bounded under saturation.
+    credit: BTreeMap<u32, i64>,
+    /// Per-app words granted across the bridge (telemetry/stats).
+    h2c_app_words: BTreeMap<u32, u64>,
     /// Total words moved host->card (stats).
     pub h2c_words: u64,
     /// Total words moved card->host (stats).
@@ -70,22 +96,40 @@ impl Xdma {
         Self {
             h2c: Default::default(),
             c2h: Default::default(),
+            weights: Vec::new(),
+            credit: BTreeMap::new(),
+            h2c_app_words: BTreeMap::new(),
             h2c_words: 0,
             c2h_words: 0,
         }
     }
 
-    /// Host driver queues a burst on an H2C channel.
-    pub fn h2c_push(&mut self, channel: usize, burst: H2cBurst) {
-        assert!(channel < H2C_CHANNELS);
+    /// Host driver queues a burst on an H2C channel.  An out-of-range
+    /// channel is a host-driver bug the shell refuses with a typed
+    /// error instead of panicking (the assert-to-`Result` convention).
+    pub fn h2c_push(&mut self, channel: usize, burst: H2cBurst) -> Result<()> {
+        if channel >= H2C_CHANNELS {
+            return Err(ElasticError::Config(format!(
+                "H2C channel {channel} out of range: the XDMA shell exposes \
+                 {H2C_CHANNELS} host-to-card channels"
+            )));
+        }
         self.h2c_words += burst.words.len() as u64;
         self.h2c[channel].push_back(burst);
+        Ok(())
     }
 
-    /// Host driver drains a C2H channel: `(app_id, word)` pairs.
-    pub fn c2h_drain(&mut self, channel: usize) -> Vec<(u32, u32)> {
-        assert!(channel < C2H_CHANNELS);
-        self.c2h[channel].drain(..).collect()
+    /// Host driver drains a C2H channel: `(app_id, word)` pairs.  An
+    /// out-of-range channel returns a typed error, matching
+    /// [`Xdma::h2c_push`].
+    pub fn c2h_drain(&mut self, channel: usize) -> Result<Vec<(u32, u32)>> {
+        if channel >= C2H_CHANNELS {
+            return Err(ElasticError::Config(format!(
+                "C2H channel {channel} out of range: the XDMA shell exposes \
+                 {C2H_CHANNELS} card-to-host channels"
+            )));
+        }
+        Ok(self.c2h[channel].drain(..).collect())
     }
 
     /// Words pending across all C2H channels.
@@ -96,6 +140,97 @@ impl Xdma {
     /// Bursts pending across all H2C channels.
     pub fn h2c_pending(&self) -> usize {
         self.h2c.iter().map(VecDeque::len).sum()
+    }
+
+    /// Install per-app H2C descriptor-scheduler weights (DESIGN.md §15).
+    /// The manager lowers these from the compiled plan's per-app package
+    /// counts on every [`apply_plan`](crate::manager::ElasticManager);
+    /// only the *ratios* matter.  Installing an empty slice restores the
+    /// legacy round-robin pickup.  Credits reset on every install so a
+    /// recompiled plan starts from a clean slate deterministically.
+    pub fn set_h2c_weights(&mut self, weights: &[(u32, u32)]) {
+        let mut w: Vec<(u32, u32)> = weights.to_vec();
+        w.sort_unstable_by_key(|e| e.0);
+        w.dedup_by_key(|e| e.0);
+        self.weights = w;
+        self.credit.clear();
+    }
+
+    /// Currently installed scheduler weights, sorted by app.
+    pub fn h2c_weights(&self) -> &[(u32, u32)] {
+        &self.weights
+    }
+
+    /// Per-app words granted across the bridge so far (sorted by app).
+    pub fn h2c_app_words(&self) -> &BTreeMap<u32, u64> {
+        &self.h2c_app_words
+    }
+
+    /// The weight an app schedules at: its installed weight, or — for an
+    /// app outside the plan — the smallest installed weight, so an
+    /// unplanned tenant can make progress but never outruns a planned
+    /// one.  Weights are clamped to at least 1 (a zero-weight app would
+    /// starve forever, which the plan compiler never asks for).
+    fn weight_of(&self, app: u32) -> i64 {
+        if let Ok(i) = self.weights.binary_search_by_key(&app, |e| e.0) {
+            return i64::from(self.weights[i].1.max(1));
+        }
+        i64::from(self.weights.iter().map(|e| e.1.max(1)).min().unwrap_or(1))
+    }
+
+    fn credit_of(&self, app: u32) -> i64 {
+        self.credit.get(&app).copied().unwrap_or(0)
+    }
+
+    /// Pick the next burst for the bridge, starting the rotation scan at
+    /// `start`.  With no weights installed this is the legacy
+    /// round-robin (first non-empty FIFO in rotation order) —
+    /// byte-identical to the pre-scheduler bridge.  With weights, the
+    /// DRR credit scheduler picks the FIFO-head app with the highest
+    /// credit (ties break in rotation order), debits it the candidate
+    /// set's total weight per word and refills every backlogged
+    /// candidate weight-proportionally — so under saturation each app's
+    /// granted words converge to its plan share of the bridge.
+    fn h2c_pop(&mut self, start: usize) -> Option<(usize, H2cBurst)> {
+        let pick = if self.weights.is_empty() {
+            (0..H2C_CHANNELS)
+                .map(|i| (start + i) % H2C_CHANNELS)
+                .find(|&ch| !self.h2c[ch].is_empty())?
+        } else {
+            let mut candidates: Vec<(usize, u32, usize)> =
+                Vec::with_capacity(H2C_CHANNELS);
+            for i in 0..H2C_CHANNELS {
+                let ch = (start + i) % H2C_CHANNELS;
+                if let Some(head) = self.h2c[ch].front() {
+                    candidates.push((ch, head.app_id, head.words.len()));
+                }
+            }
+            let mut best: Option<(usize, u32, usize)> = None;
+            for &(ch, app, cost) in &candidates {
+                let better = match best {
+                    None => true,
+                    Some((_, bapp, _)) => self.credit_of(app) > self.credit_of(bapp),
+                };
+                if better {
+                    best = Some((ch, app, cost));
+                }
+            }
+            let (ch, app, cost) = best?;
+            let mut apps: Vec<u32> = candidates.iter().map(|c| c.1).collect();
+            apps.sort_unstable();
+            apps.dedup();
+            let total: i64 = apps.iter().map(|&a| self.weight_of(a)).sum();
+            for &a in &apps {
+                let w = self.weight_of(a);
+                *self.credit.entry(a).or_insert(0) += w * cost as i64;
+            }
+            *self.credit.entry(app).or_insert(0) -= total * cost as i64;
+            ch
+        };
+        let burst = self.h2c[pick].pop_front().expect("head observed above");
+        *self.h2c_app_words.entry(burst.app_id).or_insert(0) +=
+            burst.words.len() as u64;
+        Some((pick, burst))
     }
 
     fn c2h_push(&mut self, channel: usize, app_id: u32, word: u32) {
@@ -121,8 +256,11 @@ pub struct AxiToWb {
     /// Whether the crossbar job for the current burst has been issued.
     requested: bool,
     /// Round-robin pointer over H2C channels ("serves each FIFO
-    /// periodically").
+    /// periodically"); with weights installed it only seeds the
+    /// scheduler's tie-break rotation.
     next_channel: usize,
+    /// H2C channel the in-flight burst was picked from (telemetry).
+    pub last_channel: usize,
     /// Completed-burst statuses for the manager.
     pub completions: Vec<(u32, Result<(), WbError>)>,
     /// Words forwarded (stats).
@@ -140,6 +278,7 @@ impl AxiToWb {
             dest_onehot: 0,
             requested: false,
             next_channel: 0,
+            last_channel: 0,
             completions: Vec::new(),
             words_forwarded: 0,
         }
@@ -158,20 +297,17 @@ impl AxiToWb {
         xdma: &mut Xdma,
         lookup_dest: impl Fn(u32) -> u32,
     ) -> Option<Job> {
-        // Pick up a new burst when idle.
+        // Pick up a new burst when idle: scheduler-weighted (or legacy
+        // round-robin) scan of the H2C FIFOs.
         if !self.busy() {
-            // Round-robin scan of the H2C FIFOs.
-            for i in 0..H2C_CHANNELS {
-                let ch = (self.next_channel + i) % H2C_CHANNELS;
-                if let Some(burst) = xdma.h2c[ch].pop_front() {
-                    self.next_channel = (ch + 1) % H2C_CHANNELS;
-                    self.app_id = burst.app_id;
-                    self.dest_onehot = lookup_dest(burst.app_id);
-                    self.incoming = burst.words.into();
-                    self.buffer.clear();
-                    self.requested = false;
-                    break;
-                }
+            if let Some((ch, burst)) = xdma.h2c_pop(self.next_channel) {
+                self.next_channel = (ch + 1) % H2C_CHANNELS;
+                self.last_channel = ch;
+                self.app_id = burst.app_id;
+                self.dest_onehot = lookup_dest(burst.app_id);
+                self.incoming = burst.words.into();
+                self.buffer.clear();
+                self.requested = false;
             }
             if self.incoming.is_empty() {
                 return None;
@@ -216,6 +352,20 @@ impl AxiToWb {
     /// finish an issued burst whose AXI-side fill has completed, or
     /// idles over empty H2C FIFOs; any other state (filling, trigger
     /// evaluation, burst pickup) mutates per cycle.
+    ///
+    /// **Scheduler honesty (DESIGN.md §15).**  The DRR scheduler only
+    /// changes *which* burst is picked, never *when*: whenever any H2C
+    /// FIFO is backlogged and the bridge is idle, the very next cycle
+    /// picks a burst, so the horizon stays `now + 1`.  This matters for
+    /// the [`RequestPolicy`] starvation edge: under a saturated H2C
+    /// backlog the bridge alternates fill → request → completion without
+    /// ever going passive, and `HORIZON_NONE` is returned only in the
+    /// requested-and-fully-filled state — where the *crossbar* owns the
+    /// next event and its own horizon gates the jump.  A C2H FIFO
+    /// filling mid-busy-period therefore cannot be skipped past: the
+    /// words land at executed cycles and `c2h_drain` is a host-side
+    /// read that never participates in the horizon
+    /// (`xdma::tests::saturated_h2c_never_goes_passive_with_scheduler`).
     pub fn next_interesting_cycle(&self, xdma: &Xdma, now: u64) -> u64 {
         if self.busy() {
             if self.requested && self.incoming.is_empty() {
@@ -308,13 +458,30 @@ mod tests {
     #[test]
     fn h2c_c2h_fifos_roundtrip() {
         let mut x = Xdma::new();
-        x.h2c_push(1, H2cBurst { app_id: 2, words: vec![1, 2, 3] });
+        x.h2c_push(1, H2cBurst { app_id: 2, words: vec![1, 2, 3] })
+            .expect("channel in range");
         assert_eq!(x.h2c_pending(), 1);
         assert_eq!(x.h2c_words, 3);
         let mut wb2axi = WbToAxi::new();
         wb2axi.forward(&mut x, 2, &[10, 20]);
-        assert_eq!(x.c2h_drain(0), vec![(2, 10), (2, 20)]);
-        assert_eq!(x.c2h_drain(0), vec![], "drained");
+        assert_eq!(x.c2h_drain(0).unwrap(), vec![(2, 10), (2, 20)]);
+        assert_eq!(x.c2h_drain(0).unwrap(), vec![], "drained");
+    }
+
+    #[test]
+    fn out_of_range_channels_are_typed_errors_not_panics() {
+        let mut x = Xdma::new();
+        let err = x
+            .h2c_push(H2C_CHANNELS, H2cBurst { app_id: 0, words: vec![1] })
+            .unwrap_err();
+        assert!(
+            matches!(err, ElasticError::Config(_)),
+            "expected a Config error, got {err:?}"
+        );
+        assert_eq!(x.h2c_pending(), 0, "rejected burst must not be queued");
+        assert_eq!(x.h2c_words, 0, "rejected burst must not count in stats");
+        let err = x.c2h_drain(C2H_CHANNELS).unwrap_err();
+        assert!(matches!(err, ElasticError::Config(_)));
     }
 
     #[test]
@@ -325,9 +492,9 @@ mod tests {
         b.forward(&mut x, 0, &[2]);
         b.forward(&mut x, 0, &[3]);
         b.forward(&mut x, 0, &[4]);
-        assert_eq!(x.c2h_drain(0), vec![(0, 1), (0, 4)]);
-        assert_eq!(x.c2h_drain(1), vec![(0, 2)]);
-        assert_eq!(x.c2h_drain(2), vec![(0, 3)]);
+        assert_eq!(x.c2h_drain(0).unwrap(), vec![(0, 1), (0, 4)]);
+        assert_eq!(x.c2h_drain(1).unwrap(), vec![(0, 2)]);
+        assert_eq!(x.c2h_drain(2).unwrap(), vec![(0, 3)]);
     }
 
     #[test]
@@ -381,7 +548,8 @@ mod tests {
     fn axi2wb_half_full_requests_after_4_fill_cycles() {
         let mut x = Xdma::new();
         let mut bridge = AxiToWb::new();
-        x.h2c_push(0, H2cBurst { app_id: 1, words: (1..=8).collect() });
+        x.h2c_push(0, H2cBurst { app_id: 1, words: (1..=8).collect() })
+            .unwrap();
         let dest = |_app| 0b0010u32;
         let mut job = None;
         let mut fill_ccs = 0;
@@ -405,7 +573,8 @@ mod tests {
         let mut x = Xdma::new();
         let mut bridge = AxiToWb::new();
         bridge.policy = RequestPolicy::Full;
-        x.h2c_push(0, H2cBurst { app_id: 0, words: (1..=8).collect() });
+        x.h2c_push(0, H2cBurst { app_id: 0, words: (1..=8).collect() })
+            .unwrap();
         let dest = |_app| 0b0100u32;
         let mut fill_ccs = 0;
         let mut got = false;
@@ -425,7 +594,8 @@ mod tests {
         let mut x = Xdma::new();
         let mut bridge = AxiToWb::new();
         for ch in 0..3 {
-            x.h2c_push(ch, H2cBurst { app_id: ch as u32, words: vec![0; 8] });
+            x.h2c_push(ch, H2cBurst { app_id: ch as u32, words: vec![0; 8] })
+                .unwrap();
         }
         let dest = |_app| 0b0010u32;
         let mut served = Vec::new();
@@ -444,7 +614,7 @@ mod tests {
         // to the burst length.
         let mut x = Xdma::new();
         let mut bridge = AxiToWb::new();
-        x.h2c_push(0, H2cBurst { app_id: 0, words: vec![5, 6] });
+        x.h2c_push(0, H2cBurst { app_id: 0, words: vec![5, 6] }).unwrap();
         let dest = |_app| 0b1000u32;
         let mut fill = 0;
         let mut job = None;
@@ -457,5 +627,105 @@ mod tests {
         }
         assert_eq!(fill, 2);
         assert_eq!(job.unwrap().words, vec![5, 6]);
+    }
+
+    /// Saturate two apps (one FIFO each, fixed host channel mapping
+    /// `app % 3`) under a 3:1 weight plan and pop bursts back-to-back:
+    /// granted words must converge to the plan ratio.
+    #[test]
+    fn drr_grants_words_in_plan_proportion_under_saturation() {
+        let mut x = Xdma::new();
+        x.set_h2c_weights(&[(1, 3), (2, 1)]);
+        for _ in 0..400 {
+            x.h2c_push(1, H2cBurst { app_id: 1, words: vec![7; 8] }).unwrap();
+            x.h2c_push(2, H2cBurst { app_id: 2, words: vec![9; 8] }).unwrap();
+        }
+        let mut granted: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut start = 0;
+        // Serve 400 bursts while both FIFOs stay backlogged.
+        for _ in 0..400 {
+            let (ch, burst) = x.h2c_pop(start).expect("backlogged");
+            start = (ch + 1) % H2C_CHANNELS;
+            *granted.entry(burst.app_id).or_insert(0) += burst.words.len() as u64;
+        }
+        let a = granted[&1] as f64;
+        let b = granted[&2] as f64;
+        let ratio = a / b;
+        assert!(
+            (ratio - 3.0).abs() / 3.0 <= 0.05,
+            "3:1 weights must grant 3:1 words +/-5%, got {ratio:.3} ({a} vs {b})"
+        );
+    }
+
+    /// An app outside the installed plan schedules at the smallest
+    /// planned weight: it keeps making progress but never outruns a
+    /// planned tenant.
+    #[test]
+    fn unplanned_app_schedules_at_the_smallest_planned_weight() {
+        let mut x = Xdma::new();
+        x.set_h2c_weights(&[(1, 6), (2, 2)]);
+        for _ in 0..300 {
+            x.h2c_push(1, H2cBurst { app_id: 1, words: vec![0; 8] }).unwrap();
+            // App 5 maps to channel 2 (5 % 3) — different FIFO than app 1.
+            x.h2c_push(2, H2cBurst { app_id: 5, words: vec![0; 8] }).unwrap();
+        }
+        let mut granted: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut start = 0;
+        for _ in 0..300 {
+            let (ch, burst) = x.h2c_pop(start).expect("backlogged");
+            start = (ch + 1) % H2C_CHANNELS;
+            *granted.entry(burst.app_id).or_insert(0) += burst.words.len() as u64;
+        }
+        let ratio = granted[&1] as f64 / granted[&5] as f64;
+        assert!(
+            (ratio - 3.0).abs() / 3.0 <= 0.05,
+            "unplanned app must run at weight 2 vs 6 (3:1), got {ratio:.3}"
+        );
+        assert!(granted[&5] > 0, "unplanned app must not starve");
+    }
+
+    /// Satellite regression (DESIGN.md §15): the scheduler state must
+    /// never make the bridge's horizon dishonest.  With a saturated H2C
+    /// backlog the bridge reports `now + 1` whenever it would pick up or
+    /// fill next cycle; `HORIZON_NONE` appears only in the
+    /// requested-and-fully-filled state where the crossbar owns the next
+    /// event — so a fast-path jump can never skip a pickup, a fill cycle
+    /// or a C2H word landing inside the busy period.
+    #[test]
+    fn saturated_h2c_never_goes_passive_with_scheduler() {
+        let mut x = Xdma::new();
+        x.set_h2c_weights(&[(1, 3), (2, 1)]);
+        for _ in 0..8 {
+            x.h2c_push(1, H2cBurst { app_id: 1, words: vec![1; 8] }).unwrap();
+            x.h2c_push(2, H2cBurst { app_id: 2, words: vec![2; 8] }).unwrap();
+        }
+        let mut bridge = AxiToWb::new();
+        // Idle + backlog: the pickup happens next cycle, never skipped.
+        assert_eq!(bridge.next_interesting_cycle(&x, 100), 101);
+        let mut now = 100u64;
+        for _ in 0..200 {
+            now += 1;
+            let job = bridge.tick(&mut x, |_app| 0b0010u32);
+            let horizon = bridge.next_interesting_cycle(&x, now);
+            if bridge.requested && bridge.incoming.is_empty() {
+                // Requested and fully filled: the crossbar owns the next
+                // event; the bridge may legitimately report no horizon.
+                assert_eq!(horizon, crate::sim::HORIZON_NONE);
+            } else {
+                assert_eq!(
+                    horizon,
+                    now + 1,
+                    "pickup and fill cycles over a backlog must stay \
+                     interesting"
+                );
+            }
+            if job.is_some() {
+                bridge.on_send_complete(Ok(()));
+            }
+            if x.h2c_pending() == 0 && !bridge.busy() {
+                break;
+            }
+        }
+        assert_eq!(x.h2c_pending(), 0, "all bursts served");
     }
 }

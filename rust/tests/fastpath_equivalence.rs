@@ -264,7 +264,8 @@ fn schedule_of(plan: &FabricPlan) -> Schedule<Fabric> {
     for (cycle, app, words) in plan.bursts.iter().cloned() {
         sched.at(cycle, move |f: &mut Fabric| {
             let channel = app as usize % H2C_CHANNELS;
-            f.h2c_push(channel, H2cBurst { app_id: app, words });
+            f.h2c_push(channel, H2cBurst { app_id: app, words })
+                .expect("affinity channel in range");
         });
     }
     if let Some((cycle, region, words, fail_after)) = plan.churn {
