@@ -43,6 +43,7 @@ import sys
 RANGE_KEYS = {
     "batch_efficiency": (0.0, 1.0),
     "h2c_share_error": (0.0, 0.05),
+    "config_cache_hit_rate": (0.0, 1.0),
 }
 
 

@@ -139,6 +139,35 @@ fn h2c_share_error(ports: usize) -> f64 {
     (ratio - expect).abs() / expect
 }
 
+/// One manager-level configuration-cache run (DESIGN.md §16): repeated
+/// same-shape pipeline requests with ICAP-timed installs.
+struct CacheRun {
+    virtual_cycles: u64,
+    hits: u64,
+    misses: u64,
+    elided: u64,
+}
+
+fn run_cache_mode(cache: usize, requests: usize) -> CacheRun {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.manager.bitstream_bytes = 256 * 1024;
+    cfg.manager.config_cache_regions = cache;
+    let mut mgr = ElasticManager::new(cfg, None);
+    mgr.use_icap = true;
+    for i in 0..requests {
+        let data = vec![i as u32; 64];
+        let rep = mgr
+            .execute(&elastic_fpga::manager::AppRequest::pipeline(
+                (i % 2) as u32,
+                data,
+            ))
+            .expect("request failed");
+        assert!(rep.verified, "fabric output failed golden verification");
+    }
+    let (hits, misses, elided) = mgr.config_cache_stats();
+    CacheRun { virtual_cycles: mgr.fabric().now(), hits, misses, elided }
+}
+
 struct CaseResult {
     name: &'static str,
     ports: usize,
@@ -252,6 +281,40 @@ fn main() {
         run_case("ports16", 16, 6, requests, &mut claims),
     ];
 
+    // Resident-module configuration cache, manager level (DESIGN.md
+    // §16): the same repeated pipeline shape cold vs warm.  Every warm
+    // request after the first rebinds the parked chain, so the ICAP
+    // restreams disappear from the virtual timeline.
+    let cache_requests = if smoke { 16 } else { 64 };
+    let cache_cold = run_cache_mode(0, cache_requests);
+    let cache_warm = run_cache_mode(3, cache_requests);
+    claims.check(
+        cache_cold.hits == 0 && cache_cold.elided == 0,
+        "cache off: no hits, nothing elided",
+    );
+    claims.check(
+        cache_warm.hits > 0 && cache_warm.elided > 0,
+        "warm cache rebinds parked modules and elides ICAP cycles",
+    );
+    claims.check(
+        cache_warm.virtual_cycles < cache_cold.virtual_cycles,
+        "elision shortens the virtual timeline",
+    );
+    let cache_hit_rate = cache_warm.hits as f64
+        / (cache_warm.hits + cache_warm.misses).max(1) as f64;
+    claims.check(
+        (0.0..=1.0).contains(&cache_hit_rate),
+        "config cache hit rate is a fraction",
+    );
+    println!(
+        "  config cache: cold {} cc vs warm {} cc | hit rate {:.3} | \
+         {} ICAP cycles elided",
+        cache_cold.virtual_cycles,
+        cache_warm.virtual_cycles,
+        cache_hit_rate,
+        cache_warm.elided,
+    );
+
     // Machine-readable trajectory point.  Cycle counts are
     // deterministic; the req/s rates are wall-clock and vary run to run
     // (the committed baseline is compared structurally — see
@@ -283,7 +346,18 @@ fn main() {
             if i + 1 < cases.len() { "," } else { "" }
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"config_cache\": {{\"cache_regions\": 3, \"requests\": {}, \
+         \"cold_virtual_cycles\": {}, \"warm_virtual_cycles\": {}, \
+         \"config_cache_hit_rate\": {:.4}, \"icap_cycles_elided\": {}}}\n",
+        cache_requests,
+        cache_cold.virtual_cycles,
+        cache_warm.virtual_cycles,
+        cache_hit_rate,
+        cache_warm.elided,
+    ));
+    json.push_str("}\n");
     std::fs::write("BENCH_fabric.json", &json).expect("write BENCH_fabric.json");
     println!("  wrote BENCH_fabric.json");
 
@@ -306,6 +380,8 @@ fn main() {
         );
         metrics.set_gauge("fabric_h2c_share_error", labels, c.h2c_share_error);
     }
+    metrics.set_gauge("fabric_config_cache_hit_rate", &[], cache_hit_rate);
+    metrics.inc("fabric_icap_cycles_elided_total", &[], cache_warm.elided);
     std::fs::write("BENCH_fabric_metrics.json", metrics.to_json())
         .expect("write BENCH_fabric_metrics.json");
     println!("  wrote BENCH_fabric_metrics.json");

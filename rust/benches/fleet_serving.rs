@@ -70,6 +70,25 @@ fn run_fleet(
     Run { wall_s: t0.elapsed().as_secs_f64(), report }
 }
 
+/// A fleet run with ICAP-timed installs and the resident-module
+/// configuration cache at `cache` regions per board (DESIGN.md §16).
+fn run_fleet_cached(
+    cfg: &SystemConfig,
+    trace: &[TraceEvent],
+    threads: usize,
+    cache: usize,
+) -> Run {
+    let mut cfg = cfg.clone();
+    cfg.manager.config_cache_regions = cache;
+    let mut fleet =
+        Fleet::launch(FABRICS, &cfg, None, AdmissionPolicy::LeastLoaded, true);
+    fleet.execution_threads = threads;
+    fleet.set_use_icap(true);
+    let t0 = std::time::Instant::now();
+    let report = fleet.run_trace(trace).expect("fleet run failed");
+    Run { wall_s: t0.elapsed().as_secs_f64(), report }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke" || a == "smoke");
     let requests = if smoke { 160 } else { 4000 };
@@ -174,6 +193,51 @@ fn main() {
         );
     }
 
+    // Resident-module configuration cache (DESIGN.md §16): the same
+    // repeated-shape bursty trace with ICAP-timed installs, cold
+    // (cache off) vs warm (3 regions per board).  Warm leaders rebind
+    // parked modules instead of restreaming bitstreams, so whole ICAP
+    // programmings are elided from the virtual schedule — which must
+    // stay deterministic and thread-identical.
+    let cold = run_fleet_cached(&cfg, &bursty, 1, 0);
+    let warm = run_fleet_cached(&cfg, &bursty, 1, 3);
+    let warm_threads = run_fleet_cached(&cfg, &bursty, 4, 3);
+    claims.check(
+        cold.report.config_cache_hits == 0
+            && cold.report.icap_cycles_elided == 0,
+        "cache off: nothing elided (legacy ICAP schedule)",
+    );
+    claims.check(
+        warm.report.config_cache_hits > 0
+            && warm.report.icap_cycles_elided > 0,
+        "warm cache elides ICAP restreams on repeated shapes",
+    );
+    claims.check(
+        warm.report.makespan_cycles < cold.report.makespan_cycles,
+        "elision shortens the virtual makespan",
+    );
+    claims.check(
+        warm.report.outcomes == warm_threads.report.outcomes
+            && warm.report.config_cache_hits
+                == warm_threads.report.config_cache_hits
+            && warm.report.icap_cycles_elided
+                == warm_threads.report.icap_cycles_elided,
+        "warm schedule byte-identical at 1 vs 4 threads",
+    );
+    let cache_runs = [("cold", 0usize, &cold), ("warm", 3usize, &warm)];
+    for (name, regions, r) in &cache_runs {
+        let hits = r.report.config_cache_hits;
+        let misses = r.report.config_cache_misses;
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        println!(
+            "  config cache {name} ({regions} regions): makespan {:.1} ms | \
+             hit rate {:.3} | {} ICAP cycles elided",
+            cfg.cycles_to_ms(r.report.makespan_cycles),
+            hit_rate,
+            r.report.icap_cycles_elided,
+        );
+    }
+
     if !smoke {
         // Wall-clock scaling claim only in the full run: CI smoke boxes
         // are too small/noisy to pin a speedup.
@@ -249,6 +313,26 @@ fn main() {
             r.report.batched_requests,
             efficiency,
             if i + 1 < batch_runs.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"config_cache\": [\n");
+    for (i, (name, regions, r)) in cache_runs.iter().enumerate() {
+        let hits = r.report.config_cache_hits;
+        let misses = r.report.config_cache_misses;
+        let hit_rate = hits as f64 / (hits + misses).max(1) as f64;
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"cache_regions\": {}, \
+             \"requests\": {}, \"requests_per_s\": {:.1}, \
+             \"makespan_ms\": {:.2}, \"config_cache_hit_rate\": {:.4}, \
+             \"icap_cycles_elided\": {}}}{}\n",
+            name,
+            regions,
+            bursty.len(),
+            bursty.len() as f64 / r.wall_s.max(1e-9),
+            cfg.cycles_to_ms(r.report.makespan_cycles),
+            hit_rate,
+            r.report.icap_cycles_elided,
+            if i + 1 < cache_runs.len() { "," } else { "" }
         ));
     }
     json.push_str("  ]\n}\n");

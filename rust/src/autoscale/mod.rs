@@ -186,6 +186,12 @@ pub struct AutoscaleReport {
     pub busy_region_cycles: u64,
     /// Denominator of [`utilization`](Self::utilization).
     pub capacity_region_cycles: u64,
+    /// Region-cycles spent parked `Resident` (DESIGN.md §16): the
+    /// scale-to-zero power model's resident-but-idle term.  A parked
+    /// region is powered and configured but streams nothing, so these
+    /// cycles are what the configuration cache trades against the ICAP
+    /// restreams it elides.  Always 0 with the cache off.
+    pub resident_region_cycles: u64,
     /// Requests served on a fabric slice / on the app's CPU lane.
     pub fabric_requests: u64,
     pub cpu_requests: u64,
@@ -244,6 +250,11 @@ pub struct Engine {
     latency: CycleRecorder,
     busy_region_cycles: u64,
     capacity_marks: Vec<(u64, usize)>,
+    /// Stepwise `(cycle, regions)` marks of how many regions sit parked
+    /// `Resident` fleet-wide — the scale-to-zero power model's
+    /// resident-but-idle term (DESIGN.md §16).  Always empty-to-zero
+    /// with the configuration cache off.
+    resident_marks: Vec<(u64, usize)>,
     /// Drain-tail region-cycles of boards that left while backlogged:
     /// their dispatched work completes during the graceful drain, so
     /// those region-cycles stay in the utilization denominator even
@@ -323,6 +334,7 @@ impl Engine {
             latency: CycleRecorder::new(),
             busy_region_cycles: 0,
             capacity_marks: Vec::new(),
+            resident_marks: Vec::new(),
             capacity_extra: 0,
             makespan: 0,
             fabric_requests: 0,
@@ -357,6 +369,7 @@ impl Engine {
         self.infer_chains(trace);
         self.initial_allocation()?;
         self.capacity_marks.push((0, self.alive_region_capacity()));
+        self.resident_marks.push((0, self.resident_region_count()));
 
         let tick_cycles = (self.opts.tick_ms * cycles_per_ms).round().max(1.0) as u64;
         let mut churn_events = churn.events.clone();
@@ -653,28 +666,20 @@ impl Engine {
         kind: TransitionKind,
     ) -> Result<usize> {
         let node = self.apps[app as usize].slices[slice_idx].node;
-        let picks: Vec<usize> = self.cluster.nodes()[node]
-            .manager()
-            .regions()
-            .iter()
-            .enumerate()
-            .skip(1)
-            .filter(|(_, st)| **st == RegionState::Available)
-            .map(|(i, _)| i)
-            .take(count)
-            .collect();
-        if picks.is_empty() {
-            return Ok(0);
-        }
         let rf_before = self.node_regfile_generation(node);
-        let mut ev_idx = Vec::with_capacity(picks.len());
+        let mut picks = Vec::with_capacity(count);
+        let mut ev_idx = Vec::with_capacity(count);
         let mut last_end = t;
-        for &r in &picks {
+        for _ in 0..count {
             let mk = {
                 let a = &self.apps[app as usize];
                 let pos = a.slices[slice_idx].regions.len();
                 a.chain[pos.min(a.chain.len() - 1)]
             };
+            let Some(r) = self.pick_region_for(node, mk) else { break };
+            // A configuration-cache hit rebinds the parked module: the
+            // manager returns 0 spent cycles, so the recorded ICAP event
+            // is zero-length and the slice is available immediately.
             let spent = self
                 .cluster
                 .node_mut(node)
@@ -696,6 +701,10 @@ impl Engine {
             ev_idx.push(self.icap_events.len() - 1);
             last_end = end;
             self.apps[app as usize].slices[slice_idx].regions.push(r);
+            picks.push(r);
+        }
+        if picks.is_empty() {
+            return Ok(0);
         }
         let chain_regions =
             self.apps[app as usize].slices[slice_idx].regions.clone();
@@ -721,7 +730,34 @@ impl Engine {
             node,
             regions: added,
         });
+        self.mark_residents(t);
         Ok(added)
+    }
+
+    /// Cache-aware region choice for one programming (DESIGN.md §16): a
+    /// parked module of the right kind (rebind, zero ICAP) beats a
+    /// blank `Available` region, which beats evicting a mismatched
+    /// resident — lowest index within each class keeps the actuation
+    /// deterministic.  With the cache off no region is ever `Resident`,
+    /// so this degenerates to the legacy lowest-available scan.
+    fn pick_region_for(&self, node: usize, mk: ModuleKind) -> Option<usize> {
+        self.cluster.nodes()[node]
+            .manager()
+            .regions()
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter_map(|(i, st)| {
+                let class = match st {
+                    RegionState::Resident { kind } if *kind == mk => 0usize,
+                    RegionState::Available => 1,
+                    RegionState::Resident { .. } => 2,
+                    _ => return None,
+                };
+                Some((class, i))
+            })
+            .min()
+            .map(|(_, i)| i)
     }
 
     /// Remove up to `want` regions from `app`, smallest slices first
@@ -770,12 +806,20 @@ impl Engine {
         };
         let rf_before = self.node_regfile_generation(node);
         let mut ev_idx = Vec::with_capacity(removed.len());
+        let cache_on = self.cfg.manager.config_cache_regions > 0;
         for &r in &removed {
-            let spent = self
-                .cluster
-                .node_mut(node)
-                .manager_mut()
-                .blank_region(r)?;
+            // Scale-to-zero with the configuration cache on parks the
+            // drained module (zero ICAP; it may rebind on the next
+            // grow) instead of streaming a blanking bitstream.  The
+            // recorded Blank event is zero-length — the region-cycles
+            // it stays resident are charged to the power model through
+            // `resident_region_cycles` (DESIGN.md §16).
+            let spent = if cache_on {
+                self.cluster.node_mut(node).manager_mut().park_region(r)?;
+                0
+            } else {
+                self.cluster.node_mut(node).manager_mut().blank_region(r)?
+            };
             let start = drain_done.max(self.icap_free_at[node]);
             let end = start + spent;
             self.icap_free_at[node] = end;
@@ -813,6 +857,7 @@ impl Engine {
             node,
             regions: retired,
         });
+        self.mark_residents(t);
         Ok(())
     }
 
@@ -888,6 +933,8 @@ impl Engine {
                             .fence_regions(regions);
                         self.capacity_marks
                             .push((at, self.alive_region_capacity()));
+                        // Fencing may have evicted parked residents.
+                        self.mark_residents(at);
                     }
                 }
                 ChurnEvent::Unfence { node, regions } => {
@@ -950,6 +997,8 @@ impl Engine {
         let avail = mgr.available_regions();
         mgr.fence_regions(avail);
         self.capacity_marks.push((at, self.alive_region_capacity()));
+        // The dead board's parked residents leave the powered set.
+        self.mark_residents(at);
         lost
     }
 
@@ -984,6 +1033,35 @@ impl Engine {
     // ------------------------------------------------------------------
     // accounting
     // ------------------------------------------------------------------
+
+    /// Regions parked `Resident` across alive boards: powered,
+    /// configured, but idle — the quantity the scale-to-zero power
+    /// model charges separately from busy region-cycles.
+    fn resident_region_count(&self) -> usize {
+        self.cluster
+            .nodes()
+            .iter()
+            .enumerate()
+            .filter(|&(n, _)| self.node_alive[n])
+            .map(|(_, node)| {
+                node.manager()
+                    .regions()
+                    .iter()
+                    .skip(1)
+                    .filter(|r| matches!(r, RegionState::Resident { .. }))
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Record a resident-count mark if the count changed (stepwise
+    /// integral input, mirroring `capacity_marks`).
+    fn mark_residents(&mut self, at: u64) {
+        let now = self.resident_region_count();
+        if self.resident_marks.last().map(|&(_, c)| c) != Some(now) {
+            self.resident_marks.push((at, now));
+        }
+    }
 
     /// Regions not fenced `Offline` across the fleet (a dead board has
     /// every region fenced).
@@ -1024,6 +1102,10 @@ impl Engine {
             },
             busy_region_cycles: self.busy_region_cycles,
             capacity_region_cycles: capacity,
+            resident_region_cycles: capacity_integral(
+                &self.resident_marks,
+                self.makespan,
+            ),
             fabric_requests: self.fabric_requests,
             cpu_requests: self.cpu_requests,
             grows: self.grows,
@@ -1187,6 +1269,85 @@ mod tests {
                 assert!(tr.regfile_after > tr.regfile_before, "{tr:?}");
             }
         }
+    }
+
+    #[test]
+    fn config_cache_parks_retired_regions_and_rebinds_on_grow() {
+        // Same burst/idle/burst tenant as the scale-up test, with the
+        // configuration cache on: the idle shrink parks modules (zero-
+        // length Blank events), the second burst's grow rebinds them
+        // (zero-length Program events, manager cache hits), and the
+        // parked interval is charged to the power model.
+        let mut cfg = fast_cfg();
+        cfg.manager.config_cache_regions = 3;
+        let tenants = vec![crate::workload::TenantSpec {
+            app_id: 0,
+            stages: ModuleKind::pipeline().to_vec(),
+            words: 64,
+            profile: crate::workload::RateProfile::Bursty {
+                burst_per_s: 600.0,
+                idle_per_s: 10.0,
+                burst_s: 1.5,
+                idle_s: 1.5,
+                phase_s: 0.0,
+            },
+        }];
+        let trace = crate::workload::generate_profiled(&tenants, 5, 1200);
+        let mut engine = Engine::new(
+            &cfg,
+            3,
+            1,
+            PolicyKind::TargetQueueDepth.build(),
+            EngineOptions::default(),
+        );
+        let report = engine.run(&trace, &ChurnTrace::none()).unwrap();
+        assert_eq!(report.completed, 1200);
+        assert!(report.grows > 0 && report.shrinks > 0);
+        // Retires park instead of streaming a blanking bitstream.
+        let blanks: Vec<_> = report
+            .icap_events
+            .iter()
+            .filter(|e| e.kind == IcapEventKind::Blank)
+            .collect();
+        assert!(!blanks.is_empty(), "no shrink ever retired a region");
+        assert!(
+            blanks.iter().all(|e| e.end_cycle == e.start_cycle),
+            "cache on: a retire streamed a blanking bitstream"
+        );
+        // A later grow rebound a parked module for free.
+        assert!(
+            report.icap_events.iter().any(|e| {
+                matches!(e.kind, IcapEventKind::Program(_))
+                    && e.end_cycle == e.start_cycle
+                    && e.start_cycle > 0
+            }),
+            "no grow ever rebound a parked module"
+        );
+        let hits: u64 = (0..engine.cluster().node_count())
+            .map(|n| {
+                engine.cluster().nodes()[n].manager().config_cache_stats().0
+            })
+            .sum();
+        assert!(hits > 0, "no node manager recorded a cache hit");
+        // The resident-but-idle interval shows up in the power term.
+        assert!(report.resident_region_cycles > 0, "parked cycles uncharged");
+    }
+
+    #[test]
+    fn cache_off_run_charges_no_resident_cycles() {
+        let cfg = fast_cfg();
+        let specs = workload::diurnal_tenants(1, 20.0, 300.0, 2.0, 64);
+        let trace = workload::generate_profiled(&specs, 3, 400);
+        let mut engine = Engine::new(
+            &cfg,
+            2,
+            1,
+            PolicyKind::TargetQueueDepth.build(),
+            EngineOptions::default(),
+        );
+        let report = engine.run(&trace, &ChurnTrace::none()).unwrap();
+        assert_eq!(report.completed, 400);
+        assert_eq!(report.resident_region_cycles, 0);
     }
 
     #[test]

@@ -128,6 +128,10 @@ common flags:
   --batch-window N   same-app coalescing window per lane/stream for
                      `serve`/`fleet` (1..=64; 1 = off, the default;
                      DESIGN.md §15)
+  --config-cache N   resident-module configuration cache capacity per
+                     board for `serve`/`fleet`: released regions park
+                     their module for ICAP-free rebinding, LRU-trimmed
+                     to N (0 = off, the default; DESIGN.md §16)
   --metrics-out F    write a schema-versioned JSON metrics snapshot
                      (`serve`/`fleet`, DESIGN.md §14)
 

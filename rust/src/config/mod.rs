@@ -114,6 +114,13 @@ pub struct ManagerConfig {
     pub poll_cycles: u64,
     /// Verify every PJRT result against the Rust golden model.
     pub verify_results: bool,
+    /// Configuration-cache capacity: maximum regions the manager keeps
+    /// `Resident { kind }` after an app releases them, so a later
+    /// request needing the same [`crate::modules::ModuleKind`] rebinds
+    /// through the register file alone (zero ICAP cycles).  `0` (the
+    /// default) disables the cache — regions free on release, exactly
+    /// the legacy behavior.
+    pub config_cache_regions: usize,
 }
 
 impl Default for ManagerConfig {
@@ -122,6 +129,7 @@ impl Default for ManagerConfig {
             bitstream_bytes: 2 * 1024 * 1024,
             poll_cycles: 1024,
             verify_results: true,
+            config_cache_regions: 0,
         }
     }
 }
@@ -326,6 +334,10 @@ impl SystemConfig {
                     as u64,
                 verify_results: doc
                     .bool_or("manager.verify_results", d.manager.verify_results),
+                config_cache_regions: doc.usize_or(
+                    "manager.config_cache_regions",
+                    d.manager.config_cache_regions,
+                ),
             },
             server: ServerConfig {
                 workers: doc.usize_or("server.workers", d.server.workers),
@@ -366,17 +378,21 @@ mod tests {
         assert_eq!(c.fabric.clock_mhz, 250.0);
         assert_eq!(c.fabric.icap_clock_mhz, 125.0);
         assert_eq!(c.crossbar.default_packages, 8);
+        // Configuration cache ships off: legacy release semantics.
+        assert_eq!(c.manager.config_cache_regions, 0);
         assert_eq!(c.clock_period_ns(), 4.0);
     }
 
     #[test]
     fn overlay_from_text() {
         let c = SystemConfig::parse(
-            "[fabric]\nnum_ports = 8\n[timing]\ncpu_stage_ms = 5.5\n",
+            "[fabric]\nnum_ports = 8\n[timing]\ncpu_stage_ms = 5.5\n\
+             [manager]\nconfig_cache_regions = 3\n",
         )
         .unwrap();
         assert_eq!(c.fabric.num_ports, 8);
         assert_eq!(c.timing.cpu_stage_ms, 5.5);
+        assert_eq!(c.manager.config_cache_regions, 3);
         // untouched values keep defaults
         assert_eq!(c.fabric.clock_mhz, 250.0);
     }

@@ -217,6 +217,23 @@ impl Fabric {
             .expect("region within layout");
     }
 
+    /// Park a region's module for the configuration cache (DESIGN.md
+    /// §16): the bitstream geometry stays resident but every piece of
+    /// architectural state is scrubbed by constructing a *fresh* module
+    /// owned by the host (app 0) with its port reset asserted.  A later
+    /// cache hit rebinds it via [`Fabric::install_static_module`]; until
+    /// then the port is isolated exactly like a cleared region, so no
+    /// tenant state — FIFO words, counters, error latches — survives
+    /// the handoff.
+    pub fn park_region(&mut self, region: usize, kind: ModuleKind) {
+        assert!(region > 0 && region < self.xbar.ports(), "bad region {region}");
+        let m = ComputationModule::new(kind, region, 0);
+        self.modules[region] = Some(m);
+        self.regfile
+            .set_port_reset(region, true)
+            .expect("region within layout");
+    }
+
     /// Which module currently occupies `region`?
     pub fn module_at(&self, region: usize) -> Option<&ComputationModule> {
         self.modules.get(region).and_then(Option::as_ref)

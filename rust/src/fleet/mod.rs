@@ -107,6 +107,31 @@ pub fn service_cycles(cfg: &SystemConfig, cost: &CostBreakdown) -> u64 {
         .round() as u64
 }
 
+/// Apply the configuration-cache elision to a batch leader's cost
+/// (DESIGN.md §16): `hits` of its `fpga_stages` regions rebind without
+/// ICAP traffic, and per-stage reconfiguration is uniform (all
+/// bitstreams are the same size), so the cost keeps exactly
+/// `(fpga_stages - hits) / fpga_stages` of its reconfiguration term.
+/// Returns the elided ICAP cycles (the service delta).  With zero hits
+/// the cost is untouched — not even a float operation — which is what
+/// keeps the cache-off schedule byte-identical.  Every caller (serial
+/// commit, sharded commit, oracle replay) performs this exact float
+/// sequence, so all paths agree bit for bit.
+fn elide_reconfig(
+    cfg: &SystemConfig,
+    cost: &mut CostBreakdown,
+    hits: usize,
+    fpga_stages: usize,
+) -> u64 {
+    if hits == 0 || fpga_stages == 0 {
+        return 0;
+    }
+    let cold = service_cycles(cfg, cost);
+    cost.reconfig_ms =
+        cost.reconfig_ms * ((fpga_stages - hits) as f64) / (fpga_stages as f64);
+    cold - service_cycles(cfg, cost)
+}
+
 /// Scheduling outcome for one request.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestOutcome {
@@ -130,6 +155,11 @@ pub struct RequestOutcome {
     /// service excludes `reconfig_ms`; everything else about the
     /// outcome is demuxed per request exactly as when unbatched.
     pub coalesced: bool,
+    /// FPGA stages this request rebound from the node's configuration
+    /// cache (DESIGN.md §16) — their ICAP restream was elided from the
+    /// service cost.  Always 0 with the cache off and for batch
+    /// followers (the leader's claims cover the whole stream).
+    pub cache_hits: usize,
     /// Cycle-exact latency decomposition (DESIGN.md §14):
     /// `span.total_cycles() == service_cycles` and
     /// `span.end_to_end_cycles() == completion_cycle - arrival_cycle`,
@@ -162,6 +192,13 @@ pub struct FleetReport {
     /// and the number of follower requests that rode a leader's stream.
     pub batches_formed: u64,
     pub batched_requests: u64,
+    /// Configuration cache (DESIGN.md §16): FPGA stages rebound from a
+    /// node's resident set vs. programmed cold, and the total ICAP
+    /// cycles those rebinds elided from service.  All zero with
+    /// `config_cache_regions = 0`.
+    pub config_cache_hits: u64,
+    pub config_cache_misses: u64,
+    pub icap_cycles_elided: u64,
     /// The trace's telemetry event stream (empty unless the fleet's
     /// [`Fleet::tracer`] is [`Tracer::Full`]).  Emitted only at the
     /// sequential admission/commit points, so it is byte-identical at
@@ -190,6 +227,9 @@ impl FleetReport {
         reg.inc("fleet_oracle_runs_total", &[], self.oracle_runs);
         reg.inc("fleet_batches_total", &[], self.batches_formed);
         reg.inc("fleet_batched_requests_total", &[], self.batched_requests);
+        reg.inc("config_cache_hits", &[], self.config_cache_hits);
+        reg.inc("config_cache_misses", &[], self.config_cache_misses);
+        reg.inc("icap_cycles_elided", &[], self.icap_cycles_elided);
         reg.set_gauge("fleet_makespan_cycles", &[], self.makespan_cycles as f64);
         reg.set_gauge(
             "fleet_requests_per_vs",
@@ -257,6 +297,26 @@ pub struct Fleet {
     /// within this many cycles of the leader's arrival (`0`, the
     /// default, bounds followers only by the leader's start instant).
     pub batch_cycles: u64,
+    /// Fleet-level configuration-cache capacity (DESIGN.md §16): the
+    /// maximum module configurations each node keeps resident after a
+    /// request releases its regions, so the next leader needing the
+    /// same [`ModuleKind`]s elides their ICAP restream.  `0` (the
+    /// default) is off — every schedule is byte-identical to the
+    /// pre-cache fleet.  The cache is modeled *virtually* at the
+    /// sequential admission/commit points, exactly like the batch
+    /// window's follower elision, so schedules stay byte-identical at
+    /// every `execution_threads` count; the node managers themselves
+    /// always run cache-off (forced in [`Fleet::launch`]) to keep the
+    /// oracle and the sharded speculative harvest shape-pure.
+    pub config_cache_regions: usize,
+    /// Per-node virtual resident set: `(kind, lru_stamp)` entries,
+    /// stamped from [`Self::cache_clock`] at commit points only.
+    node_residents: Vec<Vec<(ModuleKind, u64)>>,
+    /// Monotone virtual LRU clock for the fleet cache.
+    cache_clock: u64,
+    config_cache_hits: u64,
+    config_cache_misses: u64,
+    icap_cycles_elided: u64,
     fast_path: bool,
     shape_cache: HashMap<ShapeKey, CostBreakdown>,
     migrated: u64,
@@ -283,8 +343,15 @@ impl Fleet {
         // The cluster's own per-request policy is irrelevant here (the
         // fleet always routes explicitly via execute_on), but
         // MostAvailable is the sane default for direct cluster use.
+        // Node managers always run with *their* configuration cache off
+        // (the fleet models the cache virtually at commit points):
+        // oracle runs and the sharded speculative harvest must stay
+        // pure functions of the request shape, which resident state on
+        // a shared fabric would break.
+        let mut node_cfg = cfg.clone();
+        node_cfg.manager.config_cache_regions = 0;
         let mut cluster =
-            Cluster::launch(n, cfg, runtime, PlacementPolicy::MostAvailable);
+            Cluster::launch(n, &node_cfg, runtime, PlacementPolicy::MostAvailable);
         for i in 0..n {
             cluster.node_mut(i).manager_mut().fast_path = fast_path;
         }
@@ -296,6 +363,12 @@ impl Fleet {
             tracer: Tracer::Off,
             batch_window: 1,
             batch_cycles: 0,
+            config_cache_regions: cfg.manager.config_cache_regions,
+            node_residents: (0..n).map(|_| Vec::new()).collect(),
+            cache_clock: 0,
+            config_cache_hits: 0,
+            config_cache_misses: 0,
+            icap_cycles_elided: 0,
             fast_path,
             shape_cache: HashMap::new(),
             migrated: 0,
@@ -307,6 +380,16 @@ impl Fleet {
             policy,
             cfg: cfg.clone(),
         }
+    }
+
+    /// Flip the timed-ICAP programming path on every node manager.
+    /// Invalidates the shape-memoized cost cache: memoized breakdowns
+    /// embed the reconfiguration term, which this switch changes.
+    pub fn set_use_icap(&mut self, on: bool) {
+        for i in 0..self.cluster.node_count() {
+            self.cluster.node_mut(i).manager_mut().use_icap = on;
+        }
+        self.shape_cache.clear();
     }
 
     /// The underlying cluster (read-only).
@@ -339,18 +422,22 @@ impl Fleet {
         arrival: u64,
     ) -> (usize, Option<usize>) {
         let base = match self.policy {
-            AdmissionPolicy::LeastLoaded => self.least_loaded(),
+            AdmissionPolicy::LeastLoaded => self.least_loaded(&req.stages),
             AdmissionPolicy::StickyByApp => {
                 if let Some(&pinned) = self.pins.get(&req.app_id) {
                     pinned
                 } else {
-                    let chosen = self.least_loaded();
+                    let chosen = self.least_loaded(&req.stages);
                     self.pins.insert(req.app_id, chosen);
                     chosen
                 }
             }
-            AdmissionPolicy::BandwidthAware => self.most_spare_bandwidth(),
-            AdmissionPolicy::PlanWeighted => self.plan_weighted(arrival),
+            AdmissionPolicy::BandwidthAware => {
+                self.most_spare_bandwidth(&req.stages)
+            }
+            AdmissionPolicy::PlanWeighted => {
+                self.plan_weighted(arrival, &req.stages)
+            }
         };
         if !self.migrate_overflow {
             return (base, None);
@@ -375,7 +462,13 @@ impl Fleet {
         let start = |i: usize| self.busy_until[i].max(arrival);
         let candidate = (0..self.cluster.node_count())
             .filter(|&i| self.cluster.nodes()[i].available_regions() >= need)
-            .min_by_key(|&i| (start(i), i));
+            .min_by_key(|&i| {
+                (
+                    start(i),
+                    std::cmp::Reverse(self.affinity_hits(i, &req.stages)),
+                    i,
+                )
+            });
         match candidate {
             Some(i)
                 if start(i) <= start(base).saturating_add(cpu_suffix_cycles) =>
@@ -386,13 +479,44 @@ impl Fleet {
         }
     }
 
-    fn least_loaded(&self) -> usize {
+    /// Configuration-affinity score for admission (DESIGN.md §16): how
+    /// many of the chain's stages this node's virtual resident set
+    /// covers, matching entries greedily in stage order.  Always 0 with
+    /// the cache off, so every policy's ordering is then byte-identical
+    /// to the pre-cache fleet.
+    fn affinity_hits(&self, node: usize, stages: &[ModuleKind]) -> usize {
+        if self.config_cache_regions == 0 {
+            return 0;
+        }
+        let residents = &self.node_residents[node];
+        let mut claimed = vec![false; residents.len()];
+        let mut hits = 0usize;
+        for &kind in stages {
+            if let Some(i) = (0..residents.len())
+                .find(|&i| !claimed[i] && residents[i].0 == kind)
+            {
+                claimed[i] = true;
+                hits += 1;
+            }
+        }
+        hits
+    }
+
+    fn least_loaded(&self, stages: &[ModuleKind]) -> usize {
+        // Ties on the drain instant prefer configuration affinity —
+        // the node whose resident set covers more of the chain.
         (0..self.busy_until.len())
-            .min_by_key(|&i| (self.busy_until[i], i))
+            .min_by_key(|&i| {
+                (
+                    self.busy_until[i],
+                    std::cmp::Reverse(self.affinity_hits(i, stages)),
+                    i,
+                )
+            })
             .expect("fleet has nodes")
     }
 
-    fn plan_weighted(&self, arrival: u64) -> usize {
+    fn plan_weighted(&self, arrival: u64, stages: &[ModuleKind]) -> usize {
         // Backlog the request would wait behind, inflated by how little
         // of the board's bandwidth plane is still unpromised: a board
         // with spare share `s` (parts-per-SHARE_UNIT) weighs its
@@ -407,20 +531,97 @@ impl Fleet {
                     .spare_share()
                     .max(1) as u128;
                 let score = backlog * crate::qos::SHARE_UNIT as u128 / spare;
-                (score, self.busy_until[i], i)
+                (
+                    score,
+                    self.busy_until[i],
+                    std::cmp::Reverse(self.affinity_hits(i, stages)),
+                    i,
+                )
             })
             .expect("fleet has nodes")
     }
 
-    fn most_spare_bandwidth(&self) -> usize {
+    fn most_spare_bandwidth(&self, stages: &[ModuleKind]) -> usize {
         // Maximize the unclaimed bandwidth share (register-file view of
-        // the plan in force); ties go to the least-loaded node.
+        // the plan in force); ties go to the least-loaded node, then to
+        // configuration affinity.
         (0..self.cluster.node_count())
             .min_by_key(|&i| {
                 let spare = self.cluster.nodes()[i].manager().spare_share();
-                (std::cmp::Reverse(spare), self.busy_until[i], i)
+                (
+                    std::cmp::Reverse(spare),
+                    self.busy_until[i],
+                    std::cmp::Reverse(self.affinity_hits(i, stages)),
+                    i,
+                )
             })
             .expect("fleet has nodes")
+    }
+
+    /// Advance one node's virtual configuration cache at a batch
+    /// leader's commit point and return how many of its FPGA stages hit
+    /// (DESIGN.md §16).  Runs only at the sequential commit points — in
+    /// arrival order in both executors — so cache evolution, and every
+    /// schedule derived from it, is byte-identical at every thread
+    /// count.  A hit claims one unclaimed resident entry of the stage's
+    /// kind and refreshes its LRU stamp; a miss inserts a fresh entry
+    /// (the cold restream leaves the configuration resident).  The set
+    /// is then LRU-trimmed to `min(config_cache_regions, free regions)`
+    /// with a [`TelemetryEvent::CacheEvict`] per eviction.
+    fn cache_commit(
+        &mut self,
+        node: usize,
+        stages: &[ModuleKind],
+        fpga_stages: usize,
+        cycle: u64,
+    ) -> usize {
+        if self.config_cache_regions == 0 || fpga_stages == 0 {
+            return 0;
+        }
+        let cap = self
+            .config_cache_regions
+            .min(self.cluster.nodes()[node].available_regions());
+        let mut hits = 0usize;
+        {
+            let residents = &mut self.node_residents[node];
+            let mut claimed = vec![false; residents.len()];
+            for &kind in stages.iter().take(fpga_stages) {
+                self.cache_clock += 1;
+                match (0..residents.len())
+                    .find(|&i| !claimed[i] && residents[i].0 == kind)
+                {
+                    Some(i) => {
+                        claimed[i] = true;
+                        residents[i].1 = self.cache_clock;
+                        hits += 1;
+                    }
+                    None => {
+                        // Cold stage: after this commit its bitstream is
+                        // resident too.  The fresh entry is claimed — two
+                        // cold stages of one kind occupy two regions.
+                        residents.push((kind, self.cache_clock));
+                        claimed.push(true);
+                    }
+                }
+            }
+        }
+        self.config_cache_hits += hits as u64;
+        self.config_cache_misses += (fpga_stages - hits) as u64;
+        while self.node_residents[node].len() > cap {
+            let oldest = (0..self.node_residents[node].len())
+                .min_by_key(|&i| (self.node_residents[node][i].1, i))
+                .expect("nonempty resident set");
+            let (kind, _) = self.node_residents[node].remove(oldest);
+            if self.tracer.enabled() {
+                self.tracer.emit(TelemetryEvent::CacheEvict {
+                    cycle,
+                    node,
+                    region: oldest,
+                    kind: kind.name(),
+                });
+            }
+        }
+        hits
     }
 
     /// Execute one request on `node`, returning its cost breakdown and
@@ -476,6 +677,9 @@ impl Fleet {
             self.oracle_runs,
             self.batches_formed,
             self.batched_requests,
+            self.config_cache_hits,
+            self.config_cache_misses,
+            self.icap_cycles_elided,
         );
         let mut report = if self.execution_threads > 1 {
             self.run_trace_sharded(trace)?
@@ -487,6 +691,9 @@ impl Fleet {
         report.oracle_runs = self.oracle_runs - at_entry.2;
         report.batches_formed = self.batches_formed - at_entry.3;
         report.batched_requests = self.batched_requests - at_entry.4;
+        report.config_cache_hits = self.config_cache_hits - at_entry.5;
+        report.config_cache_misses = self.config_cache_misses - at_entry.6;
+        report.icap_cycles_elided = self.icap_cycles_elided - at_entry.7;
         // Per-trace event stream, like the counters above.
         report.events = self.tracer.take_events();
         Ok(report)
@@ -613,8 +820,30 @@ impl Fleet {
                 let arrival_m = (ev_m.arrival_ms * cycles_per_ms).round() as u64;
                 let (mut cost, fpga_stages) =
                     self.execute_one(node, &ev_m.request)?;
+                let mut cache_hits = 0usize;
                 if m > 0 {
                     cost.reconfig_ms = 0.0;
+                } else {
+                    cache_hits = self.cache_commit(
+                        node,
+                        &ev_m.request.stages,
+                        fpga_stages,
+                        start,
+                    );
+                    let cycles =
+                        elide_reconfig(&self.cfg, &mut cost, cache_hits, fpga_stages);
+                    if cache_hits > 0 {
+                        self.icap_cycles_elided += cycles;
+                        if self.tracer.enabled() {
+                            self.tracer.emit(TelemetryEvent::IcapElided {
+                                cycle: start,
+                                app: ev_m.request.app_id,
+                                node,
+                                region: 0,
+                                cycles,
+                            });
+                        }
+                    }
                 }
                 let service = service_cycles(&self.cfg, &cost);
                 let span = RequestSpan::decompose(
@@ -637,6 +866,7 @@ impl Fleet {
                     fpga_stages,
                     migrated: migrated && m == 0,
                     coalesced: m > 0,
+                    cache_hits,
                     span,
                 };
                 self.emit_request_events(
@@ -660,6 +890,9 @@ impl Fleet {
             oracle_runs: self.oracle_runs,
             batches_formed: self.batches_formed,
             batched_requests: self.batched_requests,
+            config_cache_hits: self.config_cache_hits,
+            config_cache_misses: self.config_cache_misses,
+            icap_cycles_elided: self.icap_cycles_elided,
             events: Vec::new(),
         })
     }
@@ -770,10 +1003,40 @@ impl Fleet {
                         self.oracle_runs += 1;
                     }
                     let mut cost = raw;
+                    let ev_m = &trace[cursor + m];
+                    let mut cache_hits = 0usize;
                     if m > 0 {
                         cost.reconfig_ms = 0.0;
+                    } else {
+                        // Identical commit-point cache evolution and
+                        // float sequence as the serial executor — the
+                        // byte-identity across thread counts hinges on
+                        // this mirroring exactly.
+                        cache_hits = self.cache_commit(
+                            node,
+                            &ev_m.request.stages,
+                            fpga_stages,
+                            start,
+                        );
+                        let cycles = elide_reconfig(
+                            &self.cfg,
+                            &mut cost,
+                            cache_hits,
+                            fpga_stages,
+                        );
+                        if cache_hits > 0 {
+                            self.icap_cycles_elided += cycles;
+                            if self.tracer.enabled() {
+                                self.tracer.emit(TelemetryEvent::IcapElided {
+                                    cycle: start,
+                                    app: ev_m.request.app_id,
+                                    node,
+                                    region: 0,
+                                    cycles,
+                                });
+                            }
+                        }
                     }
-                    let ev_m = &trace[cursor + m];
                     let arrival_m =
                         (ev_m.arrival_ms * cycles_per_ms).round() as u64;
                     let service = service_cycles(&self.cfg, &cost);
@@ -802,6 +1065,7 @@ impl Fleet {
                         fpga_stages,
                         migrated: migrated && m == 0,
                         coalesced: m > 0,
+                        cache_hits,
                         span,
                     };
                     self.emit_request_events(
@@ -833,9 +1097,19 @@ impl Fleet {
                 for (tag, r) in results {
                     let mut measured = r?;
                     // A standalone replay pays the reconfiguration a
-                    // batch follower skipped; compare like with like.
+                    // batch follower skipped — and the full restream a
+                    // cache hit elided (node managers run cache-off, so
+                    // replays are always cold); compare like with like
+                    // via the identical float sequence the commit used.
                     if outcomes[tag].coalesced {
                         measured.reconfig_ms = 0.0;
+                    } else {
+                        elide_reconfig(
+                            &self.cfg,
+                            &mut measured,
+                            outcomes[tag].cache_hits,
+                            outcomes[tag].fpga_stages,
+                        );
                     }
                     debug_assert_eq!(
                         service_cycles(&self.cfg, &measured),
@@ -933,6 +1207,9 @@ impl Fleet {
             oracle_runs: self.oracle_runs,
             batches_formed: self.batches_formed,
             batched_requests: self.batched_requests,
+            config_cache_hits: self.config_cache_hits,
+            config_cache_misses: self.config_cache_misses,
+            icap_cycles_elided: self.icap_cycles_elided,
             events: Vec::new(),
         })
     }
@@ -1321,6 +1598,97 @@ mod tests {
             let wait = o.start_cycle - o.arrival_cycle;
             assert!(wait >= last[o.node], "queue wait regressed on {}", o.node);
             last[o.node] = wait;
+        }
+    }
+
+    #[test]
+    fn config_cache_elides_icap_restreams_on_repeated_shapes() {
+        // Repeated same-app shapes with the timed ICAP on: every leader
+        // after the first finds its kinds resident, so the warm fleet
+        // elides their restreams and finishes strictly earlier.
+        let trace = bursty_trace(20, 3, 31);
+        let run = |cache: usize| {
+            let mut c = cfg();
+            c.manager.config_cache_regions = cache;
+            let mut fleet = Fleet::launch(
+                2,
+                &c,
+                None,
+                AdmissionPolicy::StickyByApp,
+                true,
+            );
+            fleet.set_use_icap(true);
+            fleet.run_trace(&trace).unwrap()
+        };
+        let cold = run(0);
+        let warm = run(3);
+        assert_eq!(cold.completed, warm.completed);
+        // Off = no cache activity at all.
+        assert_eq!(cold.config_cache_hits, 0);
+        assert_eq!(cold.config_cache_misses, 0);
+        assert_eq!(cold.icap_cycles_elided, 0);
+        assert!(cold.outcomes.iter().all(|o| o.cache_hits == 0));
+        // On = rebinds happen and they elide real ICAP cycles.
+        assert!(warm.config_cache_hits > 0, "no cache hits on repeats");
+        assert!(warm.icap_cycles_elided > 0, "hits elided nothing");
+        let service_sum = |r: &FleetReport| {
+            r.outcomes.iter().map(|o| o.service_cycles).sum::<u64>()
+        };
+        assert!(service_sum(&warm) < service_sum(&cold));
+        assert!(warm.makespan_cycles < cold.makespan_cycles);
+    }
+
+    #[test]
+    fn config_cache_matches_oracle_byte_for_byte() {
+        // With the cache on, the shape-memoized fast path and the
+        // all-oracle run must still produce the identical schedule:
+        // elision is applied at the same sequential commit points with
+        // the same float sequence in both modes.
+        let trace = bursty_trace(15, 2, 47);
+        let mut c = cfg();
+        c.manager.config_cache_regions = 2;
+        // Keep the cycle-by-cycle oracle affordable: a small bitstream
+        // still exercises the timed ICAP and a nonzero elision.
+        c.manager.bitstream_bytes = 4096;
+        let mut oracle =
+            Fleet::launch(2, &c, None, AdmissionPolicy::LeastLoaded, false);
+        oracle.set_use_icap(true);
+        let mut fast =
+            Fleet::launch(2, &c, None, AdmissionPolicy::LeastLoaded, true);
+        fast.set_use_icap(true);
+        let a = oracle.run_trace(&trace).unwrap();
+        let b = fast.run_trace(&trace).unwrap();
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        assert!(b.config_cache_hits > 0, "cache never hit");
+        assert_eq!(a.config_cache_hits, b.config_cache_hits);
+        assert_eq!(a.icap_cycles_elided, b.icap_cycles_elided);
+    }
+
+    #[test]
+    fn config_cache_capacity_trims_lru_and_emits_evictions() {
+        // Capacity 1 with multi-stage chains: every leader's commit
+        // inserts more kinds than fit, so the LRU trim must evict —
+        // deterministically, with CacheEvict events — while immediate
+        // same-shape repeats can still hit the surviving entry.
+        let trace = bursty_trace(20, 2, 31);
+        let mut c = cfg();
+        c.manager.config_cache_regions = 1;
+        let mut fleet =
+            Fleet::launch(2, &c, None, AdmissionPolicy::StickyByApp, true);
+        fleet.set_use_icap(true);
+        fleet.tracer = Tracer::full();
+        let report = fleet.run_trace(&trace).unwrap();
+        assert!(report.config_cache_misses > 0);
+        let evictions = report
+            .events
+            .iter()
+            .filter(|e| matches!(e, TelemetryEvent::CacheEvict { .. }))
+            .count();
+        assert!(evictions > 0, "capacity 1 never evicted");
+        // The resident set respects the knob on every node.
+        for residents in &fleet.node_residents {
+            assert!(residents.len() <= 1, "cap exceeded: {residents:?}");
         }
     }
 

@@ -114,6 +114,24 @@ fn batch_window_flag(cli: &Cli, default: usize) -> Result<usize> {
     Ok(w)
 }
 
+/// Parse `--config-cache`, bounding the resident-module cache capacity
+/// (`manager.config_cache_regions`, DESIGN.md §16) to the board's PR
+/// region count — a larger cache could never fill.
+fn config_cache_flag(
+    cli: &Cli,
+    cfg: &SystemConfig,
+    default: usize,
+) -> Result<usize> {
+    let n = cli.usize_or("config-cache", default)?;
+    if n > cfg.fabric.num_pr_regions {
+        return Err(elastic_fpga::ElasticError::Config(format!(
+            "--config-cache {n} exceeds the board's {} PR regions",
+            cfg.fabric.num_pr_regions
+        )));
+    }
+    Ok(n)
+}
+
 fn quickstart(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let runtime = load_runtime(cli)?;
     println!("elastic-fpga quickstart — 16 KB through mult->enc->dec");
@@ -152,6 +170,10 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     })?;
     let batch_window = batch_window_flag(cli, 1)?;
     let batch_cycles = cli.usize_or("batch-cycles", 0)? as u64;
+    let mut cfg = cfg.clone();
+    cfg.manager.config_cache_regions =
+        config_cache_flag(cli, &cfg, cfg.manager.config_cache_regions)?;
+    let cfg = &cfg;
     let trace_out = cli.flags.get("trace-out").cloned();
     let metrics_out = cli.flags.get("metrics-out").cloned();
     let tracing = cli.bool_or("trace", false)? || trace_out.is_some();
@@ -200,6 +222,14 @@ fn fleet_sim(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
             "coalesced {} requests into {} batches (reconfig round skipped \
              for each follower)",
             report.batched_requests, report.batches_formed
+        );
+    }
+    if report.config_cache_hits + report.config_cache_misses > 0 {
+        println!(
+            "config cache: {} hits / {} misses | {} ICAP cycles elided",
+            report.config_cache_hits,
+            report.config_cache_misses,
+            report.icap_cycles_elided
         );
     }
     if tracing {
@@ -297,6 +327,8 @@ fn serve(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
     let words = cli.usize_or("words", 4096)?;
     let mut cfg = cfg.clone();
     cfg.server.batch_window = batch_window_flag(cli, cfg.server.batch_window)?;
+    cfg.manager.config_cache_regions =
+        config_cache_flag(cli, &cfg, cfg.manager.config_cache_regions)?;
     println!("serving {requests} requests of {words} words each...");
     let server = Server::start(cfg, runtime.as_ref().map(|t| t.handle()));
     let mut lat = LatencyRecorder::new();

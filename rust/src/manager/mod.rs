@@ -45,6 +45,13 @@ pub enum RegionState {
     Available,
     /// Allocated to an app, hosting one module stage.
     Allocated { app_id: u32, kind: ModuleKind },
+    /// Released but still holding `kind`'s bitstream in the
+    /// configuration cache (DESIGN.md §16): the module's architectural
+    /// state is scrubbed and the port is isolated, but a later request
+    /// needing the same kind rebinds it through the register file alone
+    /// — zero ICAP cycles.  Only exists when
+    /// `manager.config_cache_regions > 0`.
+    Resident { kind: ModuleKind },
     /// Administratively offline (fenced by the operator / churn model).
     Offline,
 }
@@ -76,6 +83,19 @@ pub struct ElasticManager {
     /// default; the fleet's oracle mode switches it off to keep a pure
     /// every-cycle reference run available.
     pub fast_path: bool,
+    /// Per-region LRU stamp for `Resident` entries (index = region; 0
+    /// unused).  Stamps come from [`Self::cache_clock`] — a monotone
+    /// virtual counter bumped at sequential release points, never wall
+    /// time — so eviction order is deterministic at any thread count.
+    resident_stamp: Vec<u64>,
+    /// Virtual LRU clock for the configuration cache.
+    cache_clock: u64,
+    /// Requests whose FPGA stage rebound a resident region (cache on).
+    cache_hits: u64,
+    /// FPGA stages programmed cold while the cache was enabled.
+    cache_misses: u64,
+    /// ICAP fabric cycles elided by cache-hit rebinds.
+    icap_cycles_elided: u64,
 }
 
 impl ElasticManager {
@@ -104,6 +124,11 @@ impl ElasticManager {
             cfg,
             use_icap: false,
             fast_path: true,
+            resident_stamp: vec![0; n + 1],
+            cache_clock: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            icap_cycles_elided: 0,
         };
         mgr.apply_plan().expect(
             "SystemConfig.qos.rotation_packages and \
@@ -117,16 +142,86 @@ impl ElasticManager {
         &self.regions
     }
 
-    /// Number of regions currently available.
+    /// Number of regions a new request can claim: free regions plus
+    /// cache-resident ones (a `Resident` region rebinds or blanks at
+    /// allocation time, so it is available capacity either way).
     pub fn available_regions(&self) -> usize {
         self.regions[1..]
             .iter()
-            .filter(|r| **r == RegionState::Available)
+            .filter(|r| {
+                matches!(r, RegionState::Available | RegionState::Resident { .. })
+            })
             .count()
     }
 
+    /// Is the configuration cache on for this manager?
+    fn cache_enabled(&self) -> bool {
+        self.cfg.manager.config_cache_regions > 0
+    }
+
+    /// Cache-resident regions as `(region, kind)`, lowest index first.
+    pub fn resident_regions(&self) -> Vec<(usize, ModuleKind)> {
+        (1..self.regions.len())
+            .filter_map(|r| match self.regions[r] {
+                RegionState::Resident { kind } => Some((r, kind)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Configuration-cache counters:
+    /// `(cache_hits, cache_misses, icap_cycles_elided)`.
+    pub fn config_cache_stats(&self) -> (u64, u64, u64) {
+        (self.cache_hits, self.cache_misses, self.icap_cycles_elided)
+    }
+
+    /// Evict one resident region: physically clear it (module out, port
+    /// isolated — free in the PR model, like `clear_region`) and emit
+    /// [`TraceEvent::CacheEvict`].
+    ///
+    /// [`TraceEvent::CacheEvict`]: crate::telemetry::TraceEvent::CacheEvict
+    fn evict_resident(&mut self, region: usize) {
+        if let RegionState::Resident { kind } = self.regions[region] {
+            self.fabric.clear_region(region);
+            self.regions[region] = RegionState::Available;
+            let cycle = self.fabric.now();
+            self.fabric.telemetry.emit_with(|| {
+                crate::telemetry::TraceEvent::CacheEvict {
+                    cycle,
+                    node: 0,
+                    region,
+                    kind: kind.name(),
+                }
+            });
+        }
+    }
+
+    /// Trim the resident set to the configured capacity, oldest LRU
+    /// stamp first (ties broken by lowest region index — stamps are
+    /// unique, but the order must be stated).
+    fn trim_residents(&mut self) {
+        let cap = self.cfg.manager.config_cache_regions;
+        loop {
+            let mut residents: Vec<(u64, usize)> = (1..self.regions.len())
+                .filter(|&r| {
+                    matches!(self.regions[r], RegionState::Resident { .. })
+                })
+                .map(|r| (self.resident_stamp[r], r))
+                .collect();
+            if residents.len() <= cap {
+                return;
+            }
+            residents.sort_unstable();
+            let (_, oldest) = residents[0];
+            self.evict_resident(oldest);
+        }
+    }
+
     /// Fence `count` regions offline (churn injection for elasticity
-    /// experiments); returns how many were actually fenced.
+    /// experiments); returns how many were actually fenced.  Free
+    /// regions fence first (highest index first, the legacy order);
+    /// cache-resident regions are evicted LRU-first only when free ones
+    /// run out.
     pub fn fence_regions(&mut self, count: usize) -> usize {
         let mut fenced = 0;
         for r in (1..self.regions.len()).rev() {
@@ -137,6 +232,22 @@ impl ElasticManager {
                 self.regions[r] = RegionState::Offline;
                 fenced += 1;
             }
+        }
+        while fenced < count {
+            let mut residents: Vec<(u64, usize)> = (1..self.regions.len())
+                .filter(|&r| {
+                    matches!(self.regions[r], RegionState::Resident { .. })
+                })
+                .map(|r| (self.resident_stamp[r], r))
+                .collect();
+            if residents.is_empty() {
+                break;
+            }
+            residents.sort_unstable();
+            let (_, oldest) = residents[0];
+            self.evict_resident(oldest);
+            self.regions[oldest] = RegionState::Offline;
+            fenced += 1;
         }
         fenced
     }
@@ -322,19 +433,45 @@ impl ElasticManager {
     /// maximal FPGA prefix, the rest on-server ("if there are not enough
     /// PR regions to host all modules, the remaining ones run on the
     /// server").
+    /// Placement is cache-aware (DESIGN.md §16): each stage prefers, in
+    /// order, the lowest-index resident region already holding its kind
+    /// (rebind — zero ICAP), then the lowest-index free region, then
+    /// the LRU-oldest non-matching resident (evict + restream), then
+    /// the server.  With the cache off no region is ever `Resident`, so
+    /// this degenerates to the legacy lowest-free-region-per-stage
+    /// assignment exactly.
     pub fn plan(&self, stages: &[ModuleKind]) -> Vec<StagePlacement> {
-        let mut free: Vec<usize> = (1..self.regions.len())
-            .filter(|&r| self.regions[r] == RegionState::Available)
-            .collect();
-        free.sort_unstable();
+        let mut claimed = vec![false; self.regions.len()];
         stages
             .iter()
-            .enumerate()
-            .map(|(i, &kind)| {
-                if let Some(&region) = free.get(i) {
-                    StagePlacement::Fpga { kind, region }
-                } else {
-                    StagePlacement::OnServer { kind }
+            .map(|&kind| {
+                let hit = (1..self.regions.len()).find(|&r| {
+                    !claimed[r]
+                        && self.regions[r] == RegionState::Resident { kind }
+                });
+                let free = || {
+                    (1..self.regions.len()).find(|&r| {
+                        !claimed[r]
+                            && self.regions[r] == RegionState::Available
+                    })
+                };
+                let lru_mismatch = || {
+                    (1..self.regions.len())
+                        .filter(|&r| {
+                            !claimed[r]
+                                && matches!(
+                                    self.regions[r],
+                                    RegionState::Resident { .. }
+                                )
+                        })
+                        .min_by_key(|&r| (self.resident_stamp[r], r))
+                };
+                match hit.or_else(free).or_else(lru_mismatch) {
+                    Some(region) => {
+                        claimed[region] = true;
+                        StagePlacement::Fpga { kind, region }
+                    }
+                    None => StagePlacement::OnServer { kind },
                 }
             })
             .collect()
@@ -439,13 +576,18 @@ impl ElasticManager {
     }
 
     /// Install the FPGA stages of a placement; returns the chain ports
-    /// and the ICAP cycles spent (0 on the static path).
+    /// and the ICAP cycles spent (0 on the static path and for every
+    /// cache-hit rebind).
     fn install(
         &mut self,
         app_id: u32,
         placement: &[StagePlacement],
     ) -> Result<(Vec<usize>, u64)> {
         let mut ports = Vec::new();
+        // Regions claimed through the cache hit path: already resident
+        // with the required kind, rebound below via the register file
+        // alone (DESIGN.md §16).
+        let mut rebinds: Vec<usize> = Vec::new();
         let mut icap_cycles = 0u64;
         for p in placement {
             if let StagePlacement::Fpga { kind, region } = *p {
@@ -461,10 +603,31 @@ impl ElasticManager {
                         layout.num_pr_regions()
                     )));
                 }
-                if self.regions[region] != RegionState::Available {
-                    return Err(ElasticError::Allocation(format!(
-                        "region {region} not available"
-                    )));
+                match self.regions[region] {
+                    RegionState::Available => {}
+                    RegionState::Resident { kind: res } if res == kind => {
+                        rebinds.push(region);
+                    }
+                    RegionState::Resident { kind: res } => {
+                        // A different kind needs this region: evict the
+                        // cached configuration and restream cold.  The
+                        // blanking is lazy (free) — the programming
+                        // below overwrites the region either way.
+                        let cycle = self.fabric.now();
+                        self.fabric.telemetry.emit_with(|| {
+                            crate::telemetry::TraceEvent::CacheEvict {
+                                cycle,
+                                node: 0,
+                                region,
+                                kind: res.name(),
+                            }
+                        });
+                    }
+                    _ => {
+                        return Err(ElasticError::Allocation(format!(
+                            "region {region} not available"
+                        )));
+                    }
                 }
                 self.regions[region] = RegionState::Allocated { app_id, kind };
                 ports.push(region);
@@ -477,11 +640,43 @@ impl ElasticManager {
         self.apply_plan()?;
         for p in placement {
             if let StagePlacement::Fpga { kind, region } = *p {
-                if self.use_icap {
-                    icap_cycles +=
-                        self.program_region_icap(region, kind, app_id)?;
-                } else {
+                if rebinds.contains(&region) {
+                    // Cache hit: scrub + rebind through the register
+                    // file alone.  A fresh module instance carries zero
+                    // architectural state from the previous tenant, the
+                    // per-region error latch is cleared, and no ICAP
+                    // traffic is issued.
                     self.fabric.install_static_module(region, kind, app_id);
+                    self.fabric.regfile.set_pr_error(region, None)?;
+                    self.cache_hits += 1;
+                    let words =
+                        (self.cfg.manager.bitstream_bytes / 4) as u64;
+                    let elided = if self.use_icap {
+                        crate::icap::Icap::expected_cycles(words)
+                    } else {
+                        0
+                    };
+                    self.icap_cycles_elided += elided;
+                    let cycle = self.fabric.now();
+                    self.fabric.telemetry.emit_with(|| {
+                        crate::telemetry::TraceEvent::IcapElided {
+                            cycle,
+                            app: app_id,
+                            node: 0,
+                            region,
+                            cycles: elided,
+                        }
+                    });
+                } else {
+                    if self.cache_enabled() {
+                        self.cache_misses += 1;
+                    }
+                    if self.use_icap {
+                        icap_cycles +=
+                            self.program_region_icap(region, kind, app_id)?;
+                    } else {
+                        self.fabric.install_static_module(region, kind, app_id);
+                    }
                 }
             }
         }
@@ -507,12 +702,54 @@ impl ElasticManager {
                 self.fabric.regfile.layout().num_ports()
             )));
         }
-        if self.regions[region] != RegionState::Available {
-            return Err(ElasticError::Allocation(format!(
-                "region {region} not available"
-            )));
+        match self.regions[region] {
+            RegionState::Available => {}
+            RegionState::Resident { kind: res } if res == kind => {
+                // Cache hit: the region already holds this kind's
+                // bitstream — rebind through the register file, no ICAP
+                // streaming, zero cycles spent.
+                self.regions[region] = RegionState::Allocated { app_id, kind };
+                self.fabric.install_static_module(region, kind, app_id);
+                self.fabric.regfile.set_pr_error(region, None)?;
+                self.cache_hits += 1;
+                let words = (self.cfg.manager.bitstream_bytes / 4) as u64;
+                let elided = crate::icap::Icap::expected_cycles(words);
+                self.icap_cycles_elided += elided;
+                let cycle = self.fabric.now();
+                self.fabric.telemetry.emit_with(|| {
+                    crate::telemetry::TraceEvent::IcapElided {
+                        cycle,
+                        app: app_id,
+                        node: 0,
+                        region,
+                        cycles: elided,
+                    }
+                });
+                return Ok(0);
+            }
+            RegionState::Resident { kind: res } => {
+                // Wrong kind resident: evict (lazy — the ICAP stream
+                // below overwrites the region) and program cold.
+                let cycle = self.fabric.now();
+                self.fabric.telemetry.emit_with(|| {
+                    crate::telemetry::TraceEvent::CacheEvict {
+                        cycle,
+                        node: 0,
+                        region,
+                        kind: res.name(),
+                    }
+                });
+            }
+            _ => {
+                return Err(ElasticError::Allocation(format!(
+                    "region {region} not available"
+                )));
+            }
         }
         self.regions[region] = RegionState::Allocated { app_id, kind };
+        if self.cache_enabled() {
+            self.cache_misses += 1;
+        }
         match self.program_region_icap(region, kind, app_id) {
             Ok(cycles) => Ok(cycles),
             Err(e) => {
@@ -551,18 +788,72 @@ impl ElasticManager {
     /// Release an app's regions and drop its chain ownership.  Budget
     /// registers keep the last compiled image; the next allocation
     /// event recompiles the plan over the new ownership map.
+    ///
+    /// With the configuration cache on, regions whose module was
+    /// actually programmed are **parked** `Resident { kind }` instead of
+    /// cleared (DESIGN.md §16): the fabric scrubs the module's
+    /// architectural state and isolates the port, but the bitstream
+    /// identity survives so the next request needing the same kind
+    /// rebinds for free.  Regions whose programming never completed
+    /// (install-failure rollback) always clear — caching them would
+    /// poison the hit path.  The resident set is then LRU-trimmed to
+    /// `manager.config_cache_regions`.
     pub fn release_app(&mut self, app_id: u32) {
         for r in 1..self.regions.len() {
-            if matches!(self.regions[r], RegionState::Allocated { app_id: a, .. } if a == app_id)
+            if let RegionState::Allocated { app_id: a, kind } = self.regions[r]
             {
-                self.fabric.clear_region(r);
-                self.regions[r] = RegionState::Available;
+                if a != app_id {
+                    continue;
+                }
+                if self.cache_enabled() && self.fabric.module_at(r).is_some()
+                {
+                    self.fabric.park_region(r, kind);
+                    self.regions[r] = RegionState::Resident { kind };
+                    self.cache_clock += 1;
+                    self.resident_stamp[r] = self.cache_clock;
+                } else {
+                    self.fabric.clear_region(r);
+                    self.regions[r] = RegionState::Available;
+                }
             }
         }
         for owner in self.chain_owner.iter_mut() {
             if *owner == Some(app_id) {
                 *owner = None;
             }
+        }
+        if self.cache_enabled() {
+            self.trim_residents();
+        }
+    }
+
+    /// Park one allocated region into the configuration cache without
+    /// any ICAP traffic — the autoscaler's retire path with the cache
+    /// on (the cache-off path stays [`Self::blank_region`]).
+    pub fn park_region(&mut self, region: usize) -> Result<()> {
+        if region == 0 || region >= self.regions.len() {
+            return Err(ElasticError::Allocation(format!(
+                "region {region} out of range"
+            )));
+        }
+        if !self.cache_enabled() {
+            return Err(ElasticError::Allocation(
+                "configuration cache is off (manager.config_cache_regions = 0)"
+                    .into(),
+            ));
+        }
+        match self.regions[region] {
+            RegionState::Allocated { kind, .. } => {
+                self.fabric.park_region(region, kind);
+                self.regions[region] = RegionState::Resident { kind };
+                self.cache_clock += 1;
+                self.resident_stamp[region] = self.cache_clock;
+                self.trim_residents();
+                Ok(())
+            }
+            ref other => Err(ElasticError::Allocation(format!(
+                "region {region} not allocated (state {other:?})"
+            ))),
         }
     }
 
@@ -712,12 +1003,30 @@ impl ElasticManager {
         req: &AppRequest,
         segments: usize,
     ) -> Result<Vec<AppReport>> {
-        assert!(segments >= 1);
+        // Typed refusals, not asserts: a bad caller must not be able to
+        // panic the shell (a zero segment count would also divide by
+        // zero, then `chunks(0)` would panic below).
+        if segments == 0 {
+            return Err(ElasticError::Server(
+                "elastic execution needs at least one segment".into(),
+            ));
+        }
+        if req.data.len() % segments != 0 {
+            return Err(ElasticError::Server(format!(
+                "payload of {} words does not split into {segments} \
+                 equal segments",
+                req.data.len()
+            )));
+        }
         let seg_words = req.data.len() / segments;
-        assert!(
-            seg_words % crate::xdma::BRIDGE_BUFFER_WORDS == 0,
-            "segment length must stay burst-aligned"
-        );
+        if seg_words == 0 || seg_words % crate::xdma::BRIDGE_BUFFER_WORDS != 0
+        {
+            return Err(ElasticError::Server(format!(
+                "segment length {seg_words} must stay a nonzero multiple \
+                 of the {}-word burst",
+                crate::xdma::BRIDGE_BUFFER_WORDS
+            )));
+        }
         let mut reports = Vec::new();
         for (i, seg) in req.data.chunks(seg_words).enumerate() {
             let sub = AppRequest {

@@ -380,6 +380,11 @@ impl ElasticServer {
             );
             m.inc("lane_batches_total", &labels, lane.batches());
             m.inc("lane_coalesced_total", &labels, lane.coalesced());
+            m.set_gauge(
+                "lane_resident_modules",
+                &labels,
+                lane.resident_modules().len() as f64,
+            );
         }
         m
     }
@@ -439,6 +444,11 @@ pub struct LaneStatus {
     /// per-request placement plan).
     batches: AtomicU64,
     coalesced: AtomicU64,
+    /// Resident configuration-cache snapshot (DESIGN.md §16): the lane
+    /// manager's parked `(region, module-kind-name)` pairs, refreshed
+    /// by the lane executor after each batch.  Empty while the
+    /// configuration cache is disabled.
+    residents: Mutex<Vec<(usize, &'static str)>>,
 }
 
 impl LaneStatus {
@@ -463,6 +473,13 @@ impl LaneStatus {
     /// Submissions served as batch followers on this lane.
     pub fn coalesced(&self) -> u64 {
         self.coalesced.load(Ordering::SeqCst)
+    }
+
+    /// The lane manager's parked configuration-cache entries as
+    /// `(region, module-kind-name)` pairs — a point-in-time snapshot
+    /// published by the lane executor (empty while the cache is off).
+    pub fn resident_modules(&self) -> Vec<(usize, &'static str)> {
+        self.residents.lock().unwrap().clone()
     }
 
     fn note_app(&self, app_id: u32) {
@@ -529,6 +546,20 @@ fn select_lane(
             .min_by_key(|&i| {
                 let spare = statuses[i].spare_share.load(Ordering::SeqCst);
                 (std::cmp::Reverse(spare), statuses[i].depth(), forwarded[i], i)
+            })
+            .expect("server has lanes"),
+        AdmissionPolicy::PlanWeighted => (0..statuses.len())
+            .min_by_key(|&i| {
+                // Mirror `fleet::Fleet::plan_weighted`: the lane's
+                // backlog (depth, the on-line analogue of the trace
+                // simulator's busy-until horizon) inflated by the
+                // inverse of its published spare bandwidth share.
+                // Integer u128 arithmetic keeps the score exact.
+                let depth = statuses[i].depth();
+                let spare =
+                    statuses[i].spare_share.load(Ordering::SeqCst).max(1) as u128;
+                let score = depth as u128 * crate::qos::SHARE_UNIT as u128 / spare;
+                (score, depth, forwarded[i], i)
             })
             .expect("server has lanes"),
     }
@@ -806,6 +837,14 @@ fn lane_loop(
                 }
             }
         }
+        // Publish the lane's resident configuration-cache map so the
+        // admission side (and metrics snapshots) can see which module
+        // kinds are parked on which regions (DESIGN.md §16).
+        *status.residents.lock().unwrap() = manager
+            .resident_regions()
+            .into_iter()
+            .map(|(r, k)| (r, k.name()))
+            .collect();
     }
 }
 
@@ -1283,5 +1322,43 @@ mod tests {
         autoscale_tick(&mut m, &scale, &status, &stats, 0, 0);
         assert_eq!(stats.shrinks(), 1, "floor follows active apps down");
         assert_eq!(m.available_regions(), 2);
+    }
+
+    #[test]
+    fn lane_publishes_resident_cache_map() {
+        // With the configuration cache on, a served chain parks its
+        // modules instead of clearing them, and the lane executor
+        // publishes the `(region, kind)` map through LaneStatus.
+        let mut cfg = SystemConfig::paper_defaults();
+        cfg.manager.config_cache_regions = 3;
+        let server = Server::start(cfg, None);
+        let d = data(64, 7);
+        let rep = call(&server, AppRequest::pipeline(0, d.clone())).unwrap();
+        assert!(rep.verified);
+        let lane = Arc::clone(&server.lane_statuses()[0]);
+        // Join the lane executor so its final resident snapshot (taken
+        // at the end of the batch iteration) is published.
+        server.shutdown();
+        let residents = lane.resident_modules();
+        assert!(
+            !residents.is_empty(),
+            "cache enabled: served chain must leave parked modules"
+        );
+        for (region, _kind) in &residents {
+            assert!(
+                (1..=3).contains(region),
+                "resident region {region} out of range"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_off_publishes_empty_resident_map() {
+        let server = Server::start(SystemConfig::paper_defaults(), None);
+        let rep = call(&server, AppRequest::pipeline(0, data(64, 9))).unwrap();
+        assert!(rep.verified);
+        let lane = Arc::clone(&server.lane_statuses()[0]);
+        server.shutdown();
+        assert!(lane.resident_modules().is_empty(), "legacy mode parks nothing");
     }
 }

@@ -98,6 +98,13 @@ pub enum TraceEvent {
     /// The bridge's plan-weighted H2C descriptor scheduler granted an
     /// app's burst onto the crossbar (DESIGN.md §15).
     H2cScheduled { cycle: u64, app: u32, channel: usize, words: usize },
+    /// A configuration-cache hit rebound a resident region to `app`
+    /// through the register file alone, eliding `cycles` ICAP cycles
+    /// (DESIGN.md §16).
+    IcapElided { cycle: u64, app: u32, node: usize, region: usize, cycles: u64 },
+    /// LRU eviction blanked a resident region's cached `kind`
+    /// (DESIGN.md §16).
+    CacheEvict { cycle: u64, node: usize, region: usize, kind: &'static str },
 }
 
 impl TraceEvent {
@@ -117,7 +124,9 @@ impl TraceEvent {
             | TraceEvent::ScaleDown { cycle, .. }
             | TraceEvent::PlanApplied { cycle, .. }
             | TraceEvent::BatchFormed { cycle, .. }
-            | TraceEvent::H2cScheduled { cycle, .. } => cycle,
+            | TraceEvent::H2cScheduled { cycle, .. }
+            | TraceEvent::IcapElided { cycle, .. }
+            | TraceEvent::CacheEvict { cycle, .. } => cycle,
         }
     }
 
@@ -138,6 +147,8 @@ impl TraceEvent {
             TraceEvent::PlanApplied { .. } => "plan_applied",
             TraceEvent::BatchFormed { .. } => "batch_formed",
             TraceEvent::H2cScheduled { .. } => "h2c_scheduled",
+            TraceEvent::IcapElided { .. } => "icap_elided",
+            TraceEvent::CacheEvict { .. } => "cache_evict",
         }
     }
 
@@ -197,6 +208,15 @@ impl TraceEvent {
             ),
             TraceEvent::H2cScheduled { cycle, app, channel, words } => format!(
                 "{}, \"app\": {app}, \"channel\": {channel}, \"words\": {words}}}",
+                head(cycle)
+            ),
+            TraceEvent::IcapElided { cycle, app, node, region, cycles } => format!(
+                "{}, \"app\": {app}, \"node\": {node}, \"region\": {region}, \
+                 \"cycles\": {cycles}}}",
+                head(cycle)
+            ),
+            TraceEvent::CacheEvict { cycle, node, region, kind } => format!(
+                "{}, \"node\": {node}, \"region\": {region}, \"kind\": \"{kind}\"}}",
                 head(cycle)
             ),
         }

@@ -1,0 +1,323 @@
+//! Configuration-cache suite (DESIGN.md §16): the resident-module
+//! state machine on the manager, deterministic LRU eviction, the
+//! cache-aware planner, and — the security contract — a property test
+//! that a cache hit handed to a *different* tenant never leaks the
+//! previous tenant's module state, output words, or error spill.
+//!
+//! Also pins the typed-refusal contract on `execute_elastic`: a bad
+//! segment count must come back as `ElasticError`, never a panic.
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::manager::{
+    golden_chain, AppRequest, ElasticManager, RegionState, StagePlacement,
+};
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::prop::check;
+use elastic_fpga::telemetry::{TraceEvent, Tracer};
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::wishbone::WbError;
+use elastic_fpga::ElasticError;
+
+fn cached_mgr(cache: usize) -> ElasticManager {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.manager.config_cache_regions = cache;
+    cfg.manager.bitstream_bytes = 4096; // keep the timed ICAP fast
+    ElasticManager::new(cfg, None)
+}
+
+fn data(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut v = vec![0u32; n];
+    rng.fill_u32(&mut v);
+    v
+}
+
+#[test]
+fn release_parks_regions_and_repeat_shape_rebinds_without_icap() {
+    let mut m = cached_mgr(3);
+    m.use_icap = true;
+    let cold = m.execute(&AppRequest::pipeline(0, data(64, 1))).unwrap();
+    assert!(cold.verified);
+    assert!(cold.timeline.reconfig_cycles > 0, "cold run must stream ICAP");
+    // Release parked all three regions instead of blanking them…
+    assert_eq!(m.resident_regions().len(), 3);
+    // …and a resident region is still claimable capacity.
+    assert_eq!(m.available_regions(), 3);
+    // A different tenant with the same shape rebinds every stage.
+    let warm = m.execute(&AppRequest::pipeline(1, data(64, 2))).unwrap();
+    assert!(warm.verified);
+    assert_eq!(warm.timeline.reconfig_cycles, 0, "hits must elide all ICAP");
+    assert_eq!(warm.cost.reconfig_ms, 0.0);
+    let (hits, misses, elided) = m.config_cache_stats();
+    assert_eq!(hits, 3, "three stages rebound");
+    assert_eq!(misses, 3, "the cold run programmed three stages");
+    assert!(elided > 0, "rebinding a timed-ICAP region must elide cycles");
+}
+
+#[test]
+fn cache_off_keeps_legacy_blank_on_release_behavior() {
+    let mut m = cached_mgr(0);
+    m.use_icap = true;
+    let first = m.execute(&AppRequest::pipeline(0, data(64, 3))).unwrap();
+    assert!(m.resident_regions().is_empty(), "cache off must never park");
+    let second = m.execute(&AppRequest::pipeline(1, data(64, 4))).unwrap();
+    assert_eq!(
+        first.timeline.reconfig_cycles, second.timeline.reconfig_cycles,
+        "with the cache off every request restreams identically"
+    );
+    assert_eq!(m.config_cache_stats(), (0, 0, 0));
+}
+
+#[test]
+fn park_scrubs_module_state_and_isolates_port() {
+    // The rebind-safety half of the security contract, asserted at the
+    // park point: a parked module is a *fresh* instance owned by the
+    // host with its port reset asserted — no tenant words, counters, or
+    // error latches survive into the cache.
+    let mut m = cached_mgr(3);
+    m.use_icap = true;
+    let rep = m.execute(&AppRequest::pipeline(2, data(64, 5))).unwrap();
+    assert!(rep.verified);
+    let residents = m.resident_regions();
+    assert_eq!(residents.len(), 3);
+    for (r, kind) in residents {
+        let module = m.fabric().module_at(r).expect("parked module stays");
+        assert_eq!(module.kind, kind);
+        assert_eq!(module.app_id, 0, "parked modules are host-owned");
+        assert_eq!(module.words_done, 0, "tenant word count leaked");
+        assert_eq!(module.batches_done, 0, "tenant batch count leaked");
+        assert_eq!(module.input_fill(), 0, "tenant input words leaked");
+        assert!(module.error_status.is_none(), "tenant error latch leaked");
+        assert!(
+            m.fabric().regfile.port_reset(r).unwrap(),
+            "parked region {r} must be isolated in reset"
+        );
+    }
+}
+
+#[test]
+fn rebind_never_leaks_previous_tenant_state() {
+    // Security scrub on rebind (ISSUE satellite; ROADMAP adversarial
+    // suite): tenant A computes over random data and releases; its
+    // regions park resident and we poison the per-region error spill as
+    // if A's tenancy left debris behind.  Tenant B then hits the same
+    // regions.  B's output must equal the golden model of B's *own*
+    // data exactly — any leaked word of A's output or state would break
+    // the byte-equality — and the poisoned spill must be scrubbed.
+    check(0xCAC4E_5EC, 60, |g| {
+        let kinds = [
+            ModuleKind::Multiplier,
+            ModuleKind::HammingEncoder,
+            ModuleKind::HammingDecoder,
+        ];
+        let chain_len = g.int("chain", 1, 3) as usize;
+        let stages: Vec<ModuleKind> =
+            (0..chain_len).map(|_| g.choose("kind", &kinds)).collect();
+        // Capacity at least the chain length: every stage of B's
+        // repeat-shape request must travel the hit path.
+        let cache = g.int("cache", chain_len as u64, 3) as usize;
+        let a_data = g.buffer(8 * g.int("a_len", 1, 8) as usize);
+        let b_data = g.buffer(8 * g.int("b_len", 1, 8) as usize);
+        let mut m = cached_mgr(cache);
+        m.use_icap = true;
+        let ra = m
+            .execute(&AppRequest {
+                app_id: 0,
+                data: a_data.clone(),
+                stages: stages.clone(),
+            })
+            .map_err(|e| format!("tenant A failed: {e:?}"))?;
+        if !ra.verified {
+            return Err("tenant A not verified".into());
+        }
+        let parked = m.resident_regions();
+        if parked.len() < chain_len {
+            return Err(format!(
+                "expected {chain_len} parked regions, got {parked:?}"
+            ));
+        }
+        for &(r, _) in &parked {
+            m.fabric_mut()
+                .regfile
+                .set_pr_error(r, Some(WbError::AckTimeout))
+                .unwrap();
+        }
+        let (hits_before, _, _) = m.config_cache_stats();
+        let rb = m
+            .execute(&AppRequest {
+                app_id: 1,
+                data: b_data.clone(),
+                stages: stages.clone(),
+            })
+            .map_err(|e| format!("tenant B failed: {e:?}"))?;
+        let (hits_after, _, elided) = m.config_cache_stats();
+        if hits_after - hits_before != chain_len as u64 {
+            return Err(format!(
+                "expected {chain_len} hits, got {}",
+                hits_after - hits_before
+            ));
+        }
+        if elided == 0 {
+            return Err("hits elided no ICAP cycles".into());
+        }
+        if rb.timeline.reconfig_cycles != 0 {
+            return Err("cache hit still streamed ICAP".into());
+        }
+        if !rb.verified || rb.output != golden_chain(&stages, &b_data) {
+            return Err("tenant B's output corrupted by tenant A".into());
+        }
+        // The poisoned spill never reached B, and B's own successful
+        // run left the per-region latches clean for the *next* tenant.
+        for p in &rb.placement {
+            if let StagePlacement::Fpga { region, .. } = *p {
+                if m.fabric().regfile.pr_error(region).unwrap().is_some() {
+                    return Err(format!(
+                        "region {region} error spill leaked across rebind"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lru_eviction_is_deterministic_and_virtual_clock_ordered() {
+    // Capacity 2 with three parks: the oldest stamp (region 1, parked
+    // first) must be the eviction victim — always, at any wall-clock
+    // speed, because stamps come from the manager's virtual LRU clock.
+    let mut m = cached_mgr(2);
+    m.reserve_region(0, ModuleKind::Multiplier, 1).unwrap();
+    m.reserve_region(1, ModuleKind::HammingEncoder, 2).unwrap();
+    m.reserve_region(2, ModuleKind::HammingDecoder, 3).unwrap();
+    m.park_region(1).unwrap();
+    m.park_region(2).unwrap();
+    m.park_region(3).unwrap(); // trim: region 1 is LRU-oldest
+    assert_eq!(
+        m.resident_regions(),
+        vec![
+            (2, ModuleKind::HammingEncoder),
+            (3, ModuleKind::HammingDecoder)
+        ]
+    );
+    assert!(matches!(m.regions()[1], RegionState::Available));
+    assert!(m.fabric().module_at(1).is_none(), "evicted region blanked");
+}
+
+#[test]
+fn plan_prefers_resident_matching_regions_then_free_then_lru() {
+    let mut m = cached_mgr(3);
+    // Parks 1=Multiplier, 2=HammingEncoder, 3=HammingDecoder.
+    m.execute(&AppRequest::pipeline(0, data(64, 6))).unwrap();
+    // A lone encoder stage must pick region 2 — the resident match —
+    // not the lowest-index region.
+    assert_eq!(
+        m.plan(&[ModuleKind::HammingEncoder]),
+        vec![StagePlacement::Fpga { kind: ModuleKind::HammingEncoder, region: 2 }]
+    );
+    // Three multipliers: one hit (region 1), then no free regions, so
+    // the mismatching residents are claimed LRU-oldest first.
+    assert_eq!(
+        m.plan(&[ModuleKind::Multiplier; 3]),
+        vec![
+            StagePlacement::Fpga { kind: ModuleKind::Multiplier, region: 1 },
+            StagePlacement::Fpga { kind: ModuleKind::Multiplier, region: 2 },
+            StagePlacement::Fpga { kind: ModuleKind::Multiplier, region: 3 },
+        ]
+    );
+}
+
+#[test]
+fn mismatched_kind_evicts_and_restreams_cold() {
+    let mut m = cached_mgr(3);
+    m.use_icap = true;
+    m.fabric_mut().telemetry = Tracer::full();
+    // Park all three pipeline kinds, then run an all-multiplier chain:
+    // regions 2 and 3 hold the wrong kind, so they must evict and pay
+    // the full restream while region 1 rebinds for free.
+    m.execute(&AppRequest::pipeline(0, data(64, 7))).unwrap();
+    let (h0, m0, _) = m.config_cache_stats();
+    let req = AppRequest {
+        app_id: 1,
+        data: data(64, 8),
+        stages: vec![ModuleKind::Multiplier; 3],
+    };
+    let rep = m.execute(&req).unwrap();
+    assert!(rep.verified);
+    assert!(rep.timeline.reconfig_cycles > 0, "cold stages must stream");
+    let (h1, m1, _) = m.config_cache_stats();
+    assert_eq!(h1 - h0, 1, "only region 1 held a multiplier");
+    assert_eq!(m1 - m0, 2, "regions 2 and 3 restreamed cold");
+    let events = m.fabric_mut().telemetry.take_events();
+    let evicts = events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::CacheEvict { .. }))
+        .count();
+    let elides = events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::IcapElided { .. }))
+        .count();
+    assert_eq!(evicts, 2, "two wrong-kind residents evicted");
+    assert!(elides >= 1, "the rebind must announce its elision");
+}
+
+#[test]
+fn fence_evicts_residents_lru_first_when_free_regions_run_out() {
+    let mut m = cached_mgr(3);
+    m.execute(&AppRequest::pipeline(0, data(64, 9))).unwrap();
+    assert_eq!(m.resident_regions().len(), 3, "all regions parked");
+    // No free regions remain, so fencing must evict the LRU-oldest
+    // resident (region 1, parked first) and take it offline.
+    assert_eq!(m.fence_regions(1), 1);
+    assert!(matches!(m.regions()[1], RegionState::Offline));
+    assert_eq!(m.resident_regions().len(), 2);
+    assert_eq!(m.available_regions(), 2);
+}
+
+#[test]
+fn park_region_refusals_are_typed() {
+    let mut off = cached_mgr(0);
+    off.reserve_region(0, ModuleKind::Multiplier, 1).unwrap();
+    assert!(off.park_region(1).is_err(), "cache off must refuse to park");
+    let mut m = cached_mgr(2);
+    assert!(m.park_region(0).is_err(), "region 0 is the bridge");
+    assert!(m.park_region(9).is_err(), "region out of range");
+    assert!(m.park_region(1).is_err(), "region not allocated");
+}
+
+#[test]
+fn reserve_region_hit_costs_zero_icap_cycles() {
+    let mut m = cached_mgr(2);
+    let cold = m.reserve_region(0, ModuleKind::Multiplier, 1).unwrap();
+    assert!(cold > 0, "cold reserve streams the timed ICAP");
+    m.park_region(1).unwrap();
+    let warm = m.reserve_region(1, ModuleKind::Multiplier, 1).unwrap();
+    assert_eq!(warm, 0, "resident-matching reserve must be ICAP-free");
+    assert!(matches!(
+        m.regions()[1],
+        RegionState::Allocated { app_id: 1, .. }
+    ));
+}
+
+#[test]
+fn execute_elastic_refuses_bad_segment_counts_without_panicking() {
+    // ISSUE satellite: the former `assert!` family is now typed.
+    let mut m = cached_mgr(0);
+    let req = AppRequest::pipeline(0, data(64, 10));
+    assert!(matches!(
+        m.execute_elastic(&req, 0),
+        Err(ElasticError::Server(_))
+    ));
+    assert!(matches!(
+        m.execute_elastic(&req, 3), // 64 words don't split into 3
+        Err(ElasticError::Server(_))
+    ));
+    assert!(matches!(
+        m.execute_elastic(&req, 16), // 4-word segments break the burst
+        Err(ElasticError::Server(_))
+    ));
+    // A well-formed call still works after the refusals.
+    let reports = m.execute_elastic(&req, 2).unwrap();
+    assert_eq!(reports.len(), 2);
+    assert!(reports.iter().all(|r| r.verified));
+}

@@ -410,6 +410,133 @@ fn fabric_busy_period_skips_are_observable_but_invisible() {
     assert!(fast.skipped_cycles > 3000, "ICAP stretch not skipped");
 }
 
+// ---------------------------------------------------------------------
+// Warm-cache manager equivalence (DESIGN.md §16)
+// ---------------------------------------------------------------------
+
+use elastic_fpga::manager::{AppReport, AppRequest, ElasticManager};
+
+/// One warm-cache trace: repeated chain shapes (so the configuration
+/// cache hits) interleaved with shape changes (so mid-trace evictions
+/// and cold restreams happen), executed by two different tenants.
+struct CacheTrace {
+    cache: usize,
+    requests: Vec<AppRequest>,
+}
+
+fn draw_cache_trace(g: &mut Gen) -> CacheTrace {
+    let kinds = [
+        ModuleKind::Multiplier,
+        ModuleKind::HammingEncoder,
+        ModuleKind::HammingDecoder,
+    ];
+    // A small shape pool, each drawn shape issued twice in a row:
+    // the repeat is what exercises the rebind path, and a pool > cache
+    // capacity is what forces evictions mid-trace.
+    let n_shapes = g.int("shapes", 2, 4) as usize;
+    let cache = g.int("cache", 1, 3) as usize;
+    let mut requests = Vec::new();
+    for s in 0..n_shapes {
+        let len = g.int("chain_len", 1, 3) as usize;
+        let stages: Vec<ModuleKind> =
+            (0..len).map(|_| g.choose("kind", &kinds)).collect();
+        for rep in 0..2u32 {
+            requests.push(AppRequest {
+                app_id: (s as u32 * 2 + rep) % 4,
+                data: g.buffer(8 * g.int("payload", 1, 4) as usize),
+                stages: stages.clone(),
+            });
+        }
+    }
+    CacheTrace { cache, requests }
+}
+
+/// Every observable of one request's report, rendered deterministically
+/// (the float fields print exactly — both runs compute the identical
+/// arithmetic or they fail here).
+fn report_line(rep: &AppReport) -> String {
+    format!(
+        "out={:?};place={:?};fpga={};cost={:?};reconfig={};ok={}",
+        rep.output,
+        rep.placement,
+        rep.fpga_stages,
+        rep.cost,
+        rep.timeline.reconfig_cycles,
+        rep.verified
+    )
+}
+
+fn run_cache_trace(t: &CacheTrace, fast: bool) -> (String, ElasticManager) {
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.manager.config_cache_regions = t.cache;
+    cfg.manager.bitstream_bytes = 4096; // keep the oracle affordable
+    let mut m = ElasticManager::new(cfg, None);
+    m.fast_path = fast;
+    m.use_icap = true;
+    let mut log = String::new();
+    for req in &t.requests {
+        match m.execute(req) {
+            Ok(rep) => log.push_str(&report_line(&rep)),
+            Err(e) => log.push_str(&format!("err={e:?}")),
+        }
+        log.push('\n');
+    }
+    let (hits, misses, elided) = m.config_cache_stats();
+    log.push_str(&format!(
+        "hits={hits};misses={misses};elided={elided};residents={:?}",
+        m.resident_regions()
+    ));
+    (log, m)
+}
+
+#[test]
+fn warm_cache_fastpath_equals_oracle_for_60_randomized_traces() {
+    // The §12 equivalence gate extended to the configuration cache
+    // (DESIGN.md §16): with resident rebinds, LRU evictions, and
+    // wrong-kind restreams in the trace, the event-driven fast path and
+    // the cycle-by-cycle oracle must still report byte-identically —
+    // including the cache counters and the final resident set.
+    check(0xCAC4E_FA57, 60, |g| {
+        let t = draw_cache_trace(g);
+        let (fast_log, fast_m) = run_cache_trace(&t, true);
+        let (oracle_log, oracle_m) = run_cache_trace(&t, false);
+        if fast_log != oracle_log {
+            return Err(format!(
+                "reports diverged:\nfast:\n{fast_log}\noracle:\n{oracle_log}"
+            ));
+        }
+        let (hits, _, elided) = fast_m.config_cache_stats();
+        if hits == 0 || elided == 0 {
+            return Err(format!(
+                "trace never warmed the cache (hits={hits}, elided={elided})"
+            ));
+        }
+        // Cycle conservation in both modes: executed + skipped must
+        // account for every cycle of virtual fabric time.
+        let ff = fast_m.fabric();
+        if ff.executed_cycles + ff.skipped_cycles != ff.now() {
+            return Err(format!(
+                "fast path lost cycles: {} + {} != {}",
+                ff.executed_cycles,
+                ff.skipped_cycles,
+                ff.now()
+            ));
+        }
+        let of = oracle_m.fabric();
+        if of.executed_cycles != of.now() {
+            return Err("oracle skipped cycles".into());
+        }
+        if fast_m.fabric().now() != oracle_m.fabric().now() {
+            return Err(format!(
+                "virtual clocks diverged: fast {} vs oracle {}",
+                fast_m.fabric().now(),
+                oracle_m.fabric().now()
+            ));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn fastpath_skips_are_observable_but_invisible() {
     // A deterministic spot-check that the fast-path actually skips (the

@@ -82,6 +82,67 @@ fn one_vs_n_threads_is_byte_identical_across_policies() {
     }
 }
 
+fn launch_cached(policy: AdmissionPolicy, threads: usize) -> Fleet {
+    let mut c = cfg();
+    // Cache on: the virtual resident sets evolve only at the sequential
+    // commit points (DESIGN.md §16), so the affinity-scored admission
+    // and the elided schedules must stay byte-identical at any thread
+    // count, exactly like the cache-off §13 contract.
+    c.manager.config_cache_regions = 2;
+    let mut fleet = Fleet::launch(3, &c, None, policy, true);
+    fleet.fence_node(0, 2);
+    fleet.set_use_icap(true); // real reconfig terms, so elision is visible
+    fleet.execution_threads = threads;
+    fleet.tracer = Tracer::full();
+    fleet
+}
+
+#[test]
+fn config_cache_on_is_byte_identical_across_threads_and_policies() {
+    let events = trace(160, 0xCAC4E);
+    for policy in [
+        AdmissionPolicy::LeastLoaded,
+        AdmissionPolicy::StickyByApp,
+        AdmissionPolicy::BandwidthAware,
+        AdmissionPolicy::PlanWeighted,
+    ] {
+        let want = launch_cached(policy, 1).run_trace(&events).unwrap();
+        assert!(
+            want.config_cache_hits > 0,
+            "{policy:?}: trace never warmed the cache"
+        );
+        assert!(
+            want.icap_cycles_elided > 0,
+            "{policy:?}: hits elided no ICAP cycles"
+        );
+        for threads in [2usize, 8] {
+            let got = launch_cached(policy, threads).run_trace(&events).unwrap();
+            assert_eq!(want.outcomes, got.outcomes, "{policy:?} x{threads}");
+            assert_eq!(
+                want.config_cache_hits, got.config_cache_hits,
+                "{policy:?} x{threads}: cache hits"
+            );
+            assert_eq!(
+                want.config_cache_misses, got.config_cache_misses,
+                "{policy:?} x{threads}: cache misses"
+            );
+            assert_eq!(
+                want.icap_cycles_elided, got.icap_cycles_elided,
+                "{policy:?} x{threads}: elided cycles"
+            );
+            assert_eq!(want.makespan_cycles, got.makespan_cycles);
+            assert_eq!(want.per_node_served, got.per_node_served);
+            assert_eq!(want.queue_wait.samples(), got.queue_wait.samples());
+            assert_eq!(want.latency.samples(), got.latency.samples());
+            // IcapElided / CacheEvict events ride the same contract.
+            assert_eq!(
+                want.events, got.events,
+                "{policy:?} x{threads}: telemetry event stream"
+            );
+        }
+    }
+}
+
 #[test]
 fn oracle_mode_is_byte_identical_across_thread_counts() {
     // Fast-path off: every request runs cycle-by-cycle, and the sharded
