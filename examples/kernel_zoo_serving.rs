@@ -1,0 +1,192 @@
+//! Kernel-zoo serving: config-declared kernels next to the seed three.
+//!
+//! ```bash
+//! cargo run --release --example kernel_zoo_serving           # 20k requests
+//! cargo run --release --example kernel_zoo_serving -- 4000   # CI smoke
+//! ```
+//!
+//! Until the kernel registry (DESIGN.md §17), every layer of the stack
+//! was hard-wired to the three-variant module enum: a new tenant kernel
+//! meant editing `rust/src/modules/` and every `match` above it.  This
+//! example provisions a three-kernel zoo purely from a `[kernels]`
+//! config table — no source edits — and drives it through the two
+//! serving planes on 16-port boards:
+//!
+//! 1. **Fleet serving** — a mixed seed/zoo trace over two boards with
+//!    same-app batching and the resident-module configuration cache;
+//!    zoo shapes memoize, batch, and rebind exactly like seed shapes;
+//! 2. **Closed-loop autoscaling** — six diurnal tenants, half chaining
+//!    zoo kernels and half the seed pipeline, scaled by the predictive
+//!    policy against the static even split.
+
+use elastic_fpga::autoscale::{
+    run_tenant_scenario, serving_profile_on, AutoscaleReport, PolicyKind,
+};
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::fleet::{AdmissionPolicy, Fleet};
+use elastic_fpga::kernels;
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::workload::{self, generate_count, WorkloadSpec};
+
+const NODES: usize = 2;
+const TENANTS: u32 = 6;
+const PERIOD_S: f64 = 10.0;
+const SEED: u64 = 1;
+
+/// The zoo, exactly as an operator would declare it: three synthetic
+/// table kernels with different latency models and masks, parsed from
+/// the same `[kernels.<name>]` schema `--kernels FILE` accepts.
+const ZOO_TOML: &str = "\
+[kernels.zoo-mul3]
+op = \"mul\"
+operand = 3
+latency_base = 2
+latency_per_word = 1
+
+[kernels.zoo-xor-mix]
+op = \"xor\"
+operand = 0x9E3779B1
+latency_base = 1
+
+[kernels.zoo-rot13]
+op = \"rotl\"
+operand = 13
+mask = 0x00FFFFFF
+latency_base = 4
+latency_per_word = 2
+";
+
+fn scale16_cfg() -> SystemConfig {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/scale16.toml");
+    let cfg = SystemConfig::load(std::path::Path::new(path))
+        .expect("configs/scale16.toml must parse");
+    serving_profile_on(cfg)
+}
+
+fn fleet_leg(cfg: &SystemConfig, zoo: &[ModuleKind], requests: usize) {
+    let mut cfg = cfg.clone();
+    cfg.manager.config_cache_regions = 6;
+    let trace = generate_count(&WorkloadSpec::zoo_mix(zoo), SEED, requests);
+    let mut fleet =
+        Fleet::launch(NODES, &cfg, None, AdmissionPolicy::LeastLoaded, true);
+    fleet.batch_window = 4;
+    let t0 = std::time::Instant::now();
+    let report = fleet.run_trace(&trace).expect("zoo trace must serve");
+    let wall = t0.elapsed();
+    assert_eq!(report.completed, requests as u64, "requests lost");
+    let zoo_served = report
+        .outcomes
+        .iter()
+        .zip(trace.iter())
+        .filter(|(_, e)| e.request.stages.iter().any(|k| zoo.contains(k)))
+        .count();
+    assert!(zoo_served > 0, "the mix never emitted a zoo request");
+    println!(
+        "fleet: {}/{} served ({zoo_served} zoo-kernel requests) | \
+         makespan {:.1} ms | {} batches | cache {} hits / {} misses | \
+         wall {wall:.2?}",
+        report.completed,
+        requests,
+        cfg.cycles_to_ms(report.makespan_cycles),
+        report.batches_formed,
+        report.config_cache_hits,
+        report.config_cache_misses,
+    );
+}
+
+fn describe(cfg: &SystemConfig, name: &str, r: &AutoscaleReport) {
+    let mut wait = r.queue_wait.clone();
+    println!(
+        "{name} ({}): util {:.1}% | queue wait p50 {:.2} ms p99 {:.2} ms | \
+         SLO {:.1}% | fabric/cpu {}/{} | grows {} shrinks {} | icap {}",
+        r.policy,
+        r.utilization * 100.0,
+        cfg.cycles_to_ms(wait.percentile(0.50)),
+        cfg.cycles_to_ms(wait.percentile(0.99)),
+        r.slo_attainment * 100.0,
+        r.fabric_requests,
+        r.cpu_requests,
+        r.grows,
+        r.shrinks,
+        r.icap_events.len(),
+    );
+}
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .map(|a| a.parse().expect("usage: kernel_zoo_serving [requests]"))
+        .unwrap_or(20_000);
+    let decls = SystemConfig::parse(ZOO_TOML)
+        .expect("zoo [kernels] tables must parse")
+        .kernels;
+    let zoo = kernels::install_declared(&decls, None)
+        .expect("zoo declarations must validate");
+    println!(
+        "kernel zoo: installed {:?} next to seeds {:?}\n\
+         {} boards x {} PR regions, {TENANTS} tenants, {requests} requests\n",
+        zoo,
+        ModuleKind::pipeline(),
+        NODES,
+        scale16_cfg().fabric.num_pr_regions,
+    );
+    let cfg = scale16_cfg();
+
+    fleet_leg(&cfg, &zoo, requests);
+
+    // Six tenants, chains cycling through the zoo and the seed
+    // pipeline: tenant i runs chains[i % 4].
+    let chains = vec![
+        vec![zoo[0]],
+        ModuleKind::pipeline().to_vec(),
+        vec![zoo[1], zoo[2]],
+        vec![ModuleKind::Multiplier, zoo[0]],
+    ];
+    let tenants =
+        workload::zoo_tenants(TENANTS, &chains, 30.0, 450.0, PERIOD_S, 64);
+    let t0 = std::time::Instant::now();
+    let rep = run_tenant_scenario(
+        &cfg,
+        NODES,
+        &tenants,
+        requests,
+        SEED,
+        true,
+        PolicyKind::Predictive,
+    )
+    .expect("scenario must complete");
+    println!("(simulated in {:.2?})", t0.elapsed());
+    describe(&cfg, "autoscaled", &rep.autoscaled);
+    describe(&cfg, "static    ", &rep.static_baseline);
+
+    let auto = &rep.autoscaled;
+    assert_eq!(auto.completed, requests as u64, "requests lost");
+    assert_eq!(
+        rep.static_baseline.completed,
+        requests as u64,
+        "requests lost by the baseline"
+    );
+    assert!(auto.fabric_requests > 0, "zoo chains never reached fabric");
+    // The point of the registry: zoo kernels in live ICAP programmings,
+    // placed by a control loop that never heard of them at compile time.
+    let zoo_programmed = auto
+        .icap_events
+        .iter()
+        .filter(|e| match e.kind {
+            elastic_fpga::autoscale::IcapEventKind::Program(k) => {
+                zoo.contains(&k)
+            }
+            _ => false,
+        })
+        .count();
+    assert!(
+        zoo_programmed > 0,
+        "no ICAP programming ever streamed a zoo kernel"
+    );
+    println!(
+        "\nOK: {zoo_programmed} zoo-kernel ICAP programmings, \
+         utilization {:.1}% vs static {:.1}%",
+        auto.utilization * 100.0,
+        rep.static_baseline.utilization * 100.0
+    );
+}

@@ -44,6 +44,9 @@ RANGE_KEYS = {
     "batch_efficiency": (0.0, 1.0),
     "h2c_share_error": (0.0, 0.05),
     "config_cache_hit_rate": (0.0, 1.0),
+    # DESIGN.md §17: the kernel-zoo bench mix routes a bounded share of
+    # traffic to config-declared kernels — a fraction by construction.
+    "zoo_stage_fraction": (0.0, 1.0),
 }
 
 

@@ -238,6 +238,49 @@ fn main() {
         );
     }
 
+    // Kernel zoo (DESIGN.md §17): two config-declared table kernels in
+    // the serving mix.  Zoo shapes must memoize, shard, and batch
+    // exactly like seed shapes, and the sharded schedule must stay
+    // byte-identical with the extra registry entries live.
+    let zoo = {
+        let decls = SystemConfig::parse(
+            "[kernels.bench-zoo-mul5]\nop = \"mul\"\noperand = 5\n\
+             latency_base = 2\nlatency_per_word = 1\n\n\
+             [kernels.bench-zoo-rot11]\nop = \"rotl\"\noperand = 11\n\
+             mask = 0x00FFFFFF\nlatency_base = 3\n",
+        )
+        .expect("zoo declarations parse")
+        .kernels;
+        elastic_fpga::kernels::install_declared(&decls, None)
+            .expect("zoo declarations validate")
+    };
+    let zoo_trace =
+        generate_count(&WorkloadSpec::zoo_mix(&zoo), 0x200, requests);
+    let z1 = run_fleet(&cfg, &zoo_trace, 1, true, 4);
+    let z4 = run_fleet(&cfg, &zoo_trace, 4, true, 4);
+    let zoo_requests = zoo_trace
+        .iter()
+        .filter(|e| e.request.stages.iter().any(|k| zoo.contains(k)))
+        .count();
+    let zoo_fraction = zoo_requests as f64 / zoo_trace.len() as f64;
+    claims.check(
+        z1.report.completed == zoo_trace.len() as u64,
+        "zoo trace fully served",
+    );
+    claims.check(zoo_requests > 0, "zoo mix emits zoo-kernel requests");
+    claims.check(
+        z1.report.outcomes == z4.report.outcomes
+            && z1.report.makespan_cycles == z4.report.makespan_cycles,
+        "zoo schedule byte-identical at 1 vs 4 threads",
+    );
+    println!(
+        "  kernel zoo: {} requests ({zoo_requests} on zoo kernels) | \
+         makespan {:.1} ms | {} distinct shapes",
+        zoo_trace.len(),
+        cfg.cycles_to_ms(z1.report.makespan_cycles),
+        z1.report.oracle_runs,
+    );
+
     if !smoke {
         // Wall-clock scaling claim only in the full run: CI smoke boxes
         // are too small/noisy to pin a speedup.
@@ -333,6 +376,24 @@ fn main() {
             hit_rate,
             r.report.icap_cycles_elided,
             if i + 1 < cache_runs.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"kernel_zoo\": [\n");
+    {
+        let mut tp = CycleThroughput::new();
+        tp.record_items(z1.report.completed, 0);
+        tp.set_cycles(z1.report.makespan_cycles);
+        json.push_str(&format!(
+            "    {{\"name\": \"zoo\", \"requests\": {}, \
+             \"requests_per_s\": {:.1}, \"makespan_ms\": {:.2}, \
+             \"virtual_req_per_mcycle\": {:.3}, \
+             \"zoo_stage_fraction\": {:.4}, \"distinct_shapes\": {}}}\n",
+            zoo_trace.len(),
+            zoo_trace.len() as f64 / z1.wall_s.max(1e-9),
+            cfg.cycles_to_ms(z1.report.makespan_cycles),
+            tp.items_per_mcycle(),
+            zoo_fraction,
+            z1.report.oracle_runs,
         ));
     }
     json.push_str("  ]\n}\n");

@@ -90,6 +90,32 @@ pub mod table1 {
     ];
 }
 
+/// Per-kernel area from the registry (DESIGN.md §17): the seed kernels
+/// keep their Table I-measured rows; table/artifact-backed kernels
+/// report the LUT/FF cost their declaration carried.  This is the
+/// bridge the autoscaler and Table-scaling benches use to cost a
+/// registered kernel without a closed enum match.
+pub fn module_area(kind: crate::modules::ModuleKind) -> ComponentArea {
+    use crate::modules::ModuleKind;
+    match kind {
+        ModuleKind::Multiplier => table1::WB_MULTIPLIER,
+        ModuleKind::HammingEncoder => table1::WB_HAMMING_ENCODER,
+        ModuleKind::HammingDecoder => table1::HAMMING_DECODER,
+        other => {
+            let spec = other.spec();
+            ComponentArea::new(spec.luts, spec.ffs, 0.0, None)
+        }
+    }
+}
+
+/// Area of a stage chain: the sum of its kernels' areas.
+pub fn chain_area(stages: &[crate::modules::ModuleKind]) -> ComponentArea {
+    stages
+        .iter()
+        .map(|&k| module_area(k))
+        .fold(ComponentArea::new(0, 0, 0.0, None), ComponentArea::plus)
+}
+
 /// Table II rows: prior-art comparison points as quoted by the paper.
 pub mod table2 {
     use super::ComponentArea;
@@ -396,6 +422,37 @@ mod tests {
         assert_eq!(banked_regfile_registers(16), 122);
         assert!(banked_regfile_registers(16) > regfile_registers(15));
         assert!(banked_regfile_area(16).luts > regfile_area(15).luts);
+    }
+
+    #[test]
+    fn module_area_covers_seeds_and_registered_kernels() {
+        use crate::modules::ModuleKind;
+        assert_eq!(module_area(ModuleKind::Multiplier), table1::WB_MULTIPLIER);
+        assert_eq!(
+            module_area(ModuleKind::HammingEncoder),
+            table1::WB_HAMMING_ENCODER
+        );
+        assert_eq!(
+            module_area(ModuleKind::HammingDecoder),
+            table1::HAMMING_DECODER
+        );
+        let id = crate::kernels::register(
+            crate::kernels::KernelDecl {
+                name: "area-test-k".into(),
+                op: Some("xor".into()),
+                luts: 777,
+                ffs: 333,
+                ..crate::kernels::KernelDecl::default()
+            },
+            None,
+        )
+        .unwrap();
+        let a = module_area(id);
+        assert_eq!((a.luts, a.ffs), (777, 333));
+        // Chain area sums component-wise.
+        let chain = chain_area(&[ModuleKind::Multiplier, id]);
+        assert_eq!(chain.luts, table1::WB_MULTIPLIER.luts + 777);
+        assert_eq!(chain.ffs, table1::WB_MULTIPLIER.ffs + 333);
     }
 
     #[test]

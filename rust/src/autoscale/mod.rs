@@ -1219,6 +1219,50 @@ pub fn run_diurnal_scenario(
     Ok(ScenarioReport { autoscaled, static_baseline })
 }
 
+/// Run the autoscaled-vs-static comparison on explicit tenant specs
+/// instead of the canned diurnal profile.  This is the kernel-registry
+/// face of the scenario driver (DESIGN.md §17): tenants may chain any
+/// registered [`ModuleKind`] — seed, `[kernels]`-table or
+/// artifact-backed — and the engine infers each app's chain from the
+/// trace, so a config-declared kernel flows through monitor, policy,
+/// ICAP actuation and bandwidth-plan recompilation with no special
+/// casing (`examples/kernel_zoo_serving.rs`).
+pub fn run_tenant_scenario(
+    cfg: &SystemConfig,
+    nodes: usize,
+    tenants: &[workload::TenantSpec],
+    requests: usize,
+    seed: u64,
+    churn: bool,
+    policy: PolicyKind,
+) -> Result<ScenarioReport> {
+    assert!(!tenants.is_empty(), "run_tenant_scenario needs >= 1 tenant");
+    let trace = workload::generate_profiled(tenants, seed, requests);
+    let duration_ms = trace.last().map(|e| e.arrival_ms).unwrap_or(0.0);
+    let churn_trace = if churn {
+        ChurnTrace::generate(seed ^ 0xC0FFEE, nodes, duration_ms)
+    } else {
+        ChurnTrace::none()
+    };
+    let mut auto_engine = Engine::new(
+        cfg,
+        nodes,
+        tenants.len(),
+        policy.build(),
+        EngineOptions::default(),
+    );
+    let autoscaled = auto_engine.run(&trace, &churn_trace)?;
+    let mut static_engine = Engine::new(
+        cfg,
+        nodes,
+        tenants.len(),
+        Box::new(StaticPolicy),
+        EngineOptions { reactive: false, ..EngineOptions::default() },
+    );
+    let static_baseline = static_engine.run(&trace, &churn_trace)?;
+    Ok(ScenarioReport { autoscaled, static_baseline })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -118,6 +118,10 @@ subcommands:
 common flags:
   --artifacts DIR    artifact directory (default: artifacts)
   --config FILE      TOML config overlay
+  --kernels FILE     TOML file of extra [kernels.<name>] declarations,
+                     installed into the kernel registry on top of the
+                     config overlay's tables; duplicate names are
+                     refused (DESIGN.md §17)
   --plan SPEC        per-app bandwidth shares, app=ppu pairs out of 1000
                      (e.g. `--plan 0=750,1=250`; overrides [qos.shares];
                      refused by `autoscale`, which derives shares from

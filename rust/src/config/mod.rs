@@ -9,6 +9,7 @@ pub mod toml;
 
 use std::path::Path;
 
+use crate::kernels::KernelDecl;
 use crate::Result;
 use toml::TomlDoc;
 
@@ -196,6 +197,11 @@ pub struct SystemConfig {
     pub qos: QosConfig,
     /// Artifact directory (HLO text + manifest.json).
     pub artifact_dir: String,
+    /// Kernel declarations from `[kernels.<name>]` tables (DESIGN.md
+    /// §17), in sorted-name order.  Empty by default: the registry then
+    /// holds only the three seed kernels and behavior is byte-identical
+    /// to the pre-registry system.
+    pub kernels: Vec<KernelDecl>,
 }
 
 impl SystemConfig {
@@ -245,6 +251,128 @@ impl SystemConfig {
             shares.push((app, ppu as u32));
         }
         Ok(shares)
+    }
+
+    /// Parse the `[kernels.<name>]` tables into declarations (DESIGN.md
+    /// §17).  A bare `[kernels]` header with no kernel subtables, an
+    /// empty `[kernels.<name>]` table, and unknown fields are all typed
+    /// refusals — a declaration either means something or fails loudly.
+    /// Semantic validation (reserved names, family rules, latency and
+    /// geometry ranges, manifest cross-checks) happens at registration
+    /// in [`crate::kernels::register`].
+    pub fn kernel_decls_from_doc(doc: &TomlDoc) -> Result<Vec<KernelDecl>> {
+        if !doc.has_table("kernels") {
+            return Ok(Vec::new());
+        }
+        let names = doc.tables_under("kernels");
+        if names.is_empty() {
+            return Err(crate::ElasticError::Config(
+                "[kernels] declared but empty — declare kernels as \
+                 [kernels.<name>] subtables or drop the section"
+                    .into(),
+            ));
+        }
+        let mut decls = Vec::with_capacity(names.len());
+        for name in names {
+            let prefix = format!("kernels.{name}");
+            let keys = doc.keys_under(&prefix);
+            if keys.is_empty() {
+                return Err(crate::ElasticError::Config(format!(
+                    "[kernels.{name}] is empty — a kernel needs at least \
+                     an op or artifact field"
+                )));
+            }
+            let mut decl = KernelDecl { name: name.to_string(), ..KernelDecl::default() };
+            for key in keys {
+                let field = &key[prefix.len() + 1..];
+                let val = doc.get(key).expect("key came from the doc");
+                let set = |v: &toml::TomlValue, what: &str| {
+                    v.as_i64()
+                        .filter(|&x| (0..=u32::MAX as i64).contains(&x))
+                        .map(|x| x as u32)
+                        .ok_or_else(|| {
+                            crate::ElasticError::Config(format!(
+                                "[kernels.{name}] {what} must be a u32"
+                            ))
+                        })
+                };
+                match field {
+                    "op" => {
+                        decl.op = Some(
+                            val.as_str()
+                                .ok_or_else(|| {
+                                    crate::ElasticError::Config(format!(
+                                        "[kernels.{name}] op must be a string"
+                                    ))
+                                })?
+                                .to_string(),
+                        );
+                    }
+                    "artifact" => {
+                        decl.artifact = Some(
+                            val.as_str()
+                                .ok_or_else(|| {
+                                    crate::ElasticError::Config(format!(
+                                        "[kernels.{name}] artifact must be a string"
+                                    ))
+                                })?
+                                .to_string(),
+                        );
+                    }
+                    "operand" => decl.operand = set(val, "operand")?,
+                    "mask" => decl.mask = set(val, "mask")?,
+                    "latency_base" => {
+                        decl.latency_base = set(val, "latency_base")?
+                    }
+                    "latency_per_word" => {
+                        decl.latency_per_word = set(val, "latency_per_word")?
+                    }
+                    "input_words" => {
+                        decl.input_words =
+                            Some(val.as_usize().ok_or_else(|| {
+                                crate::ElasticError::Config(format!(
+                                    "[kernels.{name}] input_words must be \
+                                     a non-negative integer"
+                                ))
+                            })?)
+                    }
+                    "batch_words" => {
+                        decl.batch_words = val.as_usize().ok_or_else(|| {
+                            crate::ElasticError::Config(format!(
+                                "[kernels.{name}] batch_words must be a \
+                                 non-negative integer"
+                            ))
+                        })?
+                    }
+                    "luts" => decl.luts = set(val, "luts")? as u64,
+                    "ffs" => decl.ffs = set(val, "ffs")? as u64,
+                    other => {
+                        return Err(crate::ElasticError::Config(format!(
+                            "[kernels.{name}] unknown field '{other}' \
+                             (known: op, operand, mask, artifact, \
+                             input_words, batch_words, latency_base, \
+                             latency_per_word, luts, ffs)"
+                        )));
+                    }
+                }
+            }
+            decls.push(decl);
+        }
+        Ok(decls)
+    }
+
+    /// Load only the kernel declarations from a TOML file (the
+    /// `--kernels FILE` CLI path).  The file must actually declare
+    /// kernels: a kernels file without a `[kernels]` section is a typo,
+    /// not an empty registry.
+    pub fn load_kernel_decls(path: &Path) -> Result<Vec<KernelDecl>> {
+        let doc = TomlDoc::load(path)?;
+        if !doc.has_table("kernels") {
+            return Err(crate::ElasticError::Config(format!(
+                "{path:?} has no [kernels] section"
+            )));
+        }
+        Self::kernel_decls_from_doc(&doc)
     }
 
     fn from_doc(doc: &TomlDoc) -> Result<Self> {
@@ -351,6 +479,7 @@ impl SystemConfig {
             },
             qos,
             artifact_dir: doc.str_or("artifact_dir", &d.artifact_dir),
+            kernels: Self::kernel_decls_from_doc(doc)?,
         })
     }
 
@@ -459,6 +588,56 @@ mod tests {
         // head-of-line blocking.  Both fail at parse time.
         assert!(SystemConfig::parse("[server]\nbatch_window = 0\n").is_err());
         assert!(SystemConfig::parse("[server]\nbatch_window = 65\n").is_err());
+    }
+
+    #[test]
+    fn kernels_tables_parse_into_declarations() {
+        let c = SystemConfig::parse(
+            "[kernels.heavy-mul]\nop = \"mul\"\noperand = 0x9E37_79B1\n\
+             latency_base = 64\nlatency_per_word = 8\nluts = 900\nffs = 500\n\
+             [kernels.light-xor]\nop = \"xor\"\noperand = 255\nmask = 0xFFFF\n",
+        )
+        .unwrap();
+        assert_eq!(c.kernels.len(), 2);
+        // Sorted-name order (BTreeMap-backed doc) => deterministic
+        // registration order.
+        assert_eq!(c.kernels[0].name, "heavy-mul");
+        assert_eq!(c.kernels[0].op.as_deref(), Some("mul"));
+        assert_eq!(c.kernels[0].operand, 0x9E37_79B1);
+        assert_eq!(c.kernels[0].latency_base, 64);
+        assert_eq!(c.kernels[0].latency_per_word, 8);
+        assert_eq!(c.kernels[0].luts, 900);
+        assert_eq!(c.kernels[1].name, "light-xor");
+        assert_eq!(c.kernels[1].mask, 0xFFFF);
+        // No [kernels] section at all: empty declaration list.
+        assert!(SystemConfig::parse("[fabric]\nnum_ports = 4\n")
+            .unwrap()
+            .kernels
+            .is_empty());
+    }
+
+    #[test]
+    fn hostile_kernels_tables_are_refused() {
+        // Bare [kernels] with no subtables.
+        assert!(SystemConfig::parse("[kernels]\n").is_err());
+        // Empty [kernels.<name>] table.
+        assert!(SystemConfig::parse("[kernels.ghost]\n").is_err());
+        // Unknown field.
+        assert!(SystemConfig::parse(
+            "[kernels.k]\nop = \"mul\"\nspeed = 9\n"
+        )
+        .is_err());
+        // Type confusion.
+        assert!(SystemConfig::parse("[kernels.k]\nop = 3\n").is_err());
+        assert!(SystemConfig::parse(
+            "[kernels.k]\nop = \"mul\"\noperand = \"x\"\n"
+        )
+        .is_err());
+        // u32 overflow must fail, not wrap (2^32 + 1).
+        assert!(SystemConfig::parse(
+            "[kernels.k]\nop = \"mul\"\noperand = 4294967297\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -64,12 +64,17 @@ impl TomlValue {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TomlDoc {
     values: BTreeMap<String, TomlValue>,
+    /// Every `[section]` header that appeared, including empty ones —
+    /// so a bare `[kernels]` or empty `[kernels.foo]` table is
+    /// *visible* to validation instead of silently vanishing.
+    sections: std::collections::BTreeSet<String>,
 }
 
 impl TomlDoc {
     /// Parse a document.
     pub fn parse(text: &str) -> Result<Self> {
         let mut values = BTreeMap::new();
+        let mut sections = std::collections::BTreeSet::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
@@ -88,6 +93,7 @@ impl TomlDoc {
                     return Err(err(lineno, "empty section name"));
                 }
                 section = name.to_string();
+                sections.insert(section.clone());
                 continue;
             }
             let (key, val) = line
@@ -107,7 +113,7 @@ impl TomlDoc {
                 return Err(err(lineno, &format!("duplicate key '{full}'")));
             }
         }
-        Ok(Self { values })
+        Ok(Self { values, sections })
     }
 
     /// Load from a file.
@@ -127,6 +133,29 @@ impl TomlDoc {
             .keys()
             .filter(|k| k.starts_with(&dotted))
             .map(|k| k.as_str())
+            .collect()
+    }
+
+    /// Did the document declare `[name]` (or any `[name.sub]`) as a
+    /// section header — even an empty one?
+    pub fn has_table(&self, name: &str) -> bool {
+        let dotted = format!("{name}.");
+        self.sections
+            .iter()
+            .any(|s| s == name || s.starts_with(&dotted))
+    }
+
+    /// Immediate child-table names declared under `[prefix.<child>]`
+    /// headers, sorted (BTreeSet order) and deduplicated — includes
+    /// children whose tables carry no keys.
+    pub fn tables_under(&self, prefix: &str) -> Vec<&str> {
+        let dotted = format!("{prefix}.");
+        self.sections
+            .iter()
+            .filter_map(|s| s.strip_prefix(&dotted))
+            .map(|rest| rest.split('.').next().unwrap_or(rest))
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
             .collect()
     }
 
@@ -292,6 +321,20 @@ mod tests {
         assert!(TomlDoc::parse("= 3").is_err());
         assert!(TomlDoc::parse("a = 1\na = 2").is_err());
         assert!(TomlDoc::parse("[[tables]]\n").is_err());
+    }
+
+    #[test]
+    fn tracks_section_headers_even_when_empty() {
+        let doc = TomlDoc::parse(
+            "[kernels]\n[kernels.heavy]\nop = \"mul\"\n[kernels.empty]\n",
+        )
+        .unwrap();
+        assert!(doc.has_table("kernels"));
+        assert!(!doc.has_table("qos"));
+        assert_eq!(doc.tables_under("kernels"), vec!["empty", "heavy"]);
+        let none = TomlDoc::parse("a = 1").unwrap();
+        assert!(!none.has_table("kernels"));
+        assert!(none.tables_under("kernels").is_empty());
     }
 
     #[test]

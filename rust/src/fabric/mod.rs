@@ -205,8 +205,7 @@ impl Fabric {
         app_id: u32,
     ) {
         assert!(region > 0 && region < self.xbar.ports(), "bad region {region}");
-        let mut m = ComputationModule::new(kind, region, app_id);
-        m.batch_words = BRIDGE_BUFFER_WORDS;
+        let mut m = ComputationModule::from_spec(kind, region, app_id);
         m.dest_onehot = self
             .regfile
             .pr_destination(region)
@@ -227,7 +226,7 @@ impl Fabric {
     /// the handoff.
     pub fn park_region(&mut self, region: usize, kind: ModuleKind) {
         assert!(region > 0 && region < self.xbar.ports(), "bad region {region}");
-        let m = ComputationModule::new(kind, region, 0);
+        let m = ComputationModule::from_spec(kind, region, 0);
         self.modules[region] = Some(m);
         self.regfile
             .set_port_reset(region, true)
@@ -410,8 +409,7 @@ impl Fabric {
             ok: done.ok,
         });
         if done.ok {
-            let mut m = ComputationModule::new(done.kind, done.region, done.app_id);
-            m.batch_words = BRIDGE_BUFFER_WORDS;
+            let mut m = ComputationModule::from_spec(done.kind, done.region, done.app_id);
             m.dest_onehot = self
                 .regfile
                 .pr_destination(done.region)
@@ -475,12 +473,16 @@ impl Fabric {
     }
 
     fn tick_modules(&mut self) {
-        // Field-disjoint borrows: `self.modules`, `self.xbar`, and
-        // `self.rx_scratch` never alias (§Perf: avoids moving the module
-        // struct in and out of its slot every cycle).
+        // Field-disjoint borrows: `self.modules`, `self.xbar`,
+        // `self.rx_scratch`, `self.regfile`, and `self.telemetry` never
+        // alias (§Perf: avoids moving the module struct in and out of
+        // its slot every cycle).
         let modules = &mut self.modules;
         let xbar = &mut self.xbar;
         let scratch = &mut self.rx_scratch;
+        let regfile = &mut self.regfile;
+        let telemetry = &mut self.telemetry;
+        let cycle = self.cycle;
         for p in 1..xbar.ports() {
             let Some(m) = modules[p].as_mut() else { continue };
             let cap = m.absorb_capacity();
@@ -491,7 +493,37 @@ impl Fabric {
                 debug_assert_eq!(absorbed, scratch.len());
             }
             if let Some(job) = m.tick() {
-                xbar.push_job(p, job);
+                // Boundary validation (DESIGN.md §17): the shell does
+                // not trust the hosted kernel's output registers.  A
+                // batch with the wrong word count or an out-of-mask
+                // word is dropped here — it never reaches the crossbar
+                // — and the violation latches into the module's error
+                // register, the PR error-status register, and the
+                // owning app's error spill, exactly like a masked
+                // wishbone violation.
+                let mask = m.kind.spec().output_mask;
+                let honest = job.words.len() == m.batch_words
+                    && job.words.iter().all(|&w| w & !mask == 0);
+                if honest {
+                    xbar.push_job(p, job);
+                } else {
+                    let app_id = m.app_id;
+                    m.on_send_complete(Err(WbError::ContractViolation));
+                    let _ = regfile
+                        .set_pr_error(p, Some(WbError::ContractViolation));
+                    if regfile.layout().covers_app(app_id as usize) {
+                        let _ = regfile.set_app_error(
+                            app_id as usize,
+                            Some(WbError::ContractViolation),
+                        );
+                    }
+                    telemetry.emit_with(|| TraceEvent::ViolationMasked {
+                        cycle,
+                        app: app_id,
+                        port: p,
+                        err: wb_error_name(WbError::ContractViolation),
+                    });
+                }
             }
         }
     }

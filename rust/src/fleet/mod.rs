@@ -9,7 +9,10 @@
 //! with an **admission-control policy**, and migrates overflow work —
 //! stage chains that would spill onto the server CPU of a constrained
 //! board — to any board with enough free PR regions to host the whole
-//! chain on fabric.
+//! chain on fabric.  Stage chains are [`ModuleKind`]s from the pluggable
+//! kernel registry ([`crate::kernels`], DESIGN.md §17): shape keys,
+//! resident-module affinity and the config cache treat a
+//! `[kernels]`-declared kernel exactly like a seed one.
 //!
 //! # Virtual time and the event-driven fast-path
 //!

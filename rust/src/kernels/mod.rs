@@ -1,0 +1,1017 @@
+//! Manifest-driven kernel registry (DESIGN.md §17): the pluggable
+//! tenant-kernel runtime that replaces the closed `ModuleKind` enum.
+//!
+//! A kernel is a [`KernelSpec`] identity — stable [`KernelId`], display
+//! name, artifact key, input geometry, per-word latency model, area
+//! cost — plus a [`ModuleBehavior`] giving it a golden buffer
+//! transform, a compute-countdown horizon, and the `fast_forward`
+//! arithmetic the event-driven fast path relies on (DESIGN.md §12).
+//! Three families are built in:
+//!
+//! * **Seed** — the paper's three prototype modules (constant
+//!   multiplier, Hamming(31,26) encoder/decoder).  They occupy ids
+//!   0..=2, are resolved through a static table (no lock, no
+//!   allocation), and are byte-identical to the pre-registry enum at
+//!   the default registry.
+//! * **Table** — synthetic kernels declared in a `[kernels.<name>]`
+//!   config table: a parameterized word transform (`mul`/`add`/`xor`/
+//!   `rotl`/`and` + output mask) with configurable latency, geometry
+//!   and area.  These open the kernel-zoo scenario space without any
+//!   edit to `rust/src/modules/`.
+//! * **Artifact** — AOT-artifact-backed kernels executing the
+//!   interpreter kernel of an existing [`crate::runtime`] manifest
+//!   entry; geometry and dtype are cross-checked against the
+//!   [`ArtifactManifest`] before registration (Omniglot-style boundary
+//!   validation), and on-server stages run through the PJRT path.
+//!
+//! Everything is validated at the boundary: hostile declarations
+//! (reserved seed names, duplicate names, zero/absurd latency,
+//! geometry lies vs the manifest) are refused with typed
+//! [`ElasticError`]s; at run time the fabric length/mask-validates
+//! every batch a module emits before it re-enters the shell
+//! ([`KernelSpec::output_mask`]), containing a misbehaving kernel as a
+//! `pr_error` latch instead of corrupted fabric state.
+
+use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+use crate::hamming;
+use crate::runtime::ArtifactManifest;
+use crate::xdma::BRIDGE_BUFFER_WORDS;
+use crate::{ElasticError, Result};
+
+/// Number of built-in seed kernels (ids `0..SEED_KERNELS`).
+pub const SEED_KERNELS: usize = 3;
+
+/// Registry capacity guard: latency models beyond this are refused as
+/// absurd (a single batch would stall a lane for ~a simulated second).
+const MAX_LATENCY_BASE: u32 = 1 << 20;
+/// Per-word latency cap (same rationale).
+const MAX_LATENCY_PER_WORD: u32 = 1 << 12;
+
+/// Stable identity of a registered kernel.
+///
+/// Seed kernels keep their historical `ModuleKind`-style names as
+/// associated constants, so `ModuleKind::Multiplier` (via the
+/// [`crate::modules::ModuleKind`] re-export) still works in both value
+/// and pattern position.  Ids are dense: `0..SEED_KERNELS` are the
+/// seeds, registration order numbers the rest.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelId(u16);
+
+impl KernelId {
+    /// Constant multiplier (wrapping u32 multiply) — seed kernel 0.
+    #[allow(non_upper_case_globals)]
+    pub const Multiplier: KernelId = KernelId(0);
+    /// Hamming(31,26) encoder — seed kernel 1.
+    #[allow(non_upper_case_globals)]
+    pub const HammingEncoder: KernelId = KernelId(1);
+    /// Hamming(31,26) decoder (single-error correction) — seed kernel 2.
+    #[allow(non_upper_case_globals)]
+    pub const HammingDecoder: KernelId = KernelId(2);
+
+    /// Is this one of the three built-in seed kernels?
+    pub fn is_seed(self) -> bool {
+        (self.0 as usize) < SEED_KERNELS
+    }
+
+    /// The kernel's registered spec.  Seed ids resolve through a static
+    /// table (no lock); registered ids take a read lock but never
+    /// allocate — the hot-path contract of DESIGN.md §17.
+    pub fn spec(self) -> &'static KernelSpec {
+        if let Some(s) = seed_specs().get(self.0 as usize) {
+            return s;
+        }
+        let reg = registry().read().unwrap();
+        reg.get(self.0 as usize - SEED_KERNELS)
+            .map(|r| r.spec)
+            .expect("KernelId minted by the registry")
+    }
+
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// The AOT artifact key associated with this kernel: the manifest
+    /// key for seed and artifact-backed kernels (matching
+    /// `python/compile/model.py::EXPORTS`), the kernel's own name for
+    /// table-driven kernels (which have no AOT artifact).
+    pub fn artifact(self) -> &'static str {
+        let spec = self.spec();
+        spec.artifact.unwrap_or(spec.name)
+    }
+
+    /// The manifest artifact this kernel's on-server stage may execute
+    /// through the PJRT path, if any.  `None` for table-driven kernels:
+    /// their CPU stages run the golden transform directly instead of
+    /// erroring on an unknown manifest key.
+    pub fn pjrt_artifact(self) -> Option<&'static str> {
+        self.spec().artifact
+    }
+
+    /// The per-word combinational function (golden model).
+    pub fn apply_word(self, w: u32) -> u32 {
+        self.spec().behavior.apply_word(w)
+    }
+
+    /// Buffer-level golden transform.
+    pub fn apply_buf(self, buf: &[u32]) -> Vec<u32> {
+        self.spec().behavior.apply_buf(buf)
+    }
+
+    /// Compute-countdown cycles for one `batch_words` batch.
+    pub fn compute_cycles(self, batch_words: usize) -> u32 {
+        self.spec().behavior.compute_cycles(batch_words)
+    }
+
+    /// Fast-forward arithmetic over a running compute countdown
+    /// (DESIGN.md §12: exact, never crossing the horizon).
+    pub fn fast_forward_countdown(self, remaining: u32, skipped: u64) -> u32 {
+        self.spec().behavior.fast_forward(remaining, skipped)
+    }
+
+    /// The Fig-5 pipeline order.
+    pub fn pipeline() -> [KernelId; 3] {
+        [KernelId::Multiplier, KernelId::HammingEncoder, KernelId::HammingDecoder]
+    }
+}
+
+impl fmt::Debug for KernelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Print the registered name so logs stay readable; fall back to
+        // the raw id for an id whose registry entry cannot be resolved
+        // (only reachable from a poisoned-lock panic path).
+        if let Some(s) = seed_specs().get(self.0 as usize) {
+            return f.write_str(s.name);
+        }
+        match registry().try_read() {
+            Ok(reg) => match reg.get(self.0 as usize - SEED_KERNELS) {
+                Some(r) => f.write_str(r.spec.name),
+                None => write!(f, "kernel#{}", self.0),
+            },
+            Err(_) => write!(f, "kernel#{}", self.0),
+        }
+    }
+}
+
+/// The behavior contract every kernel implements: its golden transform
+/// plus the two pieces of arithmetic the event-driven fast path needs
+/// to model it without ticking (DESIGN.md §12, §17).
+pub trait ModuleBehavior: Send + Sync {
+    /// Per-word combinational function.
+    fn apply_word(&self, w: u32) -> u32;
+
+    /// Buffer-level transform (1:1 by default; the shell's output
+    /// contract checks length and mask on every emitted batch).
+    fn apply_buf(&self, buf: &[u32]) -> Vec<u32> {
+        buf.iter().map(|&w| self.apply_word(w)).collect()
+    }
+
+    /// Compute-countdown horizon: cycles the computation units run for
+    /// one batch of `batch_words` words.  Must be ≥ 1 and constant per
+    /// geometry — the fast path folds it into exact skip arithmetic.
+    fn compute_cycles(&self, batch_words: usize) -> u32;
+
+    /// Advance a running countdown over `skipped` fast-forwarded
+    /// cycles.  Callers keep the skip strictly below the horizon.
+    fn fast_forward(&self, remaining: u32, skipped: u64) -> u32 {
+        debug_assert!(
+            (remaining as u64) > skipped,
+            "skip crossed the compute countdown"
+        );
+        remaining - skipped as u32
+    }
+}
+
+/// A registered kernel's identity and resource model.
+pub struct KernelSpec {
+    /// Stable registry id.
+    pub id: KernelId,
+    /// Display name (unique across the registry).
+    pub name: &'static str,
+    /// Manifest artifact key for PJRT-eligible kernels; `None` for
+    /// table-driven kernels.
+    pub artifact: Option<&'static str>,
+    /// Input geometry: words per module batch (the input-register
+    /// depth a PR-region instance is built with).  Must divide the
+    /// 8-word bridge burst so batches always fill.
+    pub batch_words: usize,
+    /// Latency model: fixed cycles per batch…
+    pub latency_base: u32,
+    /// …plus cycles per word in the batch.
+    pub latency_per_word: u32,
+    /// Every output word `w` must satisfy `w & mask == w`; the fabric
+    /// refuses (and latches `pr_error` for) batches that violate it.
+    pub output_mask: u32,
+    /// Area cost: LUTs (Table I-anchored for the seeds).
+    pub luts: u64,
+    /// Area cost: flip-flops.
+    pub ffs: u64,
+    behavior: &'static dyn ModuleBehavior,
+}
+
+impl KernelSpec {
+    /// Compute-countdown cycles for one batch of this spec's geometry.
+    pub fn compute_latency(&self) -> u32 {
+        self.behavior.compute_cycles(self.batch_words)
+    }
+}
+
+impl fmt::Debug for KernelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("KernelSpec")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("artifact", &self.artifact)
+            .field("batch_words", &self.batch_words)
+            .field("latency_base", &self.latency_base)
+            .field("latency_per_word", &self.latency_per_word)
+            .field("output_mask", &self.output_mask)
+            .field("luts", &self.luts)
+            .field("ffs", &self.ffs)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seed family.
+
+struct MultiplierBehavior;
+struct EncoderBehavior;
+struct DecoderBehavior;
+
+impl ModuleBehavior for MultiplierBehavior {
+    fn apply_word(&self, w: u32) -> u32 {
+        hamming::multiply_word(w, hamming::MULT_CONSTANT)
+    }
+    fn compute_cycles(&self, _batch_words: usize) -> u32 {
+        1 // parallel computation units -> 1 cc (§IV.H)
+    }
+}
+
+impl ModuleBehavior for EncoderBehavior {
+    fn apply_word(&self, w: u32) -> u32 {
+        hamming::encode_word(w)
+    }
+    fn compute_cycles(&self, _batch_words: usize) -> u32 {
+        1
+    }
+}
+
+impl ModuleBehavior for DecoderBehavior {
+    fn apply_word(&self, w: u32) -> u32 {
+        hamming::decode_word(w).0
+    }
+    fn compute_cycles(&self, _batch_words: usize) -> u32 {
+        1
+    }
+}
+
+static MULTIPLIER_BEHAVIOR: MultiplierBehavior = MultiplierBehavior;
+static ENCODER_BEHAVIOR: EncoderBehavior = EncoderBehavior;
+static DECODER_BEHAVIOR: DecoderBehavior = DecoderBehavior;
+
+/// The three seed specs.  Area is anchored on Table I's measured rows
+/// ([`crate::area::table1`]); masks are the true output invariants of
+/// the golden model, so the boundary check never fires for the seeds.
+fn seed_specs() -> &'static [KernelSpec; SEED_KERNELS] {
+    static SPECS: OnceLock<[KernelSpec; SEED_KERNELS]> = OnceLock::new();
+    SPECS.get_or_init(|| {
+        [
+            KernelSpec {
+                id: KernelId::Multiplier,
+                name: "multiplier",
+                artifact: Some("multiplier"),
+                batch_words: BRIDGE_BUFFER_WORDS,
+                latency_base: 1,
+                latency_per_word: 0,
+                output_mask: u32::MAX,
+                luts: crate::area::table1::WB_MULTIPLIER.luts,
+                ffs: crate::area::table1::WB_MULTIPLIER.ffs,
+                behavior: &MULTIPLIER_BEHAVIOR,
+            },
+            KernelSpec {
+                id: KernelId::HammingEncoder,
+                name: "hamming_enc",
+                artifact: Some("hamming_enc"),
+                batch_words: BRIDGE_BUFFER_WORDS,
+                latency_base: 1,
+                latency_per_word: 0,
+                output_mask: hamming::CODE_MASK,
+                luts: crate::area::table1::WB_HAMMING_ENCODER.luts,
+                ffs: crate::area::table1::WB_HAMMING_ENCODER.ffs,
+                behavior: &ENCODER_BEHAVIOR,
+            },
+            KernelSpec {
+                id: KernelId::HammingDecoder,
+                name: "hamming_dec",
+                artifact: Some("hamming_dec"),
+                batch_words: BRIDGE_BUFFER_WORDS,
+                latency_base: 1,
+                latency_per_word: 0,
+                output_mask: hamming::DATA_MASK,
+                luts: crate::area::table1::HAMMING_DECODER.luts,
+                ffs: crate::area::table1::HAMMING_DECODER.ffs,
+                behavior: &DECODER_BEHAVIOR,
+            },
+        ]
+    })
+}
+
+// ---------------------------------------------------------------------
+// Table family.
+
+/// The parameterized word transform of a table-driven kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TableOp {
+    Mul,
+    Add,
+    Xor,
+    Rotl,
+    And,
+}
+
+impl TableOp {
+    fn parse(s: &str) -> Option<TableOp> {
+        match s {
+            "mul" => Some(TableOp::Mul),
+            "add" => Some(TableOp::Add),
+            "xor" => Some(TableOp::Xor),
+            "rotl" => Some(TableOp::Rotl),
+            "and" => Some(TableOp::And),
+            _ => None,
+        }
+    }
+}
+
+struct TableBehavior {
+    op: TableOp,
+    operand: u32,
+    mask: u32,
+    latency_base: u32,
+    latency_per_word: u32,
+}
+
+impl ModuleBehavior for TableBehavior {
+    fn apply_word(&self, w: u32) -> u32 {
+        let x = match self.op {
+            TableOp::Mul => w.wrapping_mul(self.operand),
+            TableOp::Add => w.wrapping_add(self.operand),
+            TableOp::Xor => w ^ self.operand,
+            TableOp::Rotl => w.rotate_left(self.operand % 32),
+            TableOp::And => w & self.operand,
+        };
+        x & self.mask
+    }
+    fn compute_cycles(&self, batch_words: usize) -> u32 {
+        self.latency_base + self.latency_per_word * batch_words as u32
+    }
+}
+
+// ---------------------------------------------------------------------
+// Artifact family.
+
+struct ArtifactBehavior {
+    kernel: crate::runtime::StageFn,
+    latency_base: u32,
+    latency_per_word: u32,
+}
+
+impl ModuleBehavior for ArtifactBehavior {
+    fn apply_word(&self, w: u32) -> u32 {
+        (self.kernel)(&[w])[0]
+    }
+    fn apply_buf(&self, buf: &[u32]) -> Vec<u32> {
+        (self.kernel)(buf)
+    }
+    fn compute_cycles(&self, batch_words: usize) -> u32 {
+        self.latency_base + self.latency_per_word * batch_words as u32
+    }
+}
+
+// ---------------------------------------------------------------------
+// Declarations (the `[kernels.<name>]` schema) and registration.
+
+/// A parsed kernel declaration — the owned, validated form of one
+/// `[kernels.<name>]` config table (or a `--kernels` file entry).
+/// Exactly one family marker must be set: `op` (table-driven) or
+/// `artifact` (AOT-artifact-backed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelDecl {
+    /// Unique kernel name (the subtable key).
+    pub name: String,
+    /// Table family: the word transform (`mul`/`add`/`xor`/`rotl`/`and`).
+    pub op: Option<String>,
+    /// Table family: the transform's constant operand.
+    pub operand: u32,
+    /// Output mask (`output & mask == output` contract); defaults to
+    /// all ones.
+    pub mask: u32,
+    /// Artifact family: the manifest key to execute.
+    pub artifact: Option<String>,
+    /// Artifact family: declared input geometry, cross-checked against
+    /// the manifest entry (a mismatch is refused as a geometry lie).
+    pub input_words: Option<usize>,
+    /// Module batch size in words (must divide the 8-word burst).
+    pub batch_words: usize,
+    /// Latency model: fixed cycles per batch (≥ 1).
+    pub latency_base: u32,
+    /// Latency model: cycles per word.
+    pub latency_per_word: u32,
+    /// Area model: LUTs.
+    pub luts: u64,
+    /// Area model: flip-flops.
+    pub ffs: u64,
+}
+
+impl Default for KernelDecl {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            op: None,
+            operand: 1,
+            mask: u32::MAX,
+            artifact: None,
+            input_words: None,
+            batch_words: BRIDGE_BUFFER_WORDS,
+            latency_base: 1,
+            latency_per_word: 0,
+            luts: 64,
+            ffs: 64,
+        }
+    }
+}
+
+struct Registered {
+    spec: &'static KernelSpec,
+    decl: KernelDecl,
+}
+
+fn registry() -> &'static RwLock<Vec<Registered>> {
+    static REG: OnceLock<RwLock<Vec<Registered>>> = OnceLock::new();
+    REG.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+/// Seed kernel names — reserved; a declaration may not shadow them.
+fn seed_by_name(name: &str) -> Option<KernelId> {
+    match name {
+        "multiplier" => Some(KernelId::Multiplier),
+        "hamming_enc" => Some(KernelId::HammingEncoder),
+        "hamming_dec" => Some(KernelId::HammingDecoder),
+        _ => None,
+    }
+}
+
+/// Resolve a kernel name to its id: seeds first, then the registry.
+pub fn lookup(name: &str) -> Option<KernelId> {
+    if let Some(id) = seed_by_name(name) {
+        return Some(id);
+    }
+    let reg = registry().read().unwrap();
+    reg.iter().find(|r| r.spec.name == name).map(|r| r.spec.id)
+}
+
+/// Resolve a kernel name or refuse with a typed error naming the
+/// known kernels (no panic, no silent default).
+pub fn resolve(name: &str) -> Result<KernelId> {
+    lookup(name).ok_or_else(|| {
+        let reg = registry().read().unwrap();
+        let mut known: Vec<&str> =
+            seed_specs().iter().map(|s| s.name).collect();
+        known.extend(reg.iter().map(|r| r.spec.name));
+        ElasticError::Config(format!(
+            "unknown kernel '{name}' (known: {})",
+            known.join(", ")
+        ))
+    })
+}
+
+/// Names of every registered kernel, seeds first then registration
+/// order (the order `[kernels]` tables install in: sorted, because the
+/// TOML doc is a BTreeMap).
+pub fn names() -> Vec<&'static str> {
+    let mut out: Vec<&'static str> =
+        seed_specs().iter().map(|s| s.name).collect();
+    let reg = registry().read().unwrap();
+    out.extend(reg.iter().map(|r| r.spec.name));
+    out
+}
+
+fn validate(decl: &KernelDecl, manifest: Option<&ArtifactManifest>) -> Result<()> {
+    let name = &decl.name;
+    if name.is_empty() {
+        return Err(ElasticError::Config("kernel name must be non-empty".into()));
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+    {
+        return Err(ElasticError::Config(format!(
+            "kernel name '{name}' must be lowercase [a-z0-9_-]"
+        )));
+    }
+    if seed_by_name(name).is_some() {
+        return Err(ElasticError::Config(format!(
+            "kernel name '{name}' is reserved for a built-in seed kernel"
+        )));
+    }
+    match (&decl.op, &decl.artifact) {
+        (Some(_), Some(_)) => {
+            return Err(ElasticError::Config(format!(
+                "kernel '{name}': declare either op or artifact, not both"
+            )));
+        }
+        (None, None) => {
+            return Err(ElasticError::Config(format!(
+                "kernel '{name}': missing family — declare op (table-driven) \
+                 or artifact (AOT-backed)"
+            )));
+        }
+        _ => {}
+    }
+    if let Some(op) = &decl.op {
+        if TableOp::parse(op).is_none() {
+            return Err(ElasticError::Config(format!(
+                "kernel '{name}': unknown op '{op}' \
+                 (known: mul, add, xor, rotl, and)"
+            )));
+        }
+        if decl.mask == 0 {
+            return Err(ElasticError::Config(format!(
+                "kernel '{name}': output mask must be non-zero"
+            )));
+        }
+    }
+    if decl.latency_base == 0 || decl.latency_base > MAX_LATENCY_BASE {
+        return Err(ElasticError::Config(format!(
+            "kernel '{name}': latency_base {} outside 1..={MAX_LATENCY_BASE}",
+            decl.latency_base
+        )));
+    }
+    if decl.latency_per_word > MAX_LATENCY_PER_WORD {
+        return Err(ElasticError::Config(format!(
+            "kernel '{name}': latency_per_word {} above {MAX_LATENCY_PER_WORD}",
+            decl.latency_per_word
+        )));
+    }
+    if decl.batch_words == 0
+        || decl.batch_words > BRIDGE_BUFFER_WORDS
+        || BRIDGE_BUFFER_WORDS % decl.batch_words != 0
+    {
+        return Err(ElasticError::Config(format!(
+            "kernel '{name}': batch_words {} must divide the \
+             {BRIDGE_BUFFER_WORDS}-word bridge burst",
+            decl.batch_words
+        )));
+    }
+    if let Some(artifact) = &decl.artifact {
+        let manifest = manifest.ok_or_else(|| {
+            ElasticError::Artifact(format!(
+                "kernel '{name}': artifact-backed declaration needs an \
+                 artifact manifest (is the artifact directory configured?)"
+            ))
+        })?;
+        let entry = manifest.get(artifact).ok_or_else(|| {
+            ElasticError::Artifact(format!(
+                "kernel '{name}': artifact '{artifact}' not in the manifest"
+            ))
+        })?;
+        if entry.dtype != "u32" {
+            return Err(ElasticError::Artifact(format!(
+                "kernel '{name}': artifact '{artifact}' dtype '{}' is not u32",
+                entry.dtype
+            )));
+        }
+        if let Some(declared) = decl.input_words {
+            if declared != entry.input_words {
+                return Err(ElasticError::Artifact(format!(
+                    "kernel '{name}': declared input_words {declared} \
+                     contradicts the manifest ({} for '{artifact}')",
+                    entry.input_words
+                )));
+            }
+        }
+        if crate::runtime::interpreter_kernel(artifact).is_none() {
+            return Err(ElasticError::Artifact(format!(
+                "kernel '{name}': no interpreter kernel for artifact \
+                 '{artifact}' — the offline runtime cannot execute it"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn build_behavior(decl: &KernelDecl) -> &'static dyn ModuleBehavior {
+    if let Some(op) = &decl.op {
+        Box::leak(Box::new(TableBehavior {
+            op: TableOp::parse(op).expect("validated op"),
+            operand: decl.operand,
+            mask: decl.mask,
+            latency_base: decl.latency_base,
+            latency_per_word: decl.latency_per_word,
+        }))
+    } else {
+        let artifact = decl.artifact.as_deref().expect("validated family");
+        Box::leak(Box::new(ArtifactBehavior {
+            kernel: crate::runtime::interpreter_kernel(artifact)
+                .expect("validated artifact"),
+            latency_base: decl.latency_base,
+            latency_per_word: decl.latency_per_word,
+        }))
+    }
+}
+
+fn register_locked(
+    reg: &mut Vec<Registered>,
+    decl: KernelDecl,
+    behavior: &'static dyn ModuleBehavior,
+    output_mask: u32,
+) -> Result<KernelId> {
+    if let Some(existing) = reg.iter().find(|r| r.spec.name == decl.name) {
+        // Idempotent on byte-identical redefinition (parallel tests and
+        // repeated example/bench setup); conflicting redefinition is a
+        // typed refusal — never a silent shadow.
+        if existing.decl == decl {
+            return Ok(existing.spec.id);
+        }
+        return Err(ElasticError::Config(format!(
+            "duplicate kernel name '{}' with a conflicting definition",
+            decl.name
+        )));
+    }
+    let idx = reg.len() + SEED_KERNELS;
+    if idx > u16::MAX as usize {
+        return Err(ElasticError::Config("kernel registry full".into()));
+    }
+    let id = KernelId(idx as u16);
+    let name: &'static str = Box::leak(decl.name.clone().into_boxed_str());
+    let artifact: Option<&'static str> = decl
+        .artifact
+        .clone()
+        .map(|a| &*Box::leak(a.into_boxed_str()));
+    let spec: &'static KernelSpec = Box::leak(Box::new(KernelSpec {
+        id,
+        name,
+        artifact,
+        batch_words: decl.batch_words,
+        latency_base: decl.latency_base,
+        latency_per_word: decl.latency_per_word,
+        output_mask,
+        luts: decl.luts,
+        ffs: decl.ffs,
+        behavior,
+    }));
+    reg.push(Registered { spec, decl });
+    Ok(id)
+}
+
+/// Validate and register one kernel declaration.  Artifact-backed
+/// declarations need the manifest for the geometry/dtype cross-check.
+/// Registering the same name with a byte-identical declaration returns
+/// the existing id; a conflicting redefinition, a reserved seed name,
+/// or an invalid spec is refused with a typed error.
+pub fn register(
+    decl: KernelDecl,
+    manifest: Option<&ArtifactManifest>,
+) -> Result<KernelId> {
+    validate(&decl, manifest)?;
+    let behavior = build_behavior(&decl);
+    let output_mask = if decl.op.is_some() { decl.mask } else { u32::MAX };
+    let mut reg = registry().write().unwrap();
+    register_locked(&mut reg, decl, behavior, output_mask)
+}
+
+/// Register every declaration of a parsed `[kernels]` config section
+/// (or `--kernels` file), refusing duplicates *within the batch* even
+/// when the definitions agree — one source must not declare a kernel
+/// twice.  Returns the ids in declaration order.
+pub fn install_declared(
+    decls: &[KernelDecl],
+    manifest: Option<&ArtifactManifest>,
+) -> Result<Vec<KernelId>> {
+    for (i, d) in decls.iter().enumerate() {
+        if decls[..i].iter().any(|e| e.name == d.name) {
+            return Err(ElasticError::Config(format!(
+                "duplicate kernel name '{}' in one declaration set",
+                d.name
+            )));
+        }
+    }
+    decls
+        .iter()
+        .map(|d| register(d.clone(), manifest))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Hostile-spec hook (boundary property tests only).
+
+/// Test-only registration of deliberately misbehaving kernels,
+/// bypassing validation so `tests/kernel_boundary.rs` can prove the
+/// shell contains them.  Hidden from docs; never reachable from config.
+#[doc(hidden)]
+pub mod hostile {
+    use super::*;
+
+    /// How the hostile kernel violates the output contract.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum HostileMode {
+        /// Emits one word fewer than the batch (wrong output length).
+        ShortOutput,
+        /// Emits one word more than the batch (wrong output length).
+        LongOutput,
+        /// Emits all-ones words while declaring a 26-bit output mask.
+        OutOfMask,
+    }
+
+    struct HostileBehavior {
+        mode: HostileMode,
+    }
+
+    impl ModuleBehavior for HostileBehavior {
+        fn apply_word(&self, w: u32) -> u32 {
+            w
+        }
+        fn apply_buf(&self, buf: &[u32]) -> Vec<u32> {
+            match self.mode {
+                HostileMode::ShortOutput => {
+                    buf[..buf.len().saturating_sub(1)].to_vec()
+                }
+                HostileMode::LongOutput => {
+                    let mut v = buf.to_vec();
+                    v.push(0);
+                    v
+                }
+                HostileMode::OutOfMask => vec![u32::MAX; buf.len()],
+            }
+        }
+        fn compute_cycles(&self, _batch_words: usize) -> u32 {
+            1
+        }
+    }
+
+    /// Register a hostile kernel under `name` (idempotent per name+mode).
+    pub fn register(name: &str, mode: HostileMode) -> KernelId {
+        let decl = KernelDecl {
+            name: name.to_string(),
+            op: Some(format!("hostile:{mode:?}")),
+            ..KernelDecl::default()
+        };
+        let behavior: &'static dyn ModuleBehavior =
+            Box::leak(Box::new(HostileBehavior { mode }));
+        let mask = match mode {
+            HostileMode::OutOfMask => hamming::DATA_MASK,
+            _ => u32::MAX,
+        };
+        let mut reg = super::registry().write().unwrap();
+        super::register_locked(&mut reg, decl, behavior, mask)
+            .expect("hostile registration is name-unique per test")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hamming::{DATA_MASK, MULT_CONSTANT};
+
+    #[test]
+    fn seed_specs_are_byte_identical_to_the_legacy_enum() {
+        assert_eq!(KernelId::Multiplier.name(), "multiplier");
+        assert_eq!(KernelId::HammingEncoder.name(), "hamming_enc");
+        assert_eq!(KernelId::HammingDecoder.name(), "hamming_dec");
+        assert_eq!(KernelId::Multiplier.artifact(), "multiplier");
+        assert_eq!(KernelId::Multiplier.pjrt_artifact(), Some("multiplier"));
+        let x = 0xDEAD_BEEF;
+        assert_eq!(
+            KernelId::Multiplier.apply_word(x),
+            x.wrapping_mul(MULT_CONSTANT)
+        );
+        let enc = KernelId::HammingEncoder.apply_word(x);
+        assert_eq!(KernelId::HammingDecoder.apply_word(enc), x & DATA_MASK);
+        for id in KernelId::pipeline() {
+            let spec = id.spec();
+            assert_eq!(spec.batch_words, BRIDGE_BUFFER_WORDS);
+            assert_eq!(spec.compute_latency(), 1, "seed latency is 1 cc");
+            assert!(spec.luts > 0 && spec.ffs > 0, "Table I anchor");
+        }
+    }
+
+    #[test]
+    fn seed_masks_are_true_invariants() {
+        for w in [0u32, 1, 0xFFFF_FFFF, 0x1234_5678, DATA_MASK] {
+            for id in KernelId::pipeline() {
+                let out = id.apply_word(w);
+                let mask = id.spec().output_mask;
+                assert_eq!(out & mask, out, "{id:?} violates its own mask");
+            }
+        }
+    }
+
+    #[test]
+    fn table_kernel_semantics_and_latency() {
+        let id = register(
+            KernelDecl {
+                name: "t-xor7".into(),
+                op: Some("xor".into()),
+                operand: 7,
+                mask: 0xFFFF,
+                latency_base: 3,
+                latency_per_word: 2,
+                batch_words: 4,
+                ..KernelDecl::default()
+            },
+            None,
+        )
+        .unwrap();
+        assert!(!id.is_seed());
+        assert_eq!(id.name(), "t-xor7");
+        assert_eq!(id.pjrt_artifact(), None, "table kernels skip PJRT");
+        assert_eq!(id.apply_word(0x0001_0203), (0x0001_0203 ^ 7) & 0xFFFF);
+        assert_eq!(id.spec().compute_latency(), 3 + 2 * 4);
+        assert_eq!(id.fast_forward_countdown(10, 4), 6);
+        // Idempotent re-registration, conflicting redefinition refused.
+        let again = register(
+            KernelDecl {
+                name: "t-xor7".into(),
+                op: Some("xor".into()),
+                operand: 7,
+                mask: 0xFFFF,
+                latency_base: 3,
+                latency_per_word: 2,
+                batch_words: 4,
+                ..KernelDecl::default()
+            },
+            None,
+        )
+        .unwrap();
+        assert_eq!(again, id);
+        let conflict = register(
+            KernelDecl {
+                name: "t-xor7".into(),
+                op: Some("xor".into()),
+                operand: 8,
+                ..KernelDecl::default()
+            },
+            None,
+        );
+        assert!(matches!(conflict, Err(ElasticError::Config(_))));
+    }
+
+    #[test]
+    fn hostile_declarations_are_refused_typed() {
+        let reserved = register(
+            KernelDecl {
+                name: "multiplier".into(),
+                op: Some("mul".into()),
+                ..KernelDecl::default()
+            },
+            None,
+        );
+        assert!(matches!(reserved, Err(ElasticError::Config(_))));
+
+        let zero_latency = register(
+            KernelDecl {
+                name: "t-zero".into(),
+                op: Some("mul".into()),
+                latency_base: 0,
+                ..KernelDecl::default()
+            },
+            None,
+        );
+        assert!(matches!(zero_latency, Err(ElasticError::Config(_))));
+
+        let absurd = register(
+            KernelDecl {
+                name: "t-absurd".into(),
+                op: Some("mul".into()),
+                latency_base: u32::MAX,
+                ..KernelDecl::default()
+            },
+            None,
+        );
+        assert!(matches!(absurd, Err(ElasticError::Config(_))));
+
+        let bad_batch = register(
+            KernelDecl {
+                name: "t-batch3".into(),
+                op: Some("mul".into()),
+                batch_words: 3,
+                ..KernelDecl::default()
+            },
+            None,
+        );
+        assert!(matches!(bad_batch, Err(ElasticError::Config(_))));
+
+        let bad_op = register(
+            KernelDecl {
+                name: "t-badop".into(),
+                op: Some("div".into()),
+                ..KernelDecl::default()
+            },
+            None,
+        );
+        assert!(matches!(bad_op, Err(ElasticError::Config(_))));
+
+        let no_family = register(
+            KernelDecl { name: "t-nofam".into(), ..KernelDecl::default() },
+            None,
+        );
+        assert!(matches!(no_family, Err(ElasticError::Config(_))));
+    }
+
+    #[test]
+    fn artifact_kernel_validates_against_the_manifest() {
+        let manifest = ArtifactManifest::parse(
+            r#"{"multiplier": {"file": "multiplier.hlo.txt",
+                 "input_words": 4096, "dtype": "u32", "sha256": ""}}"#,
+        )
+        .unwrap();
+        // Geometry lie: declared input_words contradicts the manifest.
+        let lie = register(
+            KernelDecl {
+                name: "a-mult-lie".into(),
+                artifact: Some("multiplier".into()),
+                input_words: Some(1024),
+                ..KernelDecl::default()
+            },
+            Some(&manifest),
+        );
+        assert!(matches!(lie, Err(ElasticError::Artifact(_))));
+        // Unknown artifact.
+        let unknown = register(
+            KernelDecl {
+                name: "a-ghost".into(),
+                artifact: Some("ghost".into()),
+                ..KernelDecl::default()
+            },
+            Some(&manifest),
+        );
+        assert!(matches!(unknown, Err(ElasticError::Artifact(_))));
+        // No manifest at all.
+        let missing = register(
+            KernelDecl {
+                name: "a-nomanifest".into(),
+                artifact: Some("multiplier".into()),
+                ..KernelDecl::default()
+            },
+            None,
+        );
+        assert!(matches!(missing, Err(ElasticError::Artifact(_))));
+        // Honest declaration: executes the interpreter kernel.
+        let ok = register(
+            KernelDecl {
+                name: "a-mult".into(),
+                artifact: Some("multiplier".into()),
+                input_words: Some(4096),
+                latency_base: 2,
+                ..KernelDecl::default()
+            },
+            Some(&manifest),
+        )
+        .unwrap();
+        assert_eq!(ok.pjrt_artifact(), Some("multiplier"));
+        let x = [5u32, 6, 7];
+        assert_eq!(
+            ok.apply_buf(&x),
+            x.iter().map(|&w| w.wrapping_mul(MULT_CONSTANT)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn resolve_refuses_unknown_names() {
+        assert_eq!(resolve("multiplier").unwrap(), KernelId::Multiplier);
+        let err = resolve("no-such-kernel");
+        assert!(matches!(err, Err(ElasticError::Config(_))));
+        let msg = format!("{}", err.unwrap_err());
+        assert!(msg.contains("no-such-kernel"), "{msg}");
+        assert!(msg.contains("multiplier"), "names the known set: {msg}");
+    }
+
+    #[test]
+    fn install_declared_refuses_in_batch_duplicates() {
+        let d = KernelDecl {
+            name: "t-dup".into(),
+            op: Some("add".into()),
+            ..KernelDecl::default()
+        };
+        let err = install_declared(&[d.clone(), d], None);
+        assert!(matches!(err, Err(ElasticError::Config(_))));
+    }
+
+    #[test]
+    fn debug_prints_kernel_names() {
+        assert_eq!(format!("{:?}", KernelId::Multiplier), "multiplier");
+        let id = register(
+            KernelDecl {
+                name: "t-debug".into(),
+                op: Some("and".into()),
+                operand: 0xFF,
+                ..KernelDecl::default()
+            },
+            None,
+        )
+        .unwrap();
+        assert_eq!(format!("{id:?}"), "t-debug");
+    }
+}

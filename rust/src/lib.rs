@@ -92,6 +92,26 @@
 //! spare share, and `[qos]` config tables / the `--plan` flag make the
 //! contract operator-visible (DESIGN.md §11).
 //!
+//! # The pluggable kernel runtime
+//!
+//! [`kernels`] replaces the historical closed three-variant module
+//! enum with a manifest-driven registry (DESIGN.md §17): every kernel
+//! is a [`kernels::KernelSpec`] (stable [`kernels::KernelId`], display
+//! name, artifact key, batch geometry, per-word latency model, area
+//! cost) plus a [`kernels::ModuleBehavior`] supplying its golden
+//! buffer transform and the exact compute-countdown arithmetic the
+//! fast path needs.  The three seed kernels occupy ids 0..=2 and are
+//! byte-identical to the old enum at the default registry; table-driven
+//! synthetic kernels come from `[kernels.<name>]` config tables (or
+//! `--kernels FILE`), and artifact-backed kernels execute manifest
+//! entries through the [`runtime`] path.  Declarations are validated
+//! Omniglot-style at the boundary — reserved/duplicate names, absurd
+//! latency, geometry lies against the [`runtime::ArtifactManifest`]
+//! are typed [`ElasticError`] refusals — and at run time the fabric
+//! length/mask-validates every batch a module emits, containing a
+//! misbehaving kernel as a `contract_violation` `pr_error` latch
+//! instead of corrupted shell state (`tests/kernel_boundary.rs`).
+//!
 //! # The telemetry plane
 //!
 //! [`telemetry`] is the cycle-stamped observability plane (DESIGN.md
@@ -117,6 +137,7 @@ pub mod fabric;
 pub mod fleet;
 pub mod hamming;
 pub mod icap;
+pub mod kernels;
 pub mod manager;
 pub mod metrics;
 pub mod modules;

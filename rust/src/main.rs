@@ -57,9 +57,54 @@ fn load_runtime(cli: &Cli) -> Result<Option<RuntimeThread>> {
     Ok(Some(rt))
 }
 
+/// Install every declared kernel — `[kernels.<name>]` tables from the
+/// config overlay plus a `--kernels FILE` overlay — into the process
+/// registry before any subsystem resolves stage names (DESIGN.md §17).
+/// A name declared in both places is refused rather than silently
+/// shadowed; the artifact manifest is only opened when some declaration
+/// actually binds an artifact.
+fn install_kernels(cli: &Cli, cfg: &SystemConfig) -> Result<()> {
+    let mut decls = cfg.kernels.clone();
+    if let Some(path) = cli.flags.get("kernels") {
+        let extra =
+            elastic_fpga::config::SystemConfig::load_kernel_decls(std::path::Path::new(path))?;
+        for d in extra {
+            if decls.iter().any(|have| have.name == d.name) {
+                return Err(elastic_fpga::ElasticError::Config(format!(
+                    "kernel '{}' is declared both in the config overlay and \
+                     in --kernels {path}; declare each kernel once",
+                    d.name
+                )));
+            }
+            decls.push(d);
+        }
+    }
+    if decls.is_empty() {
+        return Ok(());
+    }
+    let manifest;
+    let manifest_ref = if decls.iter().any(|d| d.artifact.is_some()) {
+        let dir = cli.str_or("artifacts", elastic_fpga::DEFAULT_ARTIFACT_DIR);
+        manifest = elastic_fpga::runtime::ArtifactManifest::load(
+            &std::path::Path::new(&dir).join("manifest.json"),
+        )?;
+        Some(&manifest)
+    } else {
+        None
+    };
+    let ids = elastic_fpga::kernels::install_declared(&decls, manifest_ref)?;
+    println!(
+        "installed {} declared kernel(s): {}",
+        ids.len(),
+        ids.iter().map(|k| k.name()).collect::<Vec<_>>().join(", ")
+    );
+    Ok(())
+}
+
 fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(args)?;
     let cfg = load_config(&cli)?;
+    install_kernels(&cli, &cfg)?;
     match cli.command.as_str() {
         "quickstart" => quickstart(&cli, &cfg),
         "serve" => serve(&cli, &cfg),

@@ -1043,16 +1043,20 @@ impl ElasticManager {
         Ok(reports)
     }
 
-    /// Run one stage on the server.  Uses the PJRT artifact when its
-    /// geometry matches (the real compute path); falls back to the golden
-    /// model otherwise (and for runtime-less unit tests).
+    /// Run one stage on the server.  PJRT-eligible kernels (the seeds
+    /// and artifact-backed registrations) use the AOT artifact when its
+    /// geometry matches (the real compute path); table-driven kernels
+    /// and geometry mismatches run the registered behavior directly
+    /// (also the runtime-less unit-test path).
     fn run_stage_on_server(
         &self,
         kind: ModuleKind,
         data: &[u32],
     ) -> Result<Vec<u32>> {
-        if let Some(rt) = &self.runtime {
-            if let Some(out) = rt.run(kind.artifact(), data.to_vec())? {
+        if let (Some(rt), Some(artifact)) =
+            (&self.runtime, kind.pjrt_artifact())
+        {
+            if let Some(out) = rt.run(artifact, data.to_vec())? {
                 return Ok(out);
             }
         }

@@ -1,6 +1,5 @@
-//! Computation-module template (§IV.H) and the three prototype modules
-//! (§V.B): constant multiplier, Hamming(31,26) encoder, Hamming(31,26)
-//! decoder.
+//! Computation-module template (§IV.H) hosting any registered kernel
+//! (§V.B seeds by default; see [`crate::kernels`] for the registry).
 //!
 //! The template comprises input and output registers, an error-status
 //! register, computation units, and control logic: the module batches
@@ -9,62 +8,23 @@
 //! master interface to forward the results to its destination address
 //! (programmed by the elastic manager through the register file).
 //!
-//! The per-word combinational function is the Rust golden model
-//! ([`crate::hamming`]); the *same math* ships as the AOT-lowered
-//! JAX/Pallas artifact, which the manager executes via PJRT for
-//! on-server stages and for cross-verification.
+//! The computation units are whatever [`crate::kernels::ModuleBehavior`]
+//! the hosted kernel registered: for the seed kernels that is the Rust
+//! golden model ([`crate::hamming`]) whose *same math* ships as the
+//! AOT-lowered JAX/Pallas artifact (executed via PJRT for on-server
+//! stages and cross-verification); for table-driven kernels it is the
+//! declared word transform.  The shell does not trust the behavior:
+//! the fabric length/mask-validates every emitted batch against the
+//! kernel's [`crate::kernels::KernelSpec`] before routing it.
 
-use crate::hamming;
 use crate::sim::HORIZON_NONE;
 use crate::wishbone::{Job, WbError};
 
-/// Which accelerator a PR region hosts.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum ModuleKind {
-    /// Constant multiplier (wrapping u32 multiply).
-    Multiplier,
-    /// Hamming(31,26) encoder.
-    HammingEncoder,
-    /// Hamming(31,26) decoder (single-error correction).
-    HammingDecoder,
-}
-
-impl ModuleKind {
-    /// Stable display name.
-    pub fn name(self) -> &'static str {
-        match self {
-            ModuleKind::Multiplier => "multiplier",
-            ModuleKind::HammingEncoder => "hamming_enc",
-            ModuleKind::HammingDecoder => "hamming_dec",
-        }
-    }
-
-    /// The AOT artifact implementing this module's stage at buffer
-    /// granularity (manifest key).
-    pub fn artifact(self) -> &'static str {
-        // Names match `python/compile/model.py::EXPORTS`.
-        self.name()
-    }
-
-    /// The per-word combinational function (golden model).
-    pub fn apply_word(self, w: u32) -> u32 {
-        match self {
-            ModuleKind::Multiplier => hamming::multiply_word(w, hamming::MULT_CONSTANT),
-            ModuleKind::HammingEncoder => hamming::encode_word(w),
-            ModuleKind::HammingDecoder => hamming::decode_word(w).0,
-        }
-    }
-
-    /// Buffer-level golden transform.
-    pub fn apply_buf(self, buf: &[u32]) -> Vec<u32> {
-        buf.iter().map(|&w| self.apply_word(w)).collect()
-    }
-
-    /// The Fig-5 pipeline order.
-    pub fn pipeline() -> [ModuleKind; 3] {
-        [ModuleKind::Multiplier, ModuleKind::HammingEncoder, ModuleKind::HammingDecoder]
-    }
-}
+/// Which kernel a PR region hosts.  Historically a closed enum of the
+/// three prototype modules; now a stable registry id — the enum-style
+/// variant names live on as associated constants, so existing
+/// `ModuleKind::Multiplier` value *and* pattern uses keep compiling.
+pub use crate::kernels::KernelId as ModuleKind;
 
 /// Module FSM state (template control logic).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -82,7 +42,7 @@ pub enum ModuleState {
 /// One instantiated computation module, attached to a crossbar port.
 #[derive(Debug)]
 pub struct ComputationModule {
-    /// Which accelerator this is.
+    /// Which kernel this hosts.
     pub kind: ModuleKind,
     /// Crossbar port the module's interfaces sit on.
     pub port: usize,
@@ -93,7 +53,8 @@ pub struct ComputationModule {
     pub dest_onehot: u32,
     /// Batch size in words (input-register depth; prototype: 8).
     pub batch_words: usize,
-    /// Computation-unit latency in cycles (parallel units -> 1 cc).
+    /// Computation-unit latency in cycles (parallel units -> 1 cc for
+    /// the seeds; table kernels follow their declared latency model).
     pub compute_latency: u32,
     /// FSM state.
     pub state: ModuleState,
@@ -112,7 +73,8 @@ pub struct ComputationModule {
 }
 
 impl ComputationModule {
-    /// Instantiate a module at `port` for `app_id`.
+    /// Instantiate a module at `port` for `app_id` with the legacy
+    /// template defaults (8-word batch, 1-cycle compute).
     pub fn new(kind: ModuleKind, port: usize, app_id: u32) -> Self {
         Self {
             kind,
@@ -128,6 +90,20 @@ impl ComputationModule {
             batches_done: 0,
             words_done: 0,
         }
+    }
+
+    /// Instantiate a module with geometry and latency taken from the
+    /// kernel's registered spec (the path the fabric installs through;
+    /// byte-identical to [`ComputationModule::new`] + the fabric's
+    /// historical `batch_words = BRIDGE_BUFFER_WORDS` fixup for the
+    /// seed kernels).
+    pub fn from_spec(kind: ModuleKind, port: usize, app_id: u32) -> Self {
+        let spec = kind.spec();
+        let mut m = Self::new(kind, port, app_id);
+        m.batch_words = spec.batch_words;
+        m.compute_latency = spec.compute_latency();
+        m.input = Vec::with_capacity(spec.batch_words);
+        m
     }
 
     /// Words currently latched in the input registers.
@@ -213,17 +189,14 @@ impl ComputationModule {
     }
 
     /// Account `cycles` skipped fast-path cycles: the compute countdown
-    /// advances arithmetically; every other state is a fixed point over
-    /// the skipped stretch.  Callers must keep the skip strictly below
+    /// advances by the kernel's registered `fast_forward` arithmetic;
+    /// every other state is a fixed point over the skipped stretch.
+    /// Callers must keep the skip strictly below
     /// [`ComputationModule::next_interesting_cycle`].
     pub fn fast_forward(&mut self, cycles: u64) {
         if let ModuleState::Computing { remaining } = self.state {
-            debug_assert!(
-                (remaining as u64) > cycles,
-                "skip crossed the compute countdown"
-            );
             self.state = ModuleState::Computing {
-                remaining: remaining - cycles as u32,
+                remaining: self.kind.fast_forward_countdown(remaining, cycles),
             };
         }
     }
@@ -274,6 +247,17 @@ mod tests {
                 ModuleKind::HammingDecoder
             ]
         );
+    }
+
+    #[test]
+    fn from_spec_matches_legacy_seed_geometry() {
+        for kind in ModuleKind::pipeline() {
+            let legacy = ComputationModule::new(kind, 1, 0);
+            let specd = ComputationModule::from_spec(kind, 1, 0);
+            assert_eq!(specd.batch_words, legacy.batch_words);
+            assert_eq!(specd.compute_latency, legacy.compute_latency);
+            assert_eq!(specd.state, legacy.state);
+        }
     }
 
     #[test]

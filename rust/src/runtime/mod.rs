@@ -28,7 +28,13 @@ use crate::hamming;
 use crate::{ElasticError, Result};
 
 /// The buffer transform an artifact lowers to.
-type StageFn = fn(&[u32]) -> Vec<u32>;
+pub(crate) type StageFn = fn(&[u32]) -> Vec<u32>;
+
+/// Resolve an artifact name to its interpreter kernel (the registry's
+/// artifact-backed kernel family executes through this too).
+pub(crate) fn interpreter_kernel(name: &str) -> Option<StageFn> {
+    kernel_for(name)
+}
 
 /// Resolve an artifact name to its interpreter kernel.  Names mirror
 /// `python/compile/model.py::EXPORTS`.
@@ -124,6 +130,22 @@ impl Runtime {
             return Err(ElasticError::Artifact(format!(
                 "artifact file {path:?} missing — run `make artifacts` first"
             )));
+        }
+        // Integrity gate: the manifest's digest must match the HLO file
+        // on disk, exactly as PJRT would refuse a tampered proto.  An
+        // empty digest field (hand-written test manifests) skips the
+        // check; `python -m compile.aot` always records one.
+        if !entry.sha256.is_empty() {
+            let contents = std::fs::read(&path)?;
+            let actual = crate::util::sha256_hex(&contents);
+            if actual != entry.sha256 {
+                return Err(ElasticError::Artifact(format!(
+                    "artifact '{name}' digest mismatch: manifest says {} \
+                     but {path:?} hashes to {actual} — artifact corrupted \
+                     or stale, re-run `make artifacts`",
+                    entry.sha256
+                )));
+            }
         }
         let kernel = kernel_for(name).ok_or_else(|| {
             ElasticError::Artifact(format!(
@@ -242,6 +264,41 @@ mod tests {
     fn unknown_artifact_rejected() {
         let rt = Runtime::open(artifacts_dir()).unwrap();
         assert!(rt.load("nonexistent").is_err());
+    }
+
+    #[test]
+    fn corrupted_artifact_is_refused() {
+        // Copy the real artifact set into a scratch dir, then flip bytes
+        // in one HLO file: the manifest digest no longer matches and
+        // load() must refuse with a typed Artifact error (while the
+        // untouched artifacts keep loading).
+        let src = artifacts_dir();
+        let dir = std::env::temp_dir().join(format!(
+            "elastic-fpga-sha-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for f in std::fs::read_dir(&src).unwrap() {
+            let f = f.unwrap();
+            std::fs::copy(f.path(), dir.join(f.file_name())).unwrap();
+        }
+        let victim = dir.join("multiplier.hlo.txt");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes.extend_from_slice(b"\n// tampered\n");
+        std::fs::write(&victim, &bytes).unwrap();
+
+        let rt = Runtime::open(&dir).unwrap();
+        match rt.load("multiplier") {
+            Err(ElasticError::Artifact(msg)) => {
+                assert!(msg.contains("digest mismatch"), "{msg}");
+            }
+            Err(other) => panic!("expected Artifact error, got {other:?}"),
+            Ok(_) => panic!("expected Artifact error, got Ok"),
+        }
+        // A clean artifact in the same dir still verifies and loads.
+        assert!(rt.load("hamming_enc").is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1018,8 +1018,11 @@ fn run_stage(
     kind: ModuleKind,
     data: &[u32],
 ) -> Result<Vec<u32>> {
-    if let Some(rt) = runtime {
-        if let Some(out) = rt.run(kind.artifact(), data.to_vec())? {
+    // Table-driven kernels have no AOT artifact (`pjrt_artifact()` is
+    // None): they run their registered behavior directly instead of
+    // erroring on an unknown manifest key.
+    if let (Some(rt), Some(artifact)) = (runtime, kind.pjrt_artifact()) {
+        if let Some(out) = rt.run(artifact, data.to_vec())? {
             return Ok(out);
         }
     }

@@ -46,6 +46,7 @@ pub fn wb_error_name(err: WbError) -> &'static str {
         WbError::GrantTimeout => "grant_timeout",
         WbError::AckTimeout => "ack_timeout",
         WbError::PortInReset => "port_in_reset",
+        WbError::ContractViolation => "contract_violation",
     }
 }
 

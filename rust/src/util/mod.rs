@@ -1,13 +1,16 @@
 //! Small hardware-flavoured helpers shared across the simulator:
 //! leading-zero counting (the arbiter primitive of [31]/[32]), one-hot
-//! codecs (the paper's slave-address encoding, §IV.E.2), and bit utilities.
+//! codecs (the paper's slave-address encoding, §IV.E.2), bit utilities,
+//! and the SHA-256 digest backing artifact-manifest verification.
 
 pub mod bits;
 pub mod lzc;
 pub mod onehot;
 pub mod rng;
+pub mod sha256;
 
 pub use bits::{parity_u32, popcount_u32};
 pub use lzc::{leading_zeros_u32, lzc_select};
 pub use onehot::{decode_onehot, encode_onehot, is_onehot};
 pub use rng::SplitMix64;
+pub use sha256::{sha256, sha256_hex};

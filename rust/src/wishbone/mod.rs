@@ -35,6 +35,11 @@ pub enum WbError {
     /// The targeted port is held in reset (§IV.C: during partial
     /// reconfiguration the port must not participate).
     PortInReset,
+    /// The hosted kernel emitted a batch violating its registered
+    /// output contract — wrong word count or an out-of-mask word
+    /// (DESIGN.md §17 boundary validation).  The shell drops the batch
+    /// and latches this code instead of routing corrupt data.
+    ContractViolation,
 }
 
 impl WbError {
@@ -45,6 +50,7 @@ impl WbError {
             WbError::GrantTimeout => 0x2,
             WbError::AckTimeout => 0x3,
             WbError::PortInReset => 0x4,
+            WbError::ContractViolation => 0x5,
         }
     }
 
@@ -55,6 +61,7 @@ impl WbError {
             0x2 => Some(WbError::GrantTimeout),
             0x3 => Some(WbError::AckTimeout),
             0x4 => Some(WbError::PortInReset),
+            0x5 => Some(WbError::ContractViolation),
             _ => None,
         }
     }
@@ -248,6 +255,7 @@ mod tests {
             WbError::GrantTimeout,
             WbError::AckTimeout,
             WbError::PortInReset,
+            WbError::ContractViolation,
         ] {
             assert_eq!(WbError::from_code(e.code()), Some(e));
         }

@@ -9,6 +9,14 @@
 use crate::manager::AppRequest;
 use crate::modules::ModuleKind;
 use crate::util::SplitMix64;
+use crate::Result;
+
+/// Resolve a chain of kernel names against the registry (DESIGN.md
+/// §17).  Workload specs naming an unknown kernel are typed refusals —
+/// no panic, no silent fallback to a seed kernel.
+pub fn stages_by_name(names: &[&str]) -> Result<Vec<ModuleKind>> {
+    names.iter().map(|n| crate::kernels::resolve(n)).collect()
+}
 
 /// One trace entry: a request and its arrival time.
 #[derive(Debug, Clone)]
@@ -86,6 +94,30 @@ impl WorkloadSpec {
                     0.15,
                 ),
             ],
+            tenants: 4,
+        }
+    }
+
+    /// Kernel-zoo mix (DESIGN.md §17): seed chains interleaved with
+    /// registered zoo kernels — the mixed heavy/light tenant shape the
+    /// batching and autoscale planes were never exercised on while the
+    /// registry was a closed enum.  `zoo` kernels split 40% of the
+    /// traffic evenly; the rest stays on the seed chains.
+    pub fn zoo_mix(zoo: &[ModuleKind]) -> Self {
+        assert!(!zoo.is_empty(), "zoo mix needs at least one zoo kernel");
+        let mut stage_mix: Vec<(Vec<ModuleKind>, f64)> = vec![
+            (ModuleKind::pipeline().to_vec(), 0.35),
+            (vec![ModuleKind::Multiplier], 0.25),
+        ];
+        let share = 0.4 / zoo.len() as f64;
+        for &k in zoo {
+            stage_mix.push((vec![k], share));
+        }
+        Self {
+            rate_per_s: 400.0,
+            duration_s: 4.0,
+            size_mix: vec![(8, 0.4), (32, 0.35), (64, 0.25)],
+            stage_mix,
             tenants: 4,
         }
     }
@@ -225,6 +257,42 @@ pub fn bursty_tenants(
                 burst_s,
                 idle_s,
                 phase_s: i as f64 * cycle / tenants as f64,
+            },
+        })
+        .collect()
+}
+
+/// Anti-phase diurnal tenants over a kernel zoo: tenant `i` runs
+/// `chains[i % chains.len()]`, so heavy and light kernels share the
+/// board while peaks rotate around the tenant set (the scenario the
+/// registry opens — seed and table-driven kernels in one fleet).
+pub fn zoo_tenants(
+    tenants: u32,
+    chains: &[Vec<ModuleKind>],
+    floor_per_s: f64,
+    peak_per_s: f64,
+    period_s: f64,
+    words: usize,
+) -> Vec<TenantSpec> {
+    assert!(
+        (1..=32).contains(&tenants),
+        "app IDs are one-hot destination-register indices (max 32)"
+    );
+    assert!(!chains.is_empty(), "zoo tenants need at least one chain");
+    assert!(
+        chains.iter().all(|c| !c.is_empty()),
+        "empty stage chain in the zoo"
+    );
+    (0..tenants)
+        .map(|i| TenantSpec {
+            app_id: i,
+            stages: chains[i as usize % chains.len()].clone(),
+            words,
+            profile: RateProfile::Diurnal {
+                floor_per_s,
+                peak_per_s,
+                period_s,
+                phase: i as f64 / tenants as f64,
             },
         })
         .collect()
@@ -548,6 +616,44 @@ mod tests {
             assert_eq!(e.request.data.len(), 64);
             assert_eq!(e.request.stages.len(), 3);
         }
+    }
+
+    #[test]
+    fn stages_by_name_resolves_and_refuses() {
+        assert_eq!(
+            stages_by_name(&["multiplier", "hamming_enc", "hamming_dec"])
+                .unwrap(),
+            ModuleKind::pipeline().to_vec()
+        );
+        assert!(matches!(
+            stages_by_name(&["multiplier", "warp-drive"]),
+            Err(crate::ElasticError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn zoo_tenants_cycle_chains_with_rotating_phase() {
+        let zoo = crate::kernels::register(
+            crate::kernels::KernelDecl {
+                name: "wl-zoo-add".into(),
+                op: Some("add".into()),
+                operand: 3,
+                ..crate::kernels::KernelDecl::default()
+            },
+            None,
+        )
+        .unwrap();
+        let chains =
+            vec![ModuleKind::pipeline().to_vec(), vec![zoo]];
+        let tenants = zoo_tenants(6, &chains, 20.0, 200.0, 4.0, 32);
+        assert_eq!(tenants.len(), 6);
+        assert_eq!(tenants[0].stages.len(), 3);
+        assert_eq!(tenants[1].stages, vec![zoo]);
+        assert_eq!(tenants[3].stages, vec![zoo], "chains cycle");
+        // Traces over zoo tenants generate like any other profile.
+        let trace = generate_profiled(&tenants, 23, 200);
+        assert_eq!(trace.len(), 200);
+        assert!(trace.iter().any(|e| e.request.stages == vec![zoo]));
     }
 
     #[test]

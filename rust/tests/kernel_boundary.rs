@@ -1,0 +1,318 @@
+//! Kernel-boundary suite (DESIGN.md §17): the pluggable kernel
+//! registry's two trust edges, exercised end to end.
+//!
+//! *Install time*: a config-declared table kernel must flow through
+//! manager, threaded server, fleet batching, configuration cache and
+//! the closed-loop autoscaler without any edit to `rust/src/modules/`
+//! — the acceptance criterion of the registry refactor — while the
+//! default registry stays byte-identical for seed traffic even after
+//! arbitrary extra registrations.
+//!
+//! *Run time*: a kernel that lies about its output contract (wrong
+//! batch length, words outside its declared mask) is contained by the
+//! fabric's Omniglot-style output validation: the dishonest batch
+//! never crosses into the shell, the violation latches as a
+//! `contract_violation` `pr_error` + app-error spill, the request
+//! fails with a typed [`ElasticError`], and co-tenant victims on the
+//! same shell are unaffected.
+
+use elastic_fpga::config::SystemConfig;
+use elastic_fpga::fleet::{AdmissionPolicy, Fleet};
+use elastic_fpga::kernels::{self, hostile::HostileMode};
+use elastic_fpga::manager::{
+    golden_chain, AppRequest, ElasticManager, RegionState,
+};
+use elastic_fpga::modules::ModuleKind;
+use elastic_fpga::server::{call, Server};
+use elastic_fpga::telemetry::{TraceEvent, Tracer};
+use elastic_fpga::util::SplitMix64;
+use elastic_fpga::wishbone::WbError;
+use elastic_fpga::workload::{self, generate_count, WorkloadSpec};
+use elastic_fpga::ElasticError;
+
+fn data(n: usize, seed: u64) -> Vec<u32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut v = vec![0u32; n];
+    rng.fill_u32(&mut v);
+    v
+}
+
+fn seed_fleet(threads: usize) -> Fleet {
+    let mut fleet = Fleet::launch(
+        2,
+        &SystemConfig::paper_defaults(),
+        None,
+        AdmissionPolicy::LeastLoaded,
+        true,
+    );
+    fleet.execution_threads = threads;
+    fleet.tracer = Tracer::full();
+    fleet
+}
+
+/// The `[kernels]` table every end-to-end leg installs: a synthetic
+/// multiply-by-9 kernel with a non-trivial latency model.  Installing
+/// it twice is idempotent, so each test can self-provision.
+fn install_zoo_kernel() -> ModuleKind {
+    let cfg = SystemConfig::parse(
+        "[kernels.kb-mul9]\n\
+         op = \"mul\"\n\
+         operand = 9\n\
+         latency_base = 2\n\
+         latency_per_word = 1\n",
+    )
+    .unwrap();
+    let ids = kernels::install_declared(&cfg.kernels, None).unwrap();
+    assert_eq!(ids.len(), 1);
+    assert_eq!(kernels::resolve("kb-mul9").unwrap(), ids[0]);
+    ids[0]
+}
+
+#[test]
+fn registering_kernels_never_perturbs_seed_traffic() {
+    // The default-registry byte-identity contract: a seed-only trace
+    // must produce the same schedule, samples, and telemetry stream
+    // whether or not extra kernels happen to be registered — the
+    // registry is consulted by id and seed ids are static.
+    let trace = generate_count(&WorkloadSpec::fleet_mix(), 0xB0DA, 200);
+    let before = seed_fleet(1).run_trace(&trace).unwrap();
+    install_zoo_kernel();
+    kernels::install_declared(
+        &SystemConfig::parse(
+            "[kernels.kb-bystander]\nop = \"xor\"\noperand = 0xA5A5\n",
+        )
+        .unwrap()
+        .kernels,
+        None,
+    )
+    .unwrap();
+    for threads in [1usize, 2] {
+        let after = seed_fleet(threads).run_trace(&trace).unwrap();
+        assert_eq!(before.outcomes, after.outcomes, "x{threads}");
+        assert_eq!(before.per_node_served, after.per_node_served);
+        assert_eq!(before.makespan_cycles, after.makespan_cycles);
+        assert_eq!(
+            before.queue_wait.samples(),
+            after.queue_wait.samples(),
+            "x{threads}: queue-wait sample stream"
+        );
+        assert_eq!(
+            before.events, after.events,
+            "x{threads}: telemetry event stream"
+        );
+    }
+}
+
+#[test]
+fn config_declared_kernel_serves_through_manager_server_and_cache() {
+    let kid = install_zoo_kernel();
+    // Spec semantics: a masked wrapping multiply with the declared
+    // latency model.
+    assert_eq!(kid.apply_word(7), 63);
+    assert_eq!(kid.spec().compute_latency(), 2 + 8);
+    let payload = data(64, 0x41);
+    let golden = golden_chain(&[kid], &payload);
+    assert_eq!(
+        golden,
+        payload.iter().map(|w| w.wrapping_mul(9)).collect::<Vec<_>>()
+    );
+
+    // Manager: the kernel occupies a PR region and round-trips.
+    let mut m = ElasticManager::new(SystemConfig::paper_defaults(), None);
+    let rep = m
+        .execute(&AppRequest { app_id: 0, data: payload.clone(), stages: vec![kid] })
+        .unwrap();
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden);
+    assert_eq!(rep.fpga_stages, 1);
+
+    // Threaded server: same request over the worker lanes.
+    let server = Server::start(SystemConfig::paper_defaults(), None);
+    let rep = call(
+        &server,
+        AppRequest { app_id: 1, data: payload.clone(), stages: vec![kid] },
+    )
+    .unwrap();
+    assert!(rep.verified);
+    assert_eq!(rep.output, golden);
+    server.shutdown();
+
+    // Configuration cache: a released zoo-kernel region parks resident
+    // and the repeat shape rebinds ICAP-free, exactly like a seed kind.
+    let mut cfg = SystemConfig::paper_defaults();
+    cfg.manager.config_cache_regions = 2;
+    cfg.manager.bitstream_bytes = 4096;
+    let mut m = ElasticManager::new(cfg, None);
+    m.use_icap = true;
+    let cold = m
+        .execute(&AppRequest { app_id: 0, data: data(64, 0x42), stages: vec![kid] })
+        .unwrap();
+    assert!(cold.timeline.reconfig_cycles > 0, "cold run must stream ICAP");
+    assert_eq!(m.resident_regions(), vec![(1, kid)]);
+    let warm = m
+        .execute(&AppRequest { app_id: 1, data: data(64, 0x43), stages: vec![kid] })
+        .unwrap();
+    assert_eq!(warm.timeline.reconfig_cycles, 0, "hit must elide all ICAP");
+    let (hits, misses, elided) = m.config_cache_stats();
+    assert_eq!((hits, misses), (1, 1));
+    assert!(elided > 0);
+}
+
+#[test]
+fn config_declared_kernel_flows_through_fleet_batching_and_autoscaler() {
+    let kid = install_zoo_kernel();
+
+    // Fleet + same-app batching over the mixed seed/zoo traffic shape.
+    let trace = generate_count(&WorkloadSpec::zoo_mix(&[kid]), 0x5EED, 200);
+    assert!(
+        trace.iter().any(|e| e.request.stages == [kid]),
+        "zoo mix must emit zoo-kernel requests"
+    );
+    let mut fleet = seed_fleet(1);
+    fleet.batch_window = 4;
+    let report = fleet.run_trace(&trace).unwrap();
+    assert_eq!(report.completed, 200);
+    assert!(report.fast_path_hits > 0, "repeat zoo shapes must memoize");
+
+    // Closed-loop autoscaler: zoo tenants chain the registered kernel
+    // through grow/shrink, ICAP actuation and plan recompilation.
+    let mut cfg = elastic_fpga::autoscale::autoscale_profile();
+    cfg.manager.bitstream_bytes = 16 * 1024;
+    let tenants = workload::zoo_tenants(
+        2,
+        &[vec![kid], ModuleKind::pipeline().to_vec()],
+        20.0,
+        150.0,
+        2.0,
+        64,
+    );
+    let rep = elastic_fpga::autoscale::run_tenant_scenario(
+        &cfg,
+        2,
+        &tenants,
+        600,
+        7,
+        false,
+        elastic_fpga::autoscale::PolicyKind::TargetQueueDepth,
+    )
+    .unwrap();
+    assert_eq!(rep.autoscaled.completed, 600);
+    assert_eq!(rep.static_baseline.completed, 600);
+    assert!(rep.autoscaled.fabric_requests > 0, "zoo chains never hit fabric");
+}
+
+#[test]
+fn hostile_kernels_are_contained_and_victims_unaffected() {
+    for (name, mode) in [
+        ("kb-hostile-short", HostileMode::ShortOutput),
+        ("kb-hostile-long", HostileMode::LongOutput),
+        ("kb-hostile-mask", HostileMode::OutOfMask),
+    ] {
+        let kid = kernels::hostile::register(name, mode);
+        let mut m = ElasticManager::new(SystemConfig::paper_defaults(), None);
+        m.fabric_mut().telemetry = Tracer::full();
+        let err = m
+            .execute(&AppRequest { app_id: 0, data: data(64, 0x66), stages: vec![kid] })
+            .unwrap_err();
+        assert!(
+            matches!(err, ElasticError::Wishbone(WbError::ContractViolation)),
+            "{name}: got {err:?}"
+        );
+
+        // The violation is recorded, not propagated: the offending
+        // port's pr_error latches contract_violation and the masked
+        // batch shows up in the telemetry stream.
+        let latched: Vec<usize> = (1..=3)
+            .filter(|&r| {
+                m.fabric().regfile.pr_error(r).unwrap()
+                    == Some(WbError::ContractViolation)
+            })
+            .collect();
+        assert_eq!(latched.len(), 1, "{name}: exactly one region hosted it");
+        let events = m.fabric_mut().telemetry.take_events();
+        assert!(
+            events.iter().any(|e| matches!(
+                e,
+                TraceEvent::ViolationMasked { err: "contract_violation", .. }
+            )),
+            "{name}: no ViolationMasked event in {events:?}"
+        );
+
+        // Shell state matches a run that was *refused* before touching
+        // the fabric: regions released, no module instances resident,
+        // no stranded output words.
+        let mut refused =
+            ElasticManager::new(SystemConfig::paper_defaults(), None);
+        let honest = AppRequest::pipeline(0, data(64, 0x67));
+        assert!(matches!(
+            refused.execute_elastic(&honest, 3),
+            Err(ElasticError::Server(_))
+        ));
+        assert_eq!(m.regions(), refused.regions());
+        assert!(m
+            .regions()
+            .iter()
+            .skip(1)
+            .all(|r| matches!(r, RegionState::Available)));
+        for r in 1..=3 {
+            assert!(m.fabric().module_at(r).is_none(), "{name}: module stayed");
+        }
+        assert!(m.fabric_mut().take_app_output(0).is_empty());
+
+        // A victim tenant on the same shell is untouched: its own run
+        // clears the stale app-error latch and verifies golden.
+        let victim = AppRequest::pipeline(1, data(64, 0x68));
+        let rep = m.execute(&victim).unwrap();
+        assert!(rep.verified, "{name}: victim failed verification");
+        assert_eq!(
+            rep.output,
+            golden_chain(&ModuleKind::pipeline(), &victim.data)
+        );
+    }
+}
+
+#[test]
+fn hostile_kernel_fails_fleet_trace_with_typed_error() {
+    let kid =
+        kernels::hostile::register("kb-hostile-fleet", HostileMode::ShortOutput);
+    let mut trace = generate_count(&WorkloadSpec::fleet_mix(), 0xF1EE, 20);
+    trace[7].request.stages = vec![kid];
+    let err = seed_fleet(1).run_trace(&trace).unwrap_err();
+    assert!(
+        matches!(err, ElasticError::Wishbone(WbError::ContractViolation)),
+        "got {err:?}"
+    );
+}
+
+#[test]
+fn hostile_kernel_through_server_leaves_other_lanes_serving() {
+    let kid =
+        kernels::hostile::register("kb-hostile-server", HostileMode::OutOfMask);
+    let server = Server::start(SystemConfig::paper_defaults(), None);
+    let mut pending = Vec::new();
+    for i in 0..8u32 {
+        let req = if i == 3 {
+            AppRequest { app_id: 3, data: data(64, 0x70), stages: vec![kid] }
+        } else {
+            AppRequest::pipeline(i % 3, data(64, 0x71 + i as u64))
+        };
+        pending.push((i, server.submit(req).unwrap()));
+    }
+    for (i, rx) in pending {
+        let resp = rx.recv().unwrap();
+        if i == 3 {
+            assert!(
+                matches!(
+                    resp.report,
+                    Err(ElasticError::Wishbone(WbError::ContractViolation))
+                ),
+                "hostile request: {:?}",
+                resp.report.as_ref().map(|r| r.verified)
+            );
+        } else {
+            let rep = resp.report.unwrap();
+            assert!(rep.verified, "victim {i} failed");
+        }
+    }
+    server.shutdown();
+}
